@@ -1,0 +1,201 @@
+//! A genomics-flavoured workflow (the paper's intro motivates genome
+//! analysis): a sequencer dump is downloaded, QC-filtered (stream), aligned
+//! (burst per sample — the aligner builds an index over the full sample
+//! first), and the variants are called from all alignments (burst join).
+//! Two samples share the ingest link; alignment shares a CPU pool.
+//!
+//! Demonstrates: a larger DAG (8 processes), two shared pools, bottleneck
+//! reporting across the whole workflow, and the advisor primitive on a
+//! non-video scenario.
+//!
+//! Run: `cargo run --release --example genomics_pipeline`
+
+use bottlemod::model::ProcessBuilder;
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::SolverOpts;
+use bottlemod::util::stats::ascii_table;
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+
+const SAMPLE: f64 = 4e9; // 4 GB raw reads per sample
+const FILTERED: f64 = 3e9; // QC keeps 75%
+const BAM: f64 = 1.5e9; // alignment output
+const VCF: f64 = 50e6; // called variants
+const LINK: f64 = 100e6; // 100 MB/s ingest link
+const CORES: f64 = 8.0; // shared CPU pool
+
+fn build(frac_sample1: f64) -> (Workflow, Vec<usize>) {
+    let mut wf = Workflow::new();
+    let link = wf.add_pool("ingest-link", PwPoly::constant(LINK));
+    let cpu = wf.add_pool("cpu", PwPoly::constant(CORES));
+    let mut nodes = vec![];
+
+    for s in 0..2 {
+        // ingest: download the raw sample
+        let dl = ProcessBuilder::new(&format!("ingest-s{s}"), SAMPLE)
+            .stream_data("remote", SAMPLE)
+            .stream_resource("link", SAMPLE)
+            .identity_output("raw")
+            .build();
+        let dl_n = wf.add_node(
+            dl,
+            vec![DataSource::External(PwPoly::constant(SAMPLE))],
+            vec![if s == 0 {
+                ResourceSource::PoolFraction {
+                    pool: link,
+                    fraction: frac_sample1,
+                }
+            } else {
+                ResourceSource::PoolResidual { pool: link }
+            }],
+            StartRule::default(),
+        );
+
+        // QC filter: pure stream, 120 CPU-s per sample, 2 cores granted
+        let qc = ProcessBuilder::new(&format!("qc-s{s}"), FILTERED)
+            .stream_data("raw", SAMPLE)
+            .stream_resource("cpu", 120.0)
+            .identity_output("filtered")
+            .build();
+        let qc_n = wf.add_node(
+            qc,
+            vec![DataSource::ProcessOutput {
+                node: dl_n,
+                output: 0,
+            }],
+            vec![ResourceSource::PoolFraction {
+                pool: cpu,
+                fraction: 2.0 / CORES,
+            }],
+            StartRule::default(),
+        );
+
+        // alignment: burst (index over the whole filtered sample first),
+        // heavy CPU, granted 2 cores from the pool
+        let align = ProcessBuilder::new(&format!("align-s{s}"), BAM)
+            .burst_data("filtered", FILTERED)
+            .stream_resource("cpu", 600.0)
+            .identity_output("bam")
+            .build();
+        let align_n = wf.add_node(
+            align,
+            vec![DataSource::ProcessOutput {
+                node: qc_n,
+                output: 0,
+            }],
+            vec![ResourceSource::PoolFraction {
+                pool: cpu,
+                fraction: 2.0 / CORES,
+            }],
+            StartRule::default(),
+        );
+        nodes.extend([dl_n, qc_n, align_n]);
+    }
+
+    // joint variant calling over both alignments (burst join)
+    let call = ProcessBuilder::new("call-variants", VCF)
+        .burst_data("bam0", BAM)
+        .burst_data("bam1", BAM)
+        .stream_resource("cpu", 300.0)
+        .identity_output("vcf")
+        .build();
+    let call_n = wf.add_node(
+        call,
+        vec![
+            DataSource::ProcessOutput {
+                node: nodes[2],
+                output: 0,
+            },
+            DataSource::ProcessOutput {
+                node: nodes[5],
+                output: 0,
+            },
+        ],
+        vec![ResourceSource::PoolFraction {
+            pool: cpu,
+            fraction: 1.0,
+        }],
+        StartRule {
+            at: 0.0,
+            after: vec![nodes[2], nodes[5]],
+        },
+    );
+    nodes.push(call_n);
+
+    // final report: quick stream over the VCF
+    let report = ProcessBuilder::new("report", 1e6)
+        .stream_data("vcf", VCF)
+        .stream_resource("cpu", 5.0)
+        .identity_output("html")
+        .build();
+    let rep_n = wf.add_node(
+        report,
+        vec![DataSource::ProcessOutput {
+            node: call_n,
+            output: 0,
+        }],
+        vec![ResourceSource::PoolFraction {
+            pool: cpu,
+            fraction: 1.0 / CORES,
+        }],
+        StartRule::default(),
+    );
+    nodes.push(rep_n);
+    (wf, nodes)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = SolverOpts::default();
+
+    // fair ingest split
+    let (wf, _) = build(0.5);
+    let wa = analyze_fixpoint(&wf, &opts, 6)?;
+    println!("== genomics pipeline, fair ingest split ==");
+    let mut rows = vec![vec![
+        "process".into(),
+        "start (s)".into(),
+        "finish (s)".into(),
+        "dominant bottleneck".into(),
+    ]];
+    for (i, a) in wa.analyses.iter().enumerate() {
+        let p = &wf.nodes[i].process;
+        // dominant = longest segment
+        let dom = a
+            .segments
+            .iter()
+            .max_by(|x, y| {
+                (x.end - x.start).partial_cmp(&(y.end - y.start)).unwrap()
+            })
+            .map(|s| a.bottleneck_name(p, s.bottleneck))
+            .unwrap_or_default();
+        rows.push(vec![
+            p.name.clone(),
+            format!("{:.0}", a.start_time),
+            format!("{:.0}", a.finish_time.unwrap_or(f64::NAN)),
+            dom,
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    println!("makespan: {:.0} s  ({} solver events)", wa.makespan.unwrap(), wa.events);
+
+    // sweep the ingest split like the paper sweeps the link
+    println!("\n== ingest-split sweep ==");
+    let mut best = (0.5, f64::INFINITY);
+    for i in 1..20 {
+        let f = i as f64 / 20.0;
+        let (wf, _) = build(f);
+        let total = analyze_fixpoint(&wf, &opts, 6)?.makespan.unwrap();
+        if total < best.1 {
+            best = (f, total);
+        }
+    }
+    let fair = wa.makespan.unwrap();
+    println!(
+        "best split {:.2} -> {:.0} s vs fair {:.0} s ({:+.1}%)",
+        best.0,
+        best.1,
+        fair,
+        (best.1 / fair - 1.0) * 100.0
+    );
+    Ok(())
+}

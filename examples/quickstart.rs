@@ -1,0 +1,55 @@
+//! Quickstart: model one task, derive its progress function and bottleneck
+//! timeline (paper §2–§3 in ~40 lines of API).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use bottlemod::model::{ProcessBuilder, ProcessInputs};
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::{solve, SolverOpts};
+
+fn main() -> anyhow::Result<()> {
+    // A video re-encode: stream-type data requirement (progress with every
+    // byte read, Fig 1a), CPU spread evenly over the output (Fig 1b).
+    let process = ProcessBuilder::new("reencode", 100e6) // 100 MB of output
+        .stream_data("video-in", 500e6) // needs 500 MB of input overall
+        .stream_resource("cpu", 60.0) // 60 CPU-seconds overall
+        .identity_output("video-out")
+        .build();
+
+    // Execution side: the input arrives from a 10 MB/s source; one core.
+    let inputs = ProcessInputs {
+        data: vec![PwPoly::ramp_to(0.0, 10e6, 500e6)],
+        resources: vec![PwPoly::constant(1.0)],
+        start_time: 0.0,
+    };
+
+    let analysis = solve(&process, &inputs, &SolverOpts::default())?;
+
+    println!("finish time: {:.1} s", analysis.finish_time.unwrap());
+    println!("progress at t=10 s: {:.1} MB", analysis.progress.eval(10.0) / 1e6);
+    println!("\nbottleneck timeline:");
+    for seg in &analysis.segments {
+        println!(
+            "  {:6.1} .. {:6.1} s  limited by {}",
+            seg.start,
+            seg.end.min(1e9),
+            analysis.bottleneck_name(&process, seg.bottleneck)
+        );
+    }
+
+    // §3.3 extras: how much of the CPU allocation is actually used, and how
+    // much input sits unread in the buffer, sampled at a few times.
+    let ts = [5.0, 20.0, 40.0];
+    let usage = analysis.relative_usage_sampled(&process, &inputs, 0, &ts);
+    let buffered = analysis.buffered_data_sampled(&process, &inputs, 0, &ts);
+    println!("\n   t      cpu-usage   buffered input");
+    for (i, t) in ts.iter().enumerate() {
+        println!(
+            "  {:4.0} s     {:4.0} %     {:7.1} MB",
+            t,
+            usage[i] * 100.0,
+            buffered[i] / 1e6
+        );
+    }
+    Ok(())
+}

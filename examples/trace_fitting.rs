@@ -1,0 +1,133 @@
+//! Trace-driven modeling — the paper's future work (§5.2/§8) realized:
+//! record BPF-style I/O traces of isolated task executions, *fit* the
+//! requirement functions from the logs, assemble the workflow model from
+//! the fitted processes, and verify the predictions against the testbed.
+//!
+//! The fitted task 1 model is strictly richer than the paper's hand model:
+//! the 26 s of read+decode CPU shows up in the log as up-front resource
+//! demand and is replayed by the solver as work that overlaps the download.
+//!
+//! Run: `cargo run --release --example trace_fitting`
+
+use bottlemod::model::fit::{fit_process, FitOpts};
+use bottlemod::model::ProcessBuilder;
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::SolverOpts;
+use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::util::stats::ascii_table;
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+use bottlemod::workflow::scenario::VideoScenario;
+
+fn main() -> anyhow::Result<()> {
+    let sc = VideoScenario::default();
+
+    // ---- 1. record isolated executions (the paper's BPF monitoring) -----
+    let mut tb = VideoTestbed::new(sc.clone());
+    tb.sample_every = 0.25;
+    let trace1 = tb.isolated_task1();
+    tb.sample_every = 0.05;
+    let trace2 = tb.isolated_task2();
+    println!(
+        "recorded {} + {} samples from isolated runs of task 1 / task 2",
+        trace1.ts.len(),
+        trace2.ts.len()
+    );
+
+    // ---- 2. fit requirement functions from the logs ----------------------
+    let opts = FitOpts::default();
+    let t1 = fit_process("task1-fitted", &trace1, 1.0, &opts);
+    let t2 = fit_process("task2-fitted", &trace2, 1.0, &opts);
+    for p in [&t1, &t2] {
+        println!(
+            "{}: R_D with {} piece(s), R_R with {} piece(s), max_progress {:.1} MB",
+            p.name,
+            p.data_reqs[0].func.n_pieces(),
+            p.res_reqs[0].func.n_pieces(),
+            p.max_progress / 1e6
+        );
+        p.validate()?;
+    }
+
+    // ---- 3. assemble the workflow from fitted processes ------------------
+    let build_fitted = |fraction: f64| {
+        let mut wf = Workflow::new();
+        let pool = wf.add_pool("link", PwPoly::constant(sc.link_rate));
+        let dl = |name: &str| {
+            ProcessBuilder::new(name, sc.input_size)
+                .stream_data("remote", sc.input_size)
+                .stream_resource("link", sc.input_size)
+                .identity_output("file")
+                .build()
+        };
+        let d1 = wf.add_node(
+            dl("dl1"),
+            vec![DataSource::External(PwPoly::constant(sc.input_size))],
+            vec![ResourceSource::PoolFraction { pool, fraction }],
+            StartRule::default(),
+        );
+        let d2 = wf.add_node(
+            dl("dl2"),
+            vec![DataSource::External(PwPoly::constant(sc.input_size))],
+            vec![ResourceSource::PoolResidual { pool }],
+            StartRule::default(),
+        );
+        let n1 = wf.add_node(
+            t1.clone(),
+            vec![DataSource::ProcessOutput { node: d1, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let n2 = wf.add_node(
+            t2.clone(),
+            vec![DataSource::ProcessOutput { node: d2, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let t3_total = t1.max_progress + t2.max_progress;
+        let t3 = ProcessBuilder::new("task3", t3_total)
+            .stream_resource("io", sc.t3_time)
+            .identity_output("result")
+            .build();
+        wf.add_node(
+            t3,
+            vec![],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule {
+                at: 0.0,
+                after: vec![n1, n2],
+            },
+        );
+        wf
+    };
+
+    // ---- 4. predict vs testbed across fractions --------------------------
+    let mut rows = vec![vec![
+        "fraction".into(),
+        "fitted-model prediction".into(),
+        "hand-model prediction".into(),
+        "testbed measured".into(),
+    ]];
+    let sopts = SolverOpts::default();
+    let mut worst = 0.0f64;
+    for f in [0.3, 0.5, 0.75, 0.93] {
+        let fitted = analyze_fixpoint(&build_fitted(f), &sopts, 6)?
+            .makespan
+            .unwrap();
+        let (hand_wf, _) = sc.clone().with_fraction(f).build();
+        let hand = analyze_fixpoint(&hand_wf, &sopts, 6)?.makespan.unwrap();
+        let measured = VideoTestbed::new(sc.clone().with_fraction(f)).run(None).total;
+        worst = worst.max((fitted - measured).abs() / measured);
+        rows.push(vec![
+            format!("{f:.2}"),
+            format!("{fitted:.1} s"),
+            format!("{hand:.1} s"),
+            format!("{measured:.1} s"),
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    println!("worst fitted-model error vs testbed: {:.2}%", worst * 100.0);
+    anyhow::ensure!(worst < 0.02, "fitted model diverged");
+    println!("trace fitting OK — models learned from logs predict the workflow");
+    Ok(())
+}

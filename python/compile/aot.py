@@ -1,0 +1,128 @@
+"""AOT export: lower the L2/L1 JAX computations to HLO *text* artifacts.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes baked in; the Rust runtime pads to them):
+
+* ``eval_pw_b64_s16_d4_t1024``   — standalone Pallas piecewise evaluation
+* ``grid_solve_b600_k2_s8_d4_l2_s4_t2048`` — Fig 7 sweep solver (kernel path)
+* ``grid_solve_pd_b600_k2_l2_s4_t2048``    — chained-stage solver (PD grids)
+* ``grid_solve_pd_b8_k2_l2_s4_t256``       — small test/CI variant
+
+A ``manifest.json`` records entry names, input shapes and dtypes so the
+Rust runtime can validate before executing.
+
+Run: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """(name, function, example-arg specs) for every artifact."""
+    f32 = jnp.float32
+    entries = []
+
+    # standalone kernel artifact
+    B, S, D, T = 64, 16, 4, 1024
+    entries.append(
+        (
+            f"eval_pw_b{B}_s{S}_d{D}_t{T}",
+            lambda breaks, coeffs, ts: (model.eval_pw(breaks, coeffs, ts),),
+            [_spec((B, S + 1), f32), _spec((B, S, D), f32), _spec((T,), f32)],
+        )
+    )
+
+    # sweep solver (kernel path): Fig 7's 600 prioritizations
+    B, K, S, D, L, S2, T = 600, 2, 8, 4, 2, 4, 2048
+    entries.append(
+        (
+            f"grid_solve_b{B}_k{K}_s{S}_d{D}_l{L}_s{S2}_t{T}",
+            model.grid_solve,
+            [
+                _spec((B, K, S + 1), f32),
+                _spec((B, K, S, D), f32),
+                _spec((B, L, S2 + 1), f32),
+                _spec((B, L, S2), f32),
+                _spec((B, L, T), f32),
+                _spec((T,), f32),
+                _spec((B,), f32),
+            ],
+        )
+    )
+
+    # chained-stage solver (PD-grid path), sweep + small variants
+    for B, K, L, S2, T in [(600, 2, 2, 4, 2048), (8, 2, 2, 4, 256)]:
+        entries.append(
+            (
+                f"grid_solve_pd_b{B}_k{K}_l{L}_s{S2}_t{T}",
+                model.grid_solve_pd,
+                [
+                    _spec((B, K, T), f32),
+                    _spec((B, L, S2 + 1), f32),
+                    _spec((B, L, S2), f32),
+                    _spec((B, L, T), f32),
+                    _spec((T,), f32),
+                    _spec((B,), f32),
+                ],
+            )
+        )
+    return entries
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, specs in build_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "dtype": "f32",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

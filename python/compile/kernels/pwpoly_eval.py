@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: batched piecewise-polynomial evaluation.
+
+Evaluates B piecewise polynomials (the quasi-symbolic function objects of
+BottleMod) on a shared time grid of T points. This is the compute hot-spot
+of the batched grid solver (`python/compile/model.py`): data-progress
+functions, resource-input functions and R' lookups are all piecewise
+evaluations.
+
+Representation (matching `rust/src/pwfn/piecewise.rs`):
+  * ``breaks``  [B, S+1] — piece start points, strictly increasing; padded
+    pieces use ``BIG`` (1e30) so they are never selected.
+  * ``coeffs``  [B, S, D] — local-coordinate polynomial coefficients
+    (lowest degree first): piece s evaluates ``sum_d c[s,d] * (t - start_s)^d``.
+  * right-continuity and clamp-left semantics as in the Rust engine.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the (B, T) output grid is
+tiled by BlockSpec so one block's breakpoints + coefficients sit in VMEM;
+piece selection is a data-parallel compare-and-sum (VPU), piece gathering is
+a one-hot contraction (MXU-friendly einsum), and Horner evaluation unrolls
+into a fused multiply-add chain over the static D axis. ``interpret=True``
+is mandatory on CPU PJRT — real TPU lowering emits a Mosaic custom-call the
+CPU plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# padding sentinel for unused pieces/breaks
+BIG = 1e30
+
+
+def pwpoly_eval_math(breaks, coeffs, ts):
+    """Shared evaluation math (used by the kernel body and by model.py's
+    in-scan lookups).
+
+    breaks: [b, S+1], coeffs: [b, S, D], ts: [T]  ->  [b, T]
+    """
+    S = coeffs.shape[-2]
+    starts = breaks[..., :S]            # [b, S]
+    inner = breaks[..., 1:S]            # [b, S-1]
+    t = ts[None, :]                     # [1, T]
+    # right-continuous piece index: number of inner starts <= t
+    idx = jnp.sum(
+        (t[..., None] >= inner[:, None, :]).astype(jnp.int32), axis=-1
+    )                                   # [b, T]
+    onehot = (idx[..., None] == jnp.arange(S)[None, None, :]).astype(
+        coeffs.dtype
+    )                                   # [b, T, S]
+    origin = jnp.einsum("bts,bs->bt", onehot, starts)
+    # clamp-left semantics: left of the domain the function is constant
+    tc = jnp.maximum(t, starts[:, :1])
+    u = tc - origin
+    csel = jnp.einsum("bts,bsd->btd", onehot, coeffs)  # [b, T, D]
+    # Horner over the static degree axis (unrolled FMA chain)
+    acc = csel[..., -1]
+    for d in range(coeffs.shape[-1] - 2, -1, -1):
+        acc = acc * u + csel[..., d]
+    return acc
+
+
+def _pick_block(n, cap):
+    """Largest divisor of n that is <= cap (VMEM-friendly tile size)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _kernel(breaks_ref, coeffs_ref, ts_ref, out_ref):
+    out_ref[...] = pwpoly_eval_math(breaks_ref[...], coeffs_ref[...], ts_ref[...])
+
+
+def pwpoly_eval(breaks, coeffs, ts, *, block_b=None, block_t=None, interpret=True):
+    """Batched piecewise-polynomial evaluation as a Pallas call.
+
+    breaks: [B, S+1], coeffs: [B, S, D], ts: [T]  ->  [B, T]
+
+    B must be divisible by block_b and T by block_t (the AOT entry points
+    pick compatible shapes; pad externally otherwise).
+    """
+    B, T = breaks.shape[0], ts.shape[0]
+    S, D = coeffs.shape[1], coeffs.shape[2]
+    block_b = block_b or _pick_block(B, 64)
+    block_t = block_t or _pick_block(T, 256)
+    assert B % block_b == 0, f"B={B} not divisible by block_b={block_b}"
+    assert T % block_t == 0, f"T={T} not divisible by block_t={block_t}"
+    grid = (B // block_b, T // block_t)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, S + 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, S, D), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_t,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T), coeffs.dtype),
+        interpret=interpret,
+    )(breaks, coeffs, ts)
+
+
+def pad_pwpoly(breaks_list, coeffs_list, S, D, dtype=jnp.float32):
+    """Pack a ragged list of piecewise polynomials into the padded [B, S+1] /
+    [B, S, D] arrays the kernel expects. Each element of ``breaks_list`` is a
+    1-D array of piece starts (k+1 entries incl. the final break, which may
+    be inf) and ``coeffs_list[i]`` is [k, d] local coefficients.
+    """
+    import numpy as np
+
+    B = len(breaks_list)
+    breaks = np.full((B, S + 1), BIG, dtype=np.float64)
+    coeffs = np.zeros((B, S, D), dtype=np.float64)
+    for i, (bk, cf) in enumerate(zip(breaks_list, coeffs_list)):
+        bk = np.asarray(bk, dtype=np.float64)
+        cf = np.atleast_2d(np.asarray(cf, dtype=np.float64))
+        k = cf.shape[0]
+        d = cf.shape[1]
+        assert k <= S, f"{k} pieces > padded S={S}"
+        assert d <= D, f"degree+1 {d} > padded D={D}"
+        bk = np.where(np.isfinite(bk), bk, BIG)
+        breaks[i, : k + 1] = bk[: k + 1]
+        # replicate the last piece into the padding so clamp-right works:
+        # padded pieces start at BIG and are never selected anyway
+        coeffs[i, :k, :d] = cf
+        if k < S:
+            # padded pieces: constant extension of the last piece's value at
+            # its start (never selected because their start is BIG)
+            coeffs[i, k:, 0] = 0.0
+    return (
+        jnp.asarray(breaks, dtype=dtype),
+        jnp.asarray(coeffs, dtype=dtype),
+    )

@@ -1,0 +1,75 @@
+"""Pure-numpy correctness oracle for the Pallas kernel and the grid solver.
+
+Implements the same piecewise-polynomial semantics as
+``pwpoly_eval.pwpoly_eval`` with an entirely different mechanism
+(searchsorted + polyval per batch element, no one-hot tricks), so agreement
+is a meaningful signal. Used by pytest + hypothesis.
+"""
+
+import numpy as np
+
+
+def pwpoly_eval_ref(breaks, coeffs, ts):
+    """Reference evaluation.
+
+    breaks: [B, S+1], coeffs: [B, S, D], ts: [T]  ->  [B, T] (float64)
+    """
+    breaks = np.asarray(breaks, dtype=np.float64)
+    coeffs = np.asarray(coeffs, dtype=np.float64)
+    ts = np.asarray(ts, dtype=np.float64)
+    B, S = coeffs.shape[0], coeffs.shape[1]
+    out = np.zeros((B, len(ts)))
+    for b in range(B):
+        starts = breaks[b, :S]
+        inner = breaks[b, 1:S]
+        # right-continuous piece index
+        idx = np.searchsorted(inner, ts, side="right")
+        tc = np.maximum(ts, starts[0])  # clamp-left
+        u = tc - starts[idx]
+        # horner, highest degree first (np.polyval wants descending)
+        for j, (i, uu) in enumerate(zip(idx, u)):
+            out[b, j] = np.polyval(coeffs[b, i, ::-1], uu)
+    return out
+
+
+def grid_solve_ref(pd, rbreaks, rslopes, rin, ts, target):
+    """Reference for the L2 grid solver (model.grid_solve_pd semantics).
+
+    pd:      [B, K, T] data-progress grids
+    rbreaks: [B, L, S2+1] piece starts of R'_Rl in p
+    rslopes: [B, L, S2]   piecewise-constant R' values
+    rin:     [B, L, T]    allocation rates on the grid
+    ts:      [T]
+    target:  [B]
+    ->  P [B, T], makespan [B] (inf when unreached)
+    """
+    pd = np.asarray(pd, dtype=np.float64)
+    rin = np.asarray(rin, dtype=np.float64)
+    ts = np.asarray(ts, dtype=np.float64)
+    target = np.asarray(target, dtype=np.float64)
+    rbreaks = np.asarray(rbreaks, dtype=np.float64)
+    rslopes = np.asarray(rslopes, dtype=np.float64)
+    B, _K, T = pd.shape
+    L, S2 = rslopes.shape[1], rslopes.shape[2]
+    dt = ts[1] - ts[0]
+    pdmin = pd.min(axis=1)
+    P = np.zeros((B, T))
+    P[:, 0] = np.maximum(np.minimum(pdmin[:, 0], 0.0), 0.0)
+    for t in range(1, T):
+        for b in range(B):
+            p = P[b, t - 1]
+            dp = np.inf
+            for l in range(L):
+                inner = rbreaks[b, l, 1:S2]
+                i = np.searchsorted(inner, p, side="right")
+                c = rslopes[b, l, i]
+                if c > 1e-20:
+                    dp = min(dp, rin[b, l, t - 1] * dt / c)
+            nxt = p + max(dp, 0.0)
+            P[b, t] = max(min(pdmin[b, t], nxt), p)
+    makespan = np.full(B, np.inf)
+    for b in range(B):
+        reached = P[b] >= target[b] * (1.0 - 1e-6)
+        if reached.any():
+            makespan[b] = ts[int(np.argmax(reached))]
+    return P, makespan

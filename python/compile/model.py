@@ -1,0 +1,127 @@
+"""Layer-2 JAX model: the batched grid solver.
+
+A discretized, batched rendition of the paper's generic Algorithm 1: given
+B independent process configurations, a ``lax.scan`` imposes the resource
+speed limits ``P'(t) <= min_l I_Rl(t) / R'_Rl(P(t))`` step by step on a
+shared time grid and caps progress by the data envelope ``P_D``. Two entry
+points:
+
+* :func:`grid_solve` — takes the data-progress functions as *piecewise
+  polynomials* and evaluates them through the Layer-1 Pallas kernel
+  (`kernels/pwpoly_eval.py`), so the kernel lowers into this HLO;
+* :func:`grid_solve_pd` — takes pre-sampled ``P_D`` grids [B, K, T]
+  (used by the Rust coordinator for chained workflow stages, where a
+  predecessor's progress grid feeds the successor's data envelope).
+
+Both return the progress grids P [B, T] and per-config makespans [B]
+(time of first reaching ``target``; +inf when unreached in the grid).
+
+Semantics notes (mirroring `rust/src/solver/grid.rs`):
+* resource requirements must be piecewise-linear (R' piecewise-constant) —
+  the §4 restriction; jumps in R (burst resources) are not supported here;
+* a resource with R' = 0 (padding) never limits;
+* the scan is forward Euler: makespans carry O(dt) discretization error.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pwpoly_eval import pwpoly_eval, pwpoly_eval_math
+
+
+def _cost_lookup(p, rbreaks, rslopes):
+    """R'_Rl(p) lookup. p: [B] -> [B, L] piecewise-constant values."""
+    S2 = rslopes.shape[-1]
+    inner = rbreaks[..., 1:S2]  # [B, L, S2-1]
+    idx = jnp.sum(
+        (p[:, None, None] >= inner).astype(jnp.int32), axis=-1
+    )  # [B, L]
+    onehot = (idx[..., None] == jnp.arange(S2)[None, None, :]).astype(p.dtype)
+    return jnp.sum(onehot * rslopes, axis=-1)
+
+
+def _scan_solver(pdmin, rbreaks, rslopes, rin, ts, target):
+    """Forward-Euler scan. pdmin: [B, T] -> (P [B, T], makespan [B])."""
+    dt = ts[1] - ts[0]
+
+    def step(p, xs):
+        pd_next, rin_t = xs  # [B], [B, L]
+        c = _cost_lookup(p, rbreaks, rslopes)
+        limited = c > 1e-20
+        speed = jnp.where(limited, rin_t / jnp.maximum(c, 1e-20), jnp.inf)
+        dp = dt * jnp.min(speed, axis=-1)
+        nxt = jnp.minimum(pd_next, p + jnp.maximum(dp, 0.0))
+        nxt = jnp.maximum(nxt, p)  # monotone
+        return nxt, nxt
+
+    p0 = jnp.maximum(jnp.minimum(pdmin[:, 0], 0.0), 0.0)  # zeros, typed
+    xs = (pdmin[:, 1:].T, jnp.moveaxis(rin, 2, 0)[:-1])
+    # NOTE(§Perf): unroll={2,8} was tried and *hurt* on CPU PJRT (80/110 ms
+    # vs 67 ms for the 600x2048 stage) — the compact loop body wins; see
+    # EXPERIMENTS.md §Perf for the iteration log.
+    _, hist = jax.lax.scan(step, p0, xs)
+    P = jnp.concatenate([p0[:, None], hist.T], axis=1)  # [B, T]
+    reached = P >= target[:, None] * (1.0 - 1e-6)
+    any_reached = reached.any(axis=1)
+    idx = jnp.argmax(reached, axis=1)
+    makespan = jnp.where(any_reached, ts[idx], jnp.inf)
+    return P, makespan
+
+
+def grid_solve_pd(pd, rbreaks, rslopes, rin, ts, target):
+    """Solve from pre-sampled data-progress grids.
+
+    pd: [B, K, T]; rbreaks: [B, L, S2+1]; rslopes: [B, L, S2];
+    rin: [B, L, T]; ts: [T]; target: [B].
+    """
+    pdmin = jnp.min(pd, axis=1)
+    return _scan_solver(pdmin, rbreaks, rslopes, rin, ts, target)
+
+
+def grid_solve(breaks_d, coeffs_d, rbreaks, rslopes, rin, ts, target):
+    """Solve from piecewise data-progress functions (Pallas-kernel path).
+
+    breaks_d: [B, K, S+1]; coeffs_d: [B, K, S, D]; rest as grid_solve_pd.
+    """
+    B, K = breaks_d.shape[0], breaks_d.shape[1]
+    S, D = coeffs_d.shape[2], coeffs_d.shape[3]
+    pd = pwpoly_eval(
+        breaks_d.reshape(B * K, S + 1),
+        coeffs_d.reshape(B * K, S, D),
+        ts,
+    ).reshape(B, K, ts.shape[0])
+    return grid_solve_pd(pd, rbreaks, rslopes, rin, ts, target)
+
+
+def resource_usage_grid(P, rbreaks, rslopes, ts):
+    """§3.3 resource demand on the grid: P'(t) · R'(P(t)).
+
+    P: [B, T] -> [B, L, T] (first column zero-padded).
+    """
+    dt = ts[1] - ts[0]
+    dp = jnp.diff(P, axis=1) / dt  # [B, T-1]
+    # cost at the left endpoint of each step
+    B, T = P.shape
+    flatP = P[:, :-1].reshape(-1)
+    # lookup per (b, t): reuse pwpoly machinery by treating p as "time"
+    S2 = rslopes.shape[-1]
+    inner = rbreaks[..., 1:S2]  # [B, L, S2-1]
+    idx = jnp.sum(
+        (P[:, None, :-1, None] >= inner[:, :, None, :]).astype(jnp.int32),
+        axis=-1,
+    )  # [B, L, T-1]
+    onehot = (idx[..., None] == jnp.arange(S2)[None, None, None, :]).astype(
+        P.dtype
+    )
+    cost = jnp.sum(onehot * rslopes[:, :, None, :], axis=-1)  # [B, L, T-1]
+    usage = cost * dp[:, None, :]
+    _ = flatP
+    return jnp.concatenate([jnp.zeros((B, cost.shape[1], 1), P.dtype), usage], axis=2)
+
+
+def eval_pw(breaks, coeffs, ts):
+    """Standalone batched piecewise evaluation (exported as its own
+    artifact for the Rust coordinator's figure/grid exports). Runs through
+    the Pallas kernel."""
+    _ = pwpoly_eval_math  # shared math is exercised via the kernel body
+    return pwpoly_eval(breaks, coeffs, ts)

@@ -1,0 +1,148 @@
+"""Pallas kernel vs. the pure-numpy oracle — the core L1 correctness signal.
+
+Hypothesis sweeps random piecewise polynomials (shapes, piece counts,
+degrees, breakpoints) and asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pwpoly_eval import BIG, pad_pwpoly, pwpoly_eval
+from compile.kernels.ref import pwpoly_eval_ref
+
+
+def run_kernel(breaks, coeffs, ts):
+    import jax.numpy as jnp
+
+    out = pwpoly_eval(
+        jnp.asarray(breaks, jnp.float32),
+        jnp.asarray(coeffs, jnp.float32),
+        jnp.asarray(ts, jnp.float32),
+    )
+    return np.asarray(out, dtype=np.float64)
+
+
+def assert_matches_ref(breaks, coeffs, ts, rtol=2e-4, atol=2e-3):
+    got = run_kernel(breaks, coeffs, ts)
+    want = pwpoly_eval_ref(breaks, coeffs, ts)
+    scale = np.maximum(1.0, np.abs(want))
+    np.testing.assert_allclose(got / scale, want / scale, rtol=rtol, atol=atol)
+
+
+def test_constant_function():
+    breaks = np.array([[0.0, BIG]] * 4 + [[1.0, BIG]] * 4)
+    coeffs = np.zeros((8, 1, 1))
+    coeffs[:, 0, 0] = np.arange(8)
+    ts = np.linspace(0.0, 10.0, 16)
+    assert_matches_ref(breaks, coeffs, ts)
+
+
+def test_two_piece_linear_with_jump():
+    # f = 2t on [0,5), then 100 (jump) on [5, inf)
+    breaks = np.array([[0.0, 5.0, BIG]] * 8)
+    coeffs = np.zeros((8, 2, 2))
+    coeffs[:, 0, 1] = 2.0
+    coeffs[:, 1, 0] = 100.0
+    ts = np.linspace(0.0, 10.0, 32)
+    got = run_kernel(breaks, coeffs, ts)
+    assert abs(got[0, 0] - 0.0) < 1e-3
+    # right-continuity at the break
+    i5 = np.argmin(np.abs(ts - 5.0))
+    if ts[i5] >= 5.0:
+        assert abs(got[0, i5] - 100.0) < 1e-2
+    assert_matches_ref(breaks, coeffs, ts)
+
+
+def test_clamp_left_of_domain():
+    breaks = np.array([[2.0, BIG]] * 8)
+    coeffs = np.zeros((8, 1, 2))
+    coeffs[:, 0, 0] = 7.0
+    coeffs[:, 0, 1] = 1.0  # 7 + (t-2)
+    ts = np.array([0.0, 1.0, 2.0, 3.0], dtype=np.float64)
+    got = run_kernel(breaks, coeffs, ts)
+    # left of the domain the value is clamped to f(2) = 7
+    np.testing.assert_allclose(got[0], [7.0, 7.0, 7.0, 8.0], atol=1e-3)
+
+
+def test_quadratic_piece():
+    breaks = np.array([[0.0, 4.0, BIG]] * 8)
+    coeffs = np.zeros((8, 2, 3))
+    coeffs[:, 0, 2] = 0.25  # t^2/4
+    coeffs[:, 1, 0] = 4.0  # then constant 4
+    ts = np.linspace(0.0, 8.0, 64)
+    assert_matches_ref(breaks, coeffs, ts)
+
+
+def test_pad_pwpoly_roundtrip():
+    breaks, coeffs = pad_pwpoly(
+        [np.array([0.0, 2.0, np.inf]), np.array([1.0, np.inf])],
+        [np.array([[0.0, 1.0], [2.0, 0.0]]), np.array([[5.0, 0.5]])],
+        S=4,
+        D=3,
+    )
+    assert breaks.shape == (2, 5)
+    assert coeffs.shape == (2, 4, 3)
+    ts = np.linspace(0.0, 5.0, 16)
+    got = run_kernel(np.asarray(breaks), np.asarray(coeffs), ts)
+    # function 0: t on [0,2), then 2 constant
+    np.testing.assert_allclose(got[0, 0], 0.0, atol=1e-3)
+    i = np.argmin(np.abs(ts - 3.0))
+    np.testing.assert_allclose(got[0, i], 2.0, atol=1e-2)
+    # function 1: 5 + 0.5*(t-1) from t=1, clamped to 5 before
+    np.testing.assert_allclose(got[1, 0], 5.0, atol=1e-2)
+
+
+@st.composite
+def pwpoly_cases(draw):
+    B = draw(st.sampled_from([1, 2, 4, 8]))
+    S = draw(st.sampled_from([1, 2, 4, 8]))
+    D = draw(st.integers(min_value=1, max_value=4))
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    # strictly increasing finite breaks in [0, 100], last = BIG
+    breaks = np.empty((B, S + 1))
+    for b in range(B):
+        cuts = np.sort(rng.uniform(0.0, 100.0, size=S))
+        # enforce strict increase with a minimum gap
+        cuts = cuts + np.arange(S) * 1e-3
+        breaks[b, :S] = cuts
+        breaks[b, S] = BIG
+    coeffs = rng.uniform(-3.0, 3.0, size=(B, S, D))
+    T = draw(st.sampled_from([8, 16, 64]))
+    ts = np.sort(rng.uniform(-10.0, 150.0, size=T))
+    return breaks, coeffs, ts
+
+
+@settings(max_examples=40, deadline=None)
+@given(pwpoly_cases())
+def test_kernel_matches_ref_random(case):
+    breaks, coeffs, ts = case
+    # f32 kernel vs f64 ref: tolerance must account for catastrophic
+    # cancellation in wide-range inputs; values here stay O(100)
+    assert_matches_ref(breaks, coeffs, ts, rtol=1e-3, atol=5e-2)
+
+
+@pytest.mark.parametrize("block_b,block_t", [(1, 8), (2, 4), (4, 16), (8, 8)])
+def test_block_shapes_equivalent(block_b, block_t):
+    rng = np.random.default_rng(7)
+    B, S, D, T = 8, 4, 3, 16
+    breaks = np.concatenate(
+        [np.sort(rng.uniform(0, 50, (B, S))), np.full((B, 1), BIG)], axis=1
+    )
+    coeffs = rng.uniform(-2, 2, (B, S, D))
+    ts = np.linspace(0, 60, T)
+    import jax.numpy as jnp
+
+    base = pwpoly_eval(
+        jnp.asarray(breaks, jnp.float32),
+        jnp.asarray(coeffs, jnp.float32),
+        jnp.asarray(ts, jnp.float32),
+    )
+    tiled = pwpoly_eval(
+        jnp.asarray(breaks, jnp.float32),
+        jnp.asarray(coeffs, jnp.float32),
+        jnp.asarray(ts, jnp.float32),
+        block_b=block_b,
+        block_t=block_t,
+    )
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), rtol=1e-6)

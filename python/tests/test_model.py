@@ -1,0 +1,212 @@
+"""L2 grid solver vs. the numpy reference and vs. known analytic solutions.
+
+The semantic test cases mirror `rust/src/solver/exact.rs` tests, so the
+batched JAX solver, the numpy reference AND the exact Rust solver all agree
+on the same scenarios — three independent implementations.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pwpoly_eval import BIG
+from compile.kernels.ref import grid_solve_ref
+from compile.model import grid_solve, grid_solve_pd, resource_usage_grid
+
+
+def as_f32(*arrays):
+    return [jnp.asarray(a, jnp.float32) for a in arrays]
+
+
+def run_pd(pd, rbreaks, rslopes, rin, ts, target):
+    P, mk = grid_solve_pd(*as_f32(pd, rbreaks, rslopes, rin, ts, target))
+    return np.asarray(P, np.float64), np.asarray(mk, np.float64)
+
+
+def simple_resources(B, L, slopes):
+    """Single-piece R' per resource: rbreaks [0, BIG...], rslopes given."""
+    rbreaks = np.full((B, L, 5), BIG)
+    rbreaks[:, :, 0] = 0.0
+    rslopes = np.zeros((B, L, 4))
+    for l, s in enumerate(slopes):
+        rslopes[:, l, 0] = s
+    return rbreaks, rslopes
+
+
+def test_cpu_bound_stream():
+    # mirror of rust cpu_bound_stream: 100 progress, 0.5 cpu/progress,
+    # 1 cpu/s -> finish at 50
+    B, K, L, T = 2, 1, 1, 512
+    ts = np.linspace(0, 80, T)
+    pd = np.full((B, K, T), 100.0)
+    rbreaks, rslopes = simple_resources(B, L, [0.5])
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    P, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert abs(mk[0] - 50.0) < 0.5, mk
+    i25 = np.argmin(np.abs(ts - 25.0))
+    assert abs(P[0, i25] - 50.0) < 1.0
+
+
+def test_data_bound_stream():
+    # data envelope 1 progress/s, cpu ample -> finish at 100
+    B, K, L, T = 1, 1, 1, 512
+    ts = np.linspace(0, 150, T)
+    pd = np.minimum(ts, 100.0)[None, None, :].repeat(B, 0)
+    rbreaks, rslopes = simple_resources(B, L, [0.01])
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    _, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert abs(mk[0] - 100.0) < 0.5, mk
+
+
+def test_crossover_case():
+    # mirror of rust data_then_resource_crossover: finish at 110
+    B, K, L, T = 1, 1, 1, 2048
+    ts = np.linspace(0, 150, T)
+    pd_curve = np.where(ts < 30, 2 * ts, np.minimum(60 + 0.5 * (ts - 30), 100.0))
+    pd = pd_curve[None, None, :]
+    rbreaks, rslopes = simple_resources(B, L, [1.0])
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    P, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert abs(mk[0] - 110.0) < 0.5, mk
+    i90 = np.argmin(np.abs(ts - 90.0))
+    assert abs(P[0, i90] - 90.0) < 1.0
+
+
+def test_two_resources_min():
+    # mirror two_resources_min: io limits -> finish at 100
+    B, K, L, T = 1, 1, 2, 1024
+    ts = np.linspace(0, 150, T)
+    pd = np.full((B, K, T), 100.0)
+    rbreaks, rslopes = simple_resources(B, L, [1.0, 0.5])
+    rin = np.stack(
+        [np.full((B, T), 2.0), np.full((B, T), 0.5)], axis=1
+    )
+    target = np.full(B, 100.0)
+    _, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert abs(mk[0] - 100.0) < 0.5, mk
+
+
+def test_unreached_is_inf():
+    B, K, L, T = 1, 1, 1, 64
+    ts = np.linspace(0, 10, T)
+    pd = np.full((B, K, T), 50.0)  # data caps at 50
+    rbreaks, rslopes = simple_resources(B, L, [1.0])
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    _, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert np.isinf(mk[0])
+
+
+def test_piecewise_resource_requirement():
+    # R' = 1 for p<50, 2 for p>=50; allocation 1/s
+    # first 50 progress take 50 s, next 50 take 100 s -> 150 s
+    B, K, L, T = 1, 1, 1, 2048
+    ts = np.linspace(0, 200, T)
+    pd = np.full((B, K, T), 100.0)
+    rbreaks = np.full((B, L, 5), BIG)
+    rbreaks[:, :, 0] = 0.0
+    rbreaks[:, :, 1] = 50.0
+    rslopes = np.zeros((B, L, 4))
+    rslopes[:, :, 0] = 1.0
+    rslopes[:, :, 1] = 2.0
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    _, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    assert abs(mk[0] - 150.0) < 0.7, mk
+
+
+def test_kernel_path_grid_solve_matches_pd_path():
+    # same scenario expressed as piecewise functions vs pre-sampled grids
+    B, K, S, D, L, S2, T = 4, 2, 4, 3, 2, 4, 256
+    ts = np.linspace(0, 120, T).astype(np.float64)
+    # data input: ramp slope 1 capped at 100 (K=1 real + 1 padding)
+    breaks_d = np.full((B, K, S + 1), BIG)
+    coeffs_d = np.zeros((B, K, S, D))
+    breaks_d[:, 0, 0] = 0.0
+    breaks_d[:, 0, 1] = 100.0
+    coeffs_d[:, 0, 0, 1] = 1.0  # ramp
+    coeffs_d[:, 0, 1, 0] = 100.0  # then constant
+    breaks_d[:, 1, 0] = 0.0
+    coeffs_d[:, 1, 0, 0] = BIG  # padding input never binds
+    rbreaks = np.full((B, L, S2 + 1), BIG)
+    rbreaks[:, :, 0] = 0.0
+    rslopes = np.zeros((B, L, S2))
+    rslopes[:, 0, 0] = 0.8
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+
+    P1, mk1 = grid_solve(
+        *as_f32(breaks_d, coeffs_d, rbreaks, rslopes, rin, ts, target)
+    )
+    # sample pd by hand
+    pd0 = np.minimum(np.maximum(ts, 0.0), 100.0)
+    pd = np.stack(
+        [np.tile(pd0, (B, 1)), np.full((B, T), BIG)], axis=1
+    )
+    P2, mk2 = grid_solve_pd(*as_f32(pd, rbreaks, rslopes, rin, ts, target))
+    np.testing.assert_allclose(
+        np.asarray(mk1), np.asarray(mk2), rtol=1e-5, atol=0.5
+    )
+    np.testing.assert_allclose(
+        np.asarray(P1), np.asarray(P2), rtol=1e-4, atol=0.5
+    )
+
+
+def test_resource_usage_grid_bounded():
+    B, K, L, T = 1, 1, 1, 256
+    ts = np.linspace(0, 80, T)
+    pd = np.full((B, K, T), 100.0)
+    rbreaks, rslopes = simple_resources(B, L, [0.5])
+    rin = np.ones((B, L, T))
+    target = np.full(B, 100.0)
+    P, _ = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    usage = np.asarray(
+        resource_usage_grid(
+            jnp.asarray(P, jnp.float32),
+            jnp.asarray(rbreaks, jnp.float32),
+            jnp.asarray(rslopes, jnp.float32),
+            jnp.asarray(ts, jnp.float32),
+        )
+    )
+    # demand never exceeds allocation (paper eq. 7: usage in [0, 1])
+    assert (usage <= rin * 1.02 + 1e-6).all()
+    assert (usage >= -1e-6).all()
+
+
+@st.composite
+def solver_cases(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**32 - 1)))
+    B = draw(st.sampled_from([1, 3]))
+    K = draw(st.sampled_from([1, 2]))
+    L = draw(st.sampled_from([1, 2]))
+    T = 256
+    span = 120.0
+    ts = np.linspace(0.0, span, T)
+    # monotone random data envelopes: cumsum of nonnegative rates
+    rates = rng.uniform(0.0, 3.0, size=(B, K, T))
+    pd = np.cumsum(rates, axis=2) * (span / T)
+    rbreaks = np.full((B, L, 5), BIG)
+    rbreaks[:, :, 0] = 0.0
+    rslopes = np.zeros((B, L, 4))
+    rslopes[:, :, 0] = rng.uniform(0.2, 2.0, size=(B, L))
+    # piecewise-constant allocations
+    rin = rng.uniform(0.0, 2.0, size=(B, L, 4)).repeat(T // 4, axis=2)
+    target = pd.min(axis=1).max(axis=1) * rng.uniform(0.5, 1.1, size=B)
+    return pd, rbreaks, rslopes, rin, ts, target
+
+
+@settings(max_examples=25, deadline=None)
+@given(solver_cases())
+def test_grid_solver_matches_numpy_ref(case):
+    pd, rbreaks, rslopes, rin, ts, target = case
+    P, mk = run_pd(pd, rbreaks, rslopes, rin, ts, target)
+    P_ref, mk_ref = grid_solve_ref(pd, rbreaks, rslopes, rin, ts, target)
+    scale = np.maximum(1.0, np.abs(P_ref))
+    np.testing.assert_allclose(P / scale, P_ref / scale, rtol=2e-3, atol=2e-3)
+    both_inf = np.isinf(mk) & np.isinf(mk_ref)
+    np.testing.assert_allclose(
+        np.where(both_inf, 0.0, mk), np.where(both_inf, 0.0, mk_ref), atol=1.0
+    )

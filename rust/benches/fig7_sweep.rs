@@ -1,0 +1,60 @@
+//! Fig 7 regeneration bench: the 600-prioritization sweep through
+//! (a) the exact engine single-threaded, (b) the exact engine across all
+//! cores, (c) the batched PJRT L2/L1 path, plus the per-point testbed cost
+//! for contrast (measurement is what the model replaces).
+//!
+//! Run: `make artifacts && cargo bench --bench fig7_sweep`
+
+use bottlemod::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
+use bottlemod::runtime::{fig7_sweep, Runtime};
+use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::util::harness::bench_once;
+use bottlemod::util::stats::fmt_duration;
+use bottlemod::workflow::scenario::VideoScenario;
+
+fn main() {
+    let sc = VideoScenario::default();
+    let fractions = fig7_fractions(600);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let mut results = vec![];
+    results.push(bench_once("exact sweep 600 cfgs, 1 thread", 5, || {
+        exact_sweep(&sc, &fractions, 1)
+    }));
+    if threads > 1 {
+        results.push(bench_once(
+            &format!("exact sweep 600 cfgs, {threads} threads"),
+            5,
+            || exact_sweep(&sc, &fractions, threads),
+        ));
+    }
+
+    match Runtime::new(&Runtime::default_dir()) {
+        Ok(mut rt) => {
+            // warm the executable cache (compile once)
+            let _ = fig7_sweep(&mut rt, &sc, &fractions).expect("pjrt sweep");
+            results.push(bench_once("pjrt batched sweep 600 cfgs", 5, || {
+                fig7_sweep(&mut rt, &sc, &fractions).unwrap()
+            }));
+        }
+        Err(e) => eprintln!("(skipping PJRT bench: {e})"),
+    }
+
+    // what a single real measurement costs on the virtual testbed
+    let tb = VideoTestbed::new(sc.clone().with_fraction(0.5));
+    results.push(bench_once("testbed execution (1 run, dt=20ms)", 3, || {
+        tb.run(None)
+    }));
+
+    println!("\n== Fig 7 sweep benchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let sweep = exact_sweep(&sc, &fractions, threads);
+    let (bf, bt) = best_fraction(&sweep);
+    println!(
+        "sweep sanity: best fraction {bf:.3} -> {bt:.1} s; per-config exact cost {}",
+        fmt_duration(results[0].per_iter.mean / 600.0)
+    );
+}

@@ -1,0 +1,87 @@
+//! Micro-benchmarks of the piecewise-function substrate — the operations
+//! Algorithm 2's cost is made of (eval, roots, envelopes, composition,
+//! inversion, exact rational PL ops).
+//!
+//! Run: `cargo bench --bench pwfn_ops`
+
+use bottlemod::pwfn::{poly::Poly, PwLinear, PwPoly, Rat};
+use bottlemod::util::harness::bench;
+use bottlemod::util::Rng;
+
+fn random_pwpoly(rng: &mut Rng, pieces: usize, degree: usize) -> PwPoly {
+    let mut breaks = vec![0.0];
+    for i in 0..pieces - 1 {
+        breaks.push(breaks[i] + rng.range(0.5, 3.0));
+    }
+    breaks.push(f64::INFINITY);
+    let polys = (0..pieces)
+        .map(|_| Poly::new((0..=degree).map(|_| rng.range(-2.0, 2.0)).collect()))
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+fn monotone_pwpoly(rng: &mut Rng, pieces: usize) -> PwPoly {
+    // nondecreasing PL function (rates >= 0)
+    let mut points = vec![(0.0, 0.0)];
+    for i in 0..pieces {
+        let (x, y) = points[i];
+        points.push((x + rng.range(0.5, 2.0), y + rng.range(0.0, 3.0)));
+    }
+    PwPoly::from_points(&points)
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let f8 = random_pwpoly(&mut rng, 8, 2);
+    let f64p = random_pwpoly(&mut rng, 64, 2);
+    let g8 = random_pwpoly(&mut rng, 8, 2);
+    let g64 = random_pwpoly(&mut rng, 64, 2);
+    let m16 = monotone_pwpoly(&mut rng, 16);
+    let m16b = monotone_pwpoly(&mut rng, 16);
+
+    let mut results = vec![];
+    results.push(bench("eval (8 pieces)", 20, || f8.eval(7.3)));
+    results.push(bench("eval (64 pieces)", 20, || f64p.eval(53.1)));
+    results.push(bench("min_envelope 2x8", 20, || {
+        PwPoly::min_envelope(&[&f8, &g8])
+    }));
+    results.push(bench("min_envelope 2x64", 20, || {
+        PwPoly::min_envelope(&[&f64p, &g64])
+    }));
+    results.push(bench("compose 16∘16 (monotone)", 20, || {
+        m16.compose(&m16b)
+    }));
+    results.push(bench("inverse_linear (16 pieces)", 20, || {
+        m16.inverse_linear().unwrap()
+    }));
+    results.push(bench("antiderivative (64 pieces)", 20, || {
+        f64p.antiderivative(0.0)
+    }));
+    results.push(bench("first_reach (16 pieces)", 20, || {
+        m16.first_reach(m16.eval(20.0) * 0.7, 0.0)
+    }));
+
+    // cubic root finding — the costliest primitive the solver may hit
+    let cubic = Poly::new(vec![-6.0, 11.0, -6.0, 1.0]);
+    results.push(bench("cubic roots_in", 20, || cubic.roots_in(0.0, 4.0)));
+
+    // exact rational PL path
+    let r = |n: i64, d: i64| Rat::new(n as i128, d as i128).unwrap();
+    let ex_a = PwLinear::from_points(&[
+        (Rat::int(0), Rat::int(0)),
+        (r(7, 3), r(5, 2)),
+        (r(19, 4), r(23, 5)),
+        (Rat::int(9), Rat::int(9)),
+    ])
+    .unwrap();
+    let ex_b = PwLinear::linear(Rat::ZERO, r(1, 2), r(3, 7));
+    results.push(bench("exact PL min_envelope", 20, || {
+        PwLinear::min_envelope(&[&ex_a, &ex_b]).unwrap()
+    }));
+    results.push(bench("exact PL inverse", 20, || ex_a.inverse().unwrap()));
+
+    println!("\n== pwfn substrate micro-benchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT runtime benchmarks: artifact compile + execute cost for the L1
+//! kernel artifact and the L2 grid-solver artifact (the batched hot path).
+//!
+//! Run: `make artifacts && cargo bench --bench runtime_sweep`
+
+use bottlemod::runtime::Runtime;
+use bottlemod::util::harness::bench_once;
+
+const BIG: f32 = 1e30;
+
+fn main() {
+    let mut rt = match Runtime::new(&Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    let mut results = vec![];
+
+    // ---- compile costs (one-time, amortized over the process lifetime) --
+    for name in [
+        "eval_pw_b64_s16_d4_t1024",
+        "grid_solve_pd_b600_k2_l2_s4_t2048",
+    ] {
+        let t0 = std::time::Instant::now();
+        rt.ensure_compiled(name).expect("compile");
+        println!(
+            "compile {name}: {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // ---- L1 kernel artifact: 64 functions x 1024 grid points ------------
+    {
+        let (b, s, d, t) = (64usize, 16usize, 4usize, 1024usize);
+        let mut breaks = vec![BIG; b * (s + 1)];
+        let mut coeffs = vec![0f32; b * s * d];
+        for i in 0..b {
+            breaks[i * (s + 1)] = 0.0;
+            breaks[i * (s + 1) + 1] = 10.0 + i as f32;
+            coeffs[i * s * d + 1] = 1.5; // ramp
+            coeffs[i * s * d + d] = 15.0 + 1.5 * i as f32;
+        }
+        let ts: Vec<f32> = (0..t).map(|i| i as f32 * 0.1).collect();
+        let shapes: [&[usize]; 3] = [&[b, s + 1], &[b, s, d], &[t]];
+        results.push(bench_once("eval_pw artifact (64x1024)", 10, || {
+            rt.execute_f32(
+                "eval_pw_b64_s16_d4_t1024",
+                &[
+                    (&breaks, shapes[0]),
+                    (&coeffs, shapes[1]),
+                    (&ts, shapes[2]),
+                ],
+            )
+            .unwrap()
+        }));
+    }
+
+    // ---- L2 grid-solver artifact: one batched stage ----------------------
+    {
+        use bottlemod::runtime::sweep::{B, K, L, S2, T};
+        let pd = vec![100.0f32; B * K * T];
+        let mut rbreaks = vec![BIG; B * L * (S2 + 1)];
+        let mut rslopes = vec![0f32; B * L * S2];
+        for bb in 0..B {
+            rbreaks[bb * L * (S2 + 1)] = 0.0;
+            rslopes[bb * L * S2] = 1.0;
+        }
+        let rin = vec![1.0f32; B * L * T];
+        let ts: Vec<f32> = (0..T).map(|i| i as f32 * 0.25).collect();
+        let target = vec![100.0f32; B];
+        let name = format!("grid_solve_pd_b{B}_k{K}_l{L}_s{S2}_t{T}");
+        results.push(bench_once("grid_solve_pd stage (600x2048 scan)", 10, || {
+            rt.execute_f32(
+                &name,
+                &[
+                    (&pd, &[B, K, T]),
+                    (&rbreaks, &[B, L, S2 + 1]),
+                    (&rslopes, &[B, L, S2]),
+                    (&rin, &[B, L, T]),
+                    (&ts, &[T]),
+                    (&target, &[B]),
+                ],
+            )
+            .unwrap()
+        }));
+    }
+
+    println!("\n== PJRT runtime benchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,72 @@
+//! §6 performance comparison: BottleMod analysis vs the WRENCH-like DES,
+//! as a function of simulated input size. The paper's numbers: BottleMod
+//! 20.0 ms (flat: 22.8 ms at 100 GB); WRENCH 32.8 ms at 1.1 GB, 1.137 s at
+//! 100 GB. Absolute values differ on this substrate — the *shape* (flat vs
+//! data-scaling) is the claim under test.
+//!
+//! Run: `cargo bench --bench sec6_scaling`
+
+use bottlemod::des;
+use bottlemod::solver::SolverOpts;
+use bottlemod::util::harness::bench_once;
+use bottlemod::util::stats::ascii_table;
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::scenario::VideoScenario;
+
+fn main() {
+    let opts = SolverOpts::default();
+    let sizes_gb = [1.1, 5.0, 10.0, 50.0, 100.0];
+
+    let mut rows = vec![vec![
+        "input".to_string(),
+        "BottleMod mean".to_string(),
+        "BM events".to_string(),
+        "DES mean".to_string(),
+        "DES events".to_string(),
+        "DES/BM".to_string(),
+    ]];
+
+    let mut first_des = 0.0;
+    let mut last_des = 0.0;
+    let mut first_bm = 0.0;
+    let mut last_bm = 0.0;
+    for &gb in &sizes_gb {
+        let sc = VideoScenario::default()
+            .with_input_size(gb * 1e9)
+            .with_fraction(0.5);
+        let (wf, _) = sc.build();
+
+        let bm = bench_once(&format!("bottlemod {gb} GB"), 10, || {
+            analyze_fixpoint(&wf, &opts, 6).unwrap()
+        });
+        let bm_events = analyze_fixpoint(&wf, &opts, 6).unwrap().events;
+
+        let des_b = bench_once(&format!("des {gb} GB"), 3, || {
+            des::video::run(&sc, 1e6)
+        });
+        let des_events = des::video::run(&sc, 1e6).events;
+
+        rows.push(vec![
+            format!("{gb:.1} GB"),
+            format!("{:.3} ms", bm.per_iter.mean * 1e3),
+            format!("{bm_events}"),
+            format!("{:.3} ms", des_b.per_iter.mean * 1e3),
+            format!("{des_events}"),
+            format!("{:.0}x", des_b.per_iter.mean / bm.per_iter.mean),
+        ]);
+        if gb == sizes_gb[0] {
+            first_des = des_b.per_iter.mean;
+            first_bm = bm.per_iter.mean;
+        }
+        last_des = des_b.per_iter.mean;
+        last_bm = bm.per_iter.mean;
+    }
+
+    println!("\n== §6: analysis cost vs input size (Fig 5 workflow, 50:50) ==");
+    print!("{}", ascii_table(&rows));
+    println!(
+        "scaling 1.1 GB -> 100 GB: BottleMod {:.2}x, DES {:.1}x  (paper: ~1.1x vs ~35x)",
+        last_bm / first_bm,
+        last_des / first_des
+    );
+}

@@ -1,0 +1,410 @@
+//! Figure/table exporters: regenerate the data behind every figure in the
+//! paper's evaluation as JSON documents (one per figure) that any plotting
+//! front end can consume. The CLI's `export-figures` subcommand drives
+//! this; EXPERIMENTS.md records the headline numbers.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::des;
+use crate::model::{Process, ProcessBuilder, ProcessInputs};
+use crate::pwfn::{Poly, PwPoly};
+use crate::solver::{solve, Analysis, Bottleneck, SolverOpts};
+use crate::testbed::video::VideoTestbed;
+use crate::util::stats::Summary;
+use crate::util::Json;
+use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::scenario::VideoScenario;
+
+use super::sweeper::{exact_sweep, fig7_fractions};
+
+fn grid(a: f64, b: f64, n: usize) -> Vec<f64> {
+    (0..n).map(|i| a + (b - a) * i as f64 / (n - 1) as f64).collect()
+}
+
+fn write_json(dir: &Path, name: &str, j: &Json) -> Result<()> {
+    let path = dir.join(name);
+    std::fs::write(&path, j.to_string_pretty()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Fig 1: the canonical stream/burst requirement shapes.
+pub fn fig1(dir: &Path) -> Result<()> {
+    let xs = grid(0.0, 100.0, 101);
+    let data_stream = PwPoly::ramp_to(0.0, 1.0, 100.0);
+    let data_burst = PwPoly::step(0.0, 100.0, 0.0, 100.0);
+    let res_stream = PwPoly::linear_from(0.0, 0.0, 0.5);
+    let res_burst = PwPoly::new(
+        vec![0.0, 1e-9, f64::INFINITY],
+        vec![Poly::constant(0.0), Poly::constant(50.0)],
+    );
+    let j = Json::obj(vec![
+        ("x", Json::arr_f64(&xs)),
+        ("data_stream", Json::arr_f64(&data_stream.sample(&xs))),
+        ("data_burst", Json::arr_f64(&data_burst.sample(&xs))),
+        ("resource_stream", Json::arr_f64(&res_stream.sample(&xs))),
+        ("resource_burst", Json::arr_f64(&res_burst.sample(&xs))),
+    ]);
+    write_json(dir, "fig1_requirement_functions.json", &j)
+}
+
+/// The synthetic three-input / three-resource process behind Figs 3 and 4.
+pub fn paper_example() -> (Process, ProcessInputs) {
+    let p = ProcessBuilder::new("example", 100.0)
+        // all three data requirements are stream-type over 100 units
+        .stream_data("data0", 100.0)
+        .stream_data("data1", 100.0)
+        .stream_data("data2", 100.0)
+        // res0: constant cost, ample allocation
+        .stream_resource("res0", 50.0)
+        // res1: piecewise-linear cost (cheap early, expensive late)
+        .res_req_fn(
+            "res1",
+            PwPoly::from_points(&[(0.0, 0.0), (60.0, 30.0), (100.0, 90.0)]),
+        )
+        // res2: constant cost
+        .stream_resource("res2", 40.0)
+        .identity_output("out")
+        .build();
+    let inputs = ProcessInputs {
+        data: vec![
+            // data0: linear availability
+            PwPoly::ramp_to(0.0, 2.0, 100.0),
+            // data1: 20% available up front, the rest arrives at t=30
+            PwPoly::new(
+                vec![0.0, 30.0, f64::INFINITY],
+                vec![Poly::constant(20.0), Poly::constant(100.0)],
+            ),
+            // data2: quadratic availability t^2/25 (complete at t=50)
+            PwPoly::new(
+                vec![0.0, 50.0, f64::INFINITY],
+                vec![Poly::new(vec![0.0, 0.0, 0.04]), Poly::constant(100.0)],
+            ),
+        ],
+        resources: vec![
+            PwPoly::constant(1.2),
+            // res1 allocation drops midway
+            PwPoly::step(0.0, 35.0, 1.5, 0.45),
+            PwPoly::constant(1.1),
+        ],
+        start_time: 0.0,
+    };
+    (p, inputs)
+}
+
+fn bottleneck_label(p: &Process, a: &Analysis, b: Bottleneck) -> Json {
+    Json::Str(a.bottleneck_name(p, b))
+}
+
+/// Fig 3: data progress functions + min-envelope + limiting input.
+pub fn fig3(dir: &Path) -> Result<()> {
+    let (p, inputs) = paper_example();
+    let a = solve(&p, &inputs, &SolverOpts::default())?;
+    let ts = grid(0.0, 60.0, 241);
+    let mut obj = vec![("t", Json::arr_f64(&ts))];
+    let names = ["data0", "data1", "data2"];
+    for (k, dp) in a.data_progress.iter().enumerate() {
+        obj.push((names[k], Json::arr_f64(&dp.sample(&ts))));
+    }
+    obj.push(("envelope", Json::arr_f64(&a.pd.func.sample(&ts))));
+    let segs: Vec<Json> = a
+        .pd
+        .segments()
+        .into_iter()
+        .map(|(s, e, w)| {
+            Json::obj(vec![
+                ("start", Json::Num(s)),
+                ("end", Json::Num(if e.is_finite() { e } else { 60.0 })),
+                ("limiting_input", Json::Str(names[w].to_string())),
+            ])
+        })
+        .collect();
+    obj.push(("limiting_segments", Json::Arr(segs)));
+    write_json(dir, "fig3_data_progress.json", &Json::obj(obj))
+}
+
+/// Fig 4: final progress with bottleneck attribution, resource consumption
+/// vs allocation, and buffered input data.
+pub fn fig4(dir: &Path) -> Result<()> {
+    let (p, inputs) = paper_example();
+    let a = solve(&p, &inputs, &SolverOpts::default())?;
+    let tmax = a.finish_time.unwrap_or(80.0) + 5.0;
+    let ts = grid(0.0, tmax, 321);
+
+    let mut obj = vec![
+        ("t", Json::arr_f64(&ts)),
+        ("progress", Json::arr_f64(&a.progress.sample(&ts))),
+        (
+            "data_progress",
+            Json::Arr(
+                a.data_progress
+                    .iter()
+                    .map(|f| Json::arr_f64(&f.sample(&ts)))
+                    .collect(),
+            ),
+        ),
+        (
+            "finish_time",
+            a.finish_time.map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ];
+    // bottleneck segments
+    let segs: Vec<Json> = a
+        .segments
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("start", Json::Num(s.start)),
+                ("end", Json::Num(s.end)),
+                ("bottleneck", bottleneck_label(&p, &a, s.bottleneck)),
+            ])
+        })
+        .collect();
+    obj.push(("segments", Json::Arr(segs)));
+    // resource consumption vs allocation (paper Fig 4 mid)
+    let mut consumption = vec![];
+    let mut allocation = vec![];
+    for l in 0..p.res_reqs.len() {
+        let demand = a.resource_demand(&p, l);
+        consumption.push(Json::arr_f64(&demand.sample(&ts)));
+        allocation.push(Json::arr_f64(&inputs.resources[l].sample(&ts)));
+    }
+    obj.push(("resource_consumption", Json::Arr(consumption)));
+    obj.push(("resource_allocation", Json::Arr(allocation)));
+    // buffered input data (paper Fig 4 bottom)
+    let mut buffered = vec![];
+    for k in 0..p.data_reqs.len() {
+        buffered.push(Json::arr_f64(&a.buffered_data_sampled(&p, &inputs, k, &ts)));
+    }
+    obj.push(("buffered_data", Json::Arr(buffered)));
+    write_json(dir, "fig4_progress_and_resources.json", &Json::obj(obj))
+}
+
+/// Fig 6: measured I/O traces of the isolated task executions.
+pub fn fig6(dir: &Path) -> Result<()> {
+    let mut tb = VideoTestbed::new(VideoScenario::default());
+    tb.sample_every = 0.25;
+    let t1 = tb.isolated_task1();
+    let t2 = tb.isolated_task2();
+    let trace_json = |tr: &crate::testbed::video::IoTrace| {
+        Json::obj(vec![
+            ("name", Json::Str(tr.name.clone())),
+            ("t", Json::arr_f64(&tr.ts)),
+            ("read", Json::arr_f64(&tr.read)),
+            ("written", Json::arr_f64(&tr.written)),
+        ])
+    };
+    let j = Json::obj(vec![
+        ("task1", trace_json(&t1)),
+        ("task2", trace_json(&t2)),
+    ]);
+    write_json(dir, "fig6_io_traces.json", &j)
+}
+
+/// Fig 7: predicted total time over `points` prioritizations + measured
+/// (testbed) averages with min/max bars at a subset.
+pub fn fig7(dir: &Path, points: usize, measured_points: usize, runs: usize) -> Result<()> {
+    let sc = VideoScenario::default();
+    let fractions = fig7_fractions(points);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let sweep = exact_sweep(&sc, &fractions, threads);
+
+    let mut measured = vec![];
+    for i in 0..measured_points {
+        let f = (i + 1) as f64 / (measured_points + 1) as f64;
+        let tb = VideoTestbed::new(sc.clone().with_fraction(f));
+        let runs_v = tb.measure(runs, 1000 + i as u64, 0.01);
+        let s = Summary::of(&runs_v);
+        measured.push(Json::obj(vec![
+            ("fraction", Json::Num(f)),
+            ("mean", Json::Num(s.mean)),
+            ("min", Json::Num(s.min)),
+            ("max", Json::Num(s.max)),
+            ("runs", Json::Num(runs as f64)),
+        ]));
+    }
+
+    let j = Json::obj(vec![
+        ("fractions", Json::arr_f64(&sweep.fractions)),
+        ("predicted_total", Json::arr_f64(&sweep.totals)),
+        ("measured", Json::Arr(measured)),
+    ]);
+    write_json(dir, "fig7_prioritization_sweep.json", &j)
+}
+
+/// Fig 8: detailed progress/bottleneck/link-usage at 50 % and 95 %.
+pub fn fig8(dir: &Path) -> Result<()> {
+    let mut cases = vec![];
+    for f in [0.5, 0.95] {
+        let sc = VideoScenario::default().with_fraction(f);
+        let (wf, nodes) = sc.build();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6)?;
+        let total = wa.makespan.unwrap();
+        let ts = grid(0.0, total + 5.0, 301);
+
+        let mut node_objs = vec![];
+        for (i, a) in wa.analyses.iter().enumerate() {
+            let p = &wf.nodes[i].process;
+            let segs: Vec<Json> = a
+                .segments
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("start", Json::Num(s.start)),
+                        ("end", Json::Num(s.end.min(total + 5.0))),
+                        ("bottleneck", bottleneck_label(p, a, s.bottleneck)),
+                    ])
+                })
+                .collect();
+            node_objs.push(Json::obj(vec![
+                ("name", Json::Str(p.name.clone())),
+                ("progress", Json::arr_f64(&a.progress.sample(&ts))),
+                ("max_progress", Json::Num(a.max_progress)),
+                (
+                    "finish",
+                    a.finish_time.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("segments", Json::Arr(segs)),
+            ]));
+        }
+        // link rate usage of the two downloads (paper Fig 8 bottom)
+        let dl1_demand = wa.analyses[nodes.dl1]
+            .resource_demand(&wf.nodes[nodes.dl1].process, 0);
+        let dl2_demand = wa.analyses[nodes.dl2]
+            .resource_demand(&wf.nodes[nodes.dl2].process, 0);
+        cases.push(Json::obj(vec![
+            ("fraction", Json::Num(f)),
+            ("total", Json::Num(total)),
+            ("t", Json::arr_f64(&ts)),
+            ("nodes", Json::Arr(node_objs)),
+            ("dl1_rate", Json::arr_f64(&dl1_demand.sample(&ts))),
+            ("dl2_rate", Json::arr_f64(&dl2_demand.sample(&ts))),
+            ("link_capacity", Json::Num(sc.link_rate)),
+        ]));
+    }
+    write_json(dir, "fig8_detailed_cases.json", &Json::obj(vec![("cases", Json::Arr(cases))]))
+}
+
+/// §6 table: BottleMod analysis wallclock vs DES simulation wallclock over
+/// input sizes. Returns rows for printing too.
+pub fn sec6(dir: &Path, sizes_gb: &[f64], reps: usize) -> Result<Vec<Vec<String>>> {
+    let mut rows = vec![vec![
+        "input size".to_string(),
+        "BottleMod (ms)".to_string(),
+        "BottleMod events".to_string(),
+        "DES (ms)".to_string(),
+        "DES events".to_string(),
+    ]];
+    let mut entries = vec![];
+    for &gb in sizes_gb {
+        let sc = VideoScenario::default()
+            .with_input_size(gb * 1e9)
+            .with_fraction(0.5);
+
+        // BottleMod exact analysis
+        let (wf, _) = sc.build();
+        let opts = SolverOpts::default();
+        let t0 = Instant::now();
+        let mut events = 0;
+        for _ in 0..reps {
+            events = analyze_fixpoint(&wf, &opts, 6)?.events;
+        }
+        let bm_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+        // DES simulation at 1 MB chunks
+        let t0 = Instant::now();
+        let mut des_events = 0;
+        for _ in 0..reps {
+            des_events = des::video::run(&sc, 1e6).events;
+        }
+        let des_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+        rows.push(vec![
+            format!("{gb:.1} GB"),
+            format!("{bm_ms:.3}"),
+            format!("{events}"),
+            format!("{des_ms:.3}"),
+            format!("{des_events}"),
+        ]);
+        entries.push(Json::obj(vec![
+            ("input_gb", Json::Num(gb)),
+            ("bottlemod_ms", Json::Num(bm_ms)),
+            ("bottlemod_events", Json::Num(events as f64)),
+            ("des_ms", Json::Num(des_ms)),
+            ("des_events", Json::Num(des_events as f64)),
+        ]));
+    }
+    write_json(dir, "sec6_performance.json", &Json::obj(vec![("rows", Json::Arr(entries))]))?;
+    Ok(rows)
+}
+
+/// Export everything.
+pub fn export_all(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    fig1(dir)?;
+    fig3(dir)?;
+    fig4(dir)?;
+    fig6(dir)?;
+    fig7(dir, 600, 13, 10)?;
+    fig8(dir)?;
+    let rows = sec6(dir, &[1.1, 10.0, 100.0], 3)?;
+    println!("{}", crate::util::stats::ascii_table(&rows));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_solves_with_bottleneck_switches() {
+        let (p, inputs) = paper_example();
+        let a = solve(&p, &inputs, &SolverOpts::default()).unwrap();
+        assert!(a.finish_time.is_some());
+        // the example is designed to have several distinct bottlenecks
+        let kinds: std::collections::BTreeSet<String> = a
+            .segments
+            .iter()
+            .map(|s| a.bottleneck_name(&p, s.bottleneck))
+            .collect();
+        assert!(kinds.len() >= 2, "only {kinds:?}");
+    }
+
+    #[test]
+    fn export_small_figs_to_tempdir() {
+        let dir = std::env::temp_dir().join("bottlemod_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fig1(&dir).unwrap();
+        fig3(&dir).unwrap();
+        fig4(&dir).unwrap();
+        // outputs parse back as JSON
+        for f in [
+            "fig1_requirement_functions.json",
+            "fig3_data_progress.json",
+            "fig4_progress_and_resources.json",
+        ] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(Json::parse(&text).is_ok(), "{f} not valid json");
+        }
+    }
+
+    #[test]
+    fn sec6_rows_show_scaling_shape() {
+        let dir = std::env::temp_dir().join("bottlemod_sec6_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rows = sec6(&dir, &[1.1, 10.0], 1).unwrap();
+        assert_eq!(rows.len(), 3);
+        // DES events at 10 GB ≫ events at 1.1 GB; BottleMod events flat
+        let bm1: f64 = rows[1][2].parse().unwrap();
+        let bm10: f64 = rows[2][2].parse().unwrap();
+        let des1: f64 = rows[1][4].parse().unwrap();
+        let des10: f64 = rows[2][4].parse().unwrap();
+        assert!(des10 > 5.0 * des1, "DES should scale: {des1} -> {des10}");
+        assert!(bm10 < 2.0 * bm1, "BottleMod should stay flat: {bm1} -> {bm10}");
+    }
+}

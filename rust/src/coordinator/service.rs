@@ -1,0 +1,253 @@
+//! The analysis service: a leader/worker job queue over the exact engine.
+//!
+//! BottleMod's intended deployment (paper §7, "repeatedly executed online
+//! with an updated state from monitoring") is as a sidecar service that a
+//! resource manager queries. This module provides that shape without any
+//! network dependency: a worker pool consuming analysis jobs from a queue,
+//! plus a JSON-lines stdio front end (`bottlemod serve`).
+
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::model::spec::parse_workflow;
+use crate::solver::SolverOpts;
+use crate::util::Json;
+use crate::workflow::engine::analyze_fixpoint;
+
+/// A job for the worker pool.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Analyze a workflow spec (JSON text).
+    Analyze { id: u64, spec: String },
+}
+
+/// Result of a job, as JSON (so the stdio server can emit it directly).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub payload: Json,
+}
+
+/// Run one job to completion.
+pub fn run_job(job: &Job) -> JobResult {
+    match job {
+        Job::Analyze { id, spec } => {
+            let payload = match parse_workflow(spec) {
+                Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                Ok(wf) => match analyze_fixpoint(&wf, &SolverOpts::default(), 6) {
+                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                    Ok(wa) => {
+                        let schedule: Vec<Json> = wa
+                            .schedule(&wf)
+                            .into_iter()
+                            .map(|(name, start, finish)| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(name)),
+                                    ("start", Json::Num(start)),
+                                    (
+                                        "finish",
+                                        finish.map(Json::Num).unwrap_or(Json::Null),
+                                    ),
+                                ])
+                            })
+                            .collect();
+                        let bottlenecks: Vec<Json> = wa
+                            .analyses
+                            .iter()
+                            .enumerate()
+                            .flat_map(|(i, a)| {
+                                let p = &wf.nodes[i].process;
+                                a.segments
+                                    .iter()
+                                    .map(|s| {
+                                        Json::obj(vec![
+                                            ("process", Json::Str(p.name.clone())),
+                                            ("start", Json::Num(s.start)),
+                                            ("end", Json::Num(s.end)),
+                                            (
+                                                "bottleneck",
+                                                Json::Str(a.bottleneck_name(p, s.bottleneck)),
+                                            ),
+                                        ])
+                                    })
+                                    .collect::<Vec<_>>()
+                            })
+                            .collect();
+                        Json::obj(vec![
+                            (
+                                "makespan",
+                                wa.makespan.map(Json::Num).unwrap_or(Json::Null),
+                            ),
+                            ("events", Json::Num(wa.events as f64)),
+                            ("passes", Json::Num(wa.passes as f64)),
+                            ("schedule", Json::Arr(schedule)),
+                            ("bottlenecks", Json::Arr(bottlenecks)),
+                        ])
+                    }
+                },
+            };
+            JobResult { id: *id, payload }
+        }
+    }
+}
+
+/// A fixed-size worker pool consuming jobs.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<Job>>,
+    results: mpsc::Receiver<JobResult>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn new(n_workers: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (rtx, rrx) = mpsc::channel::<JobResult>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let rtx = rtx.clone();
+                std::thread::spawn(move || loop {
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break,
+                    };
+                    let _ = rtx.send(run_job(&job));
+                })
+            })
+            .collect();
+        Coordinator {
+            tx: Some(tx),
+            results: rrx,
+            workers,
+        }
+    }
+
+    pub fn submit(&self, job: Job) {
+        self.tx.as_ref().unwrap().send(job).expect("queue alive");
+    }
+
+    /// Collect exactly `n` results (blocking).
+    pub fn collect(&self, n: usize) -> Vec<JobResult> {
+        (0..n).map(|_| self.results.recv().expect("worker alive")).collect()
+    }
+
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// JSON-lines server: one request object per line on stdin, one response
+/// per line on stdout. Request: `{"id": 1, "op": "analyze", "spec": {...}}`.
+pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> anyhow::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(
+                    output,
+                    "{}",
+                    Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))])
+                )?;
+                continue;
+            }
+        };
+        let id = req.get("id").as_f64().unwrap_or(0.0) as u64;
+        let resp = match req.get("op").as_str() {
+            Some("analyze") => {
+                let spec = req.get("spec").to_string();
+                run_job(&Job::Analyze { id, spec }).payload
+            }
+            Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
+            other => Json::obj(vec![(
+                "error",
+                Json::Str(format!("unknown op {other:?}")),
+            )]),
+        };
+        let mut obj = match resp {
+            Json::Obj(m) => m,
+            other => {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("result".to_string(), other);
+                m
+            }
+        };
+        obj.insert("id".to_string(), Json::Num(id as f64));
+        writeln!(output, "{}", Json::Obj(obj))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY_SPEC: &str = r#"{
+      "processes": [
+        {"name": "a", "max_progress": 10.0,
+         "data": [{"req": {"type": "stream", "total": 10.0},
+                   "source": {"external_constant": 10.0}}],
+         "resources": [{"req": {"type": "stream", "total": 5.0},
+                        "source": {"constant": 1.0}}],
+         "outputs": [{"name": "out", "type": "identity"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn pool_processes_jobs() {
+        let c = Coordinator::new(3);
+        for id in 0..6 {
+            c.submit(Job::Analyze {
+                id,
+                spec: TINY_SPEC.to_string(),
+            });
+        }
+        let mut results = c.collect(6);
+        c.shutdown();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            let mk = r.payload.get("makespan").as_f64().unwrap();
+            assert!((mk - 5.0).abs() < 1e-6, "{mk}");
+        }
+    }
+
+    #[test]
+    fn stdio_server_roundtrip() {
+        let spec_json = Json::parse(TINY_SPEC).unwrap();
+        let req = Json::obj(vec![
+            ("id", Json::Num(7.0)),
+            ("op", Json::Str("analyze".into())),
+            ("spec", spec_json),
+        ]);
+        let input = format!("{req}\n{{\"op\": \"ping\", \"id\": 8}}\n");
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let r1 = Json::parse(lines[0]).unwrap();
+        assert_eq!(r1.get("id").as_f64(), Some(7.0));
+        assert!((r1.get("makespan").as_f64().unwrap() - 5.0).abs() < 1e-6);
+        let r2 = Json::parse(lines[1]).unwrap();
+        assert_eq!(r2.get("pong").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn bad_spec_reports_error() {
+        let r = run_job(&Job::Analyze {
+            id: 1,
+            spec: "{}".into(),
+        });
+        assert!(r.payload.get("error").as_str().is_some());
+    }
+}

@@ -1,0 +1,112 @@
+//! Parallel sweep orchestration over candidate resource allocations.
+//!
+//! The Fig 7 experiment evaluates the Fig 5 workflow for 600 different link
+//! prioritizations. Two engines:
+//!
+//! * [`exact_sweep`] — the event-driven exact solver, fanned out over a
+//!   thread pool (each analysis is independent);
+//! * [`crate::runtime::fig7_sweep`] — the batched PJRT path (L2 grid
+//!   solver), used when an approximate but fused evaluation is preferred.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::solver::SolverOpts;
+use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::scenario::VideoScenario;
+
+/// Outcome of an exact sweep.
+#[derive(Clone, Debug)]
+pub struct ExactSweep {
+    pub fractions: Vec<f64>,
+    pub totals: Vec<f64>,
+    /// total solver events across all configurations
+    pub events: usize,
+}
+
+/// Evaluate the scenario's total time for each link fraction, in parallel.
+pub fn exact_sweep(sc: &VideoScenario, fractions: &[f64], threads: usize) -> ExactSweep {
+    let threads = threads.max(1).min(fractions.len().max(1));
+    let totals = vec![0.0f64; fractions.len()];
+    let events = AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    let totals_ptr = std::sync::Mutex::new(totals);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let opts = SolverOpts::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= fractions.len() {
+                        break;
+                    }
+                    let (wf, _) = sc.clone().with_fraction(fractions[i]).build();
+                    let wa = analyze_fixpoint(&wf, &opts, 6).expect("sweep analysis");
+                    let total = wa.makespan.unwrap_or(f64::INFINITY);
+                    events.fetch_add(wa.events, Ordering::Relaxed);
+                    totals_ptr.lock().unwrap()[i] = total;
+                }
+            });
+        }
+    });
+
+    ExactSweep {
+        fractions: fractions.to_vec(),
+        totals: totals_ptr.into_inner().unwrap(),
+        events: events.into_inner(),
+    }
+}
+
+/// The standard Fig 7 x-axis: `n` fractions spanning (0, 1).
+pub fn fig7_fractions(n: usize) -> Vec<f64> {
+    (1..=n).map(|i| i as f64 / (n as f64 + 1.0)).collect()
+}
+
+/// Find the best fraction (argmin of total time) — the advisor primitive.
+pub fn best_fraction(sweep: &ExactSweep) -> (f64, f64) {
+    let mut best = (sweep.fractions[0], sweep.totals[0]);
+    for (f, t) in sweep.fractions.iter().zip(sweep.totals.iter()) {
+        if *t < best.1 {
+            best = (*f, *t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_parallel_equals_serial() {
+        let sc = VideoScenario::default();
+        let fr = fig7_fractions(12);
+        let par = exact_sweep(&sc, &fr, 4);
+        let ser = exact_sweep(&sc, &fr, 1);
+        for (a, b) in par.totals.iter().zip(ser.totals.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn optimum_is_high_fraction() {
+        let sc = VideoScenario::default();
+        let fr = fig7_fractions(40);
+        let sweep = exact_sweep(&sc, &fr, 4);
+        let (best_f, best_t) = best_fraction(&sweep);
+        // the paper's conclusion: ≥93% is optimal
+        assert!(best_f > 0.85, "best fraction {best_f} (t={best_t})");
+        // and ≈32% better than 50:50
+        let t50 = sweep
+            .fractions
+            .iter()
+            .zip(&sweep.totals)
+            .min_by(|a, b| {
+                (a.0 - 0.5).abs().partial_cmp(&(b.0 - 0.5).abs()).unwrap()
+            })
+            .unwrap()
+            .1;
+        let gain = 1.0 - best_t / t50;
+        assert!((0.25..0.40).contains(&gain), "gain {gain}");
+    }
+}

@@ -1,0 +1,6 @@
+//! WRENCH-like discrete-event baseline for the §6 performance comparison.
+
+pub mod engine;
+pub mod video;
+
+pub use engine::{simulate, DesResult, DesTask, DesWorkflow, Platform};

@@ -1,0 +1,17 @@
+//! BottleMod: modeling data flows and tasks for fast bottleneck analysis.
+//!
+//! A reproduction of Lößer et al., *"BottleMod: Modeling Data Flows and
+//! Tasks for Fast Bottleneck Analysis"* (2022), built as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and the
+//! per-experiment index.
+
+pub mod coordinator;
+pub mod des;
+pub mod model;
+pub mod pwfn;
+pub mod runtime;
+pub mod sched;
+pub mod solver;
+pub mod workflow;
+pub mod testbed;
+pub mod util;

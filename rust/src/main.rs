@@ -1,0 +1,279 @@
+//! BottleMod CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   analyze <spec.json>           analyze a workflow spec, print schedule +
+//!                                 bottleneck segments
+//!   sweep [N] [--pjrt]            Fig 7 prioritization sweep (exact engine,
+//!                                 optionally also the batched PJRT path)
+//!   measure [points] [runs]       virtual-testbed measurements (Fig 7 bars)
+//!   compare-des [gb ...]          §6 performance comparison table
+//!   export-figures <dir>          regenerate every figure's data as JSON
+//!   advisor                       recommend the link split (paper headline)
+//!   online-demo                   online re-analysis controller demo
+//!   serve                         JSON-lines analysis service on stdio
+//!   artifacts                     list loadable PJRT artifacts
+//!
+//! (argument parsing is hand-rolled: the offline vendor set has no clap)
+
+use std::process::ExitCode;
+
+use bottlemod::coordinator::exporter;
+use bottlemod::coordinator::sweeper::{exact_sweep, fig7_fractions};
+use bottlemod::model::spec::parse_workflow;
+use bottlemod::runtime::Runtime;
+use bottlemod::sched;
+use bottlemod::solver::SolverOpts;
+use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::util::stats::{ascii_table, fmt_duration, Summary};
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::scenario::VideoScenario;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "analyze" => cmd_analyze(rest),
+        "sweep" => cmd_sweep(rest),
+        "measure" => cmd_measure(rest),
+        "compare-des" => cmd_compare_des(rest),
+        "export-figures" => cmd_export(rest),
+        "advisor" => cmd_advisor(),
+        "online-demo" => cmd_online(),
+        "serve" => {
+            let stdin = std::io::stdin();
+            bottlemod::coordinator::service::serve_stdio(stdin.lock(), std::io::stdout())
+        }
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_help();
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "bottlemod — fast bottleneck analysis for scientific workflows\n\
+         usage: bottlemod <analyze|sweep|measure|compare-des|export-figures|\
+         advisor|online-demo|serve|artifacts> [args]"
+    );
+}
+
+fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: bottlemod analyze <spec.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let wf = parse_workflow(&text)?;
+    let t0 = std::time::Instant::now();
+    let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut rows = vec![vec![
+        "process".to_string(),
+        "start".to_string(),
+        "finish".to_string(),
+        "bottlenecks over time".to_string(),
+    ]];
+    for (i, a) in wa.analyses.iter().enumerate() {
+        let p = &wf.nodes[i].process;
+        let segs = a
+            .segments
+            .iter()
+            .map(|s| {
+                format!(
+                    "[{:.1}-{:.1}] {}",
+                    s.start,
+                    s.end.min(1e9),
+                    a.bottleneck_name(p, s.bottleneck)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        rows.push(vec![
+            p.name.clone(),
+            format!("{:.2}", a.start_time),
+            a.finish_time
+                .map(|f| format!("{f:.2}"))
+                .unwrap_or_else(|| "never".into()),
+            segs,
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    match wa.makespan {
+        Some(m) => println!("makespan: {m:.2} s"),
+        None => println!("makespan: never finishes"),
+    }
+    println!(
+        "analysis: {} ({} events, {} passes)",
+        fmt_duration(dt),
+        wa.events,
+        wa.passes
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(600);
+    let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let sc = VideoScenario::default();
+    let fractions = fig7_fractions(n);
+    let threads = std::thread::available_parallelism()?.get();
+
+    let t0 = std::time::Instant::now();
+    let sweep = exact_sweep(&sc, &fractions, threads);
+    let exact_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "exact sweep: {n} configs in {} ({} per analysis, {} events total)",
+        fmt_duration(exact_dt),
+        fmt_duration(exact_dt / n as f64),
+        sweep.events
+    );
+
+    // print a compact table at decile fractions
+    let mut rows = vec![vec!["fraction".to_string(), "predicted total (s)".to_string()]];
+    for i in (0..n).step_by((n / 10).max(1)) {
+        rows.push(vec![
+            format!("{:.3}", sweep.fractions[i]),
+            format!("{:.2}", sweep.totals[i]),
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+
+    if use_pjrt {
+        let mut rt = Runtime::new(&Runtime::default_dir())?;
+        let t0 = std::time::Instant::now();
+        let batched = bottlemod::runtime::fig7_sweep(&mut rt, &sc, &fractions)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let max_err = sweep
+            .totals
+            .iter()
+            .zip(&batched.totals)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "pjrt batched sweep: {} total ({} per config), max |Δ| vs exact: {:.2} s",
+            fmt_duration(dt),
+            fmt_duration(dt / n as f64),
+            max_err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_measure(args: &[String]) -> anyhow::Result<()> {
+    let points: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(13);
+    let runs: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(10);
+    let mut rows = vec![vec![
+        "fraction".to_string(),
+        "mean (s)".to_string(),
+        "min".to_string(),
+        "max".to_string(),
+        "predicted".to_string(),
+    ]];
+    for i in 0..points {
+        let f = (i + 1) as f64 / (points + 1) as f64;
+        let sc = VideoScenario::default().with_fraction(f);
+        let tb = VideoTestbed::new(sc.clone());
+        let samples = tb.measure(runs, 4242 + i as u64, 0.01);
+        let s = Summary::of(&samples);
+        let (wf, _) = sc.build();
+        let pred = analyze_fixpoint(&wf, &SolverOpts::default(), 6)?
+            .makespan
+            .unwrap_or(f64::NAN);
+        rows.push(vec![
+            format!("{f:.3}"),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.min),
+            format!("{:.2}", s.max),
+            format!("{pred:.2}"),
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    Ok(())
+}
+
+fn cmd_compare_des(args: &[String]) -> anyhow::Result<()> {
+    let sizes: Vec<f64> = if args.is_empty() {
+        vec![1.1, 10.0, 100.0]
+    } else {
+        args.iter().filter_map(|a| a.parse().ok()).collect()
+    };
+    let dir = std::env::temp_dir().join("bottlemod_sec6");
+    std::fs::create_dir_all(&dir)?;
+    let rows = exporter::sec6(&dir, &sizes, 3)?;
+    print!("{}", ascii_table(&rows));
+    println!("(BottleMod cost is flat in input size; the DES scales — §6)");
+    Ok(())
+}
+
+fn cmd_export(args: &[String]) -> anyhow::Result<()> {
+    let dir = args
+        .first()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| "figures".into());
+    exporter::export_all(&dir)
+}
+
+fn cmd_advisor() -> anyhow::Result<()> {
+    let threads = std::thread::available_parallelism()?.get();
+    let rec = sched::recommend(&VideoScenario::default(), 200, threads);
+    println!(
+        "recommended link fraction for task 1's download: {:.3}\n\
+         predicted total: {:.1} s (fair 50:50: {:.1} s) — {:.1}% faster",
+        rec.best_fraction,
+        rec.best_total,
+        rec.fair_total,
+        rec.gain * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_online() -> anyhow::Result<()> {
+    let sc = VideoScenario::default();
+    let static_fair = sched::run_online(&sc, 1e9, &[0.5]);
+    let candidates: Vec<f64> = (1..=19).map(|i| i as f64 / 20.0).collect();
+    let online = sched::run_online(&sc, 10.0, &candidates);
+    println!("static fair share: {:.1} s", static_fair.total);
+    println!(
+        "online re-analysis (replan every 10 s): {:.1} s ({:.1}% faster, model overhead {})",
+        online.total,
+        (1.0 - online.total / static_fair.total) * 100.0,
+        fmt_duration(online.analysis_seconds)
+    );
+    for d in online.decisions.iter().take(8) {
+        println!(
+            "  t={:>6.1}s -> fraction {:.2} (predicted remaining {:.1} s)",
+            d.t, d.fraction, d.predicted_remaining
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let mut names = rt.names();
+    names.sort();
+    for n in names {
+        let info = rt.info(n).unwrap();
+        println!("{n}: inputs {:?}", info.inputs);
+    }
+    Ok(())
+}

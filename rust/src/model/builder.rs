@@ -1,0 +1,240 @@
+//! Fluent construction of the common process shapes of paper Fig 1.
+//!
+//! * **stream** data requirement — progress grows proportionally with input
+//!   read (re-encoding a video);
+//! * **burst** data requirement — *all* input must be read before any
+//!   progress (reversing a video);
+//! * **stream** resource requirement — resource consumed evenly across
+//!   progress;
+//! * **burst** resource requirement — all resource needed up front
+//!   (modelled as a jump at p = 0⁺, which the solver treats as "stall until
+//!   the cumulative allocation covers the jump").
+
+use crate::pwfn::{poly::Poly, PwPoly};
+
+use super::process::{DataRequirement, OutputFn, Process, ResourceRequirement};
+
+/// Builder for [`Process`].
+#[derive(Clone, Debug)]
+pub struct ProcessBuilder {
+    p: Process,
+}
+
+impl ProcessBuilder {
+    pub fn new(name: &str, max_progress: f64) -> Self {
+        ProcessBuilder {
+            p: Process {
+                name: name.to_string(),
+                data_reqs: vec![],
+                res_reqs: vec![],
+                outputs: vec![],
+                max_progress,
+            },
+        }
+    }
+
+    // ------------------------------------------------------ data (Fig 1a)
+
+    /// Stream-type data requirement: progress proportional to bytes read;
+    /// `total_bytes` of input yield `max_progress`.
+    pub fn stream_data(mut self, name: &str, total_bytes: f64) -> Self {
+        let slope = self.p.max_progress / total_bytes;
+        self.p.data_reqs.push(DataRequirement {
+            name: name.to_string(),
+            func: PwPoly::ramp_to(0.0, slope, self.p.max_progress),
+        });
+        self
+    }
+
+    /// Burst-type data requirement: zero progress until all `total_bytes`
+    /// are available, then full progress (paper Fig 1a 'burst'; used for
+    /// the video-reversal task).
+    pub fn burst_data(mut self, name: &str, total_bytes: f64) -> Self {
+        self.p.data_reqs.push(DataRequirement {
+            name: name.to_string(),
+            func: PwPoly::step(0.0, total_bytes, 0.0, self.p.max_progress),
+        });
+        self
+    }
+
+    /// Arbitrary data requirement from (bytes, progress) control points.
+    pub fn custom_data(mut self, name: &str, points: &[(f64, f64)]) -> Self {
+        self.p.data_reqs.push(DataRequirement {
+            name: name.to_string(),
+            func: PwPoly::from_points(points),
+        });
+        self
+    }
+
+    /// Raw piecewise data requirement.
+    pub fn data_req_fn(mut self, name: &str, func: PwPoly) -> Self {
+        self.p.data_reqs.push(DataRequirement {
+            name: name.to_string(),
+            func,
+        });
+        self
+    }
+
+    // -------------------------------------------------- resources (Fig 1b)
+
+    /// Stream-type resource requirement: `total_amount` of the resource
+    /// spread evenly over the whole progress (e.g. `executionTime /
+    /// outputSize` CPU-seconds per progress unit, paper §5.2).
+    pub fn stream_resource(mut self, name: &str, total_amount: f64) -> Self {
+        let slope = total_amount / self.p.max_progress.max(f64::MIN_POSITIVE);
+        self.p.res_reqs.push(ResourceRequirement {
+            name: name.to_string(),
+            func: PwPoly::linear_from(0.0, 0.0, slope),
+        });
+        self
+    }
+
+    /// Burst-type resource requirement: all `total_amount` needed before the
+    /// first progress unit (paper Fig 1b 'burst'), i.e. a jump at p = 0⁺.
+    pub fn burst_resource(mut self, name: &str, total_amount: f64) -> Self {
+        self.p.res_reqs.push(ResourceRequirement {
+            name: name.to_string(),
+            // represented as a jump right after 0; the solver stalls until
+            // the cumulative allocation covers it
+            func: PwPoly::new(
+                vec![0.0, crate::pwfn::poly::EPS.max(1e-12), f64::INFINITY],
+                vec![Poly::constant(0.0), Poly::constant(total_amount)],
+            ),
+        });
+        self
+    }
+
+    /// Two-phase resource requirement: `front` of the resource over the
+    /// first `split` fraction of progress, `back` over the rest. Models
+    /// read-then-encode tasks like the paper's task 1.
+    pub fn two_phase_resource(
+        mut self,
+        name: &str,
+        front: f64,
+        back: f64,
+        split: f64,
+    ) -> Self {
+        let p_split = self.p.max_progress * split;
+        self.p.res_reqs.push(ResourceRequirement {
+            name: name.to_string(),
+            func: PwPoly::from_points(&[
+                (0.0, 0.0),
+                (p_split.max(1e-12), front),
+                (self.p.max_progress, front + back),
+            ]),
+        });
+        self
+    }
+
+    /// Raw piecewise resource requirement (must be PL; `validate` checks).
+    pub fn res_req_fn(mut self, name: &str, func: PwPoly) -> Self {
+        self.p.res_reqs.push(ResourceRequirement {
+            name: name.to_string(),
+            func,
+        });
+        self
+    }
+
+    // ------------------------------------------------------------ outputs
+
+    /// Identity output: the progress metric *is* the output byte count
+    /// (the paper's choice for every evaluation process, §5.2).
+    pub fn identity_output(mut self, name: &str) -> Self {
+        self.p.outputs.push(OutputFn {
+            name: name.to_string(),
+            func: PwPoly::linear_from(0.0, 0.0, 1.0),
+        });
+        self
+    }
+
+    /// Output only produced when the process completes (counting-style
+    /// tasks): a jump of `size` at full progress.
+    pub fn final_output(mut self, name: &str, size: f64) -> Self {
+        let p_max = self.p.max_progress;
+        self.p.outputs.push(OutputFn {
+            name: name.to_string(),
+            func: PwPoly::step(0.0, p_max.max(1e-12), 0.0, size),
+        });
+        self
+    }
+
+    /// Proportional output: `size` bytes spread linearly over progress.
+    pub fn linear_output(mut self, name: &str, size: f64) -> Self {
+        let p_max = self.p.max_progress.max(f64::MIN_POSITIVE);
+        self.p.outputs.push(OutputFn {
+            name: name.to_string(),
+            func: PwPoly::ramp_to(0.0, size / p_max, size),
+        });
+        self
+    }
+
+    /// Raw output function.
+    pub fn output_fn(mut self, name: &str, func: PwPoly) -> Self {
+        self.p.outputs.push(OutputFn {
+            name: name.to_string(),
+            func,
+        });
+        self
+    }
+
+    pub fn build(self) -> Process {
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_data_shape() {
+        let p = ProcessBuilder::new("t", 100.0).stream_data("in", 1000.0).build();
+        let f = &p.data_reqs[0].func;
+        assert_eq!(f.eval(0.0), 0.0);
+        assert_eq!(f.eval(500.0), 50.0);
+        assert_eq!(f.eval(1000.0), 100.0);
+        assert_eq!(f.eval(2000.0), 100.0); // saturates
+    }
+
+    #[test]
+    fn burst_data_shape() {
+        let p = ProcessBuilder::new("t", 100.0).burst_data("in", 1000.0).build();
+        let f = &p.data_reqs[0].func;
+        assert_eq!(f.eval(999.9), 0.0);
+        assert_eq!(f.eval(1000.0), 100.0);
+    }
+
+    #[test]
+    fn stream_resource_slope() {
+        let p = ProcessBuilder::new("t", 80.0).stream_resource("cpu", 40.0).build();
+        let f = &p.res_reqs[0].func;
+        assert_eq!(f.eval(80.0), 40.0);
+        assert_eq!(f.slope_right(10.0), 0.5);
+    }
+
+    #[test]
+    fn two_phase_resource_split() {
+        // paper task 1: 26 s of CPU before any output, 82 s spread over output
+        let p = ProcessBuilder::new("t1", 80e6)
+            .two_phase_resource("cpu", 26.0, 82.0, 1e-9)
+            .build();
+        let f = &p.res_reqs[0].func;
+        assert!(f.eval(80e6) - 108.0 < 1e-6);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn final_output_jump() {
+        let p = ProcessBuilder::new("t", 100.0).final_output("out", 42.0).build();
+        let f = &p.outputs[0].func;
+        assert_eq!(f.eval(99.0), 0.0);
+        assert_eq!(f.eval(100.0), 42.0);
+    }
+
+    #[test]
+    fn burst_resource_validates() {
+        let p = ProcessBuilder::new("t", 10.0).burst_resource("cpu", 5.0).build();
+        assert!(p.validate().is_ok());
+        assert!(p.res_reqs[0].func.jump_at(crate::pwfn::poly::EPS.max(1e-12)) > 4.9);
+    }
+}

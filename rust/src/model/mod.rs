@@ -1,0 +1,9 @@
+//! Process models (paper §2): requirement, input and output functions.
+
+pub mod builder;
+pub mod fit;
+pub mod process;
+pub mod spec;
+
+pub use builder::ProcessBuilder;
+pub use process::{DataRequirement, ModelError, OutputFn, Process, ProcessInputs, ResourceRequirement};

@@ -1,0 +1,218 @@
+//! The process model of paper §2.
+//!
+//! A *process* (a task execution, a network transfer, ...) is described by
+//! process-specific **requirement** functions and execution-specific
+//! **input** functions:
+//!
+//! * data requirement `R_Dk(n)` — input bytes consumed → max progress
+//!   attainable from data input `k` alone (monotone nondecreasing);
+//! * resource requirement `R_Rl(p)` — progress → *cumulative* amount of
+//!   resource `l` needed (monotone nondecreasing; Algorithm 2 requires
+//!   piecewise-linear, which [`Process::validate`] checks);
+//! * output function `O_m(p)` — progress → bytes of output `m` produced;
+//! * data input `I_Dk(t)` — wall time → cumulative bytes available;
+//! * resource input `I_Rl(t)` — wall time → allocated resource *rate*.
+//!
+//! The progress metric is arbitrary but consistent within one process
+//! (paper §2.1); the canonical choice in the evaluation is "output bytes".
+
+use crate::pwfn::PwPoly;
+
+/// A named data requirement `R_Dk`.
+#[derive(Clone, Debug)]
+pub struct DataRequirement {
+    pub name: String,
+    /// bytes of this input consumed → maximum possible progress.
+    pub func: PwPoly,
+}
+
+/// A named resource requirement `R_Rl`.
+#[derive(Clone, Debug)]
+pub struct ResourceRequirement {
+    pub name: String,
+    /// progress → cumulative resource needed (CPU-seconds, bytes on a link, ...).
+    pub func: PwPoly,
+}
+
+/// A named output function `O_m`.
+#[derive(Clone, Debug)]
+pub struct OutputFn {
+    pub name: String,
+    /// progress → cumulative output bytes produced.
+    pub func: PwPoly,
+}
+
+/// Process-specific description (execution-independent; paper §2.2/§2.4).
+#[derive(Clone, Debug)]
+pub struct Process {
+    pub name: String,
+    pub data_reqs: Vec<DataRequirement>,
+    pub res_reqs: Vec<ResourceRequirement>,
+    pub outputs: Vec<OutputFn>,
+    /// The process finishes when `P(t)` reaches this progress value.
+    pub max_progress: f64,
+}
+
+/// Execution-specific side: one input function per requirement (paper §2.3).
+#[derive(Clone, Debug)]
+pub struct ProcessInputs {
+    /// `I_Dk(t)`, cumulative, aligned with `Process::data_reqs`.
+    pub data: Vec<PwPoly>,
+    /// `I_Rl(t)`, a rate, aligned with `Process::res_reqs`.
+    pub resources: Vec<PwPoly>,
+    /// Wall-clock time at which the process may begin.
+    pub start_time: f64,
+}
+
+/// Validation failure for a model (bad shapes, wrong monotonicity, ...).
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("invalid model for process '{process}': {msg}")]
+pub struct ModelError {
+    pub process: String,
+    pub msg: String,
+}
+
+impl Process {
+    /// A process with no requirements that is instantly complete — useful as
+    /// a DAG source.
+    pub fn nop(name: &str) -> Process {
+        Process {
+            name: name.to_string(),
+            data_reqs: vec![],
+            res_reqs: vec![],
+            outputs: vec![],
+            max_progress: 0.0,
+        }
+    }
+
+    fn err(&self, msg: String) -> ModelError {
+        ModelError {
+            process: self.name.clone(),
+            msg,
+        }
+    }
+
+    /// Check the §2 model invariants: requirement and output functions are
+    /// monotone nondecreasing; resource requirements are piecewise-linear
+    /// (the paper's §4 restriction that makes Algorithm 2 applicable);
+    /// max_progress is reachable data-wise given unlimited input.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        if self.max_progress < 0.0 || !self.max_progress.is_finite() {
+            return Err(self.err(format!("bad max_progress {}", self.max_progress)));
+        }
+        for d in &self.data_reqs {
+            if !d.func.is_nondecreasing() {
+                return Err(self.err(format!("data requirement '{}' not monotone", d.name)));
+            }
+        }
+        for r in &self.res_reqs {
+            if !r.func.is_nondecreasing() {
+                return Err(self.err(format!("resource requirement '{}' not monotone", r.name)));
+            }
+            for (i, p) in r.func.polys.iter().enumerate() {
+                if p.degree() > 1 {
+                    return Err(self.err(format!(
+                        "resource requirement '{}' piece {} has degree {} — Algorithm 2 \
+                         requires piecewise-linear resource requirements (paper §4)",
+                        r.name,
+                        i,
+                        p.degree()
+                    )));
+                }
+            }
+        }
+        for o in &self.outputs {
+            if !o.func.is_nondecreasing() {
+                return Err(self.err(format!("output function '{}' not monotone", o.name)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate an inputs object against this process (arity + monotone data).
+    pub fn validate_inputs(&self, inputs: &ProcessInputs) -> Result<(), ModelError> {
+        if inputs.data.len() != self.data_reqs.len() {
+            return Err(self.err(format!(
+                "expected {} data inputs, got {}",
+                self.data_reqs.len(),
+                inputs.data.len()
+            )));
+        }
+        if inputs.resources.len() != self.res_reqs.len() {
+            return Err(self.err(format!(
+                "expected {} resource inputs, got {}",
+                self.res_reqs.len(),
+                inputs.resources.len()
+            )));
+        }
+        for (k, f) in inputs.data.iter().enumerate() {
+            if !f.is_nondecreasing() {
+                return Err(self.err(format!("data input {k} not monotone")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bytes of output `m` at full progress.
+    pub fn output_size(&self, m: usize) -> f64 {
+        self.outputs[m].func.eval(self.max_progress)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::ProcessBuilder;
+    use crate::pwfn::{poly::Poly, PwPoly};
+
+    #[test]
+    fn validate_accepts_stream_process() {
+        let p = ProcessBuilder::new("enc", 100.0)
+            .stream_data("in", 1000.0)
+            .stream_resource("cpu", 50.0)
+            .identity_output("out")
+            .build();
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_decreasing_requirement() {
+        let mut p = ProcessBuilder::new("bad", 10.0)
+            .stream_data("in", 10.0)
+            .build();
+        p.data_reqs[0].func = PwPoly::from_points(&[(0.0, 5.0), (1.0, 0.0)]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_quadratic_resource_req() {
+        let mut p = ProcessBuilder::new("bad", 10.0)
+            .stream_resource("cpu", 10.0)
+            .build();
+        p.res_reqs[0].func = PwPoly::new(
+            vec![0.0, f64::INFINITY],
+            vec![Poly::new(vec![0.0, 0.0, 1.0])],
+        );
+        let err = p.validate().unwrap_err();
+        assert!(err.msg.contains("piecewise-linear"));
+    }
+
+    #[test]
+    fn validate_inputs_arity() {
+        let p = ProcessBuilder::new("t", 10.0).stream_data("in", 10.0).build();
+        let bad = ProcessInputs {
+            data: vec![],
+            resources: vec![],
+            start_time: 0.0,
+        };
+        assert!(p.validate_inputs(&bad).is_err());
+    }
+
+    #[test]
+    fn output_size_via_output_fn() {
+        let p = ProcessBuilder::new("t", 80e6)
+            .identity_output("out")
+            .build();
+        assert_eq!(p.output_size(0), 80e6);
+    }
+}

@@ -1,0 +1,326 @@
+//! JSON workflow specifications.
+//!
+//! The config-file front end of the system: a declarative description of
+//! processes, requirement functions, wiring and pools that loads into a
+//! [`crate::workflow::Workflow`]. Used by the CLI (`bottlemod analyze`)
+//! and the e2e example. See `examples/specs/video.json` for the Fig 5
+//! workflow in this format.
+//!
+//! Function specs:
+//! ```json
+//! {"type": "stream", "total": 100.0}          // Fig 1 stream
+//! {"type": "burst",  "total": 100.0}          // Fig 1 burst
+//! {"type": "points", "points": [[0,0],[2,4]]} // PL interpolation
+//! {"type": "constant", "value": 5.0}
+//! ```
+
+use std::collections::HashMap;
+
+use crate::pwfn::PwPoly;
+use crate::util::Json;
+use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+
+use super::builder::ProcessBuilder;
+
+/// Spec parsing failure with a path-ish context string.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("workflow spec: {0}")]
+pub struct SpecError(pub String);
+
+fn err(msg: impl Into<String>) -> SpecError {
+    SpecError(msg.into())
+}
+
+/// Parse a function spec in the context of a process with `max_progress`.
+/// `kind` selects the builder semantics: "data", "resource" or "output".
+fn parse_fn(j: &Json, max_progress: f64, kind: &str) -> Result<PwPoly, SpecError> {
+    let ty = j.get("type").as_str().unwrap_or("stream");
+    match ty {
+        "stream" => {
+            let total = j
+                .get("total")
+                .as_f64()
+                .ok_or_else(|| err(format!("{kind} stream needs total")))?;
+            Ok(match kind {
+                "data" => PwPoly::ramp_to(0.0, max_progress / total, max_progress),
+                "resource" => PwPoly::linear_from(0.0, 0.0, total / max_progress.max(1e-300)),
+                _ => PwPoly::ramp_to(0.0, total / max_progress.max(1e-300), total),
+            })
+        }
+        "burst" => {
+            let total = j
+                .get("total")
+                .as_f64()
+                .ok_or_else(|| err(format!("{kind} burst needs total")))?;
+            Ok(match kind {
+                "data" => PwPoly::step(0.0, total, 0.0, max_progress),
+                "resource" => PwPoly::new(
+                    vec![0.0, 1e-12, f64::INFINITY],
+                    vec![
+                        crate::pwfn::Poly::constant(0.0),
+                        crate::pwfn::Poly::constant(total),
+                    ],
+                ),
+                _ => PwPoly::step(0.0, max_progress.max(1e-12), 0.0, total),
+            })
+        }
+        "identity" => Ok(PwPoly::linear_from(0.0, 0.0, 1.0)),
+        "constant" => {
+            let v = j
+                .get("value")
+                .as_f64()
+                .ok_or_else(|| err("constant needs value"))?;
+            Ok(PwPoly::constant(v))
+        }
+        "points" => {
+            let pts = j
+                .get("points")
+                .as_arr()
+                .ok_or_else(|| err("points needs points array"))?;
+            let mut points = vec![];
+            for p in pts {
+                let xy = p.as_arr().ok_or_else(|| err("point must be [x,y]"))?;
+                if xy.len() != 2 {
+                    return Err(err("point must be [x,y]"));
+                }
+                points.push((
+                    xy[0].as_f64().ok_or_else(|| err("x not a number"))?,
+                    xy[1].as_f64().ok_or_else(|| err("y not a number"))?,
+                ));
+            }
+            if points.len() < 2 {
+                return Err(err("points needs at least 2 entries"));
+            }
+            Ok(PwPoly::from_points(&points))
+        }
+        other => Err(err(format!("unknown function type '{other}'"))),
+    }
+}
+
+/// Parse a full workflow spec document.
+pub fn parse_workflow(text: &str) -> Result<Workflow, SpecError> {
+    let j = Json::parse(text).map_err(|e| err(format!("json: {e}")))?;
+    let mut wf = Workflow::new();
+
+    // pools first (referenced by name)
+    let mut pool_ids: HashMap<String, usize> = HashMap::new();
+    if let Some(pools) = j.get("pools").as_arr() {
+        for p in pools {
+            let name = p
+                .get("name")
+                .as_str()
+                .ok_or_else(|| err("pool needs name"))?;
+            let cap = match p.get("capacity") {
+                Json::Num(c) => PwPoly::constant(*c),
+                other => parse_fn(other, 1.0, "input")?,
+            };
+            pool_ids.insert(name.to_string(), wf.add_pool(name, cap));
+        }
+    }
+
+    let procs = j
+        .get("processes")
+        .as_arr()
+        .ok_or_else(|| err("spec needs processes[]"))?;
+    // name -> index mapping for wiring
+    let mut name_to_idx: HashMap<String, usize> = HashMap::new();
+    for (i, p) in procs.iter().enumerate() {
+        let name = p
+            .get("name")
+            .as_str()
+            .ok_or_else(|| err(format!("process {i} needs name")))?;
+        if name_to_idx.insert(name.to_string(), i).is_some() {
+            return Err(err(format!("duplicate process name '{name}'")));
+        }
+    }
+
+    for p in procs {
+        let name = p.get("name").as_str().unwrap();
+        let max_progress = p
+            .get("max_progress")
+            .as_f64()
+            .ok_or_else(|| err(format!("process '{name}' needs max_progress")))?;
+        let mut b = ProcessBuilder::new(name, max_progress);
+        let mut data_sources = vec![];
+        let mut resource_sources = vec![];
+
+        if let Some(data) = p.get("data").as_arr() {
+            for (k, d) in data.iter().enumerate() {
+                let dname = d.get("name").as_str().unwrap_or("in");
+                let f = parse_fn(d.get("req"), max_progress, "data")?;
+                b = b.data_req_fn(dname, f);
+                let src = d.get("source");
+                let source = if let Some(c) = src.get("external_constant").as_f64() {
+                    DataSource::External(PwPoly::constant(c))
+                } else if let Some(node) = src.get("node").as_str() {
+                    let idx = *name_to_idx
+                        .get(node)
+                        .ok_or_else(|| err(format!("'{name}' input {k}: unknown node '{node}'")))?;
+                    DataSource::ProcessOutput {
+                        node: idx,
+                        output: src.get("output").as_f64().unwrap_or(0.0) as usize,
+                    }
+                } else if src.get("external").as_obj().is_some() {
+                    DataSource::External(parse_fn(src.get("external"), 1.0, "input")?)
+                } else {
+                    return Err(err(format!("'{name}' input {k}: missing source")));
+                };
+                data_sources.push(source);
+            }
+        }
+
+        if let Some(res) = p.get("resources").as_arr() {
+            for (l, r) in res.iter().enumerate() {
+                let rname = r.get("name").as_str().unwrap_or("res");
+                let f = parse_fn(r.get("req"), max_progress, "resource")?;
+                b = b.res_req_fn(rname, f);
+                let src = r.get("source");
+                let source = if let Some(c) = src.get("constant").as_f64() {
+                    ResourceSource::Fixed(PwPoly::constant(c))
+                } else if let Some(pool) = src.get("pool").as_str() {
+                    let pid = *pool_ids
+                        .get(pool)
+                        .ok_or_else(|| err(format!("'{name}' res {l}: unknown pool '{pool}'")))?;
+                    if src.get("residual").as_bool() == Some(true) {
+                        ResourceSource::PoolResidual { pool: pid }
+                    } else {
+                        let fr = src.get("fraction").as_f64().ok_or_else(|| {
+                            err(format!("'{name}' res {l}: needs fraction or residual"))
+                        })?;
+                        ResourceSource::PoolFraction {
+                            pool: pid,
+                            fraction: fr,
+                        }
+                    }
+                } else {
+                    return Err(err(format!("'{name}' res {l}: missing source")));
+                };
+                resource_sources.push(source);
+            }
+        }
+
+        if let Some(outputs) = p.get("outputs").as_arr() {
+            for o in outputs {
+                let oname = o.get("name").as_str().unwrap_or("out");
+                let f = parse_fn(o, max_progress, "output")?;
+                b = b.output_fn(oname, f);
+            }
+        }
+
+        let mut start = StartRule {
+            at: p.get("start_at").as_f64().unwrap_or(0.0),
+            after: vec![],
+        };
+        if let Some(after) = p.get("start_after").as_arr() {
+            for a in after {
+                let an = a
+                    .as_str()
+                    .ok_or_else(|| err("start_after entries must be names"))?;
+                start.after.push(
+                    *name_to_idx
+                        .get(an)
+                        .ok_or_else(|| err(format!("'{name}': unknown start_after '{an}'")))?,
+                );
+            }
+        }
+
+        wf.add_node(b.build(), data_sources, resource_sources, start);
+    }
+
+    wf.validate().map_err(|e| err(format!("validation: {e}")))?;
+    Ok(wf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolverOpts;
+    use crate::workflow::engine::analyze_fixpoint;
+
+    const VIDEO_SPEC: &str = r#"{
+      "pools": [{"name": "link", "capacity": 12780748.0}],
+      "processes": [
+        {"name": "dl1", "max_progress": 1137486559.0,
+         "data": [{"name": "remote", "req": {"type": "stream", "total": 1137486559.0},
+                   "source": {"external_constant": 1137486559.0}}],
+         "resources": [{"name": "link", "req": {"type": "stream", "total": 1137486559.0},
+                        "source": {"pool": "link", "fraction": 0.5}}],
+         "outputs": [{"name": "file", "type": "identity"}]},
+        {"name": "dl2", "max_progress": 1137486559.0,
+         "data": [{"name": "remote", "req": {"type": "stream", "total": 1137486559.0},
+                   "source": {"external_constant": 1137486559.0}}],
+         "resources": [{"name": "link", "req": {"type": "stream", "total": 1137486559.0},
+                        "source": {"pool": "link", "residual": true}}],
+         "outputs": [{"name": "file", "type": "identity"}]},
+        {"name": "task1", "max_progress": 80000000.0,
+         "data": [{"name": "video", "req": {"type": "burst", "total": 1137486559.0},
+                   "source": {"node": "dl1", "output": 0}}],
+         "resources": [{"name": "cpu", "req": {"type": "stream", "total": 82.0},
+                        "source": {"constant": 1.0}}],
+         "outputs": [{"name": "reversed", "type": "identity"}]},
+        {"name": "task2", "max_progress": 1137486559.0,
+         "data": [{"name": "video", "req": {"type": "stream", "total": 1137486559.0},
+                   "source": {"node": "dl2", "output": 0}}],
+         "resources": [{"name": "io", "req": {"type": "stream", "total": 5.0},
+                        "source": {"constant": 1.0}}],
+         "outputs": [{"name": "rotated", "type": "identity"}]},
+        {"name": "task3", "max_progress": 1217486559.0,
+         "data": [
+           {"name": "reversed", "req": {"type": "points",
+             "points": [[0, 0], [80000000.0, 1217486559.0]]},
+            "source": {"node": "task1", "output": 0}},
+           {"name": "rotated", "req": {"type": "points",
+             "points": [[0, 0], [1137486559.0, 1217486559.0]]},
+            "source": {"node": "task2", "output": 0}}],
+         "resources": [{"name": "io", "req": {"type": "stream", "total": 3.0},
+                        "source": {"constant": 1.0}}],
+         "outputs": [{"name": "result", "type": "identity"}],
+         "start_after": ["task1", "task2"]}
+      ]
+    }"#;
+
+    #[test]
+    fn video_spec_parses_and_matches_builder() {
+        let wf = parse_workflow(VIDEO_SPEC).unwrap();
+        assert_eq!(wf.nodes.len(), 5);
+        assert_eq!(wf.pools.len(), 1);
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        let total = wa.makespan.unwrap();
+        // must match the builder-built scenario (≈263 s at 50:50)
+        let (wf2, _) = crate::workflow::scenario::VideoScenario::default().build();
+        let total2 = analyze_fixpoint(&wf2, &SolverOpts::default(), 6)
+            .unwrap()
+            .makespan
+            .unwrap();
+        assert!(
+            (total - total2).abs() < 1.0,
+            "spec {total} vs builder {total2}"
+        );
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(parse_workflow("{}").is_err());
+        assert!(parse_workflow(r#"{"processes": [{"name": "x"}]}"#).is_err());
+        let bad_ref = r#"{"processes": [{"name": "x", "max_progress": 1.0,
+          "data": [{"req": {"type": "stream", "total": 1.0},
+                    "source": {"node": "nope"}}]}]}"#;
+        assert!(parse_workflow(bad_ref).is_err());
+    }
+
+    #[test]
+    fn unknown_function_type_rejected() {
+        let s = r#"{"processes": [{"name": "x", "max_progress": 1.0,
+          "data": [{"req": {"type": "wavelet"}, "source": {"external_constant": 1}}]}]}"#;
+        let e = parse_workflow(s).unwrap_err();
+        assert!(e.to_string().contains("wavelet"));
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let s = r#"{"processes": [
+          {"name": "x", "max_progress": 1.0},
+          {"name": "x", "max_progress": 1.0}]}"#;
+        assert!(parse_workflow(s).is_err());
+    }
+}

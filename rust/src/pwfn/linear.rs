@@ -1,0 +1,467 @@
+//! Exact rational piecewise-*linear* functions.
+//!
+//! The paper's §4 observes that restricting to piecewise-linear functions
+//! lets every operation the solver needs (min via intersections, compose,
+//! inverse, integration of piecewise-constant rates) be carried out on
+//! rational numbers without any precision loss. This module is that exact
+//! fast path. It mirrors a subset of [`super::piecewise::PwPoly`]'s API;
+//! [`PwLinear::to_pwpoly`] bridges into the general engine.
+//!
+//! Representation: piece `i` starts at `starts[i]` with value `vals[i]` and
+//! slope `slopes[i]`, covering `[starts[i], starts[i+1])`; the last piece
+//! extends to `+inf`. Right-continuous: a jump is `vals[i]` differing from
+//! the left limit of piece `i-1` at `starts[i]`.
+
+use super::piecewise::PwPoly;
+use super::poly::Poly;
+use super::rat::{Overflow, Rat};
+
+/// An exact rational piecewise-linear function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PwLinear {
+    pub starts: Vec<Rat>,
+    pub vals: Vec<Rat>,
+    pub slopes: Vec<Rat>,
+}
+
+/// Exact lower envelope with per-piece winners (cf. `piecewise::Envelope`).
+#[derive(Clone, Debug)]
+pub struct ExactEnvelope {
+    pub func: PwLinear,
+    pub winners: Vec<usize>,
+}
+
+impl PwLinear {
+    pub fn new(starts: Vec<Rat>, vals: Vec<Rat>, slopes: Vec<Rat>) -> Self {
+        assert!(!starts.is_empty());
+        assert_eq!(starts.len(), vals.len());
+        assert_eq!(starts.len(), slopes.len());
+        for w in starts.windows(2) {
+            assert!(w[0] < w[1], "starts must be strictly increasing");
+        }
+        PwLinear {
+            starts,
+            vals,
+            slopes,
+        }
+    }
+
+    pub fn constant(x0: Rat, c: Rat) -> Self {
+        PwLinear::new(vec![x0], vec![c], vec![Rat::ZERO])
+    }
+
+    pub fn linear(x0: Rat, y0: Rat, slope: Rat) -> Self {
+        PwLinear::new(vec![x0], vec![y0], vec![slope])
+    }
+
+    /// Exact PL interpolation through points, constant after the last.
+    pub fn from_points(points: &[(Rat, Rat)]) -> Result<Self, Overflow> {
+        assert!(points.len() >= 2);
+        let mut starts = vec![];
+        let mut vals = vec![];
+        let mut slopes = vec![];
+        for w in points.windows(2) {
+            let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+            starts.push(x0);
+            vals.push(y0);
+            slopes.push(y1.checked_sub(y0)?.checked_div(x1.checked_sub(x0)?)?);
+        }
+        let last = points[points.len() - 1];
+        starts.push(last.0);
+        vals.push(last.1);
+        slopes.push(Rat::ZERO);
+        Ok(PwLinear::new(starts, vals, slopes))
+    }
+
+    pub fn n_pieces(&self) -> usize {
+        self.starts.len()
+    }
+
+    fn piece_index(&self, x: Rat) -> usize {
+        match self.starts.binary_search(&x) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Exact evaluation (right-continuous, clamped left of the domain).
+    pub fn eval(&self, x: Rat) -> Result<Rat, Overflow> {
+        let x = x.max(self.starts[0]);
+        let i = self.piece_index(x);
+        self.vals[i].checked_add(self.slopes[i].checked_mul(x.checked_sub(self.starts[i])?)?)
+    }
+
+    /// Left limit.
+    pub fn eval_left(&self, x: Rat) -> Result<Rat, Overflow> {
+        if x <= self.starts[0] {
+            return self.eval(x);
+        }
+        let i = self.piece_index(x);
+        if i > 0 && x == self.starts[i] {
+            let j = i - 1;
+            self.vals[j].checked_add(self.slopes[j].checked_mul(x.checked_sub(self.starts[j])?)?)
+        } else {
+            self.eval(x)
+        }
+    }
+
+    /// End of piece `i` (`None` for the last, infinite piece).
+    fn piece_end(&self, i: usize) -> Option<Rat> {
+        self.starts.get(i + 1).copied()
+    }
+
+    pub fn scale(&self, k: Rat) -> Result<Self, Overflow> {
+        Ok(PwLinear {
+            starts: self.starts.clone(),
+            vals: self
+                .vals
+                .iter()
+                .map(|v| v.checked_mul(k))
+                .collect::<Result<_, _>>()?,
+            slopes: self
+                .slopes
+                .iter()
+                .map(|s| s.checked_mul(k))
+                .collect::<Result<_, _>>()?,
+        })
+    }
+
+    /// Exact lower envelope of several PL functions with winner attribution.
+    pub fn min_envelope(fns: &[&PwLinear]) -> Result<ExactEnvelope, Overflow> {
+        assert!(!fns.is_empty());
+        let mut env = ExactEnvelope {
+            func: fns[0].clone(),
+            winners: vec![0; fns[0].n_pieces()],
+        };
+        for (idx, f) in fns.iter().enumerate().skip(1) {
+            env = env.min_with(f, idx)?;
+        }
+        Ok(env)
+    }
+
+    /// First `x >= from` with `f(x) >= y`, exact (monotone functions).
+    pub fn first_reach(&self, y: Rat, from: Rat) -> Result<Option<Rat>, Overflow> {
+        let from = from.max(self.starts[0]);
+        if self.eval(from)? >= y {
+            return Ok(Some(from));
+        }
+        let start = self.piece_index(from);
+        for i in start..self.n_pieces() {
+            let s = self.starts[i].max(from);
+            let v = self.eval(s)?;
+            if v >= y {
+                return Ok(Some(s));
+            }
+            if self.slopes[i].is_zero() || self.slopes[i].is_negative() {
+                continue;
+            }
+            // x = s + (y - v)/slope
+            let x = s.checked_add(y.checked_sub(v)?.checked_div(self.slopes[i])?)?;
+            match self.piece_end(i) {
+                Some(e) if x >= e => continue,
+                _ => return Ok(Some(x)),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Exact compose `self(inner(x))` for nondecreasing `inner`.
+    pub fn compose(&self, inner: &PwLinear) -> Result<PwLinear, Overflow> {
+        // cut points: inner breaks + preimages of self breaks
+        let mut cuts: Vec<Rat> = inner.starts.clone();
+        for &b in &self.starts {
+            if let Some(x) = inner.first_reach(b, inner.starts[0])? {
+                cuts.push(x);
+            }
+        }
+        cuts.sort();
+        cuts.dedup();
+        let mut starts = vec![];
+        let mut vals: Vec<Rat> = vec![];
+        let mut slopes: Vec<Rat> = vec![];
+        for &s in &cuts {
+            let y0 = inner.eval(s)?;
+            let oi = self.piece_index(y0.max(self.starts[0]));
+            let ii = inner.piece_index(s.max(inner.starts[0]));
+            let v = self.eval(y0)?;
+            let sl = self.slopes[oi].checked_mul(inner.slopes[ii])?;
+            // merge with previous piece if it extrapolates to the same line
+            if let (Some(&ps), Some(&pv), Some(&psl)) =
+                (starts.last(), vals.last(), slopes.last())
+            {
+                let extrap = pv.checked_add(psl.checked_mul(s.checked_sub(ps)?)?)?;
+                if psl == sl && extrap == v {
+                    continue;
+                }
+            }
+            starts.push(s);
+            vals.push(v);
+            slopes.push(sl);
+        }
+        Ok(PwLinear::new(starts, vals, slopes))
+    }
+
+    /// Exact inverse for nondecreasing functions, "smallest x with
+    /// f(x) >= y" convention (plateaus skipped, jumps become constants).
+    pub fn inverse(&self) -> Result<PwLinear, Overflow> {
+        let mut starts = vec![];
+        let mut vals = vec![];
+        let mut slopes = vec![];
+        let mut last_y: Option<Rat> = None;
+        for i in 0..self.n_pieces() {
+            let s = self.starts[i];
+            let y0 = self.vals[i];
+            if let Some(ly) = last_y {
+                if y0 > ly {
+                    // jump: inverse is constant s on [ly, y0)
+                    starts.push(ly);
+                    vals.push(s);
+                    slopes.push(Rat::ZERO);
+                }
+            }
+            let slope = self.slopes[i];
+            if slope.is_negative() {
+                return Err(Overflow);
+            }
+            if slope.is_zero() {
+                last_y = Some(match last_y {
+                    Some(ly) => ly.max(y0),
+                    None => y0,
+                });
+                continue;
+            }
+            starts.push(y0);
+            vals.push(s);
+            slopes.push(Rat::ONE.checked_div(slope)?);
+            last_y = Some(match self.piece_end(i) {
+                Some(e) => self
+                    .vals[i].checked_add(slope.checked_mul(e.checked_sub(s)?)?)?,
+                None => return Ok(PwLinear::new(starts, vals, slopes)),
+            });
+        }
+        if starts.is_empty() {
+            return Err(Overflow);
+        }
+        Ok(PwLinear::new(starts, vals, slopes))
+    }
+
+    /// Bridge into the general f64 engine.
+    pub fn to_pwpoly(&self) -> PwPoly {
+        let mut breaks: Vec<f64> = self.starts.iter().map(|r| r.to_f64()).collect();
+        breaks.push(f64::INFINITY);
+        let polys = self
+            .vals
+            .iter()
+            .zip(self.slopes.iter())
+            .map(|(v, s)| Poly::linear(v.to_f64(), s.to_f64()))
+            .collect();
+        PwPoly::new(breaks, polys)
+    }
+}
+
+impl ExactEnvelope {
+    fn min_with(&self, g: &PwLinear, g_idx: usize) -> Result<ExactEnvelope, Overflow> {
+        let f = &self.func;
+        // candidate cut points: both functions' starts + pairwise
+        // intersections inside shared pieces
+        let mut cuts: Vec<Rat> = f
+            .starts
+            .iter()
+            .chain(g.starts.iter())
+            .copied()
+            .collect();
+        cuts.sort();
+        cuts.dedup();
+        let lo = cuts[0];
+        let mut xs: Vec<Rat> = vec![];
+        for (i, &s) in cuts.iter().enumerate() {
+            let e = cuts.get(i + 1).copied();
+            // lines at s
+            let (fv, fs) = (f.eval(s)?, f.slopes[f.piece_index(s.max(f.starts[0]))]);
+            let (gv, gs) = (g.eval(s)?, g.slopes[g.piece_index(s.max(g.starts[0]))]);
+            let ds = fs.checked_sub(gs)?;
+            if !ds.is_zero() {
+                // f(s)+fs*(x-s) = g(s)+gs*(x-s)  =>  x = s + (gv-fv)/ds
+                let x = s.checked_add(gv.checked_sub(fv)?.checked_div(ds)?)?;
+                let inside = x > s && e.map_or(true, |e| x < e);
+                if inside {
+                    xs.push(x);
+                }
+            }
+        }
+        cuts.extend(xs);
+        cuts.sort();
+        cuts.dedup();
+
+        let mut starts = vec![];
+        let mut vals: Vec<Rat> = vec![];
+        let mut slopes: Vec<Rat> = vec![];
+        let mut winners = vec![];
+        for (i, &s) in cuts.iter().enumerate() {
+            let (fv, fs) = (f.eval(s)?, f.slopes[f.piece_index(s.max(f.starts[0]))]);
+            let (gv, gs) = (g.eval(s)?, g.slopes[g.piece_index(s.max(g.starts[0]))]);
+            // decide winner on this interval: compare at s, tie-break by slope
+            let g_wins = gv < fv || (gv == fv && gs < fs);
+            let (v, sl, w) = if g_wins {
+                (gv, gs, g_idx)
+            } else {
+                (fv, fs, self.winners[f.piece_index(s.max(f.starts[0]))])
+            };
+            // merge continuation pieces
+            if let (Some(&ps), Some(&pv), Some(&psl), Some(&pw)) =
+                (starts.last(), vals.last(), slopes.last(), winners.last())
+            {
+                let extrap = pv.checked_add(psl.checked_mul(s.checked_sub(ps)?)?)?;
+                if psl == sl && extrap == v && pw == w {
+                    continue;
+                }
+            }
+            let _ = i;
+            let _ = lo;
+            starts.push(s);
+            vals.push(v);
+            slopes.push(sl);
+            winners.push(w);
+        }
+        Ok(ExactEnvelope {
+            func: PwLinear::new(starts, vals, slopes),
+            winners,
+        })
+    }
+
+    /// Contiguous segments `(start, end=None for inf, winner)`.
+    pub fn segments(&self) -> Vec<(Rat, Option<Rat>, usize)> {
+        let mut out: Vec<(Rat, Option<Rat>, usize)> = vec![];
+        for i in 0..self.func.n_pieces() {
+            let s = self.func.starts[i];
+            let e = self.func.piece_end(i);
+            let w = self.winners[i];
+            if let Some(last) = out.last_mut() {
+                if last.2 == w {
+                    last.1 = e;
+                    continue;
+                }
+            }
+            out.push((s, e, w));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(n: i64, d: i64) -> Rat {
+        Rat::new(n as i128, d as i128).unwrap()
+    }
+
+    #[test]
+    fn eval_exact() {
+        let f = PwLinear::linear(Rat::ZERO, Rat::ZERO, r(1, 3));
+        assert_eq!(f.eval(Rat::int(9)).unwrap(), Rat::int(3));
+        assert_eq!(f.eval(Rat::int(1)).unwrap(), r(1, 3));
+    }
+
+    #[test]
+    fn from_points_and_left_limit() {
+        let f = PwLinear::from_points(&[
+            (Rat::int(0), Rat::int(0)),
+            (Rat::int(2), Rat::int(4)),
+            (Rat::int(4), Rat::int(4)),
+        ])
+        .unwrap();
+        assert_eq!(f.eval(Rat::int(1)).unwrap(), Rat::int(2));
+        assert_eq!(f.eval(Rat::int(3)).unwrap(), Rat::int(4));
+        assert_eq!(f.eval_left(Rat::int(2)).unwrap(), Rat::int(4));
+    }
+
+    #[test]
+    fn exact_min_envelope() {
+        // f = x, g = 2 + x/2 -> cross exactly at x = 4
+        let f = PwLinear::linear(Rat::ZERO, Rat::ZERO, Rat::ONE);
+        let g = PwLinear::linear(Rat::ZERO, Rat::int(2), r(1, 2));
+        let env = PwLinear::min_envelope(&[&f, &g]).unwrap();
+        let segs = env.segments();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].1.unwrap(), Rat::int(4)); // exact crossing
+        assert_eq!(segs[0].2, 0);
+        assert_eq!(segs[1].2, 1);
+        assert_eq!(env.func.eval(Rat::int(6)).unwrap(), Rat::int(5));
+    }
+
+    #[test]
+    fn exact_min_envelope_non_dyadic_crossing() {
+        // f = x/3, g = 1 + x/7 -> cross at x = 21/4 (non-dyadic!)
+        let f = PwLinear::linear(Rat::ZERO, Rat::ZERO, r(1, 3));
+        let g = PwLinear::linear(Rat::ZERO, Rat::int(1), r(1, 7));
+        let env = PwLinear::min_envelope(&[&f, &g]).unwrap();
+        assert_eq!(env.segments()[0].1.unwrap(), r(21, 4));
+    }
+
+    #[test]
+    fn compose_exact() {
+        // outer burst at 10 (0 -> 7), inner rate 1/3 => result jumps at x=30
+        let outer = PwLinear::new(
+            vec![Rat::ZERO, Rat::int(10)],
+            vec![Rat::ZERO, Rat::int(7)],
+            vec![Rat::ZERO, Rat::ZERO],
+        );
+        let inner = PwLinear::linear(Rat::ZERO, Rat::ZERO, r(1, 3));
+        let c = outer.compose(&inner).unwrap();
+        assert_eq!(c.eval(Rat::int(29)).unwrap(), Rat::ZERO);
+        assert_eq!(c.eval(Rat::int(30)).unwrap(), Rat::int(7));
+    }
+
+    #[test]
+    fn inverse_roundtrip_exact() {
+        let f = PwLinear::from_points(&[
+            (Rat::int(0), Rat::int(0)),
+            (Rat::int(3), Rat::int(1)),
+            (Rat::int(4), Rat::int(5)),
+        ])
+        .unwrap();
+        let inv = f.inverse().unwrap();
+        for y in [Rat::ZERO, r(1, 2), Rat::ONE, Rat::int(3)] {
+            assert_eq!(f.eval(inv.eval(y).unwrap()).unwrap(), y);
+        }
+    }
+
+    #[test]
+    fn inverse_jump_gap() {
+        // jump from 2 to 5 at x=1
+        let f = PwLinear::new(
+            vec![Rat::ZERO, Rat::int(1)],
+            vec![Rat::ZERO, Rat::int(5)],
+            vec![Rat::int(2), Rat::int(1)],
+        );
+        let inv = f.inverse().unwrap();
+        assert_eq!(inv.eval(Rat::int(3)).unwrap(), Rat::int(1)); // inside gap
+        assert_eq!(inv.eval(Rat::int(6)).unwrap(), Rat::int(2));
+    }
+
+    #[test]
+    fn first_reach_exact() {
+        let f = PwLinear::linear(Rat::ZERO, Rat::ZERO, r(97, 13));
+        let y = Rat::int(1000);
+        let x = f.first_reach(y, Rat::ZERO).unwrap().unwrap();
+        assert_eq!(f.eval(x).unwrap(), y);
+        assert_eq!(x, r(13000, 97));
+    }
+
+    #[test]
+    fn to_pwpoly_matches() {
+        let f = PwLinear::from_points(&[
+            (Rat::int(0), Rat::int(0)),
+            (Rat::int(2), Rat::int(4)),
+            (Rat::int(5), Rat::int(6)),
+        ])
+        .unwrap();
+        let g = f.to_pwpoly();
+        for x in [0.0, 0.7, 2.0, 3.3, 5.0, 9.0] {
+            let exact = f.eval(Rat::from_f64(x).unwrap()).unwrap().to_f64();
+            assert!((g.eval(x) - exact).abs() < 1e-12);
+        }
+    }
+}

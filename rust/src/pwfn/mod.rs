@@ -1,0 +1,23 @@
+//! Piecewise-function math substrate.
+//!
+//! BottleMod (§4) represents every model function as a piecewise-defined
+//! polynomial. This module provides that representation and all operations
+//! the solver needs:
+//!
+//! * [`poly`] — dense `f64` polynomials with exact low-degree and bracketed
+//!   high-degree root finding.
+//! * [`piecewise`] — [`piecewise::PwPoly`], right-continuous piecewise
+//!   polynomials with jumps, lower envelopes with winner attribution,
+//!   monotone composition/inversion, and calculus.
+//! * [`rat`] / [`linear`] — the exact rational piecewise-linear fast path
+//!   (the paper's "only rational numbers are needed" observation).
+
+pub mod linear;
+pub mod piecewise;
+pub mod poly;
+pub mod rat;
+
+pub use linear::{ExactEnvelope, PwLinear};
+pub use piecewise::{Envelope, PwPoly};
+pub use poly::Poly;
+pub use rat::Rat;

@@ -1,0 +1,956 @@
+//! Piecewise polynomial functions — the quasi-symbolic substrate of BottleMod.
+//!
+//! A [`PwPoly`] is defined by `n+1` strictly increasing breakpoints and `n`
+//! polynomial pieces. Piece `i` covers `[breaks[i], breaks[i+1])` and is
+//! evaluated in *local* coordinates (`x - breaks[i]`) for conditioning. The
+//! function is right-continuous: the value at a breakpoint comes from the
+//! piece to the right, and a jump discontinuity is simply a pair of adjacent
+//! pieces whose values disagree at the shared break ([`PwPoly::jump_at`]).
+//!
+//! The final breakpoint may be `f64::INFINITY`, in which case the last piece
+//! extends forever; left of the first breakpoint the function is clamped to
+//! its value at the first breakpoint. This matches the paper's functions:
+//! cumulative data inputs and requirement functions are monotone and defined
+//! "from here on".
+
+use super::poly::{Poly, EPS};
+
+/// Relative tolerance for breakpoint deduplication.
+fn btol(a: f64, b: f64) -> f64 {
+    EPS * (1.0 + a.abs().max(b.abs()))
+}
+
+/// A piecewise polynomial function (PPoly-style, right-continuous).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PwPoly {
+    /// `n+1` strictly increasing breakpoints; the last may be `+inf`.
+    pub breaks: Vec<f64>,
+    /// `n` pieces, local coordinates: piece `i` value at `x` is
+    /// `polys[i].eval(x - breaks[i])`.
+    pub polys: Vec<Poly>,
+}
+
+/// A lower envelope together with the index of the winning input function on
+/// every piece — the raw material for bottleneck attribution.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub func: PwPoly,
+    /// `winners[i]` is the index (into the `min` argument list) of the
+    /// function that attains the envelope on piece `i` of `func`.
+    pub winners: Vec<usize>,
+}
+
+impl PwPoly {
+    // ---------------------------------------------------------------- ctors
+
+    /// Build from raw breaks + local-coordinate pieces. Panics on malformed
+    /// input (this is an internal constructor; spec parsing validates first).
+    pub fn new(breaks: Vec<f64>, polys: Vec<Poly>) -> Self {
+        assert!(breaks.len() >= 2, "need at least one piece");
+        assert_eq!(breaks.len(), polys.len() + 1, "breaks/polys mismatch");
+        for w in breaks.windows(2) {
+            assert!(w[0] < w[1], "breaks must be strictly increasing: {w:?}");
+        }
+        assert!(breaks[0].is_finite(), "first break must be finite");
+        PwPoly { breaks, polys }
+    }
+
+    /// Constant function `c` on `[x0, inf)`.
+    pub fn constant_from(x0: f64, c: f64) -> Self {
+        PwPoly::new(vec![x0, f64::INFINITY], vec![Poly::constant(c)])
+    }
+
+    /// Constant function `c` on `[0, inf)`.
+    pub fn constant(c: f64) -> Self {
+        Self::constant_from(0.0, c)
+    }
+
+    /// Linear function `y0 + slope * (x - x0)` on `[x0, inf)`.
+    pub fn linear_from(x0: f64, y0: f64, slope: f64) -> Self {
+        PwPoly::new(vec![x0, f64::INFINITY], vec![Poly::linear(y0, slope)])
+    }
+
+    /// Piecewise-linear interpolation through `(x, y)` points (at least two),
+    /// extended with a constant after the last point.
+    pub fn from_points(points: &[(f64, f64)]) -> Self {
+        assert!(points.len() >= 2, "need at least two points");
+        let mut breaks = Vec::with_capacity(points.len() + 1);
+        let mut polys = Vec::with_capacity(points.len());
+        for w in points.windows(2) {
+            let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+            assert!(x1 > x0, "points must have increasing x");
+            breaks.push(x0);
+            polys.push(Poly::linear(y0, (y1 - y0) / (x1 - x0)));
+        }
+        breaks.push(points[points.len() - 1].0);
+        breaks.push(f64::INFINITY);
+        polys.push(Poly::constant(points[points.len() - 1].1));
+        PwPoly::new(breaks, polys)
+    }
+
+    /// Step function: value `lo` on `[x0, at)`, `hi` on `[at, inf)`.
+    /// This is the paper's "burst" shape (Fig 1).
+    pub fn step(x0: f64, at: f64, lo: f64, hi: f64) -> Self {
+        assert!(at > x0);
+        PwPoly::new(
+            vec![x0, at, f64::INFINITY],
+            vec![Poly::constant(lo), Poly::constant(hi)],
+        )
+    }
+
+    /// Ramp from `(x0, 0)` with `slope`, saturating at value `cap`
+    /// (constant afterwards). The paper's "stream" shape with completion.
+    pub fn ramp_to(x0: f64, slope: f64, cap: f64) -> Self {
+        assert!(slope > 0.0 && cap > 0.0);
+        let x_cap = x0 + cap / slope;
+        PwPoly::new(
+            vec![x0, x_cap, f64::INFINITY],
+            vec![Poly::linear(0.0, slope), Poly::constant(cap)],
+        )
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn n_pieces(&self) -> usize {
+        self.polys.len()
+    }
+
+    pub fn x_min(&self) -> f64 {
+        self.breaks[0]
+    }
+
+    pub fn x_max(&self) -> f64 {
+        *self.breaks.last().unwrap()
+    }
+
+    /// Index of the piece governing `x` (right-continuous; clamped to
+    /// `[0, n-1]`).
+    pub fn piece_index(&self, x: f64) -> usize {
+        if x < self.breaks[0] {
+            return 0;
+        }
+        // binary search on the inner breaks
+        match self.breaks[1..self.breaks.len() - 1]
+            .binary_search_by(|b| b.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => (i + 1).min(self.polys.len() - 1),
+            Err(i) => i.min(self.polys.len() - 1),
+        }
+    }
+
+    /// Evaluate (right-continuous, clamped left of the domain).
+    pub fn eval(&self, x: f64) -> f64 {
+        let x = x.max(self.breaks[0]);
+        let i = self.piece_index(x);
+        self.polys[i].eval(x - self.breaks[i])
+    }
+
+    /// Left limit at `x` (differs from `eval` exactly at jump breaks).
+    pub fn eval_left(&self, x: f64) -> f64 {
+        if x <= self.breaks[0] {
+            return self.eval(x);
+        }
+        let i = self.piece_index(x);
+        if i > 0 && (x - self.breaks[i]).abs() < btol(x, self.breaks[i]) {
+            self.polys[i - 1].eval(x - self.breaks[i - 1])
+        } else {
+            self.polys[i].eval(x - self.breaks[i])
+        }
+    }
+
+    /// Jump height at `x` (0 where continuous).
+    pub fn jump_at(&self, x: f64) -> f64 {
+        self.eval(x) - self.eval_left(x)
+    }
+
+    /// Right derivative at `x`.
+    pub fn slope_right(&self, x: f64) -> f64 {
+        let x = x.max(self.breaks[0]);
+        let i = self.piece_index(x);
+        self.polys[i].derivative().eval(x - self.breaks[i])
+    }
+
+    /// Evaluate on a grid (convenience for exporters/tests).
+    pub fn sample(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.eval(x)).collect()
+    }
+
+    // ------------------------------------------------------------- calculus
+
+    /// Piecewise derivative. Jumps become finite-slope discontinuities in the
+    /// output (the Dirac part is dropped) — the solver handles jumps
+    /// explicitly via [`PwPoly::jump_at`], never through `derivative`.
+    pub fn derivative(&self) -> PwPoly {
+        PwPoly {
+            breaks: self.breaks.clone(),
+            polys: self.polys.iter().map(|p| p.derivative()).collect(),
+        }
+    }
+
+    /// Piecewise antiderivative, continuous, with `F(breaks[0]) = c0`.
+    /// (Jumps in `self` appear as kinks in the result.)
+    pub fn antiderivative(&self, c0: f64) -> PwPoly {
+        let mut acc = c0;
+        let mut polys = Vec::with_capacity(self.polys.len());
+        for (i, p) in self.polys.iter().enumerate() {
+            let ad = p.antiderivative(acc);
+            let width = self.breaks[i + 1] - self.breaks[i];
+            if width.is_finite() {
+                acc = ad.eval(width);
+            }
+            polys.push(ad);
+        }
+        PwPoly {
+            breaks: self.breaks.clone(),
+            polys,
+        }
+    }
+
+    /// Definite integral over `[a, b]` (both within or beyond the domain;
+    /// constant extension applies).
+    pub fn integrate(&self, a: f64, b: f64) -> f64 {
+        if b <= a {
+            return 0.0;
+        }
+        let f = self.antiderivative(0.0);
+        // antiderivative uses constant extension of self beyond the last
+        // finite break only if last break is inf; clamp manually otherwise.
+        f.eval(b) - f.eval(a)
+    }
+
+    // ------------------------------------------------------- restructuring
+
+    /// Insert additional breakpoints (values outside the domain or duplicates
+    /// are ignored). The function is unchanged.
+    pub fn refine(&self, extra: &[f64]) -> PwPoly {
+        let mut cuts: Vec<f64> = extra
+            .iter()
+            .copied()
+            .filter(|&x| x > self.breaks[0] && x < self.x_max() && x.is_finite())
+            .collect();
+        if cuts.is_empty() {
+            return self.clone();
+        }
+        cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut breaks = Vec::with_capacity(self.breaks.len() + cuts.len());
+        let mut polys = Vec::with_capacity(self.polys.len() + cuts.len());
+        let mut ci = 0;
+        for i in 0..self.polys.len() {
+            breaks.push(self.breaks[i]);
+            polys.push(self.polys[i].clone());
+            while ci < cuts.len() && cuts[ci] < self.breaks[i + 1] {
+                let c = cuts[ci];
+                ci += 1;
+                if (c - *breaks.last().unwrap()).abs() < btol(c, *breaks.last().unwrap()) {
+                    continue;
+                }
+                // split current piece at c
+                let origin = self.breaks[i];
+                breaks.push(c);
+                polys.push(self.polys[i].shift(c - origin));
+            }
+        }
+        breaks.push(self.x_max());
+        PwPoly::new(breaks, polys)
+    }
+
+    /// Merge adjacent pieces that are continuations of the same polynomial.
+    pub fn simplify(&self) -> PwPoly {
+        let mut breaks = vec![self.breaks[0]];
+        let mut polys: Vec<Poly> = vec![self.polys[0].clone()];
+        for i in 1..self.polys.len() {
+            let prev_origin = breaks[breaks.len() - 1];
+            let cur_start = self.breaks[i];
+            // candidate: previous poly continued to this piece's range
+            let cont = polys.last().unwrap().shift(cur_start - prev_origin);
+            let scale = cont
+                .coeffs
+                .iter()
+                .chain(self.polys[i].coeffs.iter())
+                .fold(1.0f64, |m, c| m.max(c.abs()));
+            let same = cont.sub(&self.polys[i])
+                .coeffs
+                .iter()
+                .all(|c| c.abs() <= 1e-9 * scale);
+            if !same {
+                breaks.push(cur_start);
+                polys.push(self.polys[i].clone());
+            }
+        }
+        breaks.push(self.x_max());
+        PwPoly::new(breaks, polys)
+    }
+
+    /// Restrict to `[a, b]`, keeping constant extension semantics (the last
+    /// piece is truncated at `b`; `b` may be `inf`).
+    pub fn clip(&self, a: f64, b: f64) -> PwPoly {
+        assert!(b > a);
+        let r = self.refine(&[a, b]);
+        let mut breaks = vec![];
+        let mut polys = vec![];
+        for i in 0..r.polys.len() {
+            let (s, e) = (r.breaks[i], r.breaks[i + 1]);
+            if e.is_finite() && e <= a + btol(e, a) {
+                continue;
+            }
+            if b.is_finite() && s >= b - btol(s, b) {
+                break;
+            }
+            if breaks.is_empty() && s < a {
+                // starts before a: shift into place
+                breaks.push(a);
+                polys.push(r.polys[i].shift(a - s));
+            } else {
+                breaks.push(s.max(a));
+                polys.push(r.polys[i].clone());
+            }
+        }
+        if breaks.is_empty() {
+            // degenerate: single clamped value
+            return PwPoly::new(vec![a, b], vec![Poly::constant(self.eval(a))]);
+        }
+        breaks.push(b.min(r.x_max().max(b)));
+        PwPoly::new(breaks, polys)
+    }
+
+    // ------------------------------------------------------------- algebra
+
+    /// The union of both functions' breakpoints, within the joint span.
+    fn common_breaks(&self, other: &PwPoly) -> Vec<f64> {
+        let lo = self.breaks[0].min(other.breaks[0]);
+        let hi = self.x_max().max(other.x_max());
+        let mut all: Vec<f64> = self
+            .breaks
+            .iter()
+            .chain(other.breaks.iter())
+            .copied()
+            .filter(|x| x.is_finite())
+            .collect();
+        all.push(lo);
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all.dedup_by(|a, b| (*a - *b).abs() < btol(*a, *b));
+        if hi.is_infinite() {
+            all.push(f64::INFINITY);
+        }
+        all
+    }
+
+    /// Pointwise combination on a common refinement.
+    fn zip_with(&self, other: &PwPoly, f: impl Fn(&Poly, &Poly) -> Poly) -> PwPoly {
+        let breaks = self.common_breaks(other);
+        let mut polys = Vec::with_capacity(breaks.len() - 1);
+        for i in 0..breaks.len() - 1 {
+            let s = breaks[i];
+            let a = self.local_poly_at(s);
+            let b = other.local_poly_at(s);
+            polys.push(f(&a, &b));
+        }
+        PwPoly::new(breaks, polys)
+    }
+
+    /// The polynomial governing `x`, re-expressed in local coordinates with
+    /// origin `x` (clamped/constant-extended outside the domain).
+    pub fn local_poly_at(&self, x: f64) -> Poly {
+        if x < self.breaks[0] {
+            return Poly::constant(self.eval(self.breaks[0]));
+        }
+        if x >= self.x_max() {
+            // constant extension beyond a finite domain end
+            return Poly::constant(self.eval_left(self.x_max()));
+        }
+        let i = self.piece_index(x);
+        self.polys[i].shift(x - self.breaks[i])
+    }
+
+    pub fn add(&self, other: &PwPoly) -> PwPoly {
+        self.zip_with(other, |a, b| a.add(b))
+    }
+
+    pub fn sub(&self, other: &PwPoly) -> PwPoly {
+        self.zip_with(other, |a, b| a.sub(b))
+    }
+
+    pub fn mul(&self, other: &PwPoly) -> PwPoly {
+        self.zip_with(other, |a, b| a.mul(b))
+    }
+
+    pub fn scale(&self, k: f64) -> PwPoly {
+        PwPoly {
+            breaks: self.breaks.clone(),
+            polys: self.polys.iter().map(|p| p.scale(k)).collect(),
+        }
+    }
+
+    pub fn shift_y(&self, dy: f64) -> PwPoly {
+        PwPoly {
+            breaks: self.breaks.clone(),
+            polys: self
+                .polys
+                .iter()
+                .map(|p| p.add(&Poly::constant(dy)))
+                .collect(),
+        }
+    }
+
+    /// Translate along x: `g(x) = f(x - dx)`.
+    pub fn shift_x(&self, dx: f64) -> PwPoly {
+        PwPoly {
+            breaks: self.breaks.iter().map(|b| b + dx).collect(),
+            polys: self.polys.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------ envelope
+
+    /// Lower envelope of several functions with per-piece winner indices.
+    /// Ties are broken toward the lower index (stable attribution).
+    pub fn min_envelope(fns: &[&PwPoly]) -> Envelope {
+        assert!(!fns.is_empty());
+        let mut env = Envelope {
+            func: fns[0].clone(),
+            winners: vec![0; fns[0].n_pieces()],
+        };
+        for (idx, f) in fns.iter().enumerate().skip(1) {
+            env = env.min_with(f, idx);
+        }
+        env.dedup();
+        env
+    }
+
+    /// Convenience: plain minimum.
+    pub fn min(fns: &[&PwPoly]) -> PwPoly {
+        Self::min_envelope(fns).func
+    }
+
+    /// Pointwise maximum (via `max(f,g) = -min(-f,-g)`).
+    pub fn max_with(&self, other: &PwPoly) -> PwPoly {
+        PwPoly::min(&[&self.scale(-1.0), &other.scale(-1.0)]).scale(-1.0)
+    }
+
+    /// Clamp below at zero — used for pool residual capacities.
+    pub fn max_with_zero(&self) -> PwPoly {
+        let zero = PwPoly::constant_from(self.breaks[0], 0.0);
+        self.max_with(&zero)
+    }
+
+    /// First `x >= from` where `eval(x) >= y` for a monotonically
+    /// nondecreasing function; `None` if never reached before `x_max`.
+    pub fn first_reach(&self, y: f64, from: f64) -> Option<f64> {
+        let from = from.max(self.breaks[0]);
+        if self.eval(from) >= y - EPS * (1.0 + y.abs()) {
+            return Some(from);
+        }
+        let start = self.piece_index(from);
+        for i in start..self.polys.len() {
+            let s = self.breaks[i].max(from);
+            let e = self.breaks[i + 1];
+            // value at start of the (sub)piece
+            if self.polys[i].eval(s - self.breaks[i]) >= y - EPS * (1.0 + y.abs()) {
+                return Some(s);
+            }
+            // allocation-free fast path: linear piece
+            if let [a, b] = self.polys[i].coeffs.as_slice() {
+                if *b > EPS {
+                    let x = self.breaks[i] + (y - a) / b;
+                    if x >= s - btol(x, s) && x < e + btol(x, e.min(1e300)) {
+                        return Some(x.max(s));
+                    }
+                }
+                continue;
+            }
+            let shifted = self.polys[i].sub(&Poly::constant(y));
+            let hi = if e.is_finite() {
+                e - self.breaks[i]
+            } else {
+                cauchy_bound(&shifted).max(1.0)
+            };
+            if let Some(r) = shifted.first_root_after(s - self.breaks[i] - 1.0, hi) {
+                let x = self.breaks[i] + r;
+                if x >= s - btol(x, s) && x < e + btol(x, e) {
+                    return Some(x.max(s));
+                }
+            }
+        }
+        None
+    }
+
+    /// Numeric inverse at a single value for strictly increasing functions:
+    /// smallest `x` with `f(x) >= y`.
+    pub fn inverse_at(&self, y: f64) -> Option<f64> {
+        self.first_reach(y, self.breaks[0])
+    }
+
+    /// Check monotone nondecreasing (piece derivatives nonnegative on their
+    /// intervals and no downward jumps). Tolerance-based.
+    pub fn is_nondecreasing(&self) -> bool {
+        for i in 0..self.polys.len() {
+            let d = self.polys[i].derivative();
+            let w = if self.breaks[i + 1].is_finite() {
+                self.breaks[i + 1] - self.breaks[i]
+            } else {
+                1e6
+            };
+            // sample + roots: a polynomial negative anywhere on [0,w] has a
+            // negative value at an endpoint or at a critical point
+            let mut pts = vec![0.0, w];
+            for r in d.derivative().roots_in(0.0, w) {
+                pts.push(r);
+            }
+            // tolerances are relative to the function's local magnitude:
+            // byte-scale functions (~1e9) legitimately carry absolute noise
+            let mag = 1.0 + self.eval(self.breaks[i]).abs();
+            let slope_mag = 1.0 + d.eval(0.0).abs().max(d.eval(w).abs());
+            for p in pts {
+                if d.eval(p) < -1e-7 * slope_mag.max(mag * 1e-3) {
+                    return false;
+                }
+            }
+            if i > 0 && self.jump_at(self.breaks[i]) < -1e-7 * mag {
+                return false;
+            }
+        }
+        true
+    }
+
+    // ---------------------------------------------------------- composition
+
+    /// Compose `self(inner(x))` where `inner` is monotonically nondecreasing.
+    /// Result breakpoints: the union of `inner`'s breaks and the preimages of
+    /// `self`'s breaks under `inner`.
+    pub fn compose(&self, inner: &PwPoly) -> PwPoly {
+        let mut cuts: Vec<f64> = vec![];
+        for &b in &self.breaks {
+            if !b.is_finite() {
+                continue;
+            }
+            if let Some(x) = inner.first_reach(b, inner.breaks[0]) {
+                cuts.push(x);
+            }
+        }
+        let refined = inner.refine(&cuts);
+        let mut breaks = Vec::with_capacity(refined.polys.len() + 1);
+        let mut polys = Vec::with_capacity(refined.polys.len());
+        for i in 0..refined.polys.len() {
+            let s = refined.breaks[i];
+            breaks.push(s);
+            // value of inner just right of s selects the outer piece
+            let inner_local = &refined.polys[i]; // local coords origin s
+            let y0 = inner_local.eval(0.0);
+            if y0 < self.breaks[0] - btol(y0, self.breaks[0]) {
+                // inner below the outer domain on this whole piece (cuts
+                // split at the crossing): clamp-left semantics
+                polys.push(Poly::constant(self.polys[0].eval(0.0)));
+                continue;
+            }
+            let oi = self.piece_index(y0);
+            let outer = &self.polys[oi];
+            // result(u) = outer(inner_local(u) - outer_origin), u = x - s
+            let arg = inner_local.sub(&Poly::constant(self.breaks[oi]));
+            polys.push(outer.compose(&arg));
+        }
+        breaks.push(refined.x_max());
+        PwPoly::new(breaks, polys).simplify()
+    }
+
+    /// Exact inverse for strictly increasing piecewise functions whose
+    /// pieces are linear with positive slope (errors otherwise). Jumps in
+    /// the function become flat... no — jumps become *gaps* in the image; the
+    /// inverse fills them with a constant piece (the jump time), matching the
+    /// "smallest x with f(x) >= y" convention. Plateaus (zero slope) are
+    /// skipped: the inverse jumps over them.
+    pub fn inverse_linear(&self) -> Result<PwPoly, String> {
+        let mut breaks: Vec<f64> = vec![];
+        let mut polys: Vec<Poly> = vec![];
+        let mut last_y = f64::NEG_INFINITY;
+        for i in 0..self.polys.len() {
+            let p = &self.polys[i];
+            if p.degree() > 1 {
+                return Err(format!("piece {i} has degree {} > 1", p.degree()));
+            }
+            let a = p.coeffs[0];
+            let b = if p.degree() == 1 { p.coeffs[1] } else { 0.0 };
+            let (s, e) = (self.breaks[i], self.breaks[i + 1]);
+            let y_start = a;
+            // jump (gap in image) => constant piece mapping [last_y, y_start) -> s
+            if i > 0 && y_start > last_y + btol(y_start, last_y) {
+                breaks.push(last_y);
+                polys.push(Poly::constant(s));
+            }
+            if b <= EPS {
+                // plateau: contributes nothing to the inverse domain
+                last_y = last_y.max(y_start);
+                continue;
+            }
+            let y_end = if e.is_finite() {
+                p.eval(e - s)
+            } else {
+                f64::INFINITY
+            };
+            breaks.push(y_start);
+            // inverse piece in local coords (origin y_start):
+            // x = s + (y - y_start)/b
+            polys.push(Poly::linear(s, 1.0 / b));
+            last_y = y_end;
+            if !e.is_finite() {
+                breaks.push(f64::INFINITY);
+                let out = PwPoly::new(breaks, polys);
+                return Ok(out);
+            }
+        }
+        if breaks.is_empty() {
+            return Err("function has no increasing piece; inverse undefined".into());
+        }
+        breaks.push(last_y.max(breaks[breaks.len() - 1] + 1e-9));
+        Ok(PwPoly::new(breaks, polys))
+    }
+}
+
+impl Envelope {
+    fn min_with(&self, g: &PwPoly, g_idx: usize) -> Envelope {
+        let f = &self.func;
+        let breaks0 = f.common_breaks(g);
+        // split each interval at intersections of f and g
+        let mut breaks: Vec<f64> = vec![];
+        for i in 0..breaks0.len() - 1 {
+            let s = breaks0[i];
+            let e = breaks0[i + 1];
+            breaks.push(s);
+            let d = f.local_poly_at(s).sub(&g.local_poly_at(s));
+            let hi = if e.is_finite() {
+                e - s
+            } else {
+                cauchy_bound(&d).max(1.0)
+            };
+            for r in d.roots_in(0.0, hi) {
+                let x = s + r;
+                let below_end = !e.is_finite() || x < e - btol(x, e);
+                if x > s + btol(x, s) && below_end {
+                    breaks.push(x);
+                }
+            }
+        }
+        breaks.push(*breaks0.last().unwrap());
+        breaks.dedup_by(|a, b| (*a - *b).abs() < btol(*a, *b));
+
+        let mut polys = Vec::with_capacity(breaks.len() - 1);
+        let mut winners = Vec::with_capacity(breaks.len() - 1);
+        for i in 0..breaks.len() - 1 {
+            let s = breaks[i];
+            let e = breaks[i + 1];
+            let fa = f.local_poly_at(s);
+            let ga = g.local_poly_at(s);
+            // compare at the interval midpoint (or s + 1 for infinite pieces)
+            let m = if e.is_finite() { 0.5 * (e - s) } else { 1.0 };
+            let (fv, gv) = (fa.eval(m), ga.eval(m));
+            let tol = 1e-9 * (1.0 + fv.abs().max(gv.abs()));
+            if gv < fv - tol {
+                polys.push(ga);
+                winners.push(g_idx);
+            } else {
+                polys.push(fa);
+                // winner index from the underlying envelope piece
+                let wi = self.winner_at(s);
+                winners.push(wi);
+            }
+        }
+        Envelope {
+            func: PwPoly::new(breaks, polys),
+            winners,
+        }
+    }
+
+    /// Winner index governing position `x`.
+    pub fn winner_at(&self, x: f64) -> usize {
+        self.winners[self.func.piece_index(x)]
+    }
+
+    /// Merge adjacent pieces with identical winner *and* continuous equal
+    /// polynomials (keeps attribution segments tidy).
+    fn dedup(&mut self) {
+        let f = &self.func;
+        let mut breaks = vec![f.breaks[0]];
+        let mut polys = vec![f.polys[0].clone()];
+        let mut winners = vec![self.winners[0]];
+        for i in 1..f.polys.len() {
+            let prev_origin = breaks[breaks.len() - 1];
+            let cont = polys.last().unwrap().shift(f.breaks[i] - prev_origin);
+            let scale = cont
+                .coeffs
+                .iter()
+                .chain(f.polys[i].coeffs.iter())
+                .fold(1.0f64, |m, c| m.max(c.abs()));
+            let same_poly = cont
+                .sub(&f.polys[i])
+                .coeffs
+                .iter()
+                .all(|c| c.abs() <= 1e-9 * scale);
+            if same_poly && self.winners[i] == *winners.last().unwrap() {
+                continue;
+            }
+            breaks.push(f.breaks[i]);
+            polys.push(f.polys[i].clone());
+            winners.push(self.winners[i]);
+        }
+        breaks.push(f.x_max());
+        self.func = PwPoly::new(breaks, polys);
+        self.winners = winners;
+    }
+
+    /// Contiguous segments `(start, end, winner)`.
+    pub fn segments(&self) -> Vec<(f64, f64, usize)> {
+        let mut out: Vec<(f64, f64, usize)> = vec![];
+        for i in 0..self.func.n_pieces() {
+            let (s, e, w) = (self.func.breaks[i], self.func.breaks[i + 1], self.winners[i]);
+            if let Some(last) = out.last_mut() {
+                if last.2 == w && (last.1 - s).abs() < btol(last.1, s) {
+                    last.1 = e;
+                    continue;
+                }
+            }
+            out.push((s, e, w));
+        }
+        out
+    }
+}
+
+/// Cauchy root bound for a polynomial in local coordinates: all real roots
+/// lie within `[-(1+A), 1+A]` where `A = max |c_i| / |c_lead|`.
+pub fn cauchy_bound(p: &Poly) -> f64 {
+    let lead = p.coeffs.last().unwrap().abs();
+    if lead < EPS {
+        return 1.0;
+    }
+    let a = p.coeffs[..p.coeffs.len() - 1]
+        .iter()
+        .fold(0.0f64, |m, c| m.max(c.abs()));
+    1.0 + a / lead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+
+    #[test]
+    fn constant_and_linear_eval() {
+        let c = PwPoly::constant(5.0);
+        assert_close(c.eval(0.0), 5.0);
+        assert_close(c.eval(1e9), 5.0);
+        let l = PwPoly::linear_from(1.0, 2.0, 3.0);
+        assert_close(l.eval(1.0), 2.0);
+        assert_close(l.eval(3.0), 8.0);
+        assert_close(l.eval(0.0), 2.0); // clamped left
+    }
+
+    #[test]
+    fn from_points_interpolates() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0), (4.0, 4.0)]);
+        assert_close(f.eval(1.0), 2.0);
+        assert_close(f.eval(3.0), 4.0);
+        assert_close(f.eval(100.0), 4.0);
+    }
+
+    #[test]
+    fn step_has_jump() {
+        let f = PwPoly::step(0.0, 2.0, 0.0, 10.0);
+        assert_close(f.eval(1.9), 0.0);
+        assert_close(f.eval(2.0), 10.0); // right-continuous
+        assert_close(f.eval_left(2.0), 0.0);
+        assert_close(f.jump_at(2.0), 10.0);
+        assert_close(f.jump_at(1.0), 0.0);
+    }
+
+    #[test]
+    fn piece_index_binary_search() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (1.0, 1.0), (2.0, 3.0), (3.0, 3.0)]);
+        assert_eq!(f.piece_index(0.5), 0);
+        assert_eq!(f.piece_index(1.0), 1);
+        assert_eq!(f.piece_index(2.5), 2);
+        assert_eq!(f.piece_index(50.0), 3);
+    }
+
+    #[test]
+    fn add_mul_on_common_refinement() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 2.0)]); // slope 1 then flat 2
+        let g = PwPoly::constant(3.0);
+        let s = f.add(&g);
+        assert_close(s.eval(1.0), 4.0);
+        assert_close(s.eval(10.0), 5.0);
+        let m = f.mul(&g);
+        assert_close(m.eval(1.0), 3.0);
+        assert_close(m.eval(2.0), 6.0);
+    }
+
+    #[test]
+    fn antiderivative_continuous() {
+        let f = PwPoly::step(0.0, 1.0, 1.0, 2.0); // rate 1 then 2
+        let g = f.antiderivative(0.0);
+        assert_close(g.eval(1.0), 1.0);
+        assert_close(g.eval(2.0), 3.0);
+        assert_close(f.integrate(0.5, 1.5), 0.5 + 1.0);
+    }
+
+    #[test]
+    fn refine_preserves_function() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0), (3.0, 5.0)]);
+        let r = f.refine(&[0.5, 1.0, 2.5, 7.0]);
+        for x in [0.0, 0.3, 0.5, 1.0, 1.7, 2.0, 2.5, 2.9, 3.5, 10.0] {
+            assert_close(f.eval(x), r.eval(x));
+        }
+        assert!(r.n_pieces() > f.n_pieces());
+    }
+
+    #[test]
+    fn simplify_merges() {
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0);
+        let r = f.refine(&[1.0, 2.0, 3.0]).simplify();
+        assert_eq!(r.n_pieces(), 1);
+        assert_close(r.eval(2.5), 2.5);
+    }
+
+    #[test]
+    fn min_envelope_two_lines() {
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0); // x
+        let g = PwPoly::linear_from(0.0, 2.0, 0.5); // 2 + x/2, crosses at x=4
+        let env = PwPoly::min_envelope(&[&f, &g]);
+        assert_close(env.func.eval(2.0), 2.0);
+        assert_close(env.func.eval(6.0), 5.0);
+        let segs = env.segments();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].2, 0);
+        assert_eq!(segs[1].2, 1);
+        assert_close(segs[0].1, 4.0);
+    }
+
+    #[test]
+    fn min_envelope_three_with_quadratic() {
+        // f = x, g = const 4, h = x^2/8 (crosses f at 0 and 8, g at ~5.66)
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0);
+        let g = PwPoly::constant(4.0);
+        let h = PwPoly::new(
+            vec![0.0, f64::INFINITY],
+            vec![Poly::new(vec![0.0, 0.0, 0.125])],
+        );
+        let env = PwPoly::min_envelope(&[&f, &g, &h]);
+        // near 0 f and h tie at 0... for x in (0,8) h < f; h < 4 until x = 5.657
+        assert_close(env.func.eval(2.0), 0.5);
+        assert_close(env.func.eval(7.0), 4.0);
+        assert_eq!(env.winner_at(7.0), 1);
+        assert_close(env.func.eval(1.0), 0.125);
+    }
+
+    #[test]
+    fn first_reach_linear_and_jump() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0)]);
+        assert_close(f.first_reach(2.0, 0.0).unwrap(), 1.0);
+        assert!(f.first_reach(5.0, 0.0).is_none());
+        let s = PwPoly::step(0.0, 3.0, 1.0, 10.0);
+        assert_close(s.first_reach(5.0, 0.0).unwrap(), 3.0);
+        assert_close(s.first_reach(0.5, 0.0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn first_reach_on_infinite_piece() {
+        let f = PwPoly::linear_from(0.0, 0.0, 2.0);
+        assert_close(f.first_reach(1000.0, 0.0).unwrap(), 500.0);
+    }
+
+    #[test]
+    fn compose_linear_pieces() {
+        // outer: burst at 10 (0 before, 7 after); inner: data arriving at rate 2
+        let outer = PwPoly::step(0.0, 10.0, 0.0, 7.0);
+        let inner = PwPoly::linear_from(0.0, 0.0, 2.0);
+        let c = outer.compose(&inner);
+        assert_close(c.eval(4.9), 0.0);
+        assert_close(c.eval(5.0), 7.0);
+        assert_close(c.eval(9.0), 7.0);
+    }
+
+    #[test]
+    fn compose_quadratic_inner() {
+        // outer(y) = y^2 on [0, inf); inner(x) = 2x => (2x)^2 = 4x^2
+        let outer = PwPoly::new(vec![0.0, f64::INFINITY], vec![Poly::new(vec![0.0, 0.0, 1.0])]);
+        let inner = PwPoly::linear_from(0.0, 0.0, 2.0);
+        let c = outer.compose(&inner);
+        for x in [0.0, 0.5, 1.0, 3.0] {
+            assert_close(c.eval(x), 4.0 * x * x);
+        }
+    }
+
+    #[test]
+    fn compose_respects_inner_breaks() {
+        let outer = PwPoly::linear_from(0.0, 0.0, 3.0); // 3y
+        let inner = PwPoly::from_points(&[(0.0, 0.0), (1.0, 1.0), (2.0, 1.5)]);
+        let c = outer.compose(&inner);
+        assert_close(c.eval(0.5), 1.5);
+        assert_close(c.eval(1.5), 3.0 * 1.25);
+        assert_close(c.eval(5.0), 4.5);
+    }
+
+    #[test]
+    fn inverse_linear_roundtrip() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0), (5.0, 10.0)]);
+        let inv = f.inverse_linear().unwrap();
+        for y in [0.0, 1.0, 3.9, 4.0, 7.0, 9.9] {
+            assert_close(f.eval(inv.eval(y)), y);
+        }
+    }
+
+    #[test]
+    fn inverse_linear_with_plateau_and_jump() {
+        // plateau between x=1..2 at y=1, then jump at x=3 from 2 to 5
+        let f = PwPoly::new(
+            vec![0.0, 1.0, 2.0, 3.0, f64::INFINITY],
+            vec![
+                Poly::linear(0.0, 1.0),
+                Poly::constant(1.0),
+                Poly::linear(1.0, 1.0),
+                Poly::linear(5.0, 1.0),
+            ],
+        );
+        let inv = f.inverse_linear().unwrap();
+        // y in (1,2]: x = 2 + (y-1)
+        assert_close(inv.eval(1.5), 2.5);
+        // y in (2,5]: gap => inverse constant 3
+        assert_close(inv.eval(3.0), 3.0);
+        assert_close(inv.eval(4.99), 3.0);
+        // y > 5: x = 3 + (y-5)
+        assert_close(inv.eval(6.0), 4.0);
+    }
+
+    #[test]
+    fn monotonicity_check() {
+        assert!(PwPoly::from_points(&[(0.0, 0.0), (1.0, 2.0), (3.0, 2.0)]).is_nondecreasing());
+        assert!(!PwPoly::from_points(&[(0.0, 0.0), (1.0, 2.0), (2.0, 1.0)]).is_nondecreasing());
+        assert!(PwPoly::step(0.0, 1.0, 0.0, 5.0).is_nondecreasing());
+        // downward jump
+        let f = PwPoly::new(
+            vec![0.0, 1.0, f64::INFINITY],
+            vec![Poly::constant(5.0), Poly::constant(1.0)],
+        );
+        assert!(!f.is_nondecreasing());
+    }
+
+    #[test]
+    fn clip_restricts_domain() {
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0);
+        let c = f.clip(2.0, 5.0);
+        assert_close(c.x_min(), 2.0);
+        assert_close(c.x_max(), 5.0);
+        assert_close(c.eval(3.0), 3.0);
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        let f = PwPoly::linear_from(0.0, 0.0, 2.0);
+        let g = PwPoly::linear_from(0.0, 1.0, 1.0);
+        let d = f.sub(&g);
+        assert_close(d.eval(0.0), -1.0);
+        assert_close(d.eval(1.0), 0.0);
+        assert_close(d.eval(2.0), 1.0);
+        assert_close(f.scale(0.5).eval(4.0), 4.0);
+    }
+}

@@ -1,0 +1,434 @@
+//! Dense univariate polynomials over `f64`.
+//!
+//! The building block of the piecewise-function substrate ([`super::piecewise`]).
+//! Coefficients are stored lowest-degree first: `c[0] + c[1] x + c[2] x^2 + ...`.
+//! All piecewise machinery evaluates polynomials in a *local* coordinate
+//! (offset from the piece's left break) to keep conditioning sane, so the
+//! raw polynomial type is deliberately simple and allocation-friendly.
+
+use std::fmt;
+
+/// Tolerance used for coefficient trimming and root deduplication.
+pub const EPS: f64 = 1e-9;
+
+/// A dense polynomial, lowest-degree coefficient first.
+#[derive(Clone, PartialEq)]
+pub struct Poly {
+    /// `coeffs[i]` is the coefficient of `x^i`. Trailing zeros are trimmed;
+    /// the zero polynomial is represented as `[0.0]`.
+    pub coeffs: Vec<f64>,
+}
+
+impl fmt::Debug for Poly {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (i, c) in self.coeffs.iter().enumerate() {
+            if *c == 0.0 && self.coeffs.len() > 1 {
+                continue;
+            }
+            if !first {
+                write!(f, " + ")?;
+            }
+            match i {
+                0 => write!(f, "{c}")?,
+                1 => write!(f, "{c}·x")?,
+                _ => write!(f, "{c}·x^{i}")?,
+            }
+            first = false;
+        }
+        if first {
+            write!(f, "0")?;
+        }
+        Ok(())
+    }
+}
+
+impl Poly {
+    /// Build a polynomial from coefficients (lowest degree first).
+    pub fn new(mut coeffs: Vec<f64>) -> Self {
+        while coeffs.len() > 1 && coeffs.last() == Some(&0.0) {
+            coeffs.pop();
+        }
+        if coeffs.is_empty() {
+            coeffs.push(0.0);
+        }
+        Poly { coeffs }
+    }
+
+    /// The zero polynomial.
+    pub fn zero() -> Self {
+        Poly { coeffs: vec![0.0] }
+    }
+
+    /// The constant polynomial `c`.
+    pub fn constant(c: f64) -> Self {
+        Poly { coeffs: vec![c] }
+    }
+
+    /// The linear polynomial `a + b x`.
+    pub fn linear(a: f64, b: f64) -> Self {
+        Poly::new(vec![a, b])
+    }
+
+    /// Degree (0 for constants, including the zero polynomial).
+    pub fn degree(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// True if every coefficient is (almost) zero.
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.iter().all(|c| c.abs() < EPS)
+    }
+
+    /// True if the polynomial is a constant (degree 0 after trimming).
+    pub fn is_constant(&self) -> bool {
+        self.coeffs.len() == 1
+    }
+
+    /// Horner evaluation.
+    pub fn eval(&self, x: f64) -> f64 {
+        let mut acc = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+
+    /// First derivative.
+    pub fn derivative(&self) -> Poly {
+        if self.coeffs.len() <= 1 {
+            return Poly::zero();
+        }
+        Poly::new(
+            self.coeffs[1..]
+                .iter()
+                .enumerate()
+                .map(|(i, c)| c * (i as f64 + 1.0))
+                .collect(),
+        )
+    }
+
+    /// Antiderivative with constant term `c0`.
+    pub fn antiderivative(&self, c0: f64) -> Poly {
+        let mut out = Vec::with_capacity(self.coeffs.len() + 1);
+        out.push(c0);
+        for (i, c) in self.coeffs.iter().enumerate() {
+            out.push(c / (i as f64 + 1.0));
+        }
+        Poly::new(out)
+    }
+
+    pub fn add(&self, other: &Poly) -> Poly {
+        let n = self.coeffs.len().max(other.coeffs.len());
+        let mut out = vec![0.0; n];
+        for (i, c) in self.coeffs.iter().enumerate() {
+            out[i] += c;
+        }
+        for (i, c) in other.coeffs.iter().enumerate() {
+            out[i] += c;
+        }
+        Poly::new(out)
+    }
+
+    pub fn sub(&self, other: &Poly) -> Poly {
+        let n = self.coeffs.len().max(other.coeffs.len());
+        let mut out = vec![0.0; n];
+        for (i, c) in self.coeffs.iter().enumerate() {
+            out[i] += c;
+        }
+        for (i, c) in other.coeffs.iter().enumerate() {
+            out[i] -= c;
+        }
+        Poly::new(out)
+    }
+
+    pub fn scale(&self, k: f64) -> Poly {
+        Poly::new(self.coeffs.iter().map(|c| c * k).collect())
+    }
+
+    pub fn mul(&self, other: &Poly) -> Poly {
+        let mut out = vec![0.0; self.coeffs.len() + other.coeffs.len() - 1];
+        for (i, a) in self.coeffs.iter().enumerate() {
+            for (j, b) in other.coeffs.iter().enumerate() {
+                out[i + j] += a * b;
+            }
+        }
+        Poly::new(out)
+    }
+
+    /// Compose `self(other(x))`.
+    pub fn compose(&self, other: &Poly) -> Poly {
+        // Horner in the polynomial ring.
+        let mut acc = Poly::constant(*self.coeffs.last().unwrap());
+        for &c in self.coeffs.iter().rev().skip(1) {
+            acc = acc.mul(other).add(&Poly::constant(c));
+        }
+        acc
+    }
+
+    /// Substitute `x -> x + h` (shift the argument), i.e. return `q` with
+    /// `q(x) = self(x + h)`.
+    ///
+    /// Closed forms for the degrees the solver actually produces (0–2);
+    /// generic Horner-composition above that.
+    pub fn shift(&self, h: f64) -> Poly {
+        match self.coeffs.as_slice() {
+            [_] => self.clone(),
+            [a, b] => Poly::new(vec![a + b * h, *b]),
+            [a, b, c] => Poly::new(vec![a + b * h + c * h * h, b + 2.0 * c * h, *c]),
+            _ => self.compose(&Poly::linear(h, 1.0)),
+        }
+    }
+
+    /// All real roots inside the closed interval `[lo, hi]`, ascending and
+    /// deduplicated. Exact formulas for degree ≤ 2, recursive bracketing via
+    /// the derivative's roots (which give the monotone segments) above.
+    pub fn roots_in(&self, lo: f64, hi: f64) -> Vec<f64> {
+        let mut out = self.roots_in_raw(lo, hi);
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.dedup_by(|a, b| (*a - *b).abs() < EPS * (1.0 + a.abs().max(b.abs())));
+        out
+    }
+
+    fn roots_in_raw(&self, lo: f64, hi: f64) -> Vec<f64> {
+        if lo > hi {
+            return vec![];
+        }
+        // Work on a trimmed view: ignore negligible leading coefficients
+        // relative to the coefficient magnitude.
+        let scale = self.coeffs.iter().fold(0.0f64, |m, c| m.max(c.abs()));
+        if scale < EPS {
+            return vec![]; // zero polynomial: treat as root-free (caller decides)
+        }
+        // allocation-free fast paths for the degrees the solver produces
+        match self.coeffs.as_slice() {
+            [_] => return vec![],
+            [a, b] if b.abs() >= EPS * scale => {
+                let r = -a / b;
+                return if in_closed(r, lo, hi) { vec![r] } else { vec![] };
+            }
+            [a, b, c] if c.abs() >= EPS * scale => {
+                return quadratic_roots(*a, *b, *c)
+                    .into_iter()
+                    .filter(|r| in_closed(*r, lo, hi))
+                    .collect();
+            }
+            _ => {}
+        }
+        let mut coeffs = self.coeffs.clone();
+        while coeffs.len() > 1 && coeffs.last().unwrap().abs() < EPS * scale {
+            coeffs.pop();
+        }
+        match coeffs.len() {
+            1 => vec![],
+            2 => {
+                let r = -coeffs[0] / coeffs[1];
+                if in_closed(r, lo, hi) {
+                    vec![r]
+                } else {
+                    vec![]
+                }
+            }
+            3 => quadratic_roots(coeffs[0], coeffs[1], coeffs[2])
+                .into_iter()
+                .filter(|r| in_closed(*r, lo, hi))
+                .collect(),
+            _ => {
+                // Bracket on monotone segments delimited by derivative roots.
+                let p = Poly::new(coeffs);
+                let dp = p.derivative();
+                let mut cuts = vec![lo];
+                for r in dp.roots_in(lo, hi) {
+                    if r > lo + EPS && r < hi - EPS {
+                        cuts.push(r);
+                    }
+                }
+                cuts.push(hi);
+                let mut roots = vec![];
+                for w in cuts.windows(2) {
+                    if let Some(r) = bisect_root(&p, w[0], w[1]) {
+                        roots.push(r);
+                    }
+                }
+                roots
+            }
+        }
+    }
+
+    /// The first root strictly greater than `after` within `(after, hi]`,
+    /// if any.
+    pub fn first_root_after(&self, after: f64, hi: f64) -> Option<f64> {
+        self.roots_in(after, hi)
+            .into_iter()
+            .find(|r| *r > after + EPS * (1.0 + after.abs()))
+    }
+}
+
+fn in_closed(x: f64, lo: f64, hi: f64) -> bool {
+    let tol = EPS * (1.0 + lo.abs().max(hi.abs()));
+    x >= lo - tol && x <= hi + tol
+}
+
+/// Real roots of `a + b x + c x^2` (numerically-stable quadratic formula).
+pub fn quadratic_roots(a: f64, b: f64, c: f64) -> Vec<f64> {
+    if c.abs() < EPS * (1.0 + a.abs() + b.abs()) {
+        if b.abs() < EPS {
+            return vec![];
+        }
+        return vec![-a / b];
+    }
+    let disc = b * b - 4.0 * c * a;
+    if disc < 0.0 {
+        return vec![];
+    }
+    let sq = disc.sqrt();
+    // Citardauq-style to avoid cancellation.
+    let q = -0.5 * (b + b.signum() * sq);
+    let mut roots = vec![];
+    if q.abs() > 0.0 {
+        roots.push(q / c);
+        if sq > 0.0 || roots.is_empty() {
+            roots.push(a / q);
+        }
+    } else {
+        // b == 0 and disc == 0 => double root at 0
+        roots.push(0.0);
+    }
+    roots.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    roots.dedup_by(|x, y| (*x - *y).abs() < EPS);
+    roots
+}
+
+/// Bisection on a monotone bracket `[lo, hi]`; returns the root if the sign
+/// changes (or an endpoint is a root).
+fn bisect_root(p: &Poly, lo: f64, hi: f64) -> Option<f64> {
+    let flo = p.eval(lo);
+    let fhi = p.eval(hi);
+    let tol = EPS * (1.0 + lo.abs().max(hi.abs()));
+    let ftol = EPS * p.coeffs.iter().fold(1.0f64, |m, c| m.max(c.abs()));
+    if flo.abs() < ftol {
+        return Some(lo);
+    }
+    if fhi.abs() < ftol {
+        return Some(hi);
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    let (mut a, mut b) = (lo, hi);
+    let (mut fa, _) = (flo, fhi);
+    for _ in 0..200 {
+        let m = 0.5 * (a + b);
+        let fm = p.eval(m);
+        if fm.abs() < ftol || (b - a) < tol {
+            return Some(m);
+        }
+        if fa.signum() == fm.signum() {
+            a = m;
+            fa = fm;
+        } else {
+            b = m;
+        }
+    }
+    Some(0.5 * (a + b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_horner() {
+        let p = Poly::new(vec![1.0, 2.0, 3.0]); // 1 + 2x + 3x^2
+        assert_eq!(p.eval(0.0), 1.0);
+        assert_eq!(p.eval(1.0), 6.0);
+        assert_eq!(p.eval(2.0), 17.0);
+    }
+
+    #[test]
+    fn trims_trailing_zeros() {
+        let p = Poly::new(vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(p.degree(), 1);
+        let z = Poly::new(vec![]);
+        assert!(z.is_zero());
+    }
+
+    #[test]
+    fn derivative_antiderivative_roundtrip() {
+        let p = Poly::new(vec![4.0, -3.0, 2.0, 1.0]);
+        let q = p.derivative().antiderivative(p.coeffs[0]);
+        for (a, b) in p.coeffs.iter().zip(q.coeffs.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Poly::new(vec![1.0, 1.0]); // 1 + x
+        let b = Poly::new(vec![-1.0, 1.0]); // -1 + x
+        let prod = a.mul(&b); // x^2 - 1
+        assert_eq!(prod.coeffs, vec![-1.0, 0.0, 1.0]);
+        assert_eq!(a.add(&b).coeffs, vec![0.0, 2.0]);
+        assert_eq!(a.sub(&b).coeffs, vec![2.0]);
+    }
+
+    #[test]
+    fn compose_shift() {
+        let p = Poly::new(vec![0.0, 0.0, 1.0]); // x^2
+        let q = p.shift(1.0); // (x+1)^2 = 1 + 2x + x^2
+        assert_eq!(q.coeffs, vec![1.0, 2.0, 1.0]);
+        let r = p.compose(&Poly::linear(0.0, 2.0)); // (2x)^2
+        assert_eq!(r.coeffs, vec![0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn linear_roots() {
+        let p = Poly::linear(-2.0, 1.0); // x - 2
+        assert_eq!(p.roots_in(0.0, 5.0), vec![2.0]);
+        assert!(p.roots_in(3.0, 5.0).is_empty());
+    }
+
+    #[test]
+    fn quadratic_roots_both() {
+        let p = Poly::new(vec![2.0, -3.0, 1.0]); // (x-1)(x-2)
+        let r = p.roots_in(0.0, 5.0);
+        assert_eq!(r.len(), 2);
+        assert!((r[0] - 1.0).abs() < 1e-9 && (r[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quadratic_no_real_roots() {
+        let p = Poly::new(vec![1.0, 0.0, 1.0]); // x^2 + 1
+        assert!(p.roots_in(-10.0, 10.0).is_empty());
+    }
+
+    #[test]
+    fn cubic_roots_bracketed() {
+        // (x-1)(x-2)(x-3) = x^3 - 6x^2 + 11x - 6
+        let p = Poly::new(vec![-6.0, 11.0, -6.0, 1.0]);
+        let r = p.roots_in(0.0, 4.0);
+        assert_eq!(r.len(), 3);
+        for (got, want) in r.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((got - want).abs() < 1e-7, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn quartic_double_root() {
+        // (x-1)^2 (x+2)^2
+        let a = Poly::new(vec![-1.0, 1.0]);
+        let b = Poly::new(vec![2.0, 1.0]);
+        let p = a.mul(&a).mul(&b).mul(&b);
+        let r = p.roots_in(-5.0, 5.0);
+        assert_eq!(r.len(), 2, "{r:?}");
+        assert!((r[0] + 2.0).abs() < 1e-6 && (r[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn first_root_after_works() {
+        let p = Poly::new(vec![2.0, -3.0, 1.0]); // roots 1, 2
+        assert!((p.first_root_after(1.5, 10.0).unwrap() - 2.0).abs() < 1e-9);
+        assert!((p.first_root_after(0.0, 10.0).unwrap() - 1.0).abs() < 1e-9);
+        assert!(p.first_root_after(2.5, 10.0).is_none());
+    }
+}

@@ -1,0 +1,253 @@
+//! Exact rational arithmetic over `i128`.
+//!
+//! The paper notes (§4) that with piecewise-*linear* functions, intersection
+//! and root finding need only rational numbers and can therefore be done
+//! without precision loss. [`Rat`] backs the exact PL fast path in
+//! [`super::linear`]. Operations panic-free: overflow is reported as an
+//! error so callers can fall back to the f64 [`super::piecewise`] engine.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Error raised when an exact operation would overflow `i128`.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("rational arithmetic overflow")]
+pub struct Overflow;
+
+/// A normalized rational number `num/den`, `den > 0`, `gcd(num, den) = 1`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rat {
+    num: i128,
+    den: i128,
+}
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+impl Rat {
+    pub const ZERO: Rat = Rat { num: 0, den: 1 };
+    pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+    pub fn new(num: i128, den: i128) -> Result<Rat, Overflow> {
+        if den == 0 {
+            return Err(Overflow);
+        }
+        let g = gcd(num, den);
+        let sign = if den < 0 { -1 } else { 1 };
+        Ok(Rat {
+            num: sign * (num / g),
+            den: (den / g).abs(),
+        })
+    }
+
+    pub fn int(n: i64) -> Rat {
+        Rat {
+            num: n as i128,
+            den: 1,
+        }
+    }
+
+    /// Exact conversion from an f64 that is a dyadic rational of reasonable
+    /// size (which all user-facing model constants are after parsing).
+    pub fn from_f64(x: f64) -> Result<Rat, Overflow> {
+        if !x.is_finite() {
+            return Err(Overflow);
+        }
+        // scale by powers of two until integral (f64 mantissa is finite)
+        let mut num = x;
+        let mut den: i128 = 1;
+        let mut iter = 0;
+        while num.fract() != 0.0 {
+            num *= 2.0;
+            den = den.checked_mul(2).ok_or(Overflow)?;
+            iter += 1;
+            if iter > 80 || num.abs() > 1e30 {
+                return Err(Overflow);
+            }
+        }
+        if num.abs() >= i128::MAX as f64 {
+            return Err(Overflow);
+        }
+        Rat::new(num as i128, den)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn num(self) -> i128 {
+        self.num
+    }
+
+    pub fn den(self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_negative(self) -> bool {
+        self.num < 0
+    }
+
+    pub fn checked_add(self, o: Rat) -> Result<Rat, Overflow> {
+        let g = gcd(self.den, o.den);
+        let l = self.den / g;
+        let r = o.den / g;
+        let num = self
+            .num
+            .checked_mul(r)
+            .and_then(|a| o.num.checked_mul(l).and_then(|b| a.checked_add(b)))
+            .ok_or(Overflow)?;
+        let den = self.den.checked_mul(r).ok_or(Overflow)?;
+        Rat::new(num, den)
+    }
+
+    pub fn checked_sub(self, o: Rat) -> Result<Rat, Overflow> {
+        self.checked_add(Rat {
+            num: -o.num,
+            den: o.den,
+        })
+    }
+
+    pub fn checked_mul(self, o: Rat) -> Result<Rat, Overflow> {
+        // cross-reduce first to keep magnitudes small
+        let g1 = gcd(self.num, o.den);
+        let g2 = gcd(o.num, self.den);
+        let num = (self.num / g1).checked_mul(o.num / g2).ok_or(Overflow)?;
+        let den = (self.den / g2).checked_mul(o.den / g1).ok_or(Overflow)?;
+        Rat::new(num, den)
+    }
+
+    pub fn checked_div(self, o: Rat) -> Result<Rat, Overflow> {
+        if o.num == 0 {
+            return Err(Overflow);
+        }
+        self.checked_mul(Rat {
+            num: o.den,
+            den: o.num,
+        })
+    }
+
+    pub fn min(self, o: Rat) -> Rat {
+        if self <= o {
+            self
+        } else {
+            o
+        }
+    }
+
+    pub fn max(self, o: Rat) -> Rat {
+        if self >= o {
+            self
+        } else {
+            o
+        }
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // compare a/b vs c/d via a*d vs c*b; fall back to f64 on overflow
+        match (
+            self.num.checked_mul(other.den),
+            other.num.checked_mul(self.den),
+        ) {
+            (Some(l), Some(r)) => l.cmp(&r),
+            _ => self
+                .to_f64()
+                .partial_cmp(&other.to_f64())
+                .unwrap_or(Ordering::Equal),
+        }
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization() {
+        let r = Rat::new(6, -4).unwrap();
+        assert_eq!((r.num(), r.den()), (-3, 2));
+        assert_eq!(Rat::new(0, 5).unwrap(), Rat::ZERO);
+    }
+
+    #[test]
+    fn arithmetic_exact() {
+        let a = Rat::new(1, 3).unwrap();
+        let b = Rat::new(1, 6).unwrap();
+        assert_eq!(a.checked_add(b).unwrap(), Rat::new(1, 2).unwrap());
+        assert_eq!(a.checked_sub(b).unwrap(), b);
+        assert_eq!(a.checked_mul(b).unwrap(), Rat::new(1, 18).unwrap());
+        assert_eq!(a.checked_div(b).unwrap(), Rat::int(2));
+    }
+
+    #[test]
+    fn division_by_zero_is_error() {
+        assert!(Rat::int(1).checked_div(Rat::ZERO).is_err());
+        assert!(Rat::new(1, 0).is_err());
+    }
+
+    #[test]
+    fn ordering() {
+        let a = Rat::new(1, 3).unwrap();
+        let b = Rat::new(2, 5).unwrap();
+        assert!(a < b);
+        assert_eq!(a.min(b), a);
+        assert_eq!(a.max(b), b);
+    }
+
+    #[test]
+    fn from_f64_dyadic() {
+        assert_eq!(Rat::from_f64(0.5).unwrap(), Rat::new(1, 2).unwrap());
+        assert_eq!(Rat::from_f64(-3.25).unwrap(), Rat::new(-13, 4).unwrap());
+        assert_eq!(Rat::from_f64(1e6).unwrap(), Rat::int(1_000_000));
+        assert!(Rat::from_f64(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        for x in [0.0, 1.5, -2.75, 1024.0, 1.0 / 1024.0] {
+            assert_eq!(Rat::from_f64(x).unwrap().to_f64(), x);
+        }
+    }
+
+    #[test]
+    fn overflow_reported() {
+        let big = Rat::int(i64::MAX);
+        let r = (0..4).try_fold(big, |acc, _| acc.checked_mul(big));
+        assert!(r.is_err());
+    }
+}

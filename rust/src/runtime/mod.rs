@@ -1,0 +1,7 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+
+pub mod pjrt;
+pub mod sweep;
+
+pub use pjrt::{ArtifactInfo, Runtime};
+pub use sweep::{fig7_sweep, SweepResult};

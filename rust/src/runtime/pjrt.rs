@@ -1,0 +1,251 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client. Python is never on this path — `make artifacts` ran once at
+//! build time, and this module only touches `artifacts/*.hlo.txt`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One loadable artifact as described by `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    /// Expected input shapes (row-major dims).
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// The PJRT runtime: a CPU client plus lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, ArtifactInfo>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifact location (next to the repo root, `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BOTTLEMOD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Open the runtime over an artifact directory (reads `manifest.json`).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for (name, entry) in manifest
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest is not an object"))?
+        {
+            let file = entry
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let inputs = entry
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_f64())
+                        .map(|d| d as usize)
+                        .collect()
+                })
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                },
+            );
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?,
+            artifacts,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Names of all known artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    /// Artifact metadata.
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name)
+    }
+
+    /// Compile (memoized) an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let info = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", info.file))?,
+        )
+        .map_err(|e| anyhow!("loading {:?}: {e:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 tensors. Each input is `(data, dims)`;
+    /// dims must match the manifest. Returns the flattened f32 outputs.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let info = &self.artifacts[name];
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, dims)) in inputs.iter().enumerate() {
+            if *dims != info.inputs[i].as_slice() {
+                bail!(
+                    "artifact {name}: input {i} shape {:?} != manifest {:?}",
+                    dims,
+                    info.inputs[i]
+                );
+            }
+            let n: usize = dims.iter().product();
+            if n != data.len() {
+                bail!(
+                    "artifact {name}: input {i} has {} elems for shape {:?}",
+                    data.len(),
+                    dims
+                );
+            }
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    /// Full L3->PJRT->L1 smoke: evaluate a known piecewise function through
+    /// the compiled Pallas artifact and compare with the Rust engine.
+    #[test]
+    fn eval_pw_artifact_matches_rust_engine() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new(&Runtime::default_dir()).unwrap();
+        let name = "eval_pw_b64_s16_d4_t1024";
+        let info = rt.info(name).expect("artifact in manifest").clone();
+        let (b, s1) = (info.inputs[0][0], info.inputs[0][1]);
+        let s = s1 - 1;
+        let d = info.inputs[1][2];
+        let t = info.inputs[2][0];
+
+        const BIG: f32 = 1e30;
+        // function 0: ramp slope 2 until t=10 (value 20), then constant
+        let mut breaks = vec![BIG; b * s1];
+        let mut coeffs = vec![0f32; b * s * d];
+        breaks[0] = 0.0;
+        breaks[1] = 10.0;
+        coeffs[1] = 2.0; // piece 0, degree 1
+        coeffs[d] = 20.0; // piece 1, degree 0
+        let ts: Vec<f32> = (0..t).map(|i| i as f32 * 0.05).collect();
+
+        let out = rt
+            .execute_f32(
+                name,
+                &[
+                    (&breaks, &info.inputs[0]),
+                    (&coeffs, &info.inputs[1]),
+                    (&ts, &info.inputs[2]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].len(), b * t);
+
+        let f = crate::pwfn::PwPoly::ramp_to(0.0, 2.0, 20.0);
+        for (i, &tv) in ts.iter().enumerate().step_by(97) {
+            let want = f.eval(tv as f64) as f32;
+            let got = out[0][i];
+            assert!(
+                (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+                "t={tv}: rust {want} vs pjrt {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut rt = Runtime::new(&Runtime::default_dir()).unwrap();
+        assert!(rt.execute_f32("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut rt = Runtime::new(&Runtime::default_dir()).unwrap();
+        let bad = vec![0f32; 4];
+        let dims: [usize; 1] = [4];
+        let one: (&[f32], &[usize]) = (&bad, &dims);
+        let r = rt.execute_f32("eval_pw_b64_s16_d4_t1024", &[one, one, one]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! Allocation advisor: pick the resource split that minimizes the predicted
+//! makespan (the paper's "comparison of different scheduling options").
+
+use crate::workflow::scenario::VideoScenario;
+
+use crate::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
+
+/// A recommendation with its predicted effect.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub best_fraction: f64,
+    pub best_total: f64,
+    /// Predicted total under the fair 50:50 default.
+    pub fair_total: f64,
+    /// Relative improvement over fair sharing.
+    pub gain: f64,
+}
+
+/// Sweep `points` candidate fractions and recommend the best one.
+pub fn recommend(sc: &VideoScenario, points: usize, threads: usize) -> Recommendation {
+    let mut fractions = fig7_fractions(points);
+    if !fractions.iter().any(|f| (f - 0.5).abs() < 1e-12) {
+        fractions.push(0.5);
+    }
+    let sweep = exact_sweep(sc, &fractions, threads);
+    let (best_f, best_t) = best_fraction(&sweep);
+    let fair_total = sweep
+        .fractions
+        .iter()
+        .zip(&sweep.totals)
+        .find(|(f, _)| (**f - 0.5).abs() < 1e-12)
+        .map(|(_, t)| *t)
+        .unwrap();
+    Recommendation {
+        best_fraction: best_f,
+        best_total: best_t,
+        fair_total,
+        gain: 1.0 - best_t / fair_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recommends_the_paper_headline() {
+        let rec = recommend(&VideoScenario::default(), 50, 4);
+        assert!(rec.best_fraction >= 0.85, "{rec:?}");
+        assert!((0.25..0.40).contains(&rec.gain), "{rec:?}");
+        assert!(rec.best_total < rec.fair_total);
+    }
+}

@@ -1,0 +1,8 @@
+//! Scheduling applications of the analysis: the allocation advisor and the
+//! online re-analysis controller.
+
+pub mod advisor;
+pub mod online;
+
+pub use advisor::{recommend, Recommendation};
+pub use online::{predict_remaining, run_online, Decision, LiveState, OnlineResult};

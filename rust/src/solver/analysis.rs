@@ -1,0 +1,144 @@
+//! Analysis results: the progress function, the piecewise bottleneck
+//! function, and the §3.3 derived metrics (resource usage, buffered data).
+
+use crate::model::process::{Process, ProcessInputs};
+use crate::pwfn::{Envelope, PwPoly};
+
+/// What limits progress on a time interval (the paper's piecewise-defined
+/// bottleneck function, derived from the discrete intersections of the
+/// task model's limiting functions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// Limited by data input `k` (index into `Process::data_reqs`).
+    Data(usize),
+    /// Limited by resource `l` (index into `Process::res_reqs`).
+    Resource(usize),
+    /// Not limited (a process with no data inputs running at allocation-
+    /// unconstrained speed, or an instantaneous jump).
+    None,
+}
+
+/// A maximal time interval with a constant limiting factor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Segment {
+    pub start: f64,
+    pub end: f64,
+    pub bottleneck: Bottleneck,
+}
+
+/// The full result of analyzing one process execution.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// The progress function `P(t)`, constant at `max_progress` after
+    /// completion (domain `[start_time, inf)`).
+    pub progress: PwPoly,
+    /// Per-input data progress functions `P_Dk(t) = R_Dk(I_Dk(t))`.
+    pub data_progress: Vec<PwPoly>,
+    /// `P_D(t) = min_k P_Dk(t)` with winner attribution.
+    pub pd: Envelope,
+    /// Bottleneck segmentation of `[start_time, finish]`.
+    pub segments: Vec<Segment>,
+    /// Wall-clock completion time (`None` if the process never finishes
+    /// within the solver horizon).
+    pub finish_time: Option<f64>,
+    pub start_time: f64,
+    pub max_progress: f64,
+    /// Number of solver events (for the §6 performance accounting: cost is
+    /// proportional to piece/limit changes, *not* to bytes moved).
+    pub events: usize,
+}
+
+impl Analysis {
+    /// Output function over wall time, `O_m(P(t))` — directly usable as the
+    /// data input function of a successor process (paper §3.4).
+    pub fn output_over_time(&self, process: &Process, m: usize) -> PwPoly {
+        process.outputs[m].func.compose(&self.progress)
+    }
+
+    /// Exact resource demand over time: `P'(t) · R'_Rl(P(t))` (paper eq. 4).
+    ///
+    /// Caveat: on stall intervals (a jump in `R_Rl` being "paid off")
+    /// `P' = 0`, so this reports 0 even though the stalled resource is being
+    /// consumed at its allocated rate; the evaluation models use stream-type
+    /// resources where stalls do not occur.
+    pub fn resource_demand(&self, process: &Process, l: usize) -> PwPoly {
+        let dp = self.progress.derivative();
+        let drl = process.res_reqs[l].func.derivative();
+        let cost_along_p = drl.compose(&self.progress);
+        dp.mul(&cost_along_p)
+    }
+
+    /// Relative resource usage (paper eq. 7), sampled on `ts`:
+    /// `P'(t)·R'(P(t)) / I_Rl(t)`, clamped to `[0, 1]`; 0 where the
+    /// allocation is 0.
+    pub fn relative_usage_sampled(
+        &self,
+        process: &Process,
+        inputs: &ProcessInputs,
+        l: usize,
+        ts: &[f64],
+    ) -> Vec<f64> {
+        let demand = self.resource_demand(process, l);
+        ts.iter()
+            .map(|&t| {
+                let alloc = inputs.resources[l].eval(t);
+                if alloc <= 0.0 {
+                    0.0
+                } else {
+                    (demand.eval(t) / alloc).clamp(0.0, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    /// Bytes of input `k` consumed by time `t`: the smallest `n` with
+    /// `R_Dk(n) >= P(t)` (the `R_Dk^{-1}(P(t))` of paper eq. 8, generalized
+    /// to non-invertible requirement functions by the first-reach
+    /// convention).
+    pub fn data_consumed_at(&self, process: &Process, k: usize, t: f64) -> f64 {
+        let p = self.progress.eval(t);
+        process.data_reqs[k]
+            .func
+            .inverse_at(p)
+            .unwrap_or(0.0)
+    }
+
+    /// Buffered (provided but unused) data of input `k` (paper eq. 8),
+    /// sampled on `ts`: `I_Dk(t) - R_Dk^{-1}(P(t))`.
+    pub fn buffered_data_sampled(
+        &self,
+        process: &Process,
+        inputs: &ProcessInputs,
+        k: usize,
+        ts: &[f64],
+    ) -> Vec<f64> {
+        ts.iter()
+            .map(|&t| {
+                (inputs.data[k].eval(t) - self.data_consumed_at(process, k, t)).max(0.0)
+            })
+            .collect()
+    }
+
+    /// The bottleneck governing time `t` (`None` outside all segments,
+    /// e.g. after completion).
+    pub fn bottleneck_at(&self, t: f64) -> Option<Bottleneck> {
+        self.segments
+            .iter()
+            .find(|s| t >= s.start && t < s.end)
+            .map(|s| s.bottleneck)
+    }
+
+    /// Human-readable name for a bottleneck of this process.
+    pub fn bottleneck_name(&self, process: &Process, b: Bottleneck) -> String {
+        match b {
+            Bottleneck::Data(k) => format!("data:{}", process.data_reqs[k].name),
+            Bottleneck::Resource(l) => format!("res:{}", process.res_reqs[l].name),
+            Bottleneck::None => "unconstrained".to_string(),
+        }
+    }
+
+    /// Makespan relative to process start (`None` if unfinished).
+    pub fn duration(&self) -> Option<f64> {
+        self.finish_time.map(|f| f - self.start_time)
+    }
+}

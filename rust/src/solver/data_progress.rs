@@ -1,0 +1,112 @@
+//! Data progress: `P_Dk(t) = R_Dk(I_Dk(t))` and the envelope
+//! `P_D(t) = min_k P_Dk(t)` (paper §3.1, eqs. 1–3).
+
+use crate::model::process::{Process, ProcessInputs};
+use crate::pwfn::{Envelope, PwPoly};
+
+/// Compute all per-input data progress functions and their lower envelope.
+///
+/// A process without data inputs gets the constant envelope at
+/// `max_progress` (data never limits it).
+pub fn data_envelope(process: &Process, inputs: &ProcessInputs) -> (Vec<PwPoly>, Envelope) {
+    let t0 = inputs.start_time;
+    let data_progress: Vec<PwPoly> = process
+        .data_reqs
+        .iter()
+        .zip(inputs.data.iter())
+        .map(|(req, input)| {
+            // shift/clamp the input to the process start: data available
+            // before the start is simply available at the start
+            let shifted = if input.x_min() > t0 {
+                // not yet defined at start: clamp semantics of eval handle it,
+                // but materialize the leading constant for clean breaks
+                let lead = PwPoly::constant_from(t0, input.eval(input.x_min()));
+                // min is wrong here; build explicit concatenation
+                concat(lead.clip(t0, input.x_min()), input.clone())
+            } else {
+                input.clone()
+            };
+            req.func.compose(&shifted).clip(t0, f64::INFINITY)
+        })
+        .collect();
+    let env = if data_progress.is_empty() {
+        Envelope {
+            func: PwPoly::constant_from(t0, process.max_progress),
+            winners: vec![0],
+        }
+    } else {
+        let refs: Vec<&PwPoly> = data_progress.iter().collect();
+        PwPoly::min_envelope(&refs)
+    };
+    (data_progress, env)
+}
+
+/// Concatenate two piecewise functions with adjacent domains
+/// (`a.x_max() == b.x_min()`).
+fn concat(a: PwPoly, b: PwPoly) -> PwPoly {
+    let mut breaks = a.breaks.clone();
+    breaks.pop();
+    let mut polys = a.polys.clone();
+    breaks.extend_from_slice(&b.breaks);
+    polys.extend_from_slice(&b.polys);
+    PwPoly::new(breaks, polys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::ProcessBuilder;
+
+    #[test]
+    fn envelope_of_two_inputs() {
+        // paper Fig 3 style: one linear input, one burst input
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("a", 100.0)
+            .burst_data("b", 50.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![
+                PwPoly::ramp_to(0.0, 10.0, 100.0), // done at t=10
+                PwPoly::ramp_to(0.0, 10.0, 50.0),  // done at t=5 -> jump
+            ],
+            resources: vec![],
+            start_time: 0.0,
+        };
+        let (dps, env) = data_envelope(&proc, &inputs);
+        assert_eq!(dps.len(), 2);
+        // before t=5: burst input gives 0 -> envelope 0, winner b (=1)
+        assert_eq!(env.func.eval(4.0), 0.0);
+        assert_eq!(env.winner_at(4.0), 1);
+        // after t=5: burst jumps to 100, linear gives 10t
+        assert!((env.func.eval(6.0) - 60.0).abs() < 1e-9);
+        assert_eq!(env.winner_at(6.0), 0);
+    }
+
+    #[test]
+    fn no_data_inputs_unlimited() {
+        let proc = ProcessBuilder::new("t", 42.0).build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![],
+            start_time: 1.0,
+        };
+        let (_, env) = data_envelope(&proc, &inputs);
+        assert_eq!(env.func.eval(1.0), 42.0);
+        assert_eq!(env.func.eval(100.0), 42.0);
+    }
+
+    #[test]
+    fn input_defined_after_start_clamped() {
+        // input function starts at t=5 (e.g. predecessor output shifted)
+        let proc = ProcessBuilder::new("t", 10.0).stream_data("a", 10.0).build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::ramp_to(5.0, 1.0, 10.0)],
+            resources: vec![],
+            start_time: 0.0,
+        };
+        let (dps, _) = data_envelope(&proc, &inputs);
+        assert_eq!(dps[0].eval(0.0), 0.0);
+        assert_eq!(dps[0].eval(5.0), 0.0);
+        assert!((dps[0].eval(10.0) - 5.0).abs() < 1e-9);
+    }
+}

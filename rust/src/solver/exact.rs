@@ -1,0 +1,818 @@
+//! Algorithm 2: the practical, event-driven exact solver (paper §4).
+//!
+//! With piecewise-*linear* resource requirement functions, the divisor in
+//! `P'(t) <= min_l I_Rl(t) / R'_Rl(P(t))` (paper eq. 9) is piecewise-
+//! constant in `p`, so on a region where every involved function stays on
+//! one piece the progress function is simply the antiderivative of a
+//! polynomial. The solver therefore advances from event to event — the
+//! discrete points where a piece or the limiting factor changes — exactly as
+//! the paper prescribes, never iterating over raw time steps. Its cost is a
+//! function of model complexity only, *independent of the amount of data
+//! simulated* (the §6 headline).
+//!
+//! Event types handled:
+//! * end of the current `P_D` piece (data envelope, incl. winner changes);
+//! * a jump in `P_D` (burst input becoming available);
+//! * end of the current `I_Rl` piece for any resource;
+//! * `P` crossing a breakpoint of any `R'_Rl` (p-region change);
+//! * a jump in `R_Rl` at the current progress (stall until the cumulative
+//!   allocation covers it);
+//! * `P_D`'s slope starting to exceed the resource speed limit
+//!   (data-limited → resource-limited);
+//! * the resource-limited `P` catching up with `P_D`
+//!   (resource-limited → data-limited);
+//! * the speed-limit envelope switching between resources;
+//! * `P` reaching `max_progress` (completion).
+
+use crate::model::process::{ModelError, Process, ProcessInputs};
+use crate::pwfn::{poly::Poly, PwPoly};
+
+use super::analysis::{Analysis, Bottleneck, Segment};
+use super::data_progress::data_envelope;
+
+/// Solver configuration.
+#[derive(Clone, Debug)]
+pub struct SolverOpts {
+    /// Give up (finish_time = None) past this wall-clock time.
+    pub horizon: f64,
+    /// Hard cap on solver events (guards against numerically-stalled loops).
+    pub max_events: usize,
+    /// Relative progress tolerance for "reached" comparisons.
+    pub tol: f64,
+}
+
+impl Default for SolverOpts {
+    fn default() -> Self {
+        SolverOpts {
+            horizon: 1e9,
+            max_events: 200_000,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// Solver failure.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum SolveError {
+    #[error(transparent)]
+    Model(#[from] ModelError),
+    #[error("solver made no progress at t={t}, p={p} (numerical stall)")]
+    Stalled { t: f64, p: f64 },
+    #[error("exceeded {0} events")]
+    TooManyEvents(usize),
+}
+
+/// Piece-by-piece constructor for `P(t)` plus its bottleneck segmentation.
+struct ProgressBuilder {
+    breaks: Vec<f64>,
+    polys: Vec<Poly>,
+    segments: Vec<Segment>,
+    tiny: f64,
+}
+
+impl ProgressBuilder {
+    fn new(t0: f64) -> Self {
+        ProgressBuilder {
+            breaks: vec![t0],
+            polys: vec![],
+            segments: vec![],
+            tiny: 1e-12,
+        }
+    }
+
+    /// Append a piece on `[start, end)` (local coords at `start`).
+    fn push(&mut self, start: f64, end: f64, poly: Poly, label: Bottleneck) {
+        debug_assert!((start - *self.breaks.last().unwrap()).abs() < 1e-6 * (1.0 + start.abs()));
+        if end - start < self.tiny * (1.0 + start.abs()) {
+            return; // zero-width: skip (value continuity is the caller's p)
+        }
+        // merge with previous piece when same label and same polynomial
+        // continuation
+        let mergeable = if let (Some(last_poly), Some(last_seg)) =
+            (self.polys.last(), self.segments.last())
+        {
+            let prev_start = self.breaks[self.breaks.len() - 2];
+            let cont = last_poly.shift(start - prev_start);
+            let scale = cont
+                .coeffs
+                .iter()
+                .chain(poly.coeffs.iter())
+                .fold(1.0f64, |m, c| m.max(c.abs()));
+            last_seg.bottleneck == label
+                && cont.sub(&poly).coeffs.iter().all(|c| c.abs() <= 1e-9 * scale)
+        } else {
+            false
+        };
+        if mergeable {
+            *self.breaks.last_mut().unwrap() = end;
+            self.segments.last_mut().unwrap().end = end;
+        } else {
+            self.polys.push(poly);
+            self.breaks.push(end);
+            // extend previous segment or start a new one
+            if let Some(seg) = self.segments.last_mut() {
+                if seg.bottleneck == label && (seg.end - start).abs() < 1e-9 * (1.0 + start.abs())
+                {
+                    seg.end = end;
+                } else {
+                    self.segments.push(Segment {
+                        start,
+                        end,
+                        bottleneck: label,
+                    });
+                }
+            } else {
+                self.segments.push(Segment {
+                    start,
+                    end,
+                    bottleneck: label,
+                });
+            }
+        }
+    }
+
+    /// Close with a constant tail at `p_final` from `t` on.
+    fn finish(mut self, t: f64, p_final: f64) -> (PwPoly, Vec<Segment>) {
+        let last = *self.breaks.last().unwrap();
+        if (t - last).abs() > 1e-9 * (1.0 + t.abs()) && t > last {
+            // shouldn't happen, but keep the function well-formed
+            self.polys.push(Poly::constant(p_final));
+            self.breaks.push(t);
+        }
+        self.polys.push(Poly::constant(p_final));
+        self.breaks.push(f64::INFINITY);
+        if self.polys.len() == 1 {
+            // degenerate: instantly-complete process
+            return (
+                PwPoly::new(self.breaks, self.polys),
+                self.segments,
+            );
+        }
+        (PwPoly::new(self.breaks, self.polys), self.segments)
+    }
+}
+
+/// First breakpoint of `f` strictly greater than `t` (`inf` if none).
+fn next_break_after(f: &PwPoly, t: f64) -> f64 {
+    for &b in &f.breaks {
+        if b > t + 1e-12 * (1.0 + t.abs()) {
+            return b;
+        }
+    }
+    f64::INFINITY
+}
+
+/// Analyze one process under the given inputs (Algorithm 2).
+pub fn solve(
+    process: &Process,
+    inputs: &ProcessInputs,
+    opts: &SolverOpts,
+) -> Result<Analysis, SolveError> {
+    process.validate()?;
+    process.validate_inputs(inputs)?;
+    let t0 = inputs.start_time;
+
+    // ---- data side: P_Dk and the envelope P_D -------------------------
+    let (data_progress, pd) = data_envelope(process, inputs);
+
+    // resource derivative functions R'_Rl(p) (piecewise-constant in p)
+    let dres: Vec<PwPoly> = process
+        .res_reqs
+        .iter()
+        .map(|r| r.func.derivative())
+        .collect();
+    let l_count = dres.len();
+
+    let tolp = opts.tol * (1.0 + process.max_progress.abs());
+    let mut t = t0;
+    let mut p = 0.0f64.min(process.max_progress);
+    let mut builder = ProgressBuilder::new(t0);
+    let mut events = 0usize;
+    let mut finished = false;
+
+    // a process with nothing to do is instantly complete
+    if process.max_progress <= tolp {
+        finished = true;
+    }
+
+    while !finished {
+        events += 1;
+        if events > opts.max_events {
+            return Err(SolveError::TooManyEvents(opts.max_events));
+        }
+        if t >= opts.horizon {
+            break;
+        }
+
+        // ---- stall: a jump in some R_Rl at the current progress --------
+        let mut stall_until = t;
+        let mut stall_res = 0usize;
+        for (l, r) in process.res_reqs.iter().enumerate() {
+            // find a break of R_Rl at (approximately) p with an upward jump
+            let jump_break = r
+                .func
+                .breaks
+                .iter()
+                .copied()
+                .find(|&b| b.is_finite() && (b - p).abs() <= tolp && r.func.jump_at(b) > tolp);
+            if let Some(b) = jump_break {
+                let need = r.func.jump_at(b);
+                // accumulate allocation: A(t') - A(t) >= need
+                let acc = inputs.resources[l].antiderivative(0.0);
+                let target = acc.eval(t) + need;
+                match acc.first_reach(target, t) {
+                    Some(tl) if tl < opts.horizon => {
+                        if tl > stall_until {
+                            stall_until = tl;
+                            stall_res = l;
+                        }
+                    }
+                    _ => {
+                        // never paid: stalled forever
+                        let (progress, segments) = builder.finish(t, p);
+                        return Ok(Analysis {
+                            progress,
+                            data_progress,
+                            pd,
+                            segments,
+                            finish_time: None,
+                            start_time: t0,
+                            max_progress: process.max_progress,
+                            events,
+                        });
+                    }
+                }
+            }
+        }
+        if stall_until > t + 1e-12 * (1.0 + t.abs()) {
+            builder.push(
+                t,
+                stall_until,
+                Poly::constant(p),
+                Bottleneck::Resource(stall_res),
+            );
+            t = stall_until;
+            // nudge p past the jump break so it isn't detected again
+            p += 2.0 * tolp;
+            continue;
+        }
+
+        let pd_now = pd.func.eval(t);
+        let gap = pd_now - p;
+
+        // ---- current p-region: cost per progress for each resource -----
+        let costs: Vec<f64> = dres.iter().map(|d| d.eval(p + 2.0 * tolp)).collect();
+        let next_p_break = dres
+            .iter()
+            .map(|d| next_break_after(d, p + 2.0 * tolp))
+            .fold(f64::INFINITY, f64::min)
+            .min(process.max_progress);
+
+        // window: no involved function changes piece inside it
+        let mut window = next_break_after(&pd.func, t).min(opts.horizon);
+        for ir in &inputs.resources {
+            window = window.min(next_break_after(ir, t));
+        }
+        debug_assert!(window > t);
+
+        let limiting: Vec<usize> = (0..l_count).filter(|&l| costs[l] > 1e-15).collect();
+
+        if gap <= tolp {
+            // =============== potentially data-limited ===================
+            p = pd_now; // snap
+            if p >= process.max_progress - tolp {
+                finished = true;
+                break;
+            }
+            let f = pd.func.local_poly_at(t); // local at t
+            let df = f.derivative();
+            // while following pd, p-break crossing is also an event
+            let mut w = window;
+            if next_p_break.is_finite() && next_p_break > p + tolp {
+                if let Some(tp) = pd.func.first_reach(next_p_break, t) {
+                    if tp > t {
+                        w = w.min(tp);
+                    }
+                }
+            }
+            // completion while following pd
+            if let Some(tfin) = pd.func.first_reach(process.max_progress, t) {
+                if tfin > t {
+                    w = w.min(tfin);
+                } else {
+                    finished = true;
+                    break;
+                }
+            }
+            // check resource-speed violation: c_l * pd'(t) - I_Rl(t) > 0
+            let mut violated_now = false;
+            let mut t_viol = f64::INFINITY;
+            for &l in &limiting {
+                let g = df
+                    .scale(costs[l])
+                    .sub(&inputs.resources[l].local_poly_at(t));
+                let gscale = g.coeffs.iter().fold(1e-12f64, |m, c| m.max(c.abs()));
+                if g.eval(1e-9) > 1e-9 * gscale {
+                    violated_now = true;
+                    break;
+                }
+                let hi = if w.is_finite() { w - t } else { 1e12 };
+                for r in g.roots_in(0.0, hi) {
+                    // violation begins where g crosses upward
+                    if g.eval(r + 1e-9 * (1.0 + r)) > 0.0 {
+                        t_viol = t_viol.min(t + r);
+                        break;
+                    }
+                }
+            }
+            if violated_now {
+                // resource-limited from here on: fall through to the
+                // resource branch on the next iteration
+                handle_resource_limited(
+                    &mut t, &mut p, &mut finished, process, inputs, &pd, &costs, &limiting,
+                    next_p_break, window, opts, &mut builder, tolp,
+                )?;
+                continue;
+            }
+            let event = w.min(t_viol);
+            if !event.is_finite() {
+                // nothing ever changes again and pd is flat below max:
+                // unfinished
+                break;
+            }
+            let k = pd.winner_at(0.5 * (t + event.min(t + 1e9)));
+            let label = if process.data_reqs.is_empty() {
+                Bottleneck::None
+            } else {
+                Bottleneck::Data(k)
+            };
+            builder.push(t, event, f, label);
+            p = pd.func.eval_left(event);
+            t = event;
+            if p >= process.max_progress - tolp {
+                finished = true;
+            }
+            // (a jump of pd at `event` shows up as gap > 0 next iteration)
+        } else {
+            // ================== resource-limited =========================
+            handle_resource_limited(
+                &mut t, &mut p, &mut finished, process, inputs, &pd, &costs, &limiting,
+                next_p_break, window, opts, &mut builder, tolp,
+            )?;
+        }
+
+        if p >= process.max_progress - tolp {
+            finished = true;
+        }
+    }
+
+    let finish_time = if finished { Some(t) } else { None };
+    let p_final = if finished { process.max_progress } else { p };
+    let (progress, segments) = builder.finish(t, p_final);
+    Ok(Analysis {
+        progress,
+        data_progress,
+        pd,
+        segments,
+        finish_time,
+        start_time: t0,
+        max_progress: process.max_progress,
+        events,
+    })
+}
+
+/// One resource-limited step: integrate `P' = min_l I_Rl(t)/c_l` from
+/// `(t, p)` until the first event, pushing the piece into `builder` and
+/// advancing `(t, p)`.
+#[allow(clippy::too_many_arguments)]
+fn handle_resource_limited(
+    t: &mut f64,
+    p: &mut f64,
+    finished: &mut bool,
+    process: &Process,
+    inputs: &ProcessInputs,
+    pd: &crate::pwfn::Envelope,
+    costs: &[f64],
+    limiting: &[usize],
+    next_p_break: f64,
+    window: f64,
+    opts: &SolverOpts,
+    builder: &mut ProgressBuilder,
+    tolp: f64,
+) -> Result<(), SolveError> {
+    let pd_now = pd.func.eval(*t);
+
+    if limiting.is_empty() {
+        // no resource needed in this p-region: instantaneous progress up to
+        // the next p-break / pd / completion
+        let target = pd_now.min(next_p_break).min(process.max_progress);
+        if target > *p + tolp {
+            *p = target; // a jump in P at time t (no piece appended)
+            if *p >= process.max_progress - tolp {
+                *finished = true;
+            }
+            return Ok(());
+        }
+        // p == pd < breaks: stuck waiting on data with zero cost; follow pd
+        // by jumping at its next increase
+        let t_next = pd
+            .func
+            .first_reach(*p + tolp.max(1e-9 * (1.0 + *p)), *t)
+            .unwrap_or(f64::INFINITY)
+            .min(window);
+        if !t_next.is_finite() || t_next >= opts.horizon {
+            *t = opts.horizon;
+            return Ok(());
+        }
+        let k = pd.winner_at(*t);
+        let label = if process.data_reqs.is_empty() {
+            Bottleneck::None
+        } else {
+            Bottleneck::Data(k)
+        };
+        if t_next > *t {
+            builder.push(*t, t_next, Poly::constant(*p), label);
+            *t = t_next;
+        } else {
+            return Err(SolveError::Stalled { t: *t, p: *p });
+        }
+        return Ok(());
+    }
+
+    // speed_l(t) = I_Rl(t) / c_l on [t, window); find the envelope winner at t
+    // and the earliest crossing with any other resource's speed.
+    let mut speeds: Vec<(usize, Poly)> = Vec::with_capacity(limiting.len());
+    for &l in limiting {
+        speeds.push((l, inputs.resources[l].local_poly_at(*t).scale(1.0 / costs[l])));
+    }
+    // winner at t+ (smallest speed just right of t; tie-break lower index)
+    let probe = 1e-9 * (1.0 + t.abs());
+    let (mut win_l, mut win_poly) = (speeds[0].0, speeds[0].1.clone());
+    let mut win_val = win_poly.eval(probe);
+    for (l, s) in speeds.iter().skip(1) {
+        let v = s.eval(probe);
+        if v < win_val - 1e-12 * (1.0 + v.abs()) {
+            win_l = *l;
+            win_poly = s.clone();
+            win_val = v;
+        }
+    }
+    let hi_local = if window.is_finite() {
+        window - *t
+    } else {
+        1e12
+    };
+    // crossing with any other speed
+    let mut t_cross = f64::INFINITY;
+    for (l, s) in &speeds {
+        if *l == win_l {
+            continue;
+        }
+        let d = s.sub(&win_poly);
+        for r in d.roots_in(0.0, hi_local) {
+            if r > probe && d.eval(r + probe) < 0.0 {
+                t_cross = t_cross.min(*t + r);
+                break;
+            }
+        }
+    }
+
+    // integrate the winning speed: P_cand(u) = p + ∫0^u speed
+    let cand = win_poly.antiderivative(*p);
+
+    // events: reach next_p_break / max_progress / catch pd
+    let mut event = window.min(t_cross).min(opts.horizon);
+    let mut event_kind = 0u8; // 0 window/cross, 1 p-break or max, 2 catch, 3 done
+    let targets = [next_p_break, process.max_progress];
+    for (i, &tgt) in targets.iter().enumerate() {
+        if tgt <= *p + tolp || !tgt.is_finite() {
+            continue;
+        }
+        let d = cand.sub(&Poly::constant(tgt));
+        if let Some(r) = d.first_root_after(0.0, hi_local.min(event - *t)) {
+            let te = *t + r;
+            if te < event {
+                event = te;
+                event_kind = if i == 1 { 3 } else { 1 };
+            }
+        }
+    }
+    // catch pd: root of cand - pd_local (only while cand < pd before)
+    if pd_now > *p + tolp {
+        let d = cand.sub(&pd.func.local_poly_at(*t));
+        for r in d.roots_in(0.0, hi_local.min(event - *t)) {
+            if r > probe {
+                let te = *t + r;
+                if te < event {
+                    event = te;
+                    event_kind = 2;
+                }
+                break;
+            }
+        }
+    } else {
+        // p == pd: we are here because pd' > maxspeed; cand falls behind pd,
+        // no catch event until something changes
+    }
+
+    if event <= *t + 1e-12 * (1.0 + t.abs()) {
+        return Err(SolveError::Stalled { t: *t, p: *p });
+    }
+    if !event.is_finite() {
+        // speed never limited again and no target reachable: give up at
+        // horizon
+        builder.push(*t, opts.horizon, cand.clone(), Bottleneck::Resource(win_l));
+        *p = cand.eval(opts.horizon - *t);
+        *t = opts.horizon;
+        return Ok(());
+    }
+
+    builder.push(*t, event, cand.clone(), Bottleneck::Resource(win_l));
+    *p = cand.eval(event - *t);
+    *t = event;
+    if event_kind == 3 || *p >= process.max_progress - tolp {
+        *p = process.max_progress;
+        *finished = true;
+    }
+    let _ = event_kind;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::ProcessBuilder;
+    use crate::solver::analysis::Bottleneck;
+    use crate::pwfn::PwPoly;
+
+    fn opts() -> SolverOpts {
+        SolverOpts::default()
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Stream task, data plentiful, CPU-limited: classic compute-bound run.
+    #[test]
+    fn cpu_bound_stream() {
+        // 100 units of progress, needs 50 CPU-s total, gets 1 CPU/s,
+        // all data available from the start
+        let proc = ProcessBuilder::new("enc", 100.0)
+            .stream_data("in", 1000.0)
+            .stream_resource("cpu", 50.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::constant(1000.0)],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 50.0), "{:?}", a.finish_time);
+        // halfway: 50 progress at t=25
+        assert!(close(a.progress.eval(25.0), 50.0));
+        assert_eq!(a.segments.len(), 1);
+        assert_eq!(a.segments[0].bottleneck, Bottleneck::Resource(0));
+    }
+
+    /// Stream task, CPU plentiful, data-limited: download-style run.
+    #[test]
+    fn data_bound_stream() {
+        // data trickles in at 10 B/s, needs 1000 B for 100 progress;
+        // CPU is ample (needs 1 CPU-s total, gets 1/s)
+        let proc = ProcessBuilder::new("rot", 100.0)
+            .stream_data("in", 1000.0)
+            .stream_resource("cpu", 1.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::ramp_to(0.0, 10.0, 1000.0)],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 100.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(50.0), 50.0));
+        assert_eq!(a.segments[0].bottleneck, Bottleneck::Data(0));
+    }
+
+    /// Burst data requirement: nothing happens until all input arrived, then
+    /// CPU-limited processing.
+    #[test]
+    fn burst_then_cpu() {
+        let proc = ProcessBuilder::new("rev", 100.0)
+            .burst_data("in", 1000.0)
+            .stream_resource("cpu", 50.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::ramp_to(0.0, 100.0, 1000.0)], // full at t=10
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        // t=10 data complete; then 50 CPU-s at 1/s
+        assert!(close(a.finish_time.unwrap(), 60.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(9.9), 0.0));
+        assert_eq!(a.bottleneck_at(5.0), Some(Bottleneck::Data(0)));
+        assert_eq!(a.bottleneck_at(30.0), Some(Bottleneck::Resource(0)));
+    }
+
+    /// Two resources: the scarcer one wins the bottleneck attribution.
+    #[test]
+    fn two_resources_min() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_resource("cpu", 100.0) // needs 1 cpu/progress
+            .stream_resource("io", 50.0)   // needs 0.5 io/progress
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::constant(2.0), PwPoly::constant(0.5)],
+            start_time: 0.0,
+        };
+        // speeds: cpu 2/1=2, io 0.5/0.5=1 -> io limits, finish at 100/1=100
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 100.0));
+        assert_eq!(a.segments[0].bottleneck, Bottleneck::Resource(1));
+    }
+
+    /// Resource allocation changes midway: I_R piece boundary event.
+    #[test]
+    fn allocation_step_change() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_resource("cpu", 100.0)
+            .build();
+        // 1 cpu/s until t=20, then 4 cpu/s
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::step(0.0, 20.0, 1.0, 4.0)],
+            start_time: 0.0,
+        };
+        // 20 progress by t=20, remaining 80 at 4/s -> +20s: finish 40
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 40.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(20.0), 20.0));
+        assert!(close(a.progress.eval(30.0), 60.0));
+    }
+
+    /// Data-limited then resource-limited: the paper's crossover case.
+    #[test]
+    fn data_then_resource_crossover() {
+        // data arrives fast early then slows; cpu constant
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 100.0) // 1 progress per byte
+            .stream_resource("cpu", 100.0) // 1 cpu per progress
+            .build();
+        // data: 2 B/s for 30 s (60 B), then 0.5 B/s
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::new(
+                vec![0.0, 30.0, 110.0, f64::INFINITY],
+                vec![
+                    crate::pwfn::poly::Poly::linear(0.0, 2.0),
+                    crate::pwfn::poly::Poly::linear(60.0, 0.5),
+                    crate::pwfn::poly::Poly::constant(100.0),
+                ],
+            )],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        // cpu allows 1 progress/s; data allows 2/s early: cpu is the
+        // bottleneck until data curve falls below cpu line.
+        // P grows at 1/s until it meets PD: PD(t)=min(2t,...); P=t < 2t so
+        // cpu-limited until PD flattens: at t=30 PD=60 > P=30; P stays
+        // cpu-limited until P catches PD: t such that t = 60+0.5(t-30)
+        // => 0.5t = 45 => t=90, P=90. then data-limited at 0.5/s until 100:
+        // t = 90 + 10/0.5 = 110.
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 110.0), "{:?}", a.finish_time);
+        assert_eq!(a.bottleneck_at(50.0), Some(Bottleneck::Resource(0)));
+        assert_eq!(a.bottleneck_at(100.0), Some(Bottleneck::Data(0)));
+        assert!(close(a.progress.eval(90.0), 90.0));
+    }
+
+    /// No resources at all: progress follows the data envelope exactly,
+    /// including its jump.
+    #[test]
+    fn unconstrained_follows_pd() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .burst_data("in", 10.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::ramp_to(0.0, 1.0, 10.0)],
+            resources: vec![],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 10.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(9.0), 0.0));
+        assert!(close(a.progress.eval(10.0), 100.0));
+    }
+
+    /// Burst *resource* requirement: stall until the allocation integral
+    /// covers the up-front cost.
+    #[test]
+    fn burst_resource_stalls() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .burst_resource("cpu", 10.0) // 10 cpu-s before any progress
+            .stream_resource("cpu2", 100.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::constant(2.0), PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        // stall 10/2 = 5 s, then 100 progress at 1/s
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 105.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(5.0), 0.0));
+        assert_eq!(a.bottleneck_at(2.0), Some(Bottleneck::Resource(0)));
+        assert_eq!(a.bottleneck_at(50.0), Some(Bottleneck::Resource(1)));
+    }
+
+    /// Never enough data: finish_time = None, progress plateaus.
+    #[test]
+    fn unfinishable_returns_none() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 1000.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::constant(500.0)], // only half the input ever
+            resources: vec![],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert_eq!(a.finish_time, None);
+        assert!(close(a.progress.eval(1e7), 50.0));
+    }
+
+    /// Start time offsets the whole analysis.
+    #[test]
+    fn start_time_respected() {
+        let proc = ProcessBuilder::new("t", 10.0)
+            .stream_resource("cpu", 10.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 100.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 110.0));
+        assert!(close(a.progress.eval(100.0), 0.0));
+        assert!(close(a.progress.eval(105.0), 5.0));
+    }
+
+    /// Zero allocation forever: horizon reached, no finish.
+    #[test]
+    fn zero_allocation_never_finishes() {
+        let proc = ProcessBuilder::new("t", 10.0)
+            .stream_resource("cpu", 10.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::constant(0.0)],
+            start_time: 0.0,
+        };
+        let mut o = opts();
+        o.horizon = 1e6;
+        let a = solve(&proc, &inputs, &o).unwrap();
+        assert_eq!(a.finish_time, None);
+        assert!(close(a.progress.eval(1000.0), 0.0));
+    }
+
+    /// Instantly-complete process.
+    #[test]
+    fn nop_process() {
+        let proc = crate::model::process::Process::nop("nop");
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![],
+            start_time: 3.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert_eq!(a.finish_time, Some(3.0));
+    }
+
+    /// Quadratic data input (the paper's Fig 3 'data2'): the solver handles
+    /// polynomial pieces, not just linear ones.
+    #[test]
+    fn quadratic_data_input() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", 1e-6) // effectively unconstrained
+            .build();
+        // I_D(t) = t^2/4, reaches 100 at t=20
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::new(
+                vec![0.0, 20.0, f64::INFINITY],
+                vec![
+                    crate::pwfn::poly::Poly::new(vec![0.0, 0.0, 0.25]),
+                    crate::pwfn::poly::Poly::constant(100.0),
+                ],
+            )],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        let a = solve(&proc, &inputs, &opts()).unwrap();
+        assert!(close(a.finish_time.unwrap(), 20.0), "{:?}", a.finish_time);
+        assert!(close(a.progress.eval(10.0), 25.0));
+    }
+}

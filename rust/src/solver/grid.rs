@@ -1,0 +1,249 @@
+//! Algorithm 1: the generic iterative solver (paper §3.2), discretized.
+//!
+//! This is the assumption-free reference implementation: it works for any
+//! requirement functions (not just piecewise-linear resource requirements)
+//! by discretizing time and iterating the fixpoint
+//! `P ← min(P_D, ∫ P'·min_l S_Rl dt)` forward. It is *slow by design* —
+//! cost scales with the grid, exactly the behaviour the event-driven
+//! Algorithm 2 ([`super::exact`]) avoids — and serves three purposes:
+//! cross-validation of the exact solver, the ablation bench
+//! (Algorithm 1 vs Algorithm 2), and the semantics blueprint for the
+//! batched L2 JAX artifact (`python/compile/model.py` implements the same
+//! forward pass as a `lax.scan`).
+
+use crate::model::process::{Process, ProcessInputs};
+
+use super::data_progress::data_envelope;
+
+/// Result of the grid solver.
+#[derive(Clone, Debug)]
+pub struct GridSolution {
+    pub ts: Vec<f64>,
+    pub progress: Vec<f64>,
+    pub finish_time: Option<f64>,
+}
+
+/// Forward-integrate progress on a uniform grid of `n_steps` over
+/// `[start, start+span]`.
+///
+/// Semantics mirror the exact solver: per step, the progress increment is
+/// capped by every resource's speed limit `I_Rl(t)/R'_Rl(p)` and by the data
+/// envelope `P_D`; jumps in `R_Rl` are "paid off" by accumulating the
+/// allocation before progress passes the jump point.
+pub fn solve_grid(
+    process: &Process,
+    inputs: &ProcessInputs,
+    span: f64,
+    n_steps: usize,
+) -> GridSolution {
+    let t0 = inputs.start_time;
+    let (_, pd) = data_envelope(process, inputs);
+    let dres: Vec<_> = process
+        .res_reqs
+        .iter()
+        .map(|r| r.func.derivative())
+        .collect();
+    // jump table per resource: (p_at_jump, height)
+    let jumps: Vec<Vec<(f64, f64)>> = process
+        .res_reqs
+        .iter()
+        .map(|r| {
+            r.func
+                .breaks
+                .iter()
+                .copied()
+                .filter(|b| b.is_finite())
+                .filter_map(|b| {
+                    let j = r.func.jump_at(b);
+                    if j > 1e-12 {
+                        Some((b, j))
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let dt = span / n_steps as f64;
+    let mut ts = Vec::with_capacity(n_steps + 1);
+    let mut ps = Vec::with_capacity(n_steps + 1);
+    let mut p = 0.0f64.min(process.max_progress);
+    // outstanding jump debt per resource (resource-amount still to pay)
+    let mut debt = vec![0.0f64; dres.len()];
+    // which jumps have already been taken on as debt
+    let mut paid: Vec<Vec<bool>> = jumps.iter().map(|js| vec![false; js.len()]).collect();
+    let mut finish = None;
+    ts.push(t0);
+    ps.push(p);
+    let tolp = 1e-9 * (1.0 + process.max_progress);
+
+    if process.max_progress <= tolp {
+        finish = Some(t0);
+    }
+
+    for i in 0..n_steps {
+        let t = t0 + i as f64 * dt;
+        let t_next = t + dt;
+        let mut p_next = if finish.is_some() {
+            p
+        } else {
+            // per-resource speed limit at (t, p)
+            let mut max_dp = f64::INFINITY;
+            for (l, d) in dres.iter().enumerate() {
+                // pay down jump debt first
+                if debt[l] > 0.0 {
+                    let pay = inputs.resources[l].eval(t) * dt;
+                    debt[l] -= pay;
+                    if debt[l] > 0.0 {
+                        max_dp = 0.0;
+                        continue;
+                    }
+                }
+                let c = d.eval(p + tolp);
+                if c > 1e-15 {
+                    max_dp = max_dp.min(inputs.resources[l].eval(t) * dt / c);
+                }
+            }
+            let cap = pd.func.eval(t_next).min(process.max_progress);
+            (p + max_dp.max(0.0)).min(cap)
+        };
+        // crossing a jump in some R_Rl: clamp at the jump and take on debt
+        if finish.is_none() {
+            for (l, js) in jumps.iter().enumerate() {
+                for (j, &(pj, height)) in js.iter().enumerate() {
+                    if !paid[l][j] && p_next >= pj - tolp {
+                        p_next = p_next.min(pj);
+                        debt[l] += height;
+                        paid[l][j] = true;
+                    }
+                }
+            }
+        }
+        p = p_next;
+        if finish.is_none() && p >= process.max_progress - tolp {
+            finish = Some(t_next);
+            p = process.max_progress;
+        }
+        ts.push(t_next);
+        ps.push(p);
+    }
+
+    GridSolution {
+        ts,
+        progress: ps,
+        finish_time: finish,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::ProcessBuilder;
+    use crate::pwfn::PwPoly;
+    use crate::solver::exact::{solve, SolverOpts};
+
+    fn agree(proc: &Process, inputs: &ProcessInputs, span: f64) {
+        let exact = solve(proc, inputs, &SolverOpts::default()).unwrap();
+        let grid = solve_grid(proc, inputs, span, 20_000);
+        // finish times agree to grid resolution
+        match (exact.finish_time, grid.finish_time) {
+            (Some(a), Some(b)) => {
+                let dt = span / 20_000.0;
+                assert!(
+                    (a - b).abs() <= 3.0 * dt + 1e-9,
+                    "exact {a} vs grid {b} (dt {dt})"
+                );
+            }
+            (a, b) => panic!("finish mismatch: exact {a:?} grid {b:?}"),
+        }
+        // pointwise agreement within Euler error
+        for i in (0..grid.ts.len()).step_by(997) {
+            let t = grid.ts[i];
+            let pe = exact.progress.eval(t);
+            let pg = grid.progress[i];
+            assert!(
+                (pe - pg).abs() <= 1e-2 * (1.0 + pe.abs()),
+                "at t={t}: exact {pe} vs grid {pg}"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_matches_exact_cpu_bound() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 1000.0)
+            .stream_resource("cpu", 50.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::constant(1000.0)],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        agree(&proc, &inputs, 80.0);
+    }
+
+    #[test]
+    fn grid_matches_exact_crossover() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", 100.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::new(
+                vec![0.0, 30.0, 110.0, f64::INFINITY],
+                vec![
+                    crate::pwfn::poly::Poly::linear(0.0, 2.0),
+                    crate::pwfn::poly::Poly::linear(60.0, 0.5),
+                    crate::pwfn::poly::Poly::constant(100.0),
+                ],
+            )],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        agree(&proc, &inputs, 150.0);
+    }
+
+    #[test]
+    fn grid_matches_exact_burst_data() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .burst_data("in", 1000.0)
+            .stream_resource("cpu", 50.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::ramp_to(0.0, 100.0, 1000.0)],
+            resources: vec![PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        agree(&proc, &inputs, 100.0);
+    }
+
+    #[test]
+    fn grid_matches_exact_burst_resource() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .burst_resource("cpu", 10.0)
+            .stream_resource("cpu2", 100.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![],
+            resources: vec![PwPoly::constant(2.0), PwPoly::constant(1.0)],
+            start_time: 0.0,
+        };
+        agree(&proc, &inputs, 150.0);
+    }
+
+    #[test]
+    fn grid_handles_unfinishable() {
+        let proc = ProcessBuilder::new("t", 100.0)
+            .stream_data("in", 1000.0)
+            .build();
+        let inputs = ProcessInputs {
+            data: vec![PwPoly::constant(500.0)],
+            resources: vec![],
+            start_time: 0.0,
+        };
+        let g = solve_grid(&proc, &inputs, 100.0, 1000);
+        assert_eq!(g.finish_time, None);
+        assert!((g.progress.last().unwrap() - 50.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Deducing the behavior of a process (paper §3).
+//!
+//! * [`data_progress`] — `P_Dk = R_Dk ∘ I_Dk` and the min-envelope `P_D`;
+//! * [`exact`] — Algorithm 2, the event-driven exact solver (the system's
+//!   hot path);
+//! * [`grid`] — Algorithm 1, the generic discretized reference solver;
+//! * [`analysis`] — results: `P(t)`, bottleneck segments, §3.3 metrics.
+
+pub mod analysis;
+pub mod data_progress;
+pub mod exact;
+pub mod grid;
+
+pub use analysis::{Analysis, Bottleneck, Segment};
+pub use exact::{solve, SolveError, SolverOpts};
+pub use grid::{solve_grid, GridSolution};

@@ -1,0 +1,397 @@
+//! Generic fluid (byte-accurate, fixed-timestep) workflow executor.
+//!
+//! This is the virtual testbed's core: an *independent* implementation of
+//! "what actually happens" that never looks at the analytic solver. All
+//! nodes advance **concurrently** in small time steps; data availability is
+//! read off producers' current progress, and shared pools are divided per
+//! step exactly like the paper's netfilter setup (per-flow caps, released
+//! when a flow finishes). Optional multiplicative jitter models OS noise,
+//! giving the Fig 7 min/max bars.
+//!
+//! Agreement between this executor and [`crate::solver`] is a strong
+//! end-to-end correctness signal, exercised by property tests.
+
+use crate::pwfn::PwPoly;
+use crate::util::Rng;
+use crate::workflow::graph::{DataSource, ResourceSource, Workflow};
+
+/// Executor options.
+#[derive(Clone, Debug)]
+pub struct FluidOpts {
+    /// Time step in seconds.
+    pub dt: f64,
+    /// Give up after this time.
+    pub horizon: f64,
+    /// Multiplicative noise: `(seed, sigma)`; rates are scaled by per-node
+    /// factors resampled every `jitter_period` seconds.
+    pub jitter: Option<(u64, f64)>,
+    pub jitter_period: f64,
+}
+
+impl Default for FluidOpts {
+    fn default() -> Self {
+        FluidOpts {
+            dt: 0.01,
+            horizon: 1e5,
+            jitter: None,
+            jitter_period: 1.0,
+        }
+    }
+}
+
+/// Result of one fluid execution.
+#[derive(Clone, Debug)]
+pub struct FluidRun {
+    pub finish: Vec<Option<f64>>,
+    pub makespan: Option<f64>,
+    /// Final progress per node.
+    pub progress: Vec<f64>,
+    /// Steps actually executed (cost accounting: scales with horizon/dt).
+    pub steps: usize,
+}
+
+struct NodeState {
+    p: f64,
+    done: Option<f64>,
+    started: bool,
+    /// outstanding resource-jump debt per resource
+    debt: Vec<f64>,
+    paid: Vec<Vec<bool>>,
+    jitter: f64,
+}
+
+/// Execute the workflow with the fluid engine.
+pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
+    let n = wf.nodes.len();
+    let dres: Vec<Vec<PwPoly>> = wf
+        .nodes
+        .iter()
+        .map(|nd| nd.process.res_reqs.iter().map(|r| r.func.derivative()).collect())
+        .collect();
+    let jumps: Vec<Vec<Vec<(f64, f64)>>> = wf
+        .nodes
+        .iter()
+        .map(|nd| {
+            nd.process
+                .res_reqs
+                .iter()
+                .map(|r| {
+                    r.func
+                        .breaks
+                        .iter()
+                        .copied()
+                        .filter(|b| b.is_finite())
+                        .filter_map(|b| {
+                            let j = r.func.jump_at(b);
+                            (j > 1e-12).then_some((b, j))
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut rng = opts.jitter.map(|(seed, _)| Rng::new(seed));
+    let sigma = opts.jitter.map(|(_, s)| s).unwrap_or(0.0);
+
+    let mut st: Vec<NodeState> = wf
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, nd)| NodeState {
+            p: 0.0,
+            done: if nd.process.max_progress <= 1e-12 {
+                Some(nd.start.at)
+            } else {
+                None
+            },
+            started: false,
+            debt: vec![0.0; nd.process.res_reqs.len()],
+            paid: jumps[i].iter().map(|js| vec![false; js.len()]).collect(),
+            jitter: 1.0,
+        })
+        .collect();
+
+    let dt = opts.dt;
+    let mut t = 0.0;
+    let mut steps = 0usize;
+    let mut next_jitter_refresh = 0.0;
+
+    while t < opts.horizon && st.iter().any(|s| s.done.is_none()) {
+        steps += 1;
+        // refresh jitter factors
+        if let Some(r) = rng.as_mut() {
+            if t >= next_jitter_refresh {
+                for s in st.iter_mut() {
+                    s.jitter = r.jitter(sigma);
+                }
+                next_jitter_refresh = t + opts.jitter_period;
+            }
+        }
+
+        // start gating
+        for i in 0..n {
+            if !st[i].started && st[i].done.is_none() {
+                let nd = &wf.nodes[i];
+                let ok = t >= nd.start.at
+                    && nd.start.after.iter().all(|&d| st[d].done.is_some());
+                if ok {
+                    st[i].started = true;
+                }
+            }
+        }
+
+        // pool bookkeeping: per-pool, fraction users are capped; residual
+        // users share what is left after the fraction users' actual usage
+        let mut pool_used = vec![0.0f64; wf.pools.len()];
+        let mut pool_active_others: Vec<usize> = vec![0; wf.pools.len()];
+        for (i, nd) in wf.nodes.iter().enumerate() {
+            if st[i].done.is_none() && st[i].started {
+                for s in &nd.resource_sources {
+                    let pid = match s {
+                        ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                        ResourceSource::PoolResidual { pool } => Some(*pool),
+                        _ => None,
+                    };
+                    if let Some(p) = pid {
+                        pool_active_others[p] += 1;
+                    }
+                }
+            }
+        }
+
+        // two phases: fraction users first (their caps don't depend on
+        // others), then residual users with the remainder
+        for phase in 0..2 {
+            for i in 0..n {
+                if st[i].done.is_some() || !st[i].started {
+                    continue;
+                }
+                let nd = &wf.nodes[i];
+                let is_residual = nd
+                    .resource_sources
+                    .iter()
+                    .any(|s| matches!(s, ResourceSource::PoolResidual { .. }));
+                if (phase == 0) == is_residual {
+                    continue;
+                }
+
+                // data limit
+                let mut p_cap = nd.process.max_progress;
+                for (k, src) in nd.data_sources.iter().enumerate() {
+                    let avail = match src {
+                        DataSource::External(f) => f.eval(t),
+                        DataSource::ProcessOutput { node, output } => {
+                            wf.nodes[*node].process.outputs[*output].func.eval(st[*node].p)
+                        }
+                    };
+                    p_cap = p_cap.min(nd.process.data_reqs[k].func.eval(avail));
+                }
+
+                // resource limit
+                let mut dp = p_cap - st[i].p;
+                for (l, src) in nd.resource_sources.iter().enumerate() {
+                    let alloc = match src {
+                        ResourceSource::Fixed(f) => f.eval(t),
+                        ResourceSource::PoolFraction { pool, fraction } => {
+                            let cap = wf.pools[*pool].capacity.eval(t);
+                            // released to full capacity when alone on pool
+                            if pool_active_others[*pool] <= 1 {
+                                cap
+                            } else {
+                                cap * fraction
+                            }
+                        }
+                        ResourceSource::PoolResidual { pool } => {
+                            (wf.pools[*pool].capacity.eval(t) - pool_used[*pool]).max(0.0)
+                        }
+                    } * st[i].jitter;
+                    // pay jump debt
+                    if st[i].debt[l] > 0.0 {
+                        st[i].debt[l] -= alloc * dt;
+                        if st[i].debt[l] > 0.0 {
+                            dp = 0.0;
+                            // still consuming the pool while stalled
+                            charge_pool(&wf.nodes[i].resource_sources[l], alloc, &mut pool_used);
+                            continue;
+                        }
+                    }
+                    let c = dres[i][l].eval(st[i].p + 1e-12);
+                    if c > 1e-15 {
+                        dp = dp.min(alloc * dt / c);
+                    }
+                }
+                dp = dp.max(0.0);
+
+                // jump crossings
+                for l in 0..jumps[i].len() {
+                    for j in 0..jumps[i][l].len() {
+                        let (pj, height) = jumps[i][l][j];
+                        if !st[i].paid[l][j] && st[i].p + dp >= pj - 1e-12 {
+                            dp = dp.min((pj - st[i].p).max(0.0));
+                            st[i].debt[l] += height;
+                            st[i].paid[l][j] = true;
+                        }
+                    }
+                }
+
+                // charge pools with actual usage
+                for (l, src) in nd.resource_sources.iter().enumerate() {
+                    let c = dres[i][l].eval(st[i].p + 1e-12);
+                    let used_rate = c * dp / dt;
+                    if used_rate > 0.0 {
+                        charge_pool(src, used_rate, &mut pool_used);
+                    }
+                }
+
+                st[i].p += dp;
+                if st[i].p >= nd.process.max_progress - 1e-9 * (1.0 + nd.process.max_progress)
+                {
+                    st[i].p = nd.process.max_progress;
+                    st[i].done = Some(t + dt);
+                }
+            }
+        }
+        t += dt;
+    }
+
+    let finish: Vec<Option<f64>> = st.iter().map(|s| s.done).collect();
+    let makespan = finish
+        .iter()
+        .try_fold(0.0f64, |m, f| f.map(|f| m.max(f)));
+    FluidRun {
+        finish,
+        makespan,
+        progress: st.iter().map(|s| s.p).collect(),
+        steps,
+    }
+}
+
+fn charge_pool(src: &ResourceSource, rate: f64, pool_used: &mut [f64]) {
+    match src {
+        ResourceSource::PoolFraction { pool, .. } | ResourceSource::PoolResidual { pool } => {
+            pool_used[*pool] += rate;
+        }
+        ResourceSource::Fixed(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ProcessBuilder;
+    use crate::solver::SolverOpts;
+    use crate::workflow::engine::analyze_fixpoint;
+    use crate::workflow::graph::StartRule;
+    use crate::workflow::scenario::VideoScenario;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn fluid_matches_analytic_simple_chain() {
+        let mut wf = Workflow::new();
+        let dl = ProcessBuilder::new("dl", 100.0)
+            .stream_data("remote", 100.0)
+            .stream_resource("link", 100.0)
+            .identity_output("file")
+            .build();
+        let d = wf.add_node(
+            dl,
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let rev = ProcessBuilder::new("rev", 100.0)
+            .burst_data("in", 100.0)
+            .stream_resource("cpu", 20.0)
+            .identity_output("out")
+            .build();
+        wf.add_node(
+            rev,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let run = execute(&wf, &FluidOpts::default());
+        // analytic: 10 + 20 = 30
+        assert!(close(run.makespan.unwrap(), 30.0, 0.1), "{:?}", run.makespan);
+    }
+
+    /// The Fig 5 scenario at 50 % and 95 %: fluid execution ("measurement")
+    /// must match the analytic prediction closely.
+    #[test]
+    fn fluid_matches_prediction_video_scenario() {
+        for f in [0.5, 0.95] {
+            let sc = VideoScenario::default().with_fraction(f);
+            let (wf, _) = sc.build();
+            let predicted = analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap();
+            let measured = execute(
+                &wf,
+                &FluidOpts {
+                    dt: 0.05,
+                    ..FluidOpts::default()
+                },
+            )
+            .makespan
+            .unwrap();
+            assert!(
+                close(predicted, measured, 1.5),
+                "f={f}: predicted {predicted} vs fluid {measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn jitter_changes_but_stays_close() {
+        let sc = VideoScenario::default().with_fraction(0.5);
+        let (wf, _) = sc.build();
+        let base = execute(&wf, &FluidOpts { dt: 0.05, ..FluidOpts::default() })
+            .makespan
+            .unwrap();
+        let mut different = false;
+        for seed in 1..=3u64 {
+            let m = execute(
+                &wf,
+                &FluidOpts {
+                    dt: 0.05,
+                    jitter: Some((seed, 0.01)),
+                    ..FluidOpts::default()
+                },
+            )
+            .makespan
+            .unwrap();
+            if (m - base).abs() > 1e-6 {
+                different = true;
+            }
+            assert!((m - base).abs() < 0.05 * base, "seed {seed}: {m} vs {base}");
+        }
+        assert!(different, "jitter had no effect");
+    }
+
+    #[test]
+    fn unfinishable_gives_none() {
+        let mut wf = Workflow::new();
+        let p = ProcessBuilder::new("a", 10.0).stream_data("in", 10.0).build();
+        wf.add_node(
+            p,
+            vec![DataSource::External(PwPoly::constant(5.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let run = execute(
+            &wf,
+            &FluidOpts {
+                dt: 0.1,
+                horizon: 50.0,
+                ..FluidOpts::default()
+            },
+        );
+        assert_eq!(run.makespan, None);
+        assert!(close(run.progress[0], 5.0, 1e-6));
+    }
+}

@@ -1,0 +1,13 @@
+//! The virtual testbed: ground truth standing in for the paper's VM/ffmpeg
+//! evaluation rig (see DESIGN.md, environment substitutions).
+//!
+//! * [`fluid`] — generic byte-accurate fixed-timestep workflow executor
+//!   (independent of the analytic solver) with seeded jitter;
+//! * [`video`] — the concrete Fig 5 rig with task-internal structure
+//!   (task 1's read+decode stage) and the BPF-style I/O trace recorder
+//!   behind Fig 6.
+
+pub mod fluid;
+pub mod video;
+
+pub use fluid::{execute, FluidOpts, FluidRun};

@@ -1,0 +1,136 @@
+//! Hand-rolled micro-bench + property-test harnesses.
+//!
+//! The offline vendor set has neither `criterion` nor `proptest`, so the
+//! bench targets (`rust/benches/*.rs`, `harness = false`) and the
+//! property-style tests build on these. The bench harness does warmup,
+//! adaptive iteration-count selection and reports mean/p50/p95; the property
+//! harness drives seeded generators and reports the failing seed for
+//! reproduction.
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Summary};
+
+/// Result of a single benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per iteration
+    pub per_iter: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter  (p50 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_duration(self.per_iter.mean),
+            fmt_duration(self.per_iter.p50),
+            fmt_duration(self.per_iter.p95),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, choosing the iteration count so each sample lasts ≥ ~20 ms,
+/// collecting `samples` samples. Returns per-iteration timing stats.
+pub fn bench<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    // warmup + calibrate
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.02 || iters >= 1 << 22 {
+            break;
+        }
+        iters = (iters * 2).max((0.025 / dt.max(1e-9)) as usize);
+    }
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&per_iter),
+        iters,
+    }
+}
+
+/// Benchmark that runs `f` exactly once per sample (for expensive runs where
+/// adaptive batching is unwanted, e.g. whole-workflow DES at 100 GB).
+pub fn bench_once<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        per_iter.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&per_iter),
+        iters: 1,
+    }
+}
+
+/// Property-test driver: runs `prop(rng)` for `cases` seeded cases; on a
+/// panic-free failure (returning `Err(msg)`) it reports the seed and case.
+pub fn check_property(
+    name: &str,
+    cases: u64,
+    prop: impl Fn(&mut super::rng::Rng) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = super::rng::Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 3, || 1 + 1);
+        assert!(r.per_iter.mean > 0.0);
+        assert!(r.per_iter.mean < 1e-3);
+        assert!(r.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn bench_once_runs_each_sample() {
+        let mut count = 0;
+        let r = bench_once("once", 5, || count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn property_pass() {
+        check_property("always-true", 50, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn property_fail_reports_seed() {
+        check_property("always-false", 1, |_| Err("nope".into()));
+    }
+}

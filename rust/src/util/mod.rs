@@ -1,0 +1,11 @@
+//! Support utilities: seeded RNG, minimal JSON, stats/tables, and the
+//! hand-rolled bench + property-test harnesses (the offline vendor set has
+//! no criterion/proptest/serde).
+
+pub mod harness;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

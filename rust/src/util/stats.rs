@@ -1,0 +1,169 @@
+//! Small statistics + ASCII table helpers for benches, the testbed's
+//! multi-run aggregation (Fig 7's min/max bars) and report printing.
+
+/// Summary statistics of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            min: s[0],
+            max: s[n - 1],
+            std: var.sqrt(),
+            p50: percentile_sorted(&s, 0.50),
+            p95: percentile_sorted(&s, 0.95),
+        }
+    }
+}
+
+/// Percentile of an already-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Render rows as a boxed ASCII table. First row is the header.
+pub fn ascii_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let ncols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; ncols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let sep = {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('\n');
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for i in 0..ncols {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            let pad = widths[i] - cell.chars().count();
+            out.push(' ');
+            out.push_str(cell);
+            out.push_str(&" ".repeat(pad + 1));
+            out.push('|');
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push_str(&sep);
+            out.push('\n');
+        }
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    out
+}
+
+/// Format seconds human-readably for reports.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: &[&str] = &["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1000.0 && u + 1 < UNITS.len() {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 0.5), 5.0);
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 10.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = ascii_table(&[
+            vec!["a".into(), "long header".into()],
+            vec!["1".into(), "2".into()],
+        ]);
+        assert!(t.contains("| a |"));
+        assert!(t.contains("| long header |"));
+        // sep, header, sep, row, sep
+        assert_eq!(t.lines().count(), 5);
+    }
+
+    #[test]
+    fn duration_format() {
+        assert_eq!(fmt_duration(0.5e-9 * 100.0), "50.0 ns");
+        assert_eq!(fmt_duration(0.0205), "20.50 ms");
+        assert_eq!(fmt_duration(2.0), "2.00 s");
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(999.0), "999 B");
+        assert_eq!(fmt_bytes(1_137_486_559.0), "1.14 GB");
+    }
+}

@@ -1,0 +1,538 @@
+//! Workflow analysis: per-node BottleMod analyses chained through
+//! `O_m(P(t))` output functions and shared resource pools (paper §3.4, §5.2).
+//!
+//! Pool semantics mirror the paper's evaluation setup:
+//!
+//! * a `PoolFraction` user is rate-limited to `fraction · capacity` while
+//!   any other consumer of the pool is still running, and upgraded to the
+//!   full capacity once all others finished (the appendix's
+//!   `nft replace rule` releasing the bandwidth to the other task);
+//! * after a pool user is analyzed, its *actual* consumption
+//!   `P'(t)·R'(P(t))` is charged against the pool retrospectively
+//!   ("the consumed data rate is set for the process retrospectively",
+//!   §5.2), and `PoolResidual` users receive what is left.
+//!
+//! Because "once all others finished" can refer to nodes analyzed *later*
+//! in topological order, [`analyze_fixpoint`] iterates single passes with
+//! finish-time hints until the schedule stabilizes (2–3 passes in
+//! practice). [`analyze`] is a single pass with no hints — exactly the
+//! paper's §5.2 procedure, sufficient when prioritized consumers are
+//! analyzed first.
+
+use crate::model::process::ProcessInputs;
+use crate::pwfn::PwPoly;
+use crate::solver::{solve, Analysis, SolveError, SolverOpts};
+
+use super::graph::{DataSource, GraphError, ResourceSource, Workflow};
+
+/// Result of analyzing a whole workflow.
+#[derive(Clone, Debug)]
+pub struct WorkflowAnalysis {
+    /// Per-node analyses, indexed like `Workflow::nodes`.
+    pub analyses: Vec<Analysis>,
+    /// Materialized inputs each node was analyzed under (useful for the
+    /// §3.3 metrics, which need the `I` functions).
+    pub inputs: Vec<ProcessInputs>,
+    /// Wall-clock completion of the whole workflow (`None` if any node
+    /// never finishes).
+    pub makespan: Option<f64>,
+    /// Per-pool remaining capacity after all consumers were charged.
+    pub pool_residuals: Vec<PwPoly>,
+    /// Total solver events across all nodes (§6 cost accounting).
+    pub events: usize,
+    /// Fixpoint passes used (1 for plain [`analyze`]).
+    pub passes: usize,
+}
+
+/// Workflow-level failure.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum WorkflowError {
+    #[error(transparent)]
+    Graph(#[from] GraphError),
+    #[error("node {node} ('{name}'): {err}")]
+    Solve {
+        node: usize,
+        name: String,
+        err: SolveError,
+    },
+    #[error("node {node} depends on node {dep} which never finishes")]
+    DepNeverFinishes { node: usize, dep: usize },
+}
+
+/// Consumers of each pool (node ids), from the wiring.
+fn pool_consumers(wf: &Workflow) -> Vec<Vec<usize>> {
+    let mut out = vec![vec![]; wf.pools.len()];
+    for (i, n) in wf.nodes.iter().enumerate() {
+        for s in &n.resource_sources {
+            let pid = match s {
+                ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                ResourceSource::PoolResidual { pool } => Some(*pool),
+                ResourceSource::Fixed(_) => None,
+            };
+            if let Some(p) = pid {
+                if !out[p].contains(&i) {
+                    out[p].push(i);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One analysis pass. `finish_hints[i]` carries node `i`'s finish time from
+/// a previous pass (used for pool release when `i` hasn't been analyzed yet
+/// in this pass).
+fn analyze_pass(
+    wf: &Workflow,
+    opts: &SolverOpts,
+    finish_hints: &[Option<f64>],
+) -> Result<WorkflowAnalysis, WorkflowError> {
+    let order = wf.topo_order()?;
+    let n = wf.nodes.len();
+    let consumers = pool_consumers(wf);
+
+    let mut analyses: Vec<Option<Analysis>> = vec![None; n];
+    let mut inputs_used: Vec<Option<ProcessInputs>> = vec![None; n];
+    // per-pool charged demand functions of already-analyzed consumers
+    let mut pool_claims: Vec<Vec<(usize, PwPoly)>> = vec![vec![]; wf.pools.len()];
+    let mut events = 0usize;
+
+    for &i in &order {
+        let node = &wf.nodes[i];
+
+        // ---- start time: barrier predecessors must have finished --------
+        let mut start = node.start.at;
+        for &d in &node.start.after {
+            match analyses[d].as_ref().unwrap().finish_time {
+                Some(f) => start = start.max(f),
+                None => return Err(WorkflowError::DepNeverFinishes { node: i, dep: d }),
+            }
+        }
+
+        // ---- data inputs -------------------------------------------------
+        let data: Vec<PwPoly> = node
+            .data_sources
+            .iter()
+            .map(|s| match s {
+                DataSource::External(f) => f.clone(),
+                DataSource::ProcessOutput { node: d, output } => analyses[*d]
+                    .as_ref()
+                    .unwrap()
+                    .output_over_time(&wf.nodes[*d].process, *output),
+            })
+            .collect();
+
+        // finish time of all *other* consumers of a pool, best knowledge:
+        // current-pass analysis if available, else the hint from last pass
+        let others_end = |pool: usize| -> Option<f64> {
+            let mut end = 0.0f64;
+            for &c in &consumers[pool] {
+                if c == i {
+                    continue;
+                }
+                let f = match analyses[c].as_ref() {
+                    Some(a) => a.finish_time,
+                    None => finish_hints[c],
+                };
+                match f {
+                    Some(f) => end = end.max(f),
+                    None => return None, // unknown/never: no release
+                }
+            }
+            Some(end)
+        };
+
+        // ---- resource inputs ----------------------------------------------
+        let resources: Vec<PwPoly> = node
+            .resource_sources
+            .iter()
+            .map(|s| match s {
+                ResourceSource::Fixed(f) => f.clone(),
+                ResourceSource::PoolFraction { pool, fraction } => {
+                    let cap = &wf.pools[*pool].capacity;
+                    let frac_fn = cap.scale(*fraction);
+                    match others_end(*pool) {
+                        Some(end) if end > cap.x_min() && end.is_finite() => {
+                            // fraction until the others are done, then full
+                            concat(
+                                frac_fn.clip(cap.x_min(), end),
+                                cap.clip(end, f64::INFINITY),
+                            )
+                        }
+                        Some(_) => cap.clone(), // no other consumers at all
+                        None => frac_fn,
+                    }
+                }
+                ResourceSource::PoolResidual { pool } => {
+                    let mut rem = wf.pools[*pool].capacity.clone();
+                    for (_, demand) in &pool_claims[*pool] {
+                        rem = rem.sub(demand).max_with_zero();
+                    }
+                    rem.simplify()
+                }
+            })
+            .collect();
+
+        let inputs = ProcessInputs {
+            data,
+            resources,
+            start_time: start,
+        };
+        let analysis = solve(&node.process, &inputs, opts).map_err(|err| {
+            WorkflowError::Solve {
+                node: i,
+                name: node.process.name.clone(),
+                err,
+            }
+        })?;
+        events += analysis.events;
+
+        // charge pool consumption retrospectively
+        for (l, s) in node.resource_sources.iter().enumerate() {
+            let pid = match s {
+                ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                ResourceSource::PoolResidual { pool } => Some(*pool),
+                ResourceSource::Fixed(_) => None,
+            };
+            if let Some(pid) = pid {
+                let demand = analysis.resource_demand(&node.process, l).simplify();
+                pool_claims[pid].push((i, demand));
+            }
+        }
+
+        inputs_used[i] = Some(inputs);
+        analyses[i] = Some(analysis);
+    }
+
+    let mut makespan = Some(0.0f64);
+    for a in analyses.iter().flatten() {
+        makespan = match (makespan, a.finish_time) {
+            (Some(m), Some(f)) => Some(m.max(f)),
+            _ => None,
+        };
+    }
+
+    let pool_residuals = wf
+        .pools
+        .iter()
+        .enumerate()
+        .map(|(pid, pool)| {
+            let mut rem = pool.capacity.clone();
+            for (_, demand) in &pool_claims[pid] {
+                rem = rem.sub(demand).max_with_zero();
+            }
+            rem.simplify()
+        })
+        .collect();
+
+    Ok(WorkflowAnalysis {
+        analyses: analyses.into_iter().map(Option::unwrap).collect(),
+        inputs: inputs_used.into_iter().map(Option::unwrap).collect(),
+        makespan,
+        pool_residuals,
+        events,
+        passes: 1,
+    })
+}
+
+/// Single-pass analysis (the paper's §5.2 procedure).
+pub fn analyze(wf: &Workflow, opts: &SolverOpts) -> Result<WorkflowAnalysis, WorkflowError> {
+    wf.validate()?;
+    let hints = vec![None; wf.nodes.len()];
+    analyze_pass(wf, opts, &hints)
+}
+
+/// Fixpoint analysis: iterate passes, feeding each pass the previous pass's
+/// finish times as pool-release hints, until the schedule stabilizes.
+/// Needed when a pool consumer analyzed *earlier* in topological order is
+/// released by one analyzed *later* (e.g. Fig 7 with small fractions, where
+/// task 2's download finishes first and task 1's download inherits the full
+/// link).
+pub fn analyze_fixpoint(
+    wf: &Workflow,
+    opts: &SolverOpts,
+    max_passes: usize,
+) -> Result<WorkflowAnalysis, WorkflowError> {
+    wf.validate()?;
+    let n = wf.nodes.len();
+    let mut hints: Vec<Option<f64>> = vec![None; n];
+    let mut last: Option<WorkflowAnalysis> = None;
+    let mut total_events = 0usize;
+    for pass in 0..max_passes.max(1) {
+        let wa = analyze_pass(wf, opts, &hints)?;
+        total_events += wa.events;
+        let new_hints: Vec<Option<f64>> =
+            wa.analyses.iter().map(|a| a.finish_time).collect();
+        let stable = new_hints
+            .iter()
+            .zip(hints.iter())
+            .all(|(a, b)| match (a, b) {
+                (Some(x), Some(y)) => (x - y).abs() < 1e-6 * (1.0 + x.abs()),
+                (None, None) => true,
+                _ => false,
+            });
+        hints = new_hints;
+        let mut done = wa;
+        done.passes = pass + 1;
+        done.events = total_events;
+        last = Some(done);
+        if stable {
+            break;
+        }
+    }
+    Ok(last.unwrap())
+}
+
+/// Concatenate two piecewise functions with adjacent domains.
+fn concat(a: PwPoly, b: PwPoly) -> PwPoly {
+    let mut breaks = a.breaks.clone();
+    breaks.pop();
+    let mut polys = a.polys.clone();
+    breaks.extend_from_slice(&b.breaks);
+    polys.extend_from_slice(&b.polys);
+    PwPoly::new(breaks, polys)
+}
+
+impl WorkflowAnalysis {
+    /// Per-node `(name, start, finish)` report rows.
+    pub fn schedule(&self, wf: &Workflow) -> Vec<(String, f64, Option<f64>)> {
+        wf.nodes
+            .iter()
+            .zip(self.analyses.iter())
+            .map(|(n, a)| (n.process.name.clone(), a.start_time, a.finish_time))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ProcessBuilder;
+    use crate::workflow::graph::StartRule;
+    use crate::model::process::Process;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-6 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn dl_proc(name: &str, size: f64) -> Process {
+        ProcessBuilder::new(name, size)
+            .stream_data("remote", size)
+            .stream_resource("link", size)
+            .identity_output("file")
+            .build()
+    }
+
+    /// download -> stream task pipeline: the two overlap (pipelined).
+    #[test]
+    fn pipelined_chain() {
+        let mut wf = Workflow::new();
+        let d = wf.add_node(
+            dl_proc("dl", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let task = ProcessBuilder::new("rot", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", 1.0)
+            .identity_output("out")
+            .build();
+        let t = wf.add_node(
+            task,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let wa = analyze(&wf, &SolverOpts::default()).unwrap();
+        assert!(close(wa.analyses[d].finish_time.unwrap(), 10.0));
+        // pipelined: consumer tracks the download, finishing at ~10 too
+        assert!(close(wa.analyses[t].finish_time.unwrap(), 10.0));
+        assert!(close(wa.makespan.unwrap(), 10.0));
+    }
+
+    /// burst consumer cannot overlap: starts processing only when its input
+    /// is complete.
+    #[test]
+    fn burst_chain_serializes() {
+        let mut wf = Workflow::new();
+        let d = wf.add_node(
+            dl_proc("dl", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let rev = ProcessBuilder::new("rev", 100.0)
+            .burst_data("in", 100.0)
+            .stream_resource("cpu", 20.0)
+            .identity_output("out")
+            .build();
+        let t = wf.add_node(
+            rev,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let wa = analyze(&wf, &SolverOpts::default()).unwrap();
+        // download done at 10, then 20 cpu-s at 1/s
+        assert!(close(wa.analyses[t].finish_time.unwrap(), 30.0));
+    }
+
+    /// barrier start (paper's task 3).
+    #[test]
+    fn barrier_start() {
+        let mut wf = Workflow::new();
+        let a = ProcessBuilder::new("a", 10.0)
+            .stream_resource("cpu", 10.0)
+            .identity_output("out")
+            .build();
+        let na = wf.add_node(
+            a,
+            vec![],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let b = ProcessBuilder::new("b", 10.0)
+            .stream_data("in", 10.0)
+            .stream_resource("cpu", 5.0)
+            .build();
+        let nb = wf.add_node(
+            b,
+            vec![DataSource::ProcessOutput { node: na, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule {
+                at: 0.0,
+                after: vec![na],
+            },
+        );
+        let wa = analyze(&wf, &SolverOpts::default()).unwrap();
+        assert!(close(wa.analyses[na].finish_time.unwrap(), 10.0));
+        assert!(close(wa.analyses[nb].start_time, 10.0));
+        assert!(close(wa.analyses[nb].finish_time.unwrap(), 15.0));
+    }
+
+    /// two downloads share a link pool: fraction + residual, with release.
+    #[test]
+    fn shared_pool_fraction_and_residual() {
+        let mut wf = Workflow::new();
+        let pool = wf.add_pool("link", PwPoly::constant(10.0));
+        // dl1: 50 B at 50% of 10 B/s = 5 B/s -> done at 10
+        let d1 = wf.add_node(
+            dl_proc("dl1", 50.0),
+            vec![DataSource::External(PwPoly::constant(50.0))],
+            vec![ResourceSource::PoolFraction {
+                pool,
+                fraction: 0.5,
+            }],
+            StartRule::default(),
+        );
+        // dl2: 100 B, residual = 10 - consumption(dl1) = 5 until t=10, then 10
+        let d2 = wf.add_node(
+            dl_proc("dl2", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::PoolResidual { pool }],
+            StartRule::default(),
+        );
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 5).unwrap();
+        assert!(close(wa.analyses[d1].finish_time.unwrap(), 10.0));
+        // dl2: 5 B/s for 10 s = 50 B, remaining 50 B at 10 B/s -> t=15
+        assert!(
+            close(wa.analyses[d2].finish_time.unwrap(), 15.0),
+            "{:?}",
+            wa.analyses[d2].finish_time
+        );
+        assert!(close(wa.makespan.unwrap(), 15.0));
+    }
+
+    /// the *reverse* release: the fraction user's peer finishes first, so
+    /// the fraction user is upgraded — requires the fixpoint.
+    #[test]
+    fn fixpoint_releases_fraction_user() {
+        let mut wf = Workflow::new();
+        let pool = wf.add_pool("link", PwPoly::constant(10.0));
+        // d1: big download at a tiny fraction
+        let d1 = wf.add_node(
+            dl_proc("dl1", 200.0),
+            vec![DataSource::External(PwPoly::constant(200.0))],
+            vec![ResourceSource::PoolFraction {
+                pool,
+                fraction: 0.2,
+            }],
+            StartRule::default(),
+        );
+        // d2: small download on the residual (8 B/s) -> finishes at 12.5...
+        let d2 = wf.add_node(
+            dl_proc("dl2", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::PoolResidual { pool }],
+            StartRule::default(),
+        );
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        let f2 = wa.analyses[d2].finish_time.unwrap();
+        let f1 = wa.analyses[d1].finish_time.unwrap();
+        // d2 runs at 8 B/s -> 12.5 s. d1: 2 B/s for 12.5 s = 25 B, then
+        // 10 B/s for the remaining 175 B -> 12.5 + 17.5 = 30 s.
+        assert!(close(f2, 12.5), "{f2}");
+        assert!(close(f1, 30.0), "{f1}");
+        assert!(wa.passes > 1);
+
+        // single-pass (paper procedure) would NOT release d1:
+        let single = analyze(&wf, &SolverOpts::default()).unwrap();
+        assert!(close(single.analyses[d1].finish_time.unwrap(), 100.0));
+    }
+
+    /// unfinishable node propagates None makespan.
+    #[test]
+    fn makespan_none_when_stuck() {
+        let mut wf = Workflow::new();
+        let p = ProcessBuilder::new("a", 10.0).stream_data("in", 10.0).build();
+        wf.add_node(
+            p,
+            vec![DataSource::External(PwPoly::constant(5.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let wa = analyze(&wf, &SolverOpts::default()).unwrap();
+        assert_eq!(wa.makespan, None);
+    }
+
+    /// diamond DAG: two parallel branches joined by a two-input process.
+    #[test]
+    fn diamond_join() {
+        let mut wf = Workflow::new();
+        let src = |name: &str, rate: f64| {
+            (
+                dl_proc(name, 100.0),
+                vec![DataSource::External(PwPoly::constant(100.0))],
+                vec![ResourceSource::Fixed(PwPoly::constant(rate))],
+            )
+        };
+        let (p1, d1, r1) = src("a", 10.0);
+        let a = wf.add_node(p1, d1, r1, StartRule::default());
+        let (p2, d2, r2) = src("b", 5.0);
+        let b = wf.add_node(p2, d2, r2, StartRule::default());
+        let join = ProcessBuilder::new("join", 200.0)
+            .custom_data("ina", &[(0.0, 0.0), (100.0, 200.0)])
+            .custom_data("inb", &[(0.0, 0.0), (100.0, 200.0)])
+            .stream_resource("cpu", 2.0)
+            .identity_output("out")
+            .build();
+        let j = wf.add_node(
+            join,
+            vec![
+                DataSource::ProcessOutput { node: a, output: 0 },
+                DataSource::ProcessOutput { node: b, output: 0 },
+            ],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule {
+                at: 0.0,
+                after: vec![a, b],
+            },
+        );
+        let wa = analyze(&wf, &SolverOpts::default()).unwrap();
+        // a done at 10, b at 20; join starts at 20, all data ready,
+        // cpu: 2 cpu-s at 1/s -> 22
+        assert!(close(wa.analyses[j].start_time, 20.0));
+        assert!(close(wa.analyses[j].finish_time.unwrap(), 22.0));
+    }
+}

@@ -1,0 +1,338 @@
+//! Workflow DAG structure (paper §3.4).
+//!
+//! A workflow is a set of processes whose data inputs are wired either to
+//! external input functions or to the *output-over-time* functions
+//! `O_m(P(t))` of predecessor processes, and whose resources come from fixed
+//! allocations or shared pools. Start rules express barrier edges ("task 3
+//! is started after both task 1 and 2 are completed", §5.1).
+
+use crate::model::process::Process;
+use crate::pwfn::PwPoly;
+
+/// Where a process's data input `k` comes from.
+#[derive(Clone, Debug)]
+pub enum DataSource {
+    /// An exogenous cumulative input function `I_Dk(t)`.
+    External(PwPoly),
+    /// The output-over-time function `O_m(P(t))` of another node — the
+    /// paper's chaining mechanism.
+    ProcessOutput { node: usize, output: usize },
+}
+
+/// Where a process's resource input `l` comes from.
+#[derive(Clone, Debug)]
+pub enum ResourceSource {
+    /// A fixed allocation function `I_Rl(t)`.
+    Fixed(PwPoly),
+    /// A static fraction of a shared pool's capacity.
+    PoolFraction { pool: usize, fraction: f64 },
+    /// Whatever the pool has left after all *previously analyzed* users'
+    /// actual consumption is subtracted (the paper's §5.2 retrospective
+    /// reassignment: task 2's download gets "the difference between the
+    /// known maximum data rate and the data rate of task 1's download").
+    PoolResidual { pool: usize },
+}
+
+/// When a node may begin.
+#[derive(Clone, Debug, Default)]
+pub struct StartRule {
+    /// Earliest wall-clock start.
+    pub at: f64,
+    /// Barrier predecessors: start only after all of these finished.
+    pub after: Vec<usize>,
+}
+
+/// One workflow node: a process plus its input wiring.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub process: Process,
+    pub data_sources: Vec<DataSource>,
+    pub resource_sources: Vec<ResourceSource>,
+    pub start: StartRule,
+}
+
+/// A shared resource pool (e.g. the 100 Mbit/s link of Fig 5).
+#[derive(Clone, Debug)]
+pub struct Pool {
+    pub name: String,
+    /// Capacity as a rate function of time.
+    pub capacity: PwPoly,
+}
+
+/// The workflow DAG.
+#[derive(Clone, Debug, Default)]
+pub struct Workflow {
+    pub nodes: Vec<Node>,
+    pub pools: Vec<Pool>,
+}
+
+/// Graph-structure error.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum GraphError {
+    #[error("workflow has a dependency cycle involving node {0}")]
+    Cycle(usize),
+    #[error("node {node} references missing {what} {index}")]
+    BadRef {
+        node: usize,
+        what: &'static str,
+        index: usize,
+    },
+    #[error("node {node}: {msg}")]
+    BadNode { node: usize, msg: String },
+}
+
+impl Workflow {
+    pub fn new() -> Self {
+        Workflow::default()
+    }
+
+    /// Register a shared pool, returning its id.
+    pub fn add_pool(&mut self, name: &str, capacity: PwPoly) -> usize {
+        self.pools.push(Pool {
+            name: name.to_string(),
+            capacity,
+        });
+        self.pools.len() - 1
+    }
+
+    /// Add a node, returning its id.
+    pub fn add_node(
+        &mut self,
+        process: Process,
+        data_sources: Vec<DataSource>,
+        resource_sources: Vec<ResourceSource>,
+        start: StartRule,
+    ) -> usize {
+        self.nodes.push(Node {
+            process,
+            data_sources,
+            resource_sources,
+            start,
+        });
+        self.nodes.len() - 1
+    }
+
+    /// All hard dependencies of node `i` (data-producing predecessors and
+    /// barrier predecessors).
+    pub fn deps(&self, i: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self.nodes[i]
+            .data_sources
+            .iter()
+            .filter_map(|s| match s {
+                DataSource::ProcessOutput { node, .. } => Some(*node),
+                _ => None,
+            })
+            .collect();
+        out.extend(&self.nodes[i].start.after);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Validate wiring: arities match, references are in range.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.data_sources.len() != n.process.data_reqs.len() {
+                return Err(GraphError::BadNode {
+                    node: i,
+                    msg: format!(
+                        "{} data sources for {} data requirements",
+                        n.data_sources.len(),
+                        n.process.data_reqs.len()
+                    ),
+                });
+            }
+            if n.resource_sources.len() != n.process.res_reqs.len() {
+                return Err(GraphError::BadNode {
+                    node: i,
+                    msg: format!(
+                        "{} resource sources for {} resource requirements",
+                        n.resource_sources.len(),
+                        n.process.res_reqs.len()
+                    ),
+                });
+            }
+            for s in &n.data_sources {
+                if let DataSource::ProcessOutput { node, output } = s {
+                    if *node >= self.nodes.len() {
+                        return Err(GraphError::BadRef {
+                            node: i,
+                            what: "node",
+                            index: *node,
+                        });
+                    }
+                    if *output >= self.nodes[*node].process.outputs.len() {
+                        return Err(GraphError::BadRef {
+                            node: i,
+                            what: "output",
+                            index: *output,
+                        });
+                    }
+                }
+            }
+            for s in &n.resource_sources {
+                let pool = match s {
+                    ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                    ResourceSource::PoolResidual { pool } => Some(*pool),
+                    ResourceSource::Fixed(_) => None,
+                };
+                if let Some(p) = pool {
+                    if p >= self.pools.len() {
+                        return Err(GraphError::BadRef {
+                            node: i,
+                            what: "pool",
+                            index: p,
+                        });
+                    }
+                }
+            }
+            for &a in &n.start.after {
+                if a >= self.nodes.len() {
+                    return Err(GraphError::BadRef {
+                        node: i,
+                        what: "node",
+                        index: a,
+                    });
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Topological order (Kahn); `Err` on cycles. Ties resolve in node-id
+    /// order, which keeps pool residual-assignment deterministic.
+    pub fn topo_order(&self) -> Result<Vec<usize>, GraphError> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![vec![]; n];
+        for i in 0..n {
+            for d in self.deps(i) {
+                indeg[i] += 1;
+                succ[d].push(i);
+            }
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(&i) = ready.first() {
+            // pop the smallest id (ready is kept sorted)
+            ready.remove(0);
+            order.push(i);
+            for &s in &succ[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    let pos = ready.binary_search(&s).unwrap_or_else(|e| e);
+                    ready.insert(pos, s);
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap();
+            return Err(GraphError::Cycle(stuck));
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ProcessBuilder;
+
+    fn simple_proc(name: &str) -> Process {
+        ProcessBuilder::new(name, 10.0)
+            .stream_data("in", 10.0)
+            .identity_output("out")
+            .build()
+    }
+
+    #[test]
+    fn topo_order_chain() {
+        let mut wf = Workflow::new();
+        let a = wf.add_node(
+            simple_proc("a"),
+            vec![DataSource::External(PwPoly::constant(10.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let b = wf.add_node(
+            simple_proc("b"),
+            vec![DataSource::ProcessOutput { node: a, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        let c = wf.add_node(
+            simple_proc("c"),
+            vec![DataSource::ProcessOutput { node: b, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        assert_eq!(wf.topo_order().unwrap(), vec![a, b, c]);
+        assert!(wf.validate().is_ok());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut wf = Workflow::new();
+        wf.add_node(
+            simple_proc("a"),
+            vec![DataSource::ProcessOutput { node: 1, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        wf.add_node(
+            simple_proc("b"),
+            vec![DataSource::ProcessOutput { node: 0, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        assert!(matches!(wf.validate(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn barrier_edges_are_deps() {
+        let mut wf = Workflow::new();
+        let a = wf.add_node(
+            simple_proc("a"),
+            vec![DataSource::External(PwPoly::constant(10.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let b = wf.add_node(
+            simple_proc("b"),
+            vec![DataSource::External(PwPoly::constant(10.0))],
+            vec![],
+            StartRule {
+                at: 0.0,
+                after: vec![a],
+            },
+        );
+        assert_eq!(wf.deps(b), vec![a]);
+        assert_eq!(wf.topo_order().unwrap(), vec![a, b]);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let mut wf = Workflow::new();
+        wf.add_node(simple_proc("a"), vec![], vec![], StartRule::default());
+        assert!(matches!(
+            wf.validate(),
+            Err(GraphError::BadNode { node: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn bad_pool_ref_rejected() {
+        let mut wf = Workflow::new();
+        let p = ProcessBuilder::new("a", 10.0).stream_resource("net", 10.0).build();
+        wf.add_node(
+            p,
+            vec![],
+            vec![ResourceSource::PoolFraction {
+                pool: 3,
+                fraction: 0.5,
+            }],
+            StartRule::default(),
+        );
+        assert!(matches!(wf.validate(), Err(GraphError::BadRef { .. })));
+    }
+}

@@ -1,0 +1,10 @@
+//! Workflows: DAGs of processes with chained outputs and shared resource
+//! pools (paper §3.4), plus the Fig 5 evaluation scenario.
+
+pub mod engine;
+pub mod generator;
+pub mod graph;
+pub mod scenario;
+
+pub use engine::{analyze, analyze_fixpoint, WorkflowAnalysis, WorkflowError};
+pub use graph::{DataSource, GraphError, Node, Pool, ResourceSource, StartRule, Workflow};

@@ -1,0 +1,294 @@
+//! The paper's evaluation workflow (Fig 5) as a BottleMod model (§5.2).
+//!
+//! Five processes: two downloads sharing the 100 Mbit/s link, the three
+//! ffmpeg tasks (reverse / rotate / mux). All constants are the paper's
+//! published measurements:
+//!
+//! * input video: 1,137,486,559 bytes; a full-rate direct download takes
+//!   89 s ⇒ net link rate ≈ 97.51 Mibit/s ≈ 12.78 MB/s;
+//! * task 1 (reverse): burst data requirement (all input before any
+//!   output), 80 MB output, 82 s of encode CPU spread over the output
+//!   (the 26 s of read+decode overlap the much slower download and are
+//!   charged in the virtual testbed, not the model — see DESIGN.md);
+//! * task 2 (rotate): stream task, 1.1 GB copied output, 5 s local
+//!   execution time spread over progress (never binding behind a download);
+//! * task 3 (mux): starts after tasks 1 and 2 complete (barrier), 3 s.
+//!
+//! Progress metric: output bytes, with identity output functions — exactly
+//! the paper's choice.
+
+use crate::model::{Process, ProcessBuilder};
+use crate::pwfn::PwPoly;
+use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+
+/// Paper's measured constants (all sizes in bytes, times in seconds).
+#[derive(Clone, Debug)]
+pub struct VideoScenario {
+    /// Input video size (1,137,486,559 B).
+    pub input_size: f64,
+    /// Task 1 output size (80 MB).
+    pub t1_output: f64,
+    /// Net shared-link rate in bytes/s (input_size / 89 s ≈ 12.78 MB/s).
+    pub link_rate: f64,
+    /// Task 1 encode CPU seconds (82 s).
+    pub t1_cpu: f64,
+    /// Task 1 read+decode CPU seconds (26 s; testbed only).
+    pub t1_decode_cpu: f64,
+    /// Task 2 local execution seconds (5 s).
+    pub t2_time: f64,
+    /// Task 3 local execution seconds (3 s).
+    pub t3_time: f64,
+    /// Fraction of the link initially assigned to task 1's download.
+    pub frac_task1: f64,
+}
+
+impl Default for VideoScenario {
+    fn default() -> Self {
+        let input_size = 1_137_486_559.0;
+        VideoScenario {
+            input_size,
+            t1_output: 80e6,
+            link_rate: input_size / 89.0,
+            t1_cpu: 82.0,
+            t1_decode_cpu: 26.0,
+            t2_time: 5.0,
+            t3_time: 3.0,
+            frac_task1: 0.5,
+        }
+    }
+}
+
+/// Node ids of the built workflow.
+#[derive(Clone, Copy, Debug)]
+pub struct VideoNodes {
+    pub dl1: usize,
+    pub dl2: usize,
+    pub task1: usize,
+    pub task2: usize,
+    pub task3: usize,
+    pub link_pool: usize,
+}
+
+impl VideoScenario {
+    /// Scale the scenario to a different input size (the §6 performance
+    /// comparison sweeps this; BottleMod's analysis cost must stay flat).
+    pub fn with_input_size(mut self, bytes: f64) -> Self {
+        let scale = bytes / self.input_size;
+        self.input_size = bytes;
+        self.t1_output *= scale;
+        // keep the *link rate* fixed (same testbed), so durations scale
+        self.t1_cpu *= scale;
+        self.t2_time *= scale;
+        self.t3_time *= scale;
+        self
+    }
+
+    pub fn with_fraction(mut self, f: f64) -> Self {
+        self.frac_task1 = f;
+        self
+    }
+
+    /// A download is a process whose single resource is the link data rate:
+    /// one byte of link capacity per byte of output (paper §5.2).
+    fn download(&self, name: &str) -> Process {
+        ProcessBuilder::new(name, self.input_size)
+            .stream_data("remote-file", self.input_size)
+            .stream_resource("link", self.input_size)
+            .identity_output("file")
+            .build()
+    }
+
+    /// Build the Fig 5 workflow.
+    pub fn build(&self) -> (Workflow, VideoNodes) {
+        let mut wf = Workflow::new();
+        let link_pool = wf.add_pool("link", PwPoly::constant(self.link_rate));
+
+        // the remote file is fully available on the webserver from t=0
+        let remote = DataSource::External(PwPoly::constant(self.input_size));
+
+        let dl1 = wf.add_node(
+            self.download("dl-task1"),
+            vec![remote.clone()],
+            vec![ResourceSource::PoolFraction {
+                pool: link_pool,
+                fraction: self.frac_task1,
+            }],
+            StartRule::default(),
+        );
+        let dl2 = wf.add_node(
+            self.download("dl-task2"),
+            vec![remote],
+            vec![ResourceSource::PoolResidual { pool: link_pool }],
+            StartRule::default(),
+        );
+
+        // task 1: reverse — burst input, encode CPU spread over output
+        let t1 = ProcessBuilder::new("task1-reverse", self.t1_output)
+            .burst_data("video", self.input_size)
+            .stream_resource("cpu", self.t1_cpu)
+            .identity_output("reversed")
+            .build();
+        let task1 = wf.add_node(
+            t1,
+            vec![DataSource::ProcessOutput {
+                node: dl1,
+                output: 0,
+            }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+
+        // task 2: rotate — pure stream, local execution time spread evenly
+        let t2 = ProcessBuilder::new("task2-rotate", self.input_size)
+            .stream_data("video", self.input_size)
+            .stream_resource("io", self.t2_time)
+            .identity_output("rotated")
+            .build();
+        let task2 = wf.add_node(
+            t2,
+            vec![DataSource::ProcessOutput {
+                node: dl2,
+                output: 0,
+            }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+
+        // task 3: mux — starts after both complete (paper §5.1)
+        let t3_out = self.t1_output + self.input_size;
+        let t3 = ProcessBuilder::new("task3-mux", t3_out)
+            .custom_data("reversed", &[(0.0, 0.0), (self.t1_output, t3_out)])
+            .custom_data("rotated", &[(0.0, 0.0), (self.input_size, t3_out)])
+            .stream_resource("io", self.t3_time)
+            .identity_output("result")
+            .build();
+        let task3 = wf.add_node(
+            t3,
+            vec![
+                DataSource::ProcessOutput {
+                    node: task1,
+                    output: 0,
+                },
+                DataSource::ProcessOutput {
+                    node: task2,
+                    output: 0,
+                },
+            ],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule {
+                at: 0.0,
+                after: vec![task1, task2],
+            },
+        );
+
+        (
+            wf,
+            VideoNodes {
+                dl1,
+                dl2,
+                task1,
+                task2,
+                task3,
+                link_pool,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolverOpts;
+    use crate::workflow::engine::analyze_fixpoint;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    /// 50:50 split: both downloads finish together at 2·89 = 178 s, task 1
+    /// encodes for 82 s afterwards, task 3 adds 3 s ⇒ ≈ 263 s.
+    #[test]
+    fn fifty_fifty_prediction() {
+        let sc = VideoScenario::default().with_fraction(0.5);
+        let (wf, nodes) = sc.build();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        let dl1 = wa.analyses[nodes.dl1].finish_time.unwrap();
+        let t_total = wa.makespan.unwrap();
+        assert!(close(dl1, 178.0, 1.0), "dl1 {dl1}");
+        assert!(close(t_total, 263.0, 2.0), "total {t_total}");
+    }
+
+    /// 95 % split: dl1 at ~93.7 s, task 1 done ≈ 175.7, but task 2's
+    /// download (with release) finishes at 2·89 = 178 ⇒ total ≈ 181.
+    #[test]
+    fn ninety_five_prediction() {
+        let sc = VideoScenario::default().with_fraction(0.95);
+        let (wf, nodes) = sc.build();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        let dl1 = wa.analyses[nodes.dl1].finish_time.unwrap();
+        let dl2 = wa.analyses[nodes.dl2].finish_time.unwrap();
+        let total = wa.makespan.unwrap();
+        assert!(close(dl1, 89.0 / 0.95, 1.0), "dl1 {dl1}");
+        assert!(close(dl2, 178.0, 1.5), "dl2 {dl2}");
+        assert!(close(total, 181.3, 2.5), "total {total}");
+    }
+
+    /// The headline: ≥93 % allocation is ≈ 32 % faster than 50:50.
+    #[test]
+    fn paper_headline_32_percent() {
+        let mk = |f: f64| {
+            let (wf, _) = VideoScenario::default().with_fraction(f).build();
+            analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap()
+        };
+        let t50 = mk(0.50);
+        let t93 = mk(0.93);
+        let gain = 1.0 - t93 / t50;
+        assert!(
+            (0.28..0.36).contains(&gain),
+            "expected ≈32% gain, got {:.1}% (t50={t50:.1}, t93={t93:.1})",
+            gain * 100.0
+        );
+    }
+
+    /// Low fractions: with bidirectional release both downloads still end
+    /// at 178 s, so the total plateaus at the 50:50 value.
+    #[test]
+    fn low_fraction_plateau() {
+        let mk = |f: f64| {
+            let (wf, _) = VideoScenario::default().with_fraction(f).build();
+            analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap()
+        };
+        let t10 = mk(0.10);
+        let t30 = mk(0.30);
+        let t50 = mk(0.50);
+        assert!(close(t10, t50, 3.0), "t10 {t10} vs t50 {t50}");
+        assert!(close(t30, t50, 3.0), "t30 {t30} vs t50 {t50}");
+    }
+
+    /// Input-size scaling: analysis cost (events) must NOT grow with bytes
+    /// — the §6 claim.
+    #[test]
+    fn events_flat_in_input_size() {
+        let ev = |size: f64| {
+            let (wf, _) = VideoScenario::default()
+                .with_input_size(size)
+                .with_fraction(0.5)
+                .build();
+            analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .events
+        };
+        let e1 = ev(1.1e9);
+        let e100 = ev(100e9);
+        assert!(
+            e100 <= e1 + 4,
+            "events grew with input size: {e1} -> {e100}"
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration tests over the PJRT runtime: the Rust exact engine, the
+//! numpy-free Rust grid solver and the AOT-compiled JAX/Pallas artifacts
+//! must agree. These tests skip (with a notice) when `artifacts/` has not
+//! been built — run `make artifacts` first.
+
+use bottlemod::model::{ProcessBuilder, ProcessInputs};
+use bottlemod::pwfn::PwPoly;
+use bottlemod::runtime::sweep::{B, K, L, S2, T};
+use bottlemod::runtime::Runtime;
+use bottlemod::solver::{solve, SolverOpts};
+
+const BIG: f32 = 1e30;
+
+fn runtime() -> Option<Runtime> {
+    if !Runtime::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&Runtime::default_dir()).expect("runtime"))
+}
+
+/// The L2 grid-solver artifact reproduces the exact solver on a scenario
+/// with a mid-flight allocation change (I_R piece boundary).
+#[test]
+fn grid_solve_artifact_matches_exact_solver() {
+    let Some(mut rt) = runtime() else { return };
+    let name = format!("grid_solve_pd_b{B}_k{K}_l{L}_s{S2}_t{T}");
+
+    // rust exact: 100 progress, R'=1, allocation 1 until t=20 then 4
+    let proc = ProcessBuilder::new("t", 100.0)
+        .stream_resource("cpu", 100.0)
+        .build();
+    let inputs = ProcessInputs {
+        data: vec![],
+        resources: vec![PwPoly::step(0.0, 20.0, 1.0, 4.0)],
+        start_time: 0.0,
+    };
+    let exact = solve(&proc, &inputs, &SolverOpts::default()).unwrap();
+    let exact_finish = exact.finish_time.unwrap(); // 40.0
+
+    // artifact inputs, batch-0 carries the case; the rest idle
+    let span = 120.0f64;
+    let ts: Vec<f32> = (0..T).map(|i| (i as f64 * span / T as f64) as f32).collect();
+    let pd = vec![BIG; B * K * T]
+        .iter()
+        .enumerate()
+        .map(|(i, _)| if i / (K * T) == 0 { 100.0 } else { BIG })
+        .collect::<Vec<f32>>();
+    let mut rbreaks = vec![BIG; B * L * (S2 + 1)];
+    let mut rslopes = vec![0f32; B * L * S2];
+    rbreaks[0] = 0.0;
+    rslopes[0] = 1.0;
+    let mut rin = vec![0f32; B * L * T];
+    for (t_idx, tv) in ts.iter().enumerate() {
+        rin[t_idx] = if *tv < 20.0 { 1.0 } else { 4.0 };
+    }
+    let mut target = vec![BIG; B];
+    target[0] = 100.0;
+
+    let out = rt
+        .execute_f32(
+            &name,
+            &[
+                (&pd, &[B, K, T]),
+                (&rbreaks, &[B, L, S2 + 1]),
+                (&rslopes, &[B, L, S2]),
+                (&rin, &[B, L, T]),
+                (&ts, &[T]),
+                (&target, &[B]),
+            ],
+        )
+        .unwrap();
+    let makespan = out[1][0] as f64;
+    let dt = span / T as f64;
+    assert!(
+        (makespan - exact_finish).abs() <= 3.0 * dt,
+        "artifact {makespan} vs exact {exact_finish}"
+    );
+    // progress at t=20 should be ~20
+    let i20 = ts.iter().position(|&t| t >= 20.0).unwrap();
+    let p20 = out[0][i20] as f64;
+    assert!((p20 - 20.0).abs() < 1.0, "{p20}");
+}
+
+/// The Pallas kernel artifact agrees with the Rust pwfn engine on a batch
+/// of randomly generated piecewise quadratics.
+#[test]
+fn eval_pw_artifact_matches_pwfn_on_random_batch() {
+    let Some(mut rt) = runtime() else { return };
+    let name = "eval_pw_b64_s16_d4_t1024";
+    let info = rt.info(name).expect("artifact").clone();
+    let (b, s1) = (info.inputs[0][0], info.inputs[0][1]);
+    let s = s1 - 1;
+    let d = info.inputs[1][2];
+    let t = info.inputs[2][0];
+
+    let mut rng = bottlemod::util::Rng::new(2024);
+    let mut breaks = vec![BIG as f32; b * s1];
+    let mut coeffs = vec![0f32; b * s * d];
+    let mut rust_fns = vec![];
+    for i in 0..b {
+        let pieces = 1 + rng.below(4);
+        let mut bks = vec![0.0f64];
+        for j in 0..pieces - 1 {
+            bks.push(bks[j] + rng.range(3.0, 20.0));
+        }
+        bks.push(f64::INFINITY);
+        let mut polys = vec![];
+        for j in 0..pieces {
+            let c: Vec<f64> = (0..3).map(|_| rng.range(-2.0, 2.0)).collect();
+            polys.push(bottlemod::pwfn::Poly::new(c.clone()));
+            for (deg, cv) in c.iter().enumerate() {
+                coeffs[(i * s + j) * d + deg] = *cv as f32;
+            }
+            breaks[i * s1 + j] = bks[j] as f32;
+        }
+        breaks[i * s1 + pieces] = BIG;
+        rust_fns.push(PwPoly::new(bks, polys));
+    }
+    let ts: Vec<f32> = (0..t).map(|i| i as f32 * 0.07).collect();
+    let out = rt
+        .execute_f32(
+            name,
+            &[
+                (&breaks, &info.inputs[0]),
+                (&coeffs, &info.inputs[1]),
+                (&ts, &info.inputs[2]),
+            ],
+        )
+        .unwrap();
+    for i in (0..b).step_by(7) {
+        for ti in (0..t).step_by(131) {
+            let want = rust_fns[i].eval(ts[ti] as f64);
+            let got = out[0][i * t + ti] as f64;
+            assert!(
+                (want - got).abs() < 1e-3 * (1.0 + want.abs()),
+                "fn {i} t={}: rust {want} vs artifact {got}",
+                ts[ti]
+            );
+        }
+    }
+}
+
+/// The full batched Fig 7 path against the threaded exact sweep, end to end.
+#[test]
+fn batched_and_exact_sweeps_agree_densely() {
+    let Some(mut rt) = runtime() else { return };
+    use bottlemod::coordinator::sweeper::{exact_sweep, fig7_fractions};
+    use bottlemod::workflow::scenario::VideoScenario;
+    let sc = VideoScenario::default();
+    let fractions = fig7_fractions(60);
+    let exact = exact_sweep(&sc, &fractions, 4);
+    let batched = bottlemod::runtime::fig7_sweep(&mut rt, &sc, &fractions).unwrap();
+    let mut worst = 0.0f64;
+    for (a, b) in exact.totals.iter().zip(&batched.totals) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 3.0, "max divergence {worst} s");
+}

@@ -1,0 +1,138 @@
+//! Cross-module integration tests: spec → engine → testbed → DES → service,
+//! all on the same workloads.
+
+use bottlemod::coordinator::service::{run_job, Job};
+use bottlemod::des;
+use bottlemod::solver::SolverOpts;
+use bottlemod::testbed::fluid::{execute, FluidOpts};
+use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::workflow::engine::{analyze_fixpoint, analyze};
+use bottlemod::workflow::scenario::VideoScenario;
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() < tol
+}
+
+/// The spec file shipped with the examples must load and reproduce the
+/// built-in scenario's prediction through the service front end.
+#[test]
+fn example_spec_through_service() {
+    let spec = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/specs/video.json"),
+    )
+    .expect("examples/specs/video.json");
+    let r = run_job(&Job::Analyze { id: 1, spec });
+    let mk = r.payload.get("makespan").as_f64().expect("makespan");
+    assert!(close(mk, 263.0, 2.0), "{mk}");
+    // the schedule includes all five processes
+    assert_eq!(r.payload.get("schedule").as_arr().unwrap().len(), 5);
+    // at 50:50 the dominant early bottleneck is the shared link
+    let bt = r.payload.get("bottlenecks").as_arr().unwrap();
+    assert!(bt
+        .iter()
+        .any(|b| b.get("bottleneck").as_str() == Some("res:link")));
+}
+
+/// Prediction, fluid execution and concrete testbed agree across fractions.
+#[test]
+fn three_way_agreement_across_fractions() {
+    for f in [0.2, 0.5, 0.8, 0.95] {
+        let sc = VideoScenario::default().with_fraction(f);
+        let (wf, _) = sc.build();
+        let predicted = analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+            .unwrap()
+            .makespan
+            .unwrap();
+        let fluid = execute(
+            &wf,
+            &FluidOpts {
+                dt: 0.05,
+                ..FluidOpts::default()
+            },
+        )
+        .makespan
+        .unwrap();
+        let testbed = VideoTestbed::new(sc).run(None).total;
+        assert!(
+            close(predicted, fluid, 0.01 * predicted + 1.0),
+            "f={f}: predicted {predicted} vs fluid {fluid}"
+        );
+        assert!(
+            close(predicted, testbed, 0.02 * predicted + 1.0),
+            "f={f}: predicted {predicted} vs testbed {testbed}"
+        );
+    }
+}
+
+/// The DES (no streaming) must be pessimistic vs BottleMod wherever the
+/// workflow actually pipelines — and both must rank orderings identically.
+#[test]
+fn des_is_pessimistic_but_consistent() {
+    let sc = VideoScenario::default();
+    let (wf, _) = sc.build();
+    let bm = analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+        .unwrap()
+        .makespan
+        .unwrap();
+    let des_r = des::video::run(&sc, 1e6);
+    assert!(
+        des_r.makespan > bm,
+        "DES {} should exceed streaming-aware {}",
+        des_r.makespan,
+        bm
+    );
+    // within ~15%: the only modeling gap is pipelining of task 2 + the
+    // decode overlap
+    assert!(des_r.makespan < 1.20 * bm, "{} vs {}", des_r.makespan, bm);
+}
+
+/// Single-pass analyze (the paper's procedure) equals the fixpoint when the
+/// prioritized consumer is analyzed first and finishes first.
+#[test]
+fn single_pass_suffices_for_high_fractions() {
+    for f in [0.6, 0.8, 0.95] {
+        let sc = VideoScenario::default().with_fraction(f);
+        let (wf, _) = sc.build();
+        let one = analyze(&wf, &SolverOpts::default()).unwrap().makespan.unwrap();
+        let fx = analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+            .unwrap()
+            .makespan
+            .unwrap();
+        assert!(close(one, fx, 0.5), "f={f}: {one} vs {fx}");
+    }
+}
+
+/// Scaling the input size scales the makespan linearly (same rates), while
+/// solver events stay constant — end-to-end §6 property.
+#[test]
+fn makespan_scales_events_do_not() {
+    let base = VideoScenario::default().with_fraction(0.5);
+    let (wf1, _) = base.clone().build();
+    let a1 = analyze_fixpoint(&wf1, &SolverOpts::default(), 6).unwrap();
+    let (wf10, _) = base.with_input_size(11.37486559e9).build();
+    let a10 = analyze_fixpoint(&wf10, &SolverOpts::default(), 6).unwrap();
+    let (m1, m10) = (a1.makespan.unwrap(), a10.makespan.unwrap());
+    assert!(close(m10, 10.0 * m1, 0.02 * m10), "{m1} -> {m10}");
+    assert!(a10.events <= a1.events + 2, "{} -> {}", a1.events, a10.events);
+}
+
+/// Buffered-data metric (paper eq. 8) on the video workflow: task 1's input
+/// buffer fills during the download (the named-pipe backlog), then drains.
+#[test]
+fn buffered_data_on_video_workflow() {
+    let sc = VideoScenario::default().with_fraction(0.5);
+    let (wf, nodes) = sc.clone().build();
+    let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+    let a = &wa.analyses[nodes.task1];
+    let p = &wf.nodes[nodes.task1].process;
+    let inputs = &wa.inputs[nodes.task1];
+    // mid-download: everything downloaded so far is buffered (burst task)
+    let buf = a.buffered_data_sampled(p, inputs, 0, &[100.0]);
+    let expected = sc.link_rate * 0.5 * 100.0;
+    assert!(
+        close(buf[0], expected, 0.02 * expected),
+        "{} vs {}",
+        buf[0],
+        expected
+    );
+}

@@ -1,0 +1,256 @@
+//! Property-based tests over randomly generated models (seeded generator;
+//! no proptest offline, see `util::harness::check_property`).
+//!
+//! Invariants checked, each on hundreds of random piecewise-linear models:
+//! * the progress function is monotone and never exceeds the data envelope;
+//! * Algorithm 2 (exact) and Algorithm 1 (grid) agree on finish times;
+//! * the independent fluid executor agrees with the analytic engine on
+//!   whole workflows (chains with mixed stream/burst consumers);
+//! * relative resource usage stays within [0, 1];
+//! * data-progress composition matches pointwise evaluation.
+
+use bottlemod::model::{Process, ProcessBuilder, ProcessInputs};
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::{solve, solve_grid, SolverOpts};
+use bottlemod::testbed::fluid::{execute, FluidOpts};
+use bottlemod::util::harness::check_property;
+use bottlemod::util::Rng;
+use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+
+/// Random monotone PL cumulative input over [0, ~100] reaching `total`.
+fn random_cumulative(rng: &mut Rng, total: f64) -> PwPoly {
+    let n = 1 + rng.below(5);
+    let mut points = vec![(0.0, 0.0)];
+    for i in 0..n {
+        let (x, y) = points[i];
+        points.push((
+            x + rng.range(2.0, 25.0),
+            (y + rng.range(0.0, total * 0.6)).min(total),
+        ));
+    }
+    // ensure it completes
+    let (x, y) = *points.last().unwrap();
+    if y < total {
+        points.push((x + rng.range(2.0, 25.0), total));
+    }
+    PwPoly::from_points(&points)
+}
+
+/// Random single process with 1-2 data inputs and 0-2 stream resources.
+fn random_process(rng: &mut Rng) -> (Process, ProcessInputs) {
+    let max_p = rng.range(50.0, 200.0);
+    let mut b = ProcessBuilder::new("rand", max_p);
+    let k = 1 + rng.below(2);
+    let mut data = vec![];
+    for i in 0..k {
+        let total = rng.range(50.0, 300.0);
+        if rng.f64() < 0.3 {
+            b = b.burst_data(&format!("d{i}"), total);
+        } else {
+            b = b.stream_data(&format!("d{i}"), total);
+        }
+        data.push(random_cumulative(rng, total));
+    }
+    let l = rng.below(3);
+    let mut resources = vec![];
+    for i in 0..l {
+        b = b.stream_resource(&format!("r{i}"), rng.range(10.0, 120.0));
+        // piecewise-constant allocation
+        let r1 = rng.range(0.2, 3.0);
+        let r2 = rng.range(0.2, 3.0);
+        let t_switch = rng.range(5.0, 80.0);
+        resources.push(PwPoly::step(0.0, t_switch, r1, r2));
+    }
+    (
+        b.identity_output("out").build(),
+        ProcessInputs {
+            data,
+            resources,
+            start_time: 0.0,
+        },
+    )
+}
+
+#[test]
+fn progress_below_envelope_and_monotone() {
+    check_property("P <= P_D, P monotone", 300, |rng| {
+        let (p, inputs) = random_process(rng);
+        let a = solve(&p, &inputs, &SolverOpts::default())
+            .map_err(|e| format!("solve: {e}"))?;
+        let tmax = a.finish_time.unwrap_or(500.0) + 10.0;
+        let mut prev: f64 = -1e-9;
+        for i in 0..200 {
+            let t = tmax * i as f64 / 199.0;
+            let pv = a.progress.eval(t);
+            let pd = a.pd.func.eval(t);
+            if pv > pd + 1e-6 * (1.0 + pd.abs()) {
+                return Err(format!("P({t})={pv} above envelope {pd}"));
+            }
+            if pv < prev - 1e-6 * (1.0 + prev.abs()) {
+                return Err(format!("P not monotone at t={t}: {prev} -> {pv}"));
+            }
+            prev = pv;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exact_agrees_with_grid() {
+    check_property("Alg2 == Alg1 (finish times)", 150, |rng| {
+        let (p, inputs) = random_process(rng);
+        let exact = solve(&p, &inputs, &SolverOpts::default())
+            .map_err(|e| format!("solve: {e}"))?;
+        let span = exact.finish_time.unwrap_or(500.0) + 20.0;
+        let n = 20_000;
+        let grid = solve_grid(&p, &inputs, span, n);
+        match (exact.finish_time, grid.finish_time) {
+            (Some(a), Some(b)) => {
+                let dt = span / n as f64;
+                if (a - b).abs() > 5.0 * dt + 1e-6 {
+                    return Err(format!("finish: exact {a} vs grid {b}"));
+                }
+            }
+            (None, None) => {}
+            (a, b) => return Err(format!("finish mismatch: {a:?} vs {b:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn relative_usage_bounded() {
+    check_property("usage in [0,1]", 200, |rng| {
+        let (p, inputs) = random_process(rng);
+        if p.res_reqs.is_empty() {
+            return Ok(());
+        }
+        let a = solve(&p, &inputs, &SolverOpts::default())
+            .map_err(|e| format!("solve: {e}"))?;
+        let tmax = a.finish_time.unwrap_or(300.0);
+        let ts: Vec<f64> = (0..100).map(|i| tmax * i as f64 / 99.0).collect();
+        for l in 0..p.res_reqs.len() {
+            for (i, u) in a
+                .relative_usage_sampled(&p, &inputs, l, &ts)
+                .iter()
+                .enumerate()
+            {
+                if !(-1e-9..=1.0 + 1e-6).contains(u) {
+                    return Err(format!("usage[{l}] at t={} is {u}", ts[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fluid_executor_agrees_on_random_chains() {
+    check_property("fluid == analytic on chains", 60, |rng| {
+        // producer (stream) -> consumer (stream or burst)
+        let total = rng.range(50.0, 150.0);
+        let rate = rng.range(1.0, 8.0);
+        let mut wf = Workflow::new();
+        let prod = ProcessBuilder::new("prod", total)
+            .stream_data("src", total)
+            .stream_resource("net", total)
+            .identity_output("out")
+            .build();
+        let a = wf.add_node(
+            prod,
+            vec![DataSource::External(PwPoly::constant(total))],
+            vec![ResourceSource::Fixed(PwPoly::constant(rate))],
+            StartRule::default(),
+        );
+        let burst = rng.f64() < 0.5;
+        let cpu_total = rng.range(5.0, 60.0);
+        let cons = if burst {
+            ProcessBuilder::new("cons", total).burst_data("in", total)
+        } else {
+            ProcessBuilder::new("cons", total).stream_data("in", total)
+        }
+        .stream_resource("cpu", cpu_total)
+        .identity_output("out")
+        .build();
+        wf.add_node(
+            cons,
+            vec![DataSource::ProcessOutput { node: a, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let wa = bottlemod::workflow::engine::analyze(&wf, &SolverOpts::default())
+            .map_err(|e| format!("analyze: {e}"))?;
+        let predicted = wa.makespan.ok_or("no makespan")?;
+        let run = execute(
+            &wf,
+            &FluidOpts {
+                dt: 0.01,
+                horizon: predicted * 3.0 + 50.0,
+                ..FluidOpts::default()
+            },
+        );
+        let measured = run.makespan.ok_or("fluid never finished")?;
+        if (predicted - measured).abs() > 0.01 * predicted + 0.1 {
+            return Err(format!("predicted {predicted} vs fluid {measured}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn data_progress_composition_pointwise() {
+    check_property("R(I(t)) composition", 200, |rng| {
+        let total = rng.range(20.0, 200.0);
+        let input = random_cumulative(rng, total);
+        let max_p = rng.range(10.0, 100.0);
+        let req = PwPoly::ramp_to(0.0, max_p / total, max_p);
+        let composed = req.compose(&input);
+        for i in 0..50 {
+            let t = 120.0 * i as f64 / 49.0;
+            let want = req.eval(input.eval(t));
+            let got = composed.eval(t);
+            if (want - got).abs() > 1e-6 * (1.0 + want.abs()) {
+                return Err(format!("at t={t}: compose {got} vs pointwise {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exact_pl_envelope_matches_f64() {
+    use bottlemod::pwfn::{PwLinear, Rat};
+    check_property("exact PL min == f64 min", 200, |rng| {
+        // two random rational lines with small integer coefficients
+        let mut mk = |rng: &mut Rng| {
+            let y0 = rng.below(20) as i64;
+            let num = rng.below(9) as i64 + 1;
+            let den = rng.below(9) as i64 + 1;
+            (
+                PwLinear::linear(
+                    Rat::ZERO,
+                    Rat::int(y0),
+                    Rat::new(num as i128, den as i128).unwrap(),
+                ),
+                PwPoly::linear_from(0.0, y0 as f64, num as f64 / den as f64),
+            )
+        };
+        let (ea, fa) = mk(rng);
+        let (eb, fb) = mk(rng);
+        let exact = PwLinear::min_envelope(&[&ea, &eb]).map_err(|e| e.to_string())?;
+        let approx = PwPoly::min(&[&fa, &fb]);
+        for i in 0..40 {
+            let x = i as f64;
+            let want = approx.eval(x);
+            let got = exact
+                .func
+                .eval(Rat::from_f64(x).unwrap())
+                .map_err(|e| e.to_string())?
+                .to_f64();
+            if (want - got).abs() > 1e-9 * (1.0 + want.abs()) {
+                return Err(format!("at x={x}: exact {got} vs f64 {want}"));
+            }
+        }
+        Ok(())
+    });
+}
