@@ -30,6 +30,9 @@ fn main() {
     }
 
     match Runtime::new(&Runtime::default_dir()) {
+        _ if !Runtime::backend_available() => {
+            eprintln!("(skipping PJRT bench: no execution backend in this build)")
+        }
         Ok(mut rt) => {
             // warm the executable cache (compile once)
             let _ = fig7_sweep(&mut rt, &sc, &fractions).expect("pjrt sweep");

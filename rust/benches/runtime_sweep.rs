@@ -9,6 +9,10 @@ use bottlemod::util::harness::bench_once;
 const BIG: f32 = 1e30;
 
 fn main() {
+    if !Runtime::backend_available() {
+        eprintln!("PJRT execution backend not compiled in; nothing to bench");
+        return;
+    }
     let mut rt = match Runtime::new(&Runtime::default_dir()) {
         Ok(rt) => rt,
         Err(e) => {
@@ -59,7 +63,7 @@ fn main() {
 
     // ---- L2 grid-solver artifact: one batched stage ----------------------
     {
-        use bottlemod::runtime::sweep::{B, K, L, S2, T};
+        use bottlemod::runtime::xla_sweep::{B, K, L, S2, T};
         let pd = vec![100.0f32; B * K * T];
         let mut rbreaks = vec![BIG; B * L * (S2 + 1)];
         let mut rslopes = vec![0f32; B * L * S2];

@@ -1,0 +1,96 @@
+//! The tentpole bench: the batched scenario-sweep engine vs the sequential
+//! sweeper on a 256-scenario batch.
+//!
+//! Checks two acceptance properties:
+//!  * per-scenario results are **bit-for-bit identical** between the
+//!    sequential (1-thread) and parallel runs — full `Analysis` equality;
+//!  * with ≥ 4 cores the parallel batch achieves ≥ 3× the sequential
+//!    throughput (asserted; set `BOTTLEMOD_BENCH_NO_ASSERT=1` to only
+//!    report, e.g. on loaded CI machines).
+//!
+//! Run: `cargo bench --bench sweep_parallel`
+
+use std::sync::Arc;
+
+use bottlemod::runtime::sweep::{BottleneckReport, SweepBatch};
+use bottlemod::util::harness::bench_once;
+use bottlemod::util::par::num_threads;
+use bottlemod::util::stats::fmt_duration;
+use bottlemod::workflow::scenario::{Perturbation, VideoScenario};
+
+fn batch_of(n: usize) -> Vec<Perturbation> {
+    // mostly the Fig 7 fraction axis, with input-rate / resource / model
+    // variants mixed in so the batch exercises every perturbation kind
+    (0..n)
+        .map(|i| match i % 8 {
+            5 => Perturbation::LinkRateScale(0.5 + (i % 16) as f64 / 16.0),
+            6 => Perturbation::CpuScale(0.5 + (i % 32) as f64 / 16.0),
+            7 => Perturbation::Task2Burst,
+            _ => Perturbation::Fraction((i + 1) as f64 / (n as f64 + 1.0)),
+        })
+        .collect()
+}
+
+fn main() {
+    const N: usize = 256;
+    let base = Arc::new(VideoScenario::default());
+    let batch = batch_of(N);
+    let threads = num_threads();
+
+    // correctness first: identical per-scenario results, any thread count
+    let seq_out = SweepBatch::new(base.clone())
+        .with_threads(1)
+        .run(&batch)
+        .expect("sequential sweep");
+    let par_out = SweepBatch::new(base.clone())
+        .with_threads(threads)
+        .run(&batch)
+        .expect("parallel sweep");
+    assert_eq!(
+        seq_out, par_out,
+        "parallel sweep must be bit-for-bit identical to sequential"
+    );
+    println!(
+        "determinism: {N} scenarios bit-for-bit identical across 1 vs {threads} threads ✓"
+    );
+
+    // throughput
+    let seq_batch = SweepBatch::new(base.clone()).with_threads(1);
+    let par_batch = SweepBatch::new(base.clone()).with_threads(threads);
+    let seq = bench_once(&format!("{N}-scenario sweep, 1 thread"), 3, || {
+        seq_batch.run(&batch).unwrap()
+    });
+    let par = bench_once(&format!("{N}-scenario sweep, {threads} threads"), 3, || {
+        par_batch.run(&batch).unwrap()
+    });
+
+    println!("\n== batched sweep engine ==");
+    println!("{}", seq.report());
+    println!("{}", par.report());
+    let speedup = seq.per_iter.mean / par.per_iter.mean;
+    println!(
+        "speedup: {speedup:.2}x on {threads} threads ({} vs {} per {N}-scenario batch)",
+        fmt_duration(seq.per_iter.mean),
+        fmt_duration(par.per_iter.mean)
+    );
+
+    let report = BottleneckReport::aggregate(&par_out);
+    println!("\ntop cross-scenario bottlenecks:");
+    for r in report.ranked.iter().take(5) {
+        println!(
+            "  {:>14} / {:<12} {:>10.1} s over {}/{} scenarios",
+            r.process, r.bottleneck, r.total_seconds, r.scenarios, report.scenarios
+        );
+    }
+
+    let assert_ok = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_err();
+    if threads >= 4 && assert_ok {
+        assert!(
+            speedup >= 3.0,
+            "expected >= 3x throughput on {threads} threads, got {speedup:.2}x"
+        );
+        println!("\nacceptance: {speedup:.2}x >= 3x on {threads} threads ✓");
+    } else if threads < 4 {
+        println!("\n(acceptance assert skipped: only {threads} threads available)");
+    }
+}

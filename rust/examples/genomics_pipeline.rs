@@ -1,0 +1,74 @@
+//! A genomics-flavoured workflow (the paper's intro motivates genome
+//! analysis): a sequencer dump is downloaded, QC-filtered (stream), aligned
+//! (burst per sample — the aligner builds an index over the full sample
+//! first), and the variants are called from all alignments (burst join).
+//! Two samples share the ingest link; alignment shares a CPU pool.
+//!
+//! Demonstrates: a larger DAG (8 processes), two shared pools, bottleneck
+//! reporting across the whole workflow, and the advisor primitive on a
+//! non-video scenario. The model itself lives in the library
+//! (`workflow::scenario::GenomicsScenario`) and is also exercised by the
+//! conformance test suite.
+//!
+//! Run: `cargo run --release --example genomics_pipeline`
+
+use bottlemod::solver::SolverOpts;
+use bottlemod::util::stats::ascii_table;
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::scenario::GenomicsScenario;
+
+fn main() -> bottlemod::util::error::Result<()> {
+    let opts = SolverOpts::default();
+
+    // fair ingest split
+    let wf = GenomicsScenario::default().build();
+    let wa = analyze_fixpoint(&wf, &opts, 6)?;
+    println!("== genomics pipeline, fair ingest split ==");
+    let mut rows = vec![vec![
+        "process".into(),
+        "start (s)".into(),
+        "finish (s)".into(),
+        "dominant bottleneck".into(),
+    ]];
+    for (i, a) in wa.analyses.iter().enumerate() {
+        let p = &wf.nodes[i].process;
+        // dominant = longest segment
+        let dom = a
+            .segments
+            .iter()
+            .max_by(|x, y| {
+                (x.end - x.start).partial_cmp(&(y.end - y.start)).unwrap()
+            })
+            .map(|s| a.bottleneck_name(p, s.bottleneck))
+            .unwrap_or_default();
+        rows.push(vec![
+            p.name.clone(),
+            format!("{:.0}", a.start_time),
+            format!("{:.0}", a.finish_time.unwrap_or(f64::NAN)),
+            dom,
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    println!("makespan: {:.0} s  ({} solver events)", wa.makespan.unwrap(), wa.events);
+
+    // sweep the ingest split like the paper sweeps the link
+    println!("\n== ingest-split sweep ==");
+    let mut best = (0.5, f64::INFINITY);
+    for i in 1..20 {
+        let f = i as f64 / 20.0;
+        let wf = GenomicsScenario::default().with_fraction(f).build();
+        let total = analyze_fixpoint(&wf, &opts, 6)?.makespan.unwrap();
+        if total < best.1 {
+            best = (f, total);
+        }
+    }
+    let fair = wa.makespan.unwrap();
+    println!(
+        "best split {:.2} -> {:.0} s vs fair {:.0} s ({:+.1}%)",
+        best.0,
+        best.1,
+        fair,
+        (best.1 / fair - 1.0) * 100.0
+    );
+    Ok(())
+}

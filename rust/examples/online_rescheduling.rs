@@ -9,7 +9,7 @@ use bottlemod::sched::{run_online, LiveState};
 use bottlemod::util::stats::fmt_duration;
 use bottlemod::workflow::scenario::VideoScenario;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bottlemod::util::error::Result<()> {
     let sc = VideoScenario::default();
 
     // baseline: fair share, never replanned

@@ -7,7 +7,7 @@ use bottlemod::model::{ProcessBuilder, ProcessInputs};
 use bottlemod::pwfn::PwPoly;
 use bottlemod::solver::{solve, SolverOpts};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bottlemod::util::error::Result<()> {
     // A video re-encode: stream-type data requirement (progress with every
     // byte read, Fig 1a), CPU spread evenly over the output (Fig 1b).
     let process = ProcessBuilder::new("reencode", 100e6) // 100 MB of output

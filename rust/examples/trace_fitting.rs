@@ -19,7 +19,7 @@ use bottlemod::workflow::engine::analyze_fixpoint;
 use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
 use bottlemod::workflow::scenario::VideoScenario;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bottlemod::util::error::Result<()> {
     let sc = VideoScenario::default();
 
     // ---- 1. record isolated executions (the paper's BPF monitoring) -----
@@ -127,7 +127,7 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", ascii_table(&rows));
     println!("worst fitted-model error vs testbed: {:.2}%", worst * 100.0);
-    anyhow::ensure!(worst < 0.02, "fitted model diverged");
+    bottlemod::ensure!(worst < 0.02, "fitted model diverged");
     println!("trace fitting OK — models learned from logs predict the workflow");
     Ok(())
 }

@@ -12,7 +12,7 @@ use bottlemod::util::stats::{ascii_table, Summary};
 use bottlemod::workflow::engine::analyze_fixpoint;
 use bottlemod::workflow::scenario::VideoScenario;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bottlemod::util::error::Result<()> {
     // ---- Fig 8-style detail at two prioritizations ----------------------
     for f in [0.5, 0.95] {
         let sc = VideoScenario::default().with_fraction(f);

@@ -6,7 +6,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::des;
 use crate::model::{Process, ProcessBuilder, ProcessInputs};
@@ -209,9 +209,7 @@ pub fn fig6(dir: &Path) -> Result<()> {
 pub fn fig7(dir: &Path, points: usize, measured_points: usize, runs: usize) -> Result<()> {
     let sc = VideoScenario::default();
     let fractions = fig7_fractions(points);
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4);
+    let threads = crate::util::par::num_threads();
     let sweep = exact_sweep(&sc, &fractions, threads);
 
     let mut measured = vec![];

@@ -1,9 +1,11 @@
-//! L3 coordination: parallel sweeps, the analysis service, and the
-//! figure/table exporters that regenerate the paper's evaluation.
+//! L3 coordination: the batched scenario sweeps, the analysis service, and
+//! the figure/table exporters that regenerate the paper's evaluation.
 
 pub mod exporter;
 pub mod service;
 pub mod sweeper;
 
 pub use service::{Coordinator, Job, JobResult};
-pub use sweeper::{best_fraction, exact_sweep, fig7_fractions, ExactSweep};
+pub use sweeper::{
+    best_fraction, exact_sweep, exact_sweep_report, fig7_fractions, ExactSweep,
+};

@@ -15,12 +15,19 @@ use crate::model::spec::parse_workflow;
 use crate::solver::SolverOpts;
 use crate::util::Json;
 use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::scenario::VideoScenario;
+
+use super::sweeper::{best_fraction, ExactSweep, SweepBatch};
+use crate::workflow::scenario::Perturbation;
 
 /// A job for the worker pool.
 #[derive(Debug, Clone)]
 pub enum Job {
     /// Analyze a workflow spec (JSON text).
     Analyze { id: u64, spec: String },
+    /// Run a fraction sweep of the Fig 5 scenario and report the ranked
+    /// bottlenecks (the batched engine behind one service call).
+    Sweep { id: u64, fractions: Vec<f64> },
 }
 
 /// Result of a job, as JSON (so the stdio server can emit it directly).
@@ -90,6 +97,68 @@ pub fn run_job(job: &Job) -> JobResult {
             };
             JobResult { id: *id, payload }
         }
+        Job::Sweep { id, fractions } => {
+            if fractions.is_empty() {
+                return JobResult {
+                    id: *id,
+                    payload: Json::obj(vec![(
+                        "error",
+                        Json::Str("sweep needs at least one fraction".into()),
+                    )]),
+                };
+            }
+            // unlike the CLI path, never panic on a degenerate scenario —
+            // a bad request must come back as an error payload
+            let batch: Vec<Perturbation> = fractions
+                .iter()
+                .map(|&f| Perturbation::Fraction(f))
+                .collect();
+            let run = SweepBatch::new(std::sync::Arc::new(VideoScenario::default()))
+                .with_threads(crate::util::par::num_threads())
+                .run_report(&batch);
+            let (outcomes, report) = match run {
+                Ok(r) => r,
+                Err(e) => {
+                    return JobResult {
+                        id: *id,
+                        payload: Json::obj(vec![("error", Json::Str(e.to_string()))]),
+                    };
+                }
+            };
+            let sweep = ExactSweep {
+                fractions: fractions.clone(),
+                totals: outcomes
+                    .iter()
+                    .map(|o| o.makespan.unwrap_or(f64::INFINITY))
+                    .collect(),
+                events: report.total_events,
+            };
+            let (best_f, best_t) = best_fraction(&sweep);
+            let ranked: Vec<Json> = report
+                .ranked
+                .iter()
+                .take(8)
+                .map(|r| {
+                    Json::obj(vec![
+                        ("process", Json::Str(r.process.clone())),
+                        ("bottleneck", Json::Str(r.bottleneck.clone())),
+                        ("total_seconds", Json::Num(r.total_seconds)),
+                        ("scenarios", Json::Num(r.scenarios as f64)),
+                    ])
+                })
+                .collect();
+            JobResult {
+                id: *id,
+                payload: Json::obj(vec![
+                    ("fractions", Json::arr_f64(&sweep.fractions)),
+                    ("totals", Json::arr_f64(&sweep.totals)),
+                    ("best_fraction", Json::Num(best_f)),
+                    ("best_total", Json::Num(best_t)),
+                    ("events", Json::Num(sweep.events as f64)),
+                    ("ranked_bottlenecks", Json::Arr(ranked)),
+                ]),
+            }
+        }
     }
 }
 
@@ -144,7 +213,7 @@ impl Coordinator {
 
 /// JSON-lines server: one request object per line on stdin, one response
 /// per line on stdout. Request: `{"id": 1, "op": "analyze", "spec": {...}}`.
-pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> anyhow::Result<()> {
+pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::Result<()> {
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
@@ -166,6 +235,17 @@ pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> anyhow::Resul
             Some("analyze") => {
                 let spec = req.get("spec").to_string();
                 run_job(&Job::Analyze { id, spec }).payload
+            }
+            Some("sweep") => {
+                let fractions: Vec<f64> = req
+                    .get("fractions")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                    .unwrap_or_else(|| {
+                        let n = req.get("points").as_f64().unwrap_or(40.0) as usize;
+                        crate::coordinator::sweeper::fig7_fractions(n.max(1))
+                    });
+                run_job(&Job::Sweep { id, fractions }).payload
             }
             Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
             other => Json::obj(vec![(
@@ -249,5 +329,55 @@ mod tests {
             spec: "{}".into(),
         });
         assert!(r.payload.get("error").as_str().is_some());
+    }
+
+    #[test]
+    fn sweep_job_reports_best_fraction_and_bottlenecks() {
+        let r = run_job(&Job::Sweep {
+            id: 9,
+            fractions: vec![0.25, 0.5, 0.75, 0.93],
+        });
+        assert_eq!(r.id, 9);
+        let best = r.payload.get("best_fraction").as_f64().unwrap();
+        assert!((best - 0.93).abs() < 1e-9, "{best}");
+        assert_eq!(r.payload.get("totals").as_arr().unwrap().len(), 4);
+        let ranked = r.payload.get("ranked_bottlenecks").as_arr().unwrap();
+        assert!(!ranked.is_empty());
+        assert!(ranked
+            .iter()
+            .any(|b| b.get("bottleneck").as_str() == Some("res:link")));
+    }
+
+    /// A degenerate request (fraction 0 starves dl1 forever, so the
+    /// barrier node's dependency never finishes) must come back as an
+    /// error payload — not a panic that kills the server.
+    #[test]
+    fn degenerate_fraction_reports_error_not_panic() {
+        let r = run_job(&Job::Sweep {
+            id: 4,
+            fractions: vec![0.0],
+        });
+        assert!(r.payload.get("error").as_str().is_some());
+    }
+
+    #[test]
+    fn empty_sweep_is_an_error() {
+        let r = run_job(&Job::Sweep {
+            id: 2,
+            fractions: vec![],
+        });
+        assert!(r.payload.get("error").as_str().is_some());
+    }
+
+    #[test]
+    fn stdio_sweep_op() {
+        let input = "{\"op\": \"sweep\", \"id\": 3, \"fractions\": [0.5, 0.9]}\n";
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let resp = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(resp.get("id").as_f64(), Some(3.0));
+        assert_eq!(resp.get("totals").as_arr().unwrap().len(), 2);
+        assert!((resp.get("best_fraction").as_f64().unwrap() - 0.9).abs() < 1e-9);
     }
 }

@@ -1,20 +1,24 @@
-//! Parallel sweep orchestration over candidate resource allocations.
+//! Sweep orchestration over candidate resource allocations.
 //!
 //! The Fig 7 experiment evaluates the Fig 5 workflow for 600 different link
-//! prioritizations. Two engines:
+//! prioritizations. The heavy lifting lives in the batched scenario-sweep
+//! engine ([`crate::runtime::sweep::SweepBatch`]); this module keeps the
+//! fraction-sweep convenience API the advisor, exporter and CLI consume:
 //!
-//! * [`exact_sweep`] — the event-driven exact solver, fanned out over a
-//!   thread pool (each analysis is independent);
+//! * [`exact_sweep`] — the event-driven exact solver fanned out over the
+//!   scoped-thread pool, one scenario per link fraction;
 //! * [`crate::runtime::fig7_sweep`] — the batched PJRT path (L2 grid
-//!   solver), used when an approximate but fused evaluation is preferred.
+//!   solver), used when an approximate but fused evaluation is preferred
+//!   and the XLA backend is compiled in.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-use crate::solver::SolverOpts;
-use crate::workflow::engine::analyze_fixpoint;
-use crate::workflow::scenario::VideoScenario;
+pub use crate::runtime::sweep::{
+    BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch,
+};
+use crate::workflow::scenario::{Perturbation, VideoScenario};
 
-/// Outcome of an exact sweep.
+/// Outcome of an exact fraction sweep (the Fig 7 x/y arrays).
 #[derive(Clone, Debug)]
 pub struct ExactSweep {
     pub fractions: Vec<f64>,
@@ -23,38 +27,49 @@ pub struct ExactSweep {
     pub events: usize,
 }
 
-/// Evaluate the scenario's total time for each link fraction, in parallel.
+/// Evaluate the scenario's total time for each link fraction on `threads`
+/// workers. Results are identical for any thread count (the engine's
+/// determinism contract); a scenario that never finishes reports
+/// `f64::INFINITY`.
 pub fn exact_sweep(sc: &VideoScenario, fractions: &[f64], threads: usize) -> ExactSweep {
-    let threads = threads.max(1).min(fractions.len().max(1));
-    let totals = vec![0.0f64; fractions.len()];
-    let events = AtomicUsize::new(0);
-    let next = AtomicUsize::new(0);
-    let totals_ptr = std::sync::Mutex::new(totals);
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let opts = SolverOpts::default();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= fractions.len() {
-                        break;
-                    }
-                    let (wf, _) = sc.clone().with_fraction(fractions[i]).build();
-                    let wa = analyze_fixpoint(&wf, &opts, 6).expect("sweep analysis");
-                    let total = wa.makespan.unwrap_or(f64::INFINITY);
-                    events.fetch_add(wa.events, Ordering::Relaxed);
-                    totals_ptr.lock().unwrap()[i] = total;
-                }
-            });
-        }
-    });
-
+    let batch: Vec<Perturbation> = fractions.iter().map(|&f| Perturbation::Fraction(f)).collect();
+    let outcomes = SweepBatch::new(Arc::new(sc.clone()))
+        .with_threads(threads)
+        .run(&batch)
+        .expect("sweep analysis");
     ExactSweep {
         fractions: fractions.to_vec(),
-        totals: totals_ptr.into_inner().unwrap(),
-        events: events.into_inner(),
+        totals: outcomes
+            .iter()
+            .map(|o| o.makespan.unwrap_or(f64::INFINITY))
+            .collect(),
+        events: outcomes.iter().map(|o| o.events).sum(),
     }
+}
+
+/// Like [`exact_sweep`], but also returning the ranked cross-scenario
+/// bottleneck report (what the `bottlemod sweep` CLI prints).
+pub fn exact_sweep_report(
+    sc: &VideoScenario,
+    fractions: &[f64],
+    threads: usize,
+) -> (ExactSweep, BottleneckReport) {
+    let batch: Vec<Perturbation> = fractions.iter().map(|&f| Perturbation::Fraction(f)).collect();
+    let (outcomes, report) = SweepBatch::new(Arc::new(sc.clone()))
+        .with_threads(threads)
+        .run_report(&batch)
+        .expect("sweep analysis");
+    (
+        ExactSweep {
+            fractions: fractions.to_vec(),
+            totals: outcomes
+                .iter()
+                .map(|o| o.makespan.unwrap_or(f64::INFINITY))
+                .collect(),
+            events: report.total_events,
+        },
+        report,
+    )
 }
 
 /// The standard Fig 7 x-axis: `n` fractions spanning (0, 1).
@@ -86,6 +101,7 @@ mod tests {
         for (a, b) in par.totals.iter().zip(ser.totals.iter()) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
+        assert_eq!(par.events, ser.events);
     }
 
     #[test]
@@ -108,5 +124,18 @@ mod tests {
             .1;
         let gain = 1.0 - best_t / t50;
         assert!((0.25..0.40).contains(&gain), "gain {gain}");
+    }
+
+    #[test]
+    fn report_accompanies_sweep() {
+        let sc = VideoScenario::default();
+        let (sweep, report) = exact_sweep_report(&sc, &fig7_fractions(8), 4);
+        assert_eq!(sweep.totals.len(), 8);
+        assert_eq!(report.scenarios, 8);
+        assert_eq!(report.total_events, sweep.events);
+        assert!(report
+            .ranked
+            .iter()
+            .any(|r| r.bottleneck == "res:link" && r.scenarios == 8));
     }
 }

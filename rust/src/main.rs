@@ -18,12 +18,13 @@
 use std::process::ExitCode;
 
 use bottlemod::coordinator::exporter;
-use bottlemod::coordinator::sweeper::{exact_sweep, fig7_fractions};
+use bottlemod::coordinator::sweeper::{exact_sweep_report, fig7_fractions};
 use bottlemod::model::spec::parse_workflow;
 use bottlemod::runtime::Runtime;
 use bottlemod::sched;
 use bottlemod::solver::SolverOpts;
 use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::util::error::{Error, Result};
 use bottlemod::util::stats::{ascii_table, fmt_duration, Summary};
 use bottlemod::workflow::engine::analyze_fixpoint;
 use bottlemod::workflow::scenario::VideoScenario;
@@ -72,10 +73,10 @@ fn print_help() {
     );
 }
 
-fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
+fn cmd_analyze(args: &[String]) -> Result<()> {
     let path = args
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: bottlemod analyze <spec.json>"))?;
+        .ok_or_else(|| Error::msg("usage: bottlemod analyze <spec.json>"))?;
     let text = std::fs::read_to_string(path)?;
     let wf = parse_workflow(&text)?;
     let t0 = std::time::Instant::now();
@@ -126,7 +127,7 @@ fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+fn cmd_sweep(args: &[String]) -> Result<()> {
     let n: usize = args
         .iter()
         .find(|a| !a.starts_with("--"))
@@ -135,13 +136,13 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
     let sc = VideoScenario::default();
     let fractions = fig7_fractions(n);
-    let threads = std::thread::available_parallelism()?.get();
+    let threads = bottlemod::util::par::num_threads();
 
     let t0 = std::time::Instant::now();
-    let sweep = exact_sweep(&sc, &fractions, threads);
+    let (sweep, report) = exact_sweep_report(&sc, &fractions, threads);
     let exact_dt = t0.elapsed().as_secs_f64();
     println!(
-        "exact sweep: {n} configs in {} ({} per analysis, {} events total)",
+        "exact sweep: {n} configs on {threads} threads in {} ({} per analysis, {} events total)",
         fmt_duration(exact_dt),
         fmt_duration(exact_dt / n as f64),
         sweep.events
@@ -155,6 +156,24 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
             format!("{:.2}", sweep.totals[i]),
         ]);
     }
+    print!("{}", ascii_table(&rows));
+
+    // ranked cross-scenario bottleneck report
+    let mut rows = vec![vec![
+        "process".to_string(),
+        "bottleneck".to_string(),
+        "total limited (s)".to_string(),
+        "scenarios".to_string(),
+    ]];
+    for r in report.ranked.iter().take(8) {
+        rows.push(vec![
+            r.process.clone(),
+            r.bottleneck.clone(),
+            format!("{:.1}", r.total_seconds),
+            format!("{}/{}", r.scenarios, report.scenarios),
+        ]);
+    }
+    println!("top bottlenecks across the batch:");
     print!("{}", ascii_table(&rows));
 
     if use_pjrt {
@@ -178,7 +197,7 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_measure(args: &[String]) -> anyhow::Result<()> {
+fn cmd_measure(args: &[String]) -> Result<()> {
     let points: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(13);
     let runs: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(10);
     let mut rows = vec![vec![
@@ -210,7 +229,7 @@ fn cmd_measure(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_compare_des(args: &[String]) -> anyhow::Result<()> {
+fn cmd_compare_des(args: &[String]) -> Result<()> {
     let sizes: Vec<f64> = if args.is_empty() {
         vec![1.1, 10.0, 100.0]
     } else {
@@ -224,7 +243,7 @@ fn cmd_compare_des(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_export(args: &[String]) -> anyhow::Result<()> {
+fn cmd_export(args: &[String]) -> Result<()> {
     let dir = args
         .first()
         .map(std::path::PathBuf::from)
@@ -232,8 +251,8 @@ fn cmd_export(args: &[String]) -> anyhow::Result<()> {
     exporter::export_all(&dir)
 }
 
-fn cmd_advisor() -> anyhow::Result<()> {
-    let threads = std::thread::available_parallelism()?.get();
+fn cmd_advisor() -> Result<()> {
+    let threads = bottlemod::util::par::num_threads();
     let rec = sched::recommend(&VideoScenario::default(), 200, threads);
     println!(
         "recommended link fraction for task 1's download: {:.3}\n\
@@ -246,7 +265,7 @@ fn cmd_advisor() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_online() -> anyhow::Result<()> {
+fn cmd_online() -> Result<()> {
     let sc = VideoScenario::default();
     let static_fair = sched::run_online(&sc, 1e9, &[0.5]);
     let candidates: Vec<f64> = (1..=19).map(|i| i as f64 / 20.0).collect();
@@ -267,7 +286,7 @@ fn cmd_online() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts() -> anyhow::Result<()> {
+fn cmd_artifacts() -> Result<()> {
     let rt = Runtime::new(&Runtime::default_dir())?;
     let mut names = rt.names();
     names.sort();

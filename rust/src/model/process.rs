@@ -65,12 +65,19 @@ pub struct ProcessInputs {
 }
 
 /// Validation failure for a model (bad shapes, wrong monotonicity, ...).
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("invalid model for process '{process}': {msg}")]
+#[derive(Debug, Clone)]
 pub struct ModelError {
     pub process: String,
     pub msg: String,
 }
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid model for process '{}': {}", self.process, self.msg)
+    }
+}
+
+impl std::error::Error for ModelError {}
 
 impl Process {
     /// A process with no requirements that is instantly complete — useful as

@@ -23,9 +23,16 @@ use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
 use super::builder::ProcessBuilder;
 
 /// Spec parsing failure with a path-ish context string.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("workflow spec: {0}")]
+#[derive(Debug, Clone)]
 pub struct SpecError(pub String);
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "workflow spec: {}", self.0)
+    }
+}
+
+impl std::error::Error for SpecError {}
 
 fn err(msg: impl Into<String>) -> SpecError {
     SpecError(msg.into())

@@ -32,7 +32,7 @@ pub struct PwPoly {
 
 /// A lower envelope together with the index of the winning input function on
 /// every piece — the raw material for bottleneck attribution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Envelope {
     pub func: PwPoly,
     /// `winners[i]` is the index (into the `min` argument list) of the

@@ -10,9 +10,16 @@ use std::cmp::Ordering;
 use std::fmt;
 
 /// Error raised when an exact operation would overflow `i128`.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("rational arithmetic overflow")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Overflow;
+
+impl fmt::Display for Overflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("rational arithmetic overflow")
+    }
+}
+
+impl std::error::Error for Overflow {}
 
 /// A normalized rational number `num/den`, `den > 0`, `gcd(num, den) = 1`.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]

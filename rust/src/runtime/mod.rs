@@ -1,7 +1,11 @@
-//! PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//! Sweep runtimes: the CPU-parallel batched scenario-sweep engine
+//! ([`sweep`]) and the PJRT artifact path ([`pjrt`] + [`xla_sweep`],
+//! stubbed in offline builds).
 
 pub mod pjrt;
 pub mod sweep;
+pub mod xla_sweep;
 
 pub use pjrt::{ArtifactInfo, Runtime};
-pub use sweep::{fig7_sweep, SweepResult};
+pub use sweep::{BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch};
+pub use xla_sweep::{fig7_sweep, SweepResult};

@@ -1,0 +1,288 @@
+//! Batched Fig 7 sweep on the PJRT runtime (XLA-backend path).
+//!
+//! Evaluates the whole Fig 5 workflow for B link-fraction configurations at
+//! once by staging the batched L2 grid solver (`grid_solve_pd` artifact):
+//! the Rust coordinator walks the workflow stages (downloads → tasks 1/2 →
+//! task 3) and hands each stage's B-wide numeric work to XLA. Pool release
+//! is handled with the same two-pass fixpoint as the exact engine.
+//!
+//! This trades the exact solver's precision for one fused, vectorized pass
+//! per stage. In the offline build the PJRT backend is a stub
+//! ([`Runtime::backend_available`] is false), so [`fig7_sweep`] errors at
+//! the first artifact execution; the CPU-parallel equivalent is
+//! [`super::sweep::SweepBatch`], which needs no artifacts at all.
+
+use crate::bail;
+use crate::util::error::Result;
+use crate::workflow::scenario::VideoScenario;
+
+use super::pjrt::Runtime;
+
+/// Shape constants of the sweep artifact (`grid_solve_pd_b600_k2_l2_s4_t2048`).
+pub const B: usize = 600;
+pub const K: usize = 2;
+pub const L: usize = 2;
+pub const S2: usize = 4;
+pub const T: usize = 2048;
+const BIG: f32 = 1e30;
+
+/// Result of a batched sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub fractions: Vec<f64>,
+    /// Predicted total workflow time per fraction.
+    pub totals: Vec<f64>,
+    /// Stage makespans for diagnostics.
+    pub dl1_done: Vec<f64>,
+    pub dl2_done: Vec<f64>,
+    pub t1_done: Vec<f64>,
+    pub t2_done: Vec<f64>,
+}
+
+struct Stage<'rt> {
+    rt: &'rt mut Runtime,
+    name: String,
+    ts: Vec<f32>,
+}
+
+impl<'rt> Stage<'rt> {
+    /// One batched grid_solve_pd call. All slices are row-major.
+    fn solve(
+        &mut self,
+        pd: &[f32],      // [B, K, T]
+        rbreaks: &[f32], // [B, L, S2+1]
+        rslopes: &[f32], // [B, L, S2]
+        rin: &[f32],     // [B, L, T]
+        target: &[f32],  // [B]
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.rt.execute_f32(
+            &self.name,
+            &[
+                (pd, &[B, K, T]),
+                (rbreaks, &[B, L, S2 + 1]),
+                (rslopes, &[B, L, S2]),
+                (rin, &[B, L, T]),
+                (&self.ts, &[T]),
+                (target, &[B]),
+            ],
+        )?;
+        let p = out[0].clone();
+        let mk = out[1].clone();
+        Ok((p, mk))
+    }
+}
+
+/// Single-piece R' = slope resource tables (resource 1 is padding).
+fn simple_resources(slope: f64) -> (Vec<f32>, Vec<f32>) {
+    let mut rbreaks = vec![BIG; B * L * (S2 + 1)];
+    let mut rslopes = vec![0f32; B * L * S2];
+    for b in 0..B {
+        rbreaks[b * L * (S2 + 1)] = 0.0; // resource 0 piece 0 starts at 0
+        rbreaks[b * L * (S2 + 1) + (S2 + 1)] = 0.0; // resource 1 (padding)
+        rslopes[b * L * S2] = slope as f32;
+    }
+    (rbreaks, rslopes)
+}
+
+/// Run the batched Fig 7 sweep. `fractions.len()` must be ≤ B; missing
+/// entries are padded with the last fraction.
+pub fn fig7_sweep(
+    rt: &mut Runtime,
+    sc: &VideoScenario,
+    fractions: &[f64],
+) -> Result<SweepResult> {
+    if fractions.is_empty() || fractions.len() > B {
+        bail!("need 1..={B} fractions, got {}", fractions.len());
+    }
+    let name = format!("grid_solve_pd_b{B}_k{K}_l{L}_s{S2}_t{T}");
+    if rt.info(&name).is_none() {
+        bail!("artifact {name} missing — run `make artifacts`");
+    }
+    let span = 6.0 * sc.input_size / sc.link_rate; // ≳ 2 workflows worth
+    let ts: Vec<f32> = (0..T).map(|i| (i as f64 * span / T as f64) as f32).collect();
+    let dt = span / T as f64;
+    let mut stage = Stage { rt, name, ts };
+
+    let mut fr = fractions.to_vec();
+    fr.resize(B, *fractions.last().unwrap());
+    let size = sc.input_size;
+    let cap = sc.link_rate;
+
+    // pd for the downloads: remote file always fully available
+    let mut pd_const = vec![0f32; B * K * T];
+    for b in 0..B {
+        for t in 0..T {
+            pd_const[(b * K) * T + t] = size as f32;
+            pd_const[(b * K + 1) * T + t] = BIG; // padding input
+        }
+    }
+    let (rb1, rs1) = simple_resources(1.0); // downloads: 1 byte link / byte
+    let target_dl = vec![size as f32; B];
+
+    // ---- pass 1: dl1 at its fraction, dl2 on the residual --------------
+    let rin_dl1: Vec<f32> = rin_const(|b| fr[b] * cap);
+    let (p1, _t1) = stage.solve(&pd_const, &rb1, &rs1, &rin_dl1, &target_dl)?;
+    let rin_dl2 = residual_rin(&p1, cap, dt);
+    let (p2, mk2) = stage.solve(&pd_const, &rb1, &rs1, &rin_dl2, &target_dl)?;
+
+    // ---- pass 2: release dl1 when dl2 finished, recompute residual ------
+    let rin_dl1b = released_rin(&mk2, |b| fr[b] * cap, cap, &stage.ts);
+    let (p1b, mk1b) = stage.solve(&pd_const, &rb1, &rs1, &rin_dl1b, &target_dl)?;
+    let rin_dl2b = residual_rin(&p1b, cap, dt);
+    let (p2b, mk2b) = stage.solve(&pd_const, &rb1, &rs1, &rin_dl2b, &target_dl)?;
+
+    // ---- task 1: burst on dl1 completion, encode CPU --------------------
+    let mut pd_t1 = vec![0f32; B * K * T];
+    for b in 0..B {
+        for t in 0..T {
+            let done = p1b[b * T + t] >= (size * (1.0 - 1e-6)) as f32;
+            pd_t1[(b * K) * T + t] = if done { sc.t1_output as f32 } else { 0.0 };
+            pd_t1[(b * K + 1) * T + t] = BIG;
+        }
+    }
+    let (rb_t1, rs_t1) = simple_resources(sc.t1_cpu / sc.t1_output);
+    let rin_one: Vec<f32> = rin_const(|_| 1.0);
+    let target_t1 = vec![sc.t1_output as f32; B];
+    let (_pt1, mk_t1) = stage.solve(&pd_t1, &rb_t1, &rs_t1, &rin_one, &target_t1)?;
+
+    // ---- task 2: stream on dl2 progress ---------------------------------
+    let mut pd_t2 = vec![0f32; B * K * T];
+    for b in 0..B {
+        for t in 0..T {
+            pd_t2[(b * K) * T + t] = p2b[b * T + t];
+            pd_t2[(b * K + 1) * T + t] = BIG;
+        }
+    }
+    let (rb_t2, rs_t2) = simple_resources(sc.t2_time / sc.input_size);
+    let target_t2 = vec![size as f32; B];
+    let (_pt2, mk_t2) = stage.solve(&pd_t2, &rb_t2, &rs_t2, &rin_one, &target_t2)?;
+
+    // ---- task 3: barrier start, 3 s of io --------------------------------
+    let t3_total = sc.t1_output + sc.input_size;
+    let pd_t3: Vec<f32> = {
+        let mut v = vec![0f32; B * K * T];
+        for b in 0..B {
+            for t in 0..T {
+                v[(b * K) * T + t] = t3_total as f32;
+                v[(b * K + 1) * T + t] = BIG;
+            }
+        }
+        v
+    };
+    let (rb_t3, rs_t3) = simple_resources(sc.t3_time / t3_total);
+    // allocation gated on the barrier
+    let mut rin_t3 = vec![0f32; B * L * T];
+    for b in 0..B {
+        let start = mk_t1[b].max(mk_t2[b]);
+        for t in 0..T {
+            if stage.ts[t] >= start {
+                rin_t3[(b * L) * T + t] = 1.0;
+            }
+        }
+    }
+    let target_t3 = vec![t3_total as f32; B];
+    let (_pt3, mk_t3) = stage.solve(&pd_t3, &rb_t3, &rs_t3, &rin_t3, &target_t3)?;
+
+    let _ = p2;
+    Ok(SweepResult {
+        fractions: fractions.to_vec(),
+        totals: mk_t3[..fractions.len()].iter().map(|&x| x as f64).collect(),
+        dl1_done: mk1b[..fractions.len()].iter().map(|&x| x as f64).collect(),
+        dl2_done: mk2b[..fractions.len()].iter().map(|&x| x as f64).collect(),
+        t1_done: mk_t1[..fractions.len()].iter().map(|&x| x as f64).collect(),
+        t2_done: mk_t2[..fractions.len()].iter().map(|&x| x as f64).collect(),
+    })
+}
+
+/// rin with a constant rate per config on resource 0, zeros on padding.
+fn rin_const(rate: impl Fn(usize) -> f64) -> Vec<f32> {
+    let mut v = vec![0f32; B * L * T];
+    for b in 0..B {
+        let r = rate(b) as f32;
+        for t in 0..T {
+            v[(b * L) * T + t] = r;
+        }
+    }
+    v
+}
+
+/// Residual capacity: cap − observed rate of the other flow (from its
+/// progress grid).
+fn residual_rin(p_other: &[f32], cap: f64, dt: f64) -> Vec<f32> {
+    let mut v = vec![0f32; B * L * T];
+    for b in 0..B {
+        for t in 0..T {
+            let rate = if t + 1 < T {
+                (p_other[b * T + t + 1] - p_other[b * T + t]) as f64 / dt
+            } else {
+                0.0
+            };
+            v[(b * L) * T + t] = (cap - rate).max(0.0) as f32;
+        }
+    }
+    v
+}
+
+/// Fraction rate until the peer's finish time, full capacity after.
+fn released_rin(
+    peer_done: &[f32],
+    frac_rate: impl Fn(usize) -> f64,
+    cap: f64,
+    ts: &[f32],
+) -> Vec<f32> {
+    let mut v = vec![0f32; B * L * T];
+    for b in 0..B {
+        let release = peer_done[b];
+        let fr = frac_rate(b) as f32;
+        for t in 0..T {
+            v[(b * L) * T + t] = if ts[t] >= release { cap as f32 } else { fr };
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_sweep_matches_exact_engine() {
+        if !Runtime::backend_available()
+            || !Runtime::default_dir().join("manifest.json").exists()
+        {
+            eprintln!("skipping: PJRT backend/artifacts not available");
+            return;
+        }
+        use crate::solver::SolverOpts;
+        use crate::workflow::engine::analyze_fixpoint;
+        let mut rt = Runtime::new(&Runtime::default_dir()).unwrap();
+        let sc = VideoScenario::default();
+        let fractions = [0.2, 0.5, 0.8, 0.93, 0.95];
+        let sweep = fig7_sweep(&mut rt, &sc, &fractions).unwrap();
+        for (i, &f) in fractions.iter().enumerate() {
+            let (wf, _) = sc.clone().with_fraction(f).build();
+            let exact = analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap();
+            let batched = sweep.totals[i];
+            // grid dt ≈ 0.26 s + f32: allow ~1.5%
+            assert!(
+                (exact - batched).abs() < 0.015 * exact + 2.0 * 0.3,
+                "f={f}: exact {exact} vs batched {batched}"
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_without_backend_reports_missing_artifact() {
+        let dir = std::env::temp_dir().join("bottlemod_xla_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let err = fig7_sweep(&mut rt, &VideoScenario::default(), &[0.5])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing"), "{err}");
+    }
+}

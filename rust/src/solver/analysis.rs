@@ -27,7 +27,10 @@ pub struct Segment {
 }
 
 /// The full result of analyzing one process execution.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every field (progress pieces, segments, events) —
+/// the sweep engine's bit-for-bit determinism checks rely on it.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Analysis {
     /// The progress function `P(t)`, constant at `max_progress` after
     /// completion (domain `[start_time, inf)`).

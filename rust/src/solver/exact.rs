@@ -52,14 +52,31 @@ impl Default for SolverOpts {
 }
 
 /// Solver failure.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum SolveError {
-    #[error(transparent)]
-    Model(#[from] ModelError),
-    #[error("solver made no progress at t={t}, p={p} (numerical stall)")]
+    Model(ModelError),
     Stalled { t: f64, p: f64 },
-    #[error("exceeded {0} events")]
     TooManyEvents(usize),
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Model(e) => e.fmt(f),
+            SolveError::Stalled { t, p } => {
+                write!(f, "solver made no progress at t={t}, p={p} (numerical stall)")
+            }
+            SolveError::TooManyEvents(n) => write!(f, "exceeded {n} events"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+impl From<ModelError> for SolveError {
+    fn from(e: ModelError) -> Self {
+        SolveError::Model(e)
+    }
 }
 
 /// Piece-by-piece constructor for `P(t)` plus its bottleneck segmentation.

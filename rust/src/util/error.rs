@@ -1,0 +1,116 @@
+//! Minimal `anyhow`-style dynamic error for CLI / exporter / service code.
+//!
+//! The offline vendor set has no `anyhow`; this is the subset the repo
+//! needs: a string-backed [`Error`] that any `std::error::Error` converts
+//! into (so `?` works on io/parse/solver errors alike), a [`Result`]
+//! alias, a [`Context`] extension trait, and `bail!`/`ensure!` macros.
+//! Library modules keep their typed errors (`SolveError`, `WorkflowError`,
+//! ...); this type is for the binary-shaped layers only.
+
+use std::fmt;
+
+/// A dynamic, message-carrying error.
+///
+/// Deliberately does *not* implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` impl below cannot overlap with the identity
+/// `From<Error> for Error` (the same trick `anyhow::Error` uses).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file/9b1c")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "inner",
+        ));
+        let e = r.context("outer").unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("outer") && s.contains("inner"), "{s}");
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            bail!("x too big: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn macros_work() {
+        assert_eq!(bails(5).unwrap(), 5);
+        assert!(bails(-1).unwrap_err().to_string().contains("positive"));
+        assert!(bails(200).unwrap_err().to_string().contains("too big"));
+    }
+}

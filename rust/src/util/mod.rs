@@ -1,11 +1,15 @@
-//! Support utilities: seeded RNG, minimal JSON, stats/tables, and the
-//! hand-rolled bench + property-test harnesses (the offline vendor set has
-//! no criterion/proptest/serde).
+//! Support utilities: seeded RNG, minimal JSON, stats/tables, the
+//! hand-rolled bench + property-test harnesses, a string-backed dynamic
+//! error, and a scoped-thread parallel map (the offline vendor set has no
+//! criterion/proptest/serde/anyhow/rayon).
 
+pub mod error;
 pub mod harness;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;
 
+pub use error::{Context, Error, Result};
 pub use json::Json;
 pub use rng::Rng;

@@ -1,0 +1,104 @@
+//! Work-stealing parallel map on scoped std threads.
+//!
+//! The offline vendor set has no `rayon`, so the batched sweep engine
+//! ([`crate::runtime::sweep`]) fans out on this instead: a fixed pool of
+//! scoped threads pulling item indices from a shared atomic counter. Each
+//! item's result lands at its input index, so the output is *identical* to
+//! the sequential map regardless of scheduling — the property the sweep
+//! engine's bit-for-bit determinism contract rests on.
+//!
+//! The per-item lock on the result vector is negligible next to the work
+//! each item does here (a full workflow analysis, ~ms); this is a fan-out
+//! primitive for coarse tasks, not a data-parallel inner loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `BOTTLEMOD_THREADS` env override, else the machine's
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    std::env::var("BOTTLEMOD_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads. `f` receives the
+/// item index and the item; results are returned in input order.
+///
+/// With `threads <= 1` this runs inline on the caller's thread with no
+/// synchronization at all — the sequential reference path.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every slot filled by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let seq = par_map(&items, 1, |i, &x| (i, x * x));
+        let par = par_map(&items, 8, |i, &x| (i, x * x));
+        assert_eq!(seq, par);
+        assert_eq!(par[100], (100, 10_000));
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let calls = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, 6, |_, &x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1000);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

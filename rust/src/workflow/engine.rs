@@ -45,18 +45,37 @@ pub struct WorkflowAnalysis {
 }
 
 /// Workflow-level failure.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum WorkflowError {
-    #[error(transparent)]
-    Graph(#[from] GraphError),
-    #[error("node {node} ('{name}'): {err}")]
+    Graph(GraphError),
     Solve {
         node: usize,
         name: String,
         err: SolveError,
     },
-    #[error("node {node} depends on node {dep} which never finishes")]
     DepNeverFinishes { node: usize, dep: usize },
+}
+
+impl std::fmt::Display for WorkflowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkflowError::Graph(e) => e.fmt(f),
+            WorkflowError::Solve { node, name, err } => {
+                write!(f, "node {node} ('{name}'): {err}")
+            }
+            WorkflowError::DepNeverFinishes { node, dep } => {
+                write!(f, "node {node} depends on node {dep} which never finishes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WorkflowError {}
+
+impl From<GraphError> for WorkflowError {
+    fn from(e: GraphError) -> Self {
+        WorkflowError::Graph(e)
+    }
 }
 
 /// Consumers of each pool (node ids), from the wiring.

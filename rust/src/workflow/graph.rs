@@ -67,19 +67,32 @@ pub struct Workflow {
 }
 
 /// Graph-structure error.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum GraphError {
-    #[error("workflow has a dependency cycle involving node {0}")]
     Cycle(usize),
-    #[error("node {node} references missing {what} {index}")]
     BadRef {
         node: usize,
         what: &'static str,
         index: usize,
     },
-    #[error("node {node}: {msg}")]
     BadNode { node: usize, msg: String },
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Cycle(n) => {
+                write!(f, "workflow has a dependency cycle involving node {n}")
+            }
+            GraphError::BadRef { node, what, index } => {
+                write!(f, "node {node} references missing {what} {index}")
+            }
+            GraphError::BadNode { node, msg } => write!(f, "node {node}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 impl Workflow {
     pub fn new() -> Self {

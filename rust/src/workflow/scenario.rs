@@ -40,6 +40,9 @@ pub struct VideoScenario {
     pub t3_time: f64,
     /// Fraction of the link initially assigned to task 1's download.
     pub frac_task1: f64,
+    /// Task-model variant: model task 2 as a burst consumer (all input
+    /// before any output) instead of the paper's stream model.
+    pub t2_burst: bool,
 }
 
 impl Default for VideoScenario {
@@ -54,8 +57,28 @@ impl Default for VideoScenario {
             t2_time: 5.0,
             t3_time: 3.0,
             frac_task1: 0.5,
+            t2_burst: false,
         }
     }
+}
+
+/// One scenario variation for a sweep batch: the knobs the paper's "what
+/// if" analyses turn (link prioritization, input rate, data volume,
+/// resource speed) plus a task-model variant. Applied to a base
+/// [`VideoScenario`] via [`VideoScenario::perturbed`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Perturbation {
+    /// Set the link fraction assigned to task 1's download (Fig 7 x-axis).
+    Fraction(f64),
+    /// Scale the shared link's data rate (input-rate variant).
+    LinkRateScale(f64),
+    /// Scale the input data volume (the §6 scaling axis).
+    InputScale(f64),
+    /// Scale every task's CPU/IO cost (resource-demand variant).
+    CpuScale(f64),
+    /// Swap task 2's stream data requirement for a burst requirement
+    /// (task-model variant).
+    Task2Burst,
 }
 
 /// Node ids of the built workflow.
@@ -86,6 +109,28 @@ impl VideoScenario {
     pub fn with_fraction(mut self, f: f64) -> Self {
         self.frac_task1 = f;
         self
+    }
+
+    /// Apply one sweep perturbation, returning the varied scenario. The
+    /// receiver is the immutable base model a sweep batch shares across
+    /// workers; every variant is a cheap value-level copy.
+    pub fn perturbed(&self, p: &Perturbation) -> VideoScenario {
+        let mut sc = self.clone();
+        match *p {
+            Perturbation::Fraction(f) => sc.frac_task1 = f,
+            Perturbation::LinkRateScale(s) => sc.link_rate *= s,
+            Perturbation::InputScale(s) => {
+                sc = sc.with_input_size(self.input_size * s);
+            }
+            Perturbation::CpuScale(s) => {
+                sc.t1_cpu *= s;
+                sc.t1_decode_cpu *= s;
+                sc.t2_time *= s;
+                sc.t3_time *= s;
+            }
+            Perturbation::Task2Burst => sc.t2_burst = true,
+        }
+        sc
     }
 
     /// A download is a process whose single resource is the link data rate:
@@ -138,9 +183,15 @@ impl VideoScenario {
             StartRule::default(),
         );
 
-        // task 2: rotate — pure stream, local execution time spread evenly
-        let t2 = ProcessBuilder::new("task2-rotate", self.input_size)
-            .stream_data("video", self.input_size)
+        // task 2: rotate — pure stream by default, burst under the
+        // Task2Burst model variant
+        let t2b = ProcessBuilder::new("task2-rotate", self.input_size);
+        let t2b = if self.t2_burst {
+            t2b.burst_data("video", self.input_size)
+        } else {
+            t2b.stream_data("video", self.input_size)
+        };
+        let t2 = t2b
             .stream_resource("io", self.t2_time)
             .identity_output("rotated")
             .build();
@@ -192,6 +243,165 @@ impl VideoScenario {
                 link_pool,
             },
         )
+    }
+}
+
+/// A genomics-flavoured evaluation workflow (the paper's intro motivates
+/// genome analysis): per sample, a sequencer dump is downloaded, QC-filtered
+/// (stream), and aligned (burst — the aligner indexes the full sample
+/// first); variants are called from all alignments (burst join) and
+/// summarized. Two samples share the ingest link; QC/align/call share a CPU
+/// pool. Used by the conformance tests and as a second workload for the
+/// sweep engine.
+#[derive(Clone, Debug)]
+pub struct GenomicsScenario {
+    /// Raw reads per sample (bytes).
+    pub sample_bytes: f64,
+    /// QC output per sample (bytes).
+    pub filtered_bytes: f64,
+    /// Alignment output per sample (bytes).
+    pub bam_bytes: f64,
+    /// Called-variant output (bytes).
+    pub vcf_bytes: f64,
+    /// Shared ingest-link rate (bytes/s).
+    pub link_rate: f64,
+    /// Shared CPU pool capacity (cores).
+    pub cores: f64,
+    /// Ingest-link fraction initially assigned to sample 0.
+    pub frac_sample1: f64,
+}
+
+impl Default for GenomicsScenario {
+    fn default() -> Self {
+        GenomicsScenario {
+            sample_bytes: 4e9,
+            filtered_bytes: 3e9,
+            bam_bytes: 1.5e9,
+            vcf_bytes: 50e6,
+            link_rate: 100e6,
+            cores: 8.0,
+            frac_sample1: 0.5,
+        }
+    }
+}
+
+impl GenomicsScenario {
+    pub fn with_fraction(mut self, f: f64) -> Self {
+        self.frac_sample1 = f;
+        self
+    }
+
+    /// Build the 8-process workflow (2 × ingest/qc/align + call + report).
+    pub fn build(&self) -> Workflow {
+        let mut wf = Workflow::new();
+        let link = wf.add_pool("ingest-link", PwPoly::constant(self.link_rate));
+        let cpu = wf.add_pool("cpu", PwPoly::constant(self.cores));
+        let mut align_nodes = vec![];
+
+        for s in 0..2 {
+            let dl = ProcessBuilder::new(&format!("ingest-s{s}"), self.sample_bytes)
+                .stream_data("remote", self.sample_bytes)
+                .stream_resource("link", self.sample_bytes)
+                .identity_output("raw")
+                .build();
+            let dl_n = wf.add_node(
+                dl,
+                vec![DataSource::External(PwPoly::constant(self.sample_bytes))],
+                vec![if s == 0 {
+                    ResourceSource::PoolFraction {
+                        pool: link,
+                        fraction: self.frac_sample1,
+                    }
+                } else {
+                    ResourceSource::PoolResidual { pool: link }
+                }],
+                StartRule::default(),
+            );
+
+            let qc = ProcessBuilder::new(&format!("qc-s{s}"), self.filtered_bytes)
+                .stream_data("raw", self.sample_bytes)
+                .stream_resource("cpu", 120.0)
+                .identity_output("filtered")
+                .build();
+            let qc_n = wf.add_node(
+                qc,
+                vec![DataSource::ProcessOutput {
+                    node: dl_n,
+                    output: 0,
+                }],
+                vec![ResourceSource::PoolFraction {
+                    pool: cpu,
+                    fraction: 2.0 / self.cores,
+                }],
+                StartRule::default(),
+            );
+
+            let align = ProcessBuilder::new(&format!("align-s{s}"), self.bam_bytes)
+                .burst_data("filtered", self.filtered_bytes)
+                .stream_resource("cpu", 600.0)
+                .identity_output("bam")
+                .build();
+            let align_n = wf.add_node(
+                align,
+                vec![DataSource::ProcessOutput {
+                    node: qc_n,
+                    output: 0,
+                }],
+                vec![ResourceSource::PoolFraction {
+                    pool: cpu,
+                    fraction: 2.0 / self.cores,
+                }],
+                StartRule::default(),
+            );
+            align_nodes.push(align_n);
+        }
+
+        let call = ProcessBuilder::new("call-variants", self.vcf_bytes)
+            .burst_data("bam0", self.bam_bytes)
+            .burst_data("bam1", self.bam_bytes)
+            .stream_resource("cpu", 300.0)
+            .identity_output("vcf")
+            .build();
+        let call_n = wf.add_node(
+            call,
+            vec![
+                DataSource::ProcessOutput {
+                    node: align_nodes[0],
+                    output: 0,
+                },
+                DataSource::ProcessOutput {
+                    node: align_nodes[1],
+                    output: 0,
+                },
+            ],
+            vec![ResourceSource::PoolFraction {
+                pool: cpu,
+                fraction: 1.0,
+            }],
+            StartRule {
+                at: 0.0,
+                after: align_nodes.clone(),
+            },
+        );
+
+        let report = ProcessBuilder::new("report", 1e6)
+            .stream_data("vcf", self.vcf_bytes)
+            .stream_resource("cpu", 5.0)
+            .identity_output("html")
+            .build();
+        wf.add_node(
+            report,
+            vec![DataSource::ProcessOutput {
+                node: call_n,
+                output: 0,
+            }],
+            vec![ResourceSource::PoolFraction {
+                pool: cpu,
+                fraction: 1.0 / self.cores,
+            }],
+            StartRule::default(),
+        );
+        wf
     }
 }
 
@@ -290,5 +500,63 @@ mod tests {
             e100 <= e1 + 4,
             "events grew with input size: {e1} -> {e100}"
         );
+    }
+
+    /// Perturbations are pure value transforms of the shared base model.
+    #[test]
+    fn perturbations_apply_expected_knobs() {
+        let base = VideoScenario::default();
+        let f = base.perturbed(&Perturbation::Fraction(0.9));
+        assert_eq!(f.frac_task1, 0.9);
+        assert_eq!(f.input_size, base.input_size);
+
+        let r = base.perturbed(&Perturbation::LinkRateScale(2.0));
+        assert!((r.link_rate - 2.0 * base.link_rate).abs() < 1e-6);
+
+        let s = base.perturbed(&Perturbation::InputScale(10.0));
+        assert!((s.input_size - 10.0 * base.input_size).abs() < 1.0);
+        assert!((s.link_rate - base.link_rate).abs() < 1e-9); // rate fixed
+
+        let c = base.perturbed(&Perturbation::CpuScale(0.5));
+        assert!((c.t1_cpu - 41.0).abs() < 1e-9);
+
+        let b = base.perturbed(&Perturbation::Task2Burst);
+        assert!(b.t2_burst && !base.t2_burst);
+        // base untouched throughout
+        assert_eq!(base.frac_task1, 0.5);
+    }
+
+    /// The Task2Burst model variant delays the workflow at high fractions
+    /// (task 2 can no longer pipeline behind its download).
+    #[test]
+    fn task2_burst_variant_slows_high_fraction() {
+        let mk = |sc: VideoScenario| {
+            let (wf, _) = sc.build();
+            analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap()
+        };
+        let base = VideoScenario::default().with_fraction(0.95);
+        let stream = mk(base.clone());
+        let burst = mk(base.perturbed(&Perturbation::Task2Burst));
+        assert!(
+            burst > stream + 3.0,
+            "burst {burst} should exceed stream {stream} by the t2 runtime"
+        );
+    }
+
+    /// The genomics workflow validates, solves, and has the expected shape.
+    #[test]
+    fn genomics_scenario_builds_and_solves() {
+        let wf = GenomicsScenario::default().build();
+        assert_eq!(wf.nodes.len(), 8);
+        assert_eq!(wf.pools.len(), 2);
+        wf.validate().unwrap();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        let mk = wa.makespan.expect("genomics workflow finishes");
+        // ingest of 4 GB at ≤100 MB/s alone takes ≥ 40 s; alignment adds
+        // hundreds of CPU-seconds at 2 cores
+        assert!(mk > 100.0, "{mk}");
     }
 }

@@ -1,0 +1,199 @@
+//! Differential conformance: Algorithm 2 (`solver::exact`) vs Algorithm 1
+//! (`solver::grid`) must agree — on randomized single-task scenarios and on
+//! the genomics + video example workflows — in finish time, pointwise
+//! progress, and per-segment bottleneck attribution.
+//!
+//! Attribution is checked semantically: inside a segment the exact solver
+//! labels `Data(k)`, progress must ride the data envelope; inside a
+//! `Resource(l)` segment, the progress slope must equal the allocated rate
+//! divided by the marginal cost `R'_Rl(p)`.
+
+use bottlemod::model::{Process, ProcessBuilder, ProcessInputs};
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::{solve, solve_grid, Analysis, Bottleneck, SolverOpts};
+use bottlemod::util::harness::check_property;
+use bottlemod::util::Rng;
+use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::workflow::scenario::{GenomicsScenario, VideoScenario};
+
+const GRID_STEPS: usize = 20_000;
+
+/// Random monotone PL cumulative input over [0, ~100] reaching `total`.
+fn random_cumulative(rng: &mut Rng, total: f64) -> PwPoly {
+    let n = 1 + rng.below(5);
+    let mut points = vec![(0.0, 0.0)];
+    for i in 0..n {
+        let (x, y) = points[i];
+        points.push((
+            x + rng.range(2.0, 25.0),
+            (y + rng.range(0.0, total * 0.6)).min(total),
+        ));
+    }
+    let (x, y) = *points.last().unwrap();
+    if y < total {
+        points.push((x + rng.range(2.0, 25.0), total));
+    }
+    PwPoly::from_points(&points)
+}
+
+/// Random single process with 1-2 data inputs and 0-2 stream resources.
+fn random_scenario(rng: &mut Rng) -> (Process, ProcessInputs) {
+    let max_p = rng.range(50.0, 200.0);
+    let mut b = ProcessBuilder::new("rand", max_p);
+    let k = 1 + rng.below(2);
+    let mut data = vec![];
+    for i in 0..k {
+        let total = rng.range(50.0, 300.0);
+        if rng.f64() < 0.3 {
+            b = b.burst_data(&format!("d{i}"), total);
+        } else {
+            b = b.stream_data(&format!("d{i}"), total);
+        }
+        data.push(random_cumulative(rng, total));
+    }
+    let l = rng.below(3);
+    let mut resources = vec![];
+    for i in 0..l {
+        b = b.stream_resource(&format!("r{i}"), rng.range(10.0, 120.0));
+        let r1 = rng.range(0.2, 3.0);
+        let r2 = rng.range(0.2, 3.0);
+        let t_switch = rng.range(5.0, 80.0);
+        resources.push(PwPoly::step(0.0, t_switch, r1, r2));
+    }
+    (
+        b.identity_output("out").build(),
+        ProcessInputs {
+            data,
+            resources,
+            start_time: 0.0,
+        },
+    )
+}
+
+/// Differential check of one (process, inputs) pair. `tag` labels errors.
+fn check_agreement(
+    process: &Process,
+    inputs: &ProcessInputs,
+    exact: &Analysis,
+    tag: &str,
+) -> Result<(), String> {
+    let span = exact.finish_time.map(|f| f - inputs.start_time).unwrap_or(500.0) + 20.0;
+    let grid = solve_grid(process, inputs, span, GRID_STEPS);
+    let dt = span / GRID_STEPS as f64;
+
+    // ---- finish times ---------------------------------------------------
+    match (exact.finish_time, grid.finish_time) {
+        (Some(a), Some(b)) => {
+            if (a - b).abs() > 5.0 * dt + 1e-6 {
+                return Err(format!("{tag}: finish exact {a} vs grid {b} (dt {dt})"));
+            }
+        }
+        (None, None) => {}
+        (a, b) => return Err(format!("{tag}: finish mismatch exact {a:?} vs grid {b:?}")),
+    }
+
+    // ---- pointwise progress --------------------------------------------
+    for i in (0..grid.ts.len()).step_by(499) {
+        let t = grid.ts[i];
+        let pe = exact.progress.eval(t);
+        let pg = grid.progress[i];
+        let tol = 5.0 * dt * slope_bound(exact, t) + 1e-2 * (1.0 + pe.abs());
+        if (pe - pg).abs() > tol {
+            return Err(format!("{tag}: at t={t} exact {pe} vs grid {pg}"));
+        }
+    }
+
+    // ---- bottleneck attribution per segment -----------------------------
+    for seg in &exact.segments {
+        let end = seg.end.min(exact.finish_time.unwrap_or(f64::INFINITY));
+        if !(end - seg.start).is_finite() || end - seg.start < 20.0 * dt {
+            continue; // too short to probe numerically
+        }
+        let t = 0.5 * (seg.start + end);
+        let p = exact.progress.eval(t);
+        match seg.bottleneck {
+            Bottleneck::Data(_) => {
+                // data-limited: progress rides the envelope
+                let pd = exact.pd.func.eval(t);
+                if (p - pd).abs() > 1e-6 * (1.0 + pd.abs()) + 1e-9 {
+                    return Err(format!(
+                        "{tag}: Data segment at t={t} has P={p} off envelope {pd}"
+                    ));
+                }
+            }
+            Bottleneck::Resource(l) => {
+                // stalls (flat progress while paying a jump) are legitimate
+                let slope = exact.progress.slope_right(t);
+                if slope.abs() < 1e-12 {
+                    continue;
+                }
+                let alloc = inputs.resources[l].eval(t);
+                let cost = process.res_reqs[l].func.derivative().eval(p + 1e-9);
+                if cost > 1e-12 {
+                    let want = alloc / cost;
+                    if (slope - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        return Err(format!(
+                            "{tag}: Resource({l}) segment at t={t}: P'={slope} vs I/R'={want}"
+                        ));
+                    }
+                }
+            }
+            Bottleneck::None => {}
+        }
+    }
+    Ok(())
+}
+
+/// Max |P'| near t, to convert grid time-error into progress-error.
+fn slope_bound(exact: &Analysis, t: f64) -> f64 {
+    exact
+        .progress
+        .slope_right(t)
+        .abs()
+        .max(exact.progress.slope_right((t - 1e-6).max(exact.start_time)).abs())
+}
+
+#[test]
+fn randomized_single_task_conformance() {
+    check_property("exact == grid on random scenarios", 60, |rng| {
+        let (p, inputs) = random_scenario(rng);
+        let exact = solve(&p, &inputs, &SolverOpts::default())
+            .map_err(|e| format!("solve: {e}"))?;
+        check_agreement(&p, &inputs, &exact, "random")
+    });
+}
+
+#[test]
+fn video_workflow_conformance() {
+    for f in [0.5, 0.95] {
+        let sc = VideoScenario::default().with_fraction(f);
+        let (wf, _) = sc.build();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        for (i, a) in wa.analyses.iter().enumerate() {
+            let node = &wf.nodes[i];
+            check_agreement(
+                &node.process,
+                &wa.inputs[i],
+                a,
+                &format!("video f={f} node {}", node.process.name),
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
+fn genomics_workflow_conformance() {
+    let wf = GenomicsScenario::default().build();
+    let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+    for (i, a) in wa.analyses.iter().enumerate() {
+        let node = &wf.nodes[i];
+        check_agreement(
+            &node.process,
+            &wa.inputs[i],
+            a,
+            &format!("genomics node {}", node.process.name),
+        )
+        .unwrap_or_else(|e| panic!("{e}"));
+    }
+}

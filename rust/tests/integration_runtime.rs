@@ -5,13 +5,17 @@
 
 use bottlemod::model::{ProcessBuilder, ProcessInputs};
 use bottlemod::pwfn::PwPoly;
-use bottlemod::runtime::sweep::{B, K, L, S2, T};
+use bottlemod::runtime::xla_sweep::{B, K, L, S2, T};
 use bottlemod::runtime::Runtime;
 use bottlemod::solver::{solve, SolverOpts};
 
 const BIG: f32 = 1e30;
 
 fn runtime() -> Option<Runtime> {
+    if !Runtime::backend_available() {
+        eprintln!("skipping: PJRT execution backend not compiled in");
+        return None;
+    }
     if !Runtime::default_dir().join("manifest.json").exists() {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
         return None;

@@ -217,6 +217,172 @@ fn data_progress_composition_pointwise() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// pwfn algebra invariants on randomized piecewise inputs
+// ---------------------------------------------------------------------------
+
+/// Random piecewise polynomial (degree ≤ 2) with an infinite tail.
+fn random_pw(rng: &mut Rng) -> bottlemod::pwfn::PwPoly {
+    use bottlemod::pwfn::{poly::Poly, PwPoly};
+    let pieces = 1 + rng.below(5);
+    let mut breaks = vec![rng.range(-2.0, 2.0)];
+    for i in 0..pieces - 1 {
+        let prev = breaks[i];
+        breaks.push(prev + rng.range(0.5, 8.0));
+    }
+    breaks.push(f64::INFINITY);
+    let polys = (0..pieces)
+        .map(|_| {
+            let deg = rng.below(3);
+            Poly::new((0..=deg).map(|_| rng.range(-3.0, 3.0)).collect())
+        })
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+/// Sample points covering the function's breaks and the gaps between them,
+/// avoiding exact breakpoints (where right-continuity vs left limits would
+/// make pointwise comparisons ambiguous).
+fn sample_points(rng: &mut Rng, f: &bottlemod::pwfn::PwPoly, n: usize) -> Vec<f64> {
+    let lo = f.x_min() - 3.0;
+    let hi = f
+        .breaks
+        .iter()
+        .filter(|b| b.is_finite())
+        .fold(f.x_min(), |m, &b| m.max(b))
+        + 10.0;
+    (0..n).map(|_| rng.range(lo, hi)).collect()
+}
+
+/// Strictly increasing piecewise-linear function through random points.
+fn random_increasing_pl(rng: &mut Rng) -> (bottlemod::pwfn::PwPoly, f64, f64) {
+    let n = 2 + rng.below(5);
+    let mut points = vec![(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0))];
+    for i in 0..n {
+        let (x, y) = points[i];
+        points.push((x + rng.range(0.5, 5.0), y + rng.range(0.5, 5.0)));
+    }
+    let f = bottlemod::pwfn::PwPoly::from_points(&points);
+    // exclude the trailing constant extension: the invertible span is
+    // [first x, last x) in x and [first y, last y) in y
+    let last = points[points.len() - 1];
+    (f, points[0].0, last.0)
+}
+
+#[test]
+fn add_mul_closed_under_refinement() {
+    check_property("add/mul == pointwise, stable under refine", 300, |rng| {
+        let f = random_pw(rng);
+        let g = random_pw(rng);
+        let sum = f.add(&g);
+        let prod = f.mul(&g);
+        // refining with arbitrary extra cuts must not change either result
+        let cuts: Vec<f64> = (0..4).map(|_| rng.range(-5.0, 40.0)).collect();
+        let sum_r = sum.refine(&cuts);
+        let prod_r = prod.refine(&cuts);
+        for &x in &sample_points(rng, &sum, 60) {
+            let want_sum = f.eval(x) + g.eval(x);
+            let want_prod = f.eval(x) * g.eval(x);
+            for (got, want, what) in [
+                (sum.eval(x), want_sum, "add"),
+                (sum_r.eval(x), want_sum, "add+refine"),
+                (prod.eval(x), want_prod, "mul"),
+                (prod_r.eval(x), want_prod, "mul+refine"),
+            ] {
+                if (got - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                    return Err(format!("{what} at x={x}: {got} vs {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn min_envelope_below_inputs_with_correct_winners() {
+    use bottlemod::pwfn::PwPoly;
+    check_property("envelope <= all inputs, winner attains it", 300, |rng| {
+        let fns: Vec<PwPoly> = (0..3).map(|_| random_pw(rng)).collect();
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+        let env = PwPoly::min_envelope(&refs);
+        for &x in &sample_points(rng, &env.func, 80) {
+            let ev = env.func.eval(x);
+            let min_v = fns.iter().map(|f| f.eval(x)).fold(f64::INFINITY, f64::min);
+            let tol = 1e-6 * (1.0 + min_v.abs());
+            // lower envelope: matches the pointwise minimum
+            if (ev - min_v).abs() > tol {
+                return Err(format!("env({x})={ev} but min={min_v}"));
+            }
+            // attribution: the claimed winner attains the envelope value
+            let w = env.winner_at(x);
+            if w >= fns.len() {
+                return Err(format!("winner index {w} out of range at x={x}"));
+            }
+            let wv = fns[w].eval(x);
+            if (wv - ev).abs() > tol {
+                return Err(format!(
+                    "winner {w} at x={x} has value {wv}, envelope {ev}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compose_inverse_linear_roundtrip() {
+    check_property("f(f^-1(y)) == y and f^-1(f(x)) == x", 300, |rng| {
+        let (f, x0, x1) = random_increasing_pl(rng);
+        let inv = f.inverse_linear().map_err(|e| e.to_string())?;
+        let (y0, y1) = (f.eval(x0), f.eval_left(x1));
+        for _ in 0..40 {
+            let y = rng.range(y0, y1 - 1e-9);
+            let x = inv.eval(y);
+            let back = f.eval(x);
+            if (back - y).abs() > 1e-6 * (1.0 + y.abs()) {
+                return Err(format!("f(inv({y})) = {back}"));
+            }
+            let x_direct = rng.range(x0, x1 - 1e-9);
+            let roundtrip = inv.eval(f.eval(x_direct));
+            if (roundtrip - x_direct).abs() > 1e-6 * (1.0 + x_direct.abs()) {
+                return Err(format!("inv(f({x_direct})) = {roundtrip}"));
+            }
+        }
+        // compose-based check: inv ∘ f is the identity on the span
+        let ident = inv.compose(&f);
+        for _ in 0..20 {
+            let x = rng.range(x0, x1 - 1e-9);
+            let got = ident.eval(x);
+            if (got - x).abs() > 1e-6 * (1.0 + x.abs()) {
+                return Err(format!("(inv∘f)({x}) = {got}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn antiderivative_derivative_identity() {
+    check_property("d/dx ∫f == f", 300, |rng| {
+        let f = random_pw(rng);
+        let c0 = rng.range(-5.0, 5.0);
+        let g = f.antiderivative(c0).derivative();
+        for &x in &sample_points(rng, &f, 60) {
+            let want = f.eval(x);
+            let got = g.eval(x);
+            if (got - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                return Err(format!("at x={x}: {got} vs {want}"));
+            }
+        }
+        // and the antiderivative anchors at c0
+        let a = f.antiderivative(c0);
+        if (a.eval(f.x_min()) - c0).abs() > 1e-9 * (1.0 + c0.abs()) {
+            return Err(format!("F(x_min) = {} != {c0}", a.eval(f.x_min())));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn exact_pl_envelope_matches_f64() {
     use bottlemod::pwfn::{PwLinear, Rat};
