@@ -1,17 +1,26 @@
 //! The tentpole bench: the batched scenario-sweep engine vs the sequential
-//! sweeper on a 256-scenario batch.
+//! sweeper on a 256-scenario batch, plus the incremental (cached) engine
+//! on a 256-scenario single-node-perturbation batch.
 //!
-//! Checks two acceptance properties:
+//! Checks the acceptance properties:
 //!  * per-scenario results are **bit-for-bit identical** between the
 //!    sequential (1-thread) and parallel runs — full `Analysis` equality;
 //!  * with ≥ 4 cores the parallel batch achieves ≥ 3× the sequential
-//!    throughput (asserted; set `BOTTLEMOD_BENCH_NO_ASSERT=1` to only
-//!    report, e.g. on loaded CI machines).
+//!    throughput;
+//!  * on a single-node-perturbation batch the cached sweep's ranked
+//!    `BottleneckReport` and every per-scenario `Analysis` are bit-for-bit
+//!    equal to the cold sequential run, with **≥ 2×** wall-clock
+//!    improvement at a **≥ 50 %** cache hit rate.
+//!
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines); the
+//! bit-for-bit checks always assert.
 //!
 //! Run: `cargo bench --bench sweep_parallel`
 
 use std::sync::Arc;
 
+use bottlemod::runtime::cache::AnalysisCache;
 use bottlemod::runtime::sweep::{BottleneckReport, SweepBatch};
 use bottlemod::util::harness::bench_once;
 use bottlemod::util::par::num_threads;
@@ -92,5 +101,79 @@ fn main() {
         println!("\nacceptance: {speedup:.2}x >= 3x on {threads} threads ✓");
     } else if threads < 4 {
         println!("\n(acceptance assert skipped: only {threads} threads available)");
+    }
+
+    incremental_section(&base, assert_ok);
+}
+
+/// The incremental-engine acceptance: a 256-scenario batch of single-node
+/// perturbations (each touches only task 1's CPU model, dirty cone
+/// `{task1, task3}`), cold vs cached.
+fn incremental_section(base: &Arc<VideoScenario>, assert_ok: bool) {
+    const N: usize = 256;
+    let batch: Vec<Perturbation> = (0..N)
+        .map(|i| Perturbation::Task1CpuScale(0.25 + 1.5 * i as f64 / N as f64))
+        .collect();
+
+    // correctness first: the cached run (sequential AND parallel) must be
+    // bit-for-bit the cold sequential run, report included
+    let cold_sweep = SweepBatch::new(base.clone()).with_threads(1);
+    let (cold_out, cold_report) = cold_sweep.run_report(&batch).expect("cold sweep");
+    let warm_par = SweepBatch::new(base.clone())
+        .with_threads(num_threads())
+        .with_new_cache();
+    let (warm_par_out, warm_par_report) = warm_par.run_report(&batch).expect("warm sweep");
+    assert_eq!(
+        cold_out, warm_par_out,
+        "cached parallel sweep must be bit-for-bit identical to the cold \
+         sequential run (every per-scenario Analysis)"
+    );
+    assert_eq!(
+        cold_report.ranked, warm_par_report.ranked,
+        "ranked BottleneckReport must be bit-for-bit identical"
+    );
+    println!(
+        "\n== incremental sweep engine ==\n\
+         determinism: {N} single-node scenarios bit-for-bit identical, cold vs cached ✓"
+    );
+
+    // throughput: cold vs cached, both sequential, so the measured gain is
+    // the cache's alone (a fresh cache per iteration: the batch itself must
+    // pay for its own warm-up and still win)
+    let cold = bench_once(&format!("{N}-scenario cold sweep, 1 thread"), 3, || {
+        cold_sweep.run(&batch).unwrap()
+    });
+    let warm = bench_once(&format!("{N}-scenario cached sweep, 1 thread"), 3, || {
+        SweepBatch::new(base.clone())
+            .with_threads(1)
+            .with_cache(Arc::new(AnalysisCache::new()))
+            .run(&batch)
+            .unwrap()
+    });
+    println!("{}", cold.report());
+    println!("{}", warm.report());
+    let speedup = cold.per_iter.mean / warm.per_iter.mean;
+    let stats = warm_par_report.cache.expect("cached run reports stats");
+    println!(
+        "incremental speedup: {speedup:.2}x ({} cold vs {} cached per {N}-scenario batch)",
+        fmt_duration(cold.per_iter.mean),
+        fmt_duration(warm.per_iter.mean)
+    );
+    println!("cache: {stats}");
+
+    if assert_ok {
+        assert!(
+            stats.hit_rate() >= 0.5,
+            "expected >= 50% hit rate on a single-node-perturbation batch, got {:.1}%",
+            stats.hit_rate() * 100.0
+        );
+        assert!(
+            speedup >= 2.0,
+            "expected >= 2x from incremental re-analysis, got {speedup:.2}x"
+        );
+        println!(
+            "acceptance: {speedup:.2}x >= 2x with {:.1}% >= 50% hit rate ✓",
+            stats.hit_rate() * 100.0
+        );
     }
 }

@@ -5,6 +5,10 @@
 //! resource manager queries. This module provides that shape without any
 //! network dependency: a worker pool consuming analysis jobs from a queue,
 //! plus a JSON-lines stdio front end (`bottlemod serve`).
+//!
+//! The wire protocol — request/response schemas for the `analyze`, `sweep`
+//! and `ping` ops, error payloads, and the sweep response's cache-stats
+//! fields — is documented with runnable examples in `docs/SERVICE.md`.
 
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
@@ -12,9 +16,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::model::spec::parse_workflow;
+use crate::runtime::cache::AnalysisCache;
 use crate::solver::SolverOpts;
 use crate::util::Json;
-use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::engine::analyze_fixpoint_cached;
 use crate::workflow::scenario::VideoScenario;
 
 use super::sweeper::{best_fraction, ExactSweep, SweepBatch};
@@ -37,13 +42,33 @@ pub struct JobResult {
     pub payload: Json,
 }
 
-/// Run one job to completion.
+/// Run one job to completion with no *shared* analysis cache: `analyze`
+/// runs uncached; `sweep` still attaches a fresh per-call cache (the
+/// incremental engine is its normal mode and the response always carries
+/// a `cache` stats object), it just cannot reuse anything across calls.
 pub fn run_job(job: &Job) -> JobResult {
+    run_job_cached(job, None)
+}
+
+/// Run one job, optionally against a service-lifetime [`AnalysisCache`]:
+/// repeat or overlapping requests (the §7 "repeatedly executed online"
+/// deployment) are answered incrementally, while every response still
+/// reports per-request cache stats. Results are bit-for-bit identical with
+/// or without the cache. The per-request stats are counter deltas on the
+/// shared cache: exact for the sequential stdio server, approximate when
+/// [`Coordinator`] workers run jobs concurrently (another job's lookups
+/// can land in the window; outcomes are never affected).
+pub fn run_job_cached(job: &Job, cache: Option<&Arc<AnalysisCache>>) -> JobResult {
     match job {
         Job::Analyze { id, spec } => {
             let payload = match parse_workflow(spec) {
                 Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
-                Ok(wf) => match analyze_fixpoint(&wf, &SolverOpts::default(), 6) {
+                Ok(wf) => match analyze_fixpoint_cached(
+                    &wf,
+                    &SolverOpts::default(),
+                    6,
+                    cache.map(|c| c.as_ref()),
+                ) {
                     Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
                     Ok(wa) => {
                         let schedule: Vec<Json> = wa
@@ -113,9 +138,13 @@ pub fn run_job(job: &Job) -> JobResult {
                 .iter()
                 .map(|&f| Perturbation::Fraction(f))
                 .collect();
-            let run = SweepBatch::new(std::sync::Arc::new(VideoScenario::default()))
-                .with_threads(crate::util::par::num_threads())
-                .run_report(&batch);
+            let engine = SweepBatch::new(std::sync::Arc::new(VideoScenario::default()))
+                .with_threads(crate::util::par::num_threads());
+            let engine = match cache {
+                Some(c) => engine.with_cache(c.clone()),
+                None => engine.with_new_cache(),
+            };
+            let run = engine.run_report(&batch);
             let (outcomes, report) = match run {
                 Ok(r) => r,
                 Err(e) => {
@@ -147,16 +176,29 @@ pub fn run_job(job: &Job) -> JobResult {
                     ])
                 })
                 .collect();
+            let mut fields = vec![
+                ("fractions", Json::arr_f64(&sweep.fractions)),
+                ("totals", Json::arr_f64(&sweep.totals)),
+                ("best_fraction", Json::Num(best_f)),
+                ("best_total", Json::Num(best_t)),
+                ("events", Json::Num(sweep.events as f64)),
+                ("ranked_bottlenecks", Json::Arr(ranked)),
+            ];
+            if let Some(stats) = report.cache {
+                fields.push((
+                    "cache",
+                    Json::obj(vec![
+                        ("hits", Json::Num(stats.hits as f64)),
+                        ("misses", Json::Num(stats.misses as f64)),
+                        ("hit_rate", Json::Num(stats.hit_rate())),
+                        ("entries", Json::Num(stats.entries as f64)),
+                        ("evictions", Json::Num(stats.evictions as f64)),
+                    ]),
+                ));
+            }
             JobResult {
                 id: *id,
-                payload: Json::obj(vec![
-                    ("fractions", Json::arr_f64(&sweep.fractions)),
-                    ("totals", Json::arr_f64(&sweep.totals)),
-                    ("best_fraction", Json::Num(best_f)),
-                    ("best_total", Json::Num(best_t)),
-                    ("events", Json::Num(sweep.events as f64)),
-                    ("ranked_bottlenecks", Json::Arr(ranked)),
-                ]),
+                payload: Json::obj(fields),
             }
         }
     }
@@ -174,16 +216,20 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Job>();
         let (rtx, rrx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
+        // one analysis cache for the pool's lifetime: repeat/overlapping
+        // jobs are answered incrementally across workers
+        let cache = Arc::new(AnalysisCache::new());
         let workers = (0..n_workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let rtx = rtx.clone();
+                let cache = Arc::clone(&cache);
                 std::thread::spawn(move || loop {
                     let job = match rx.lock().unwrap().recv() {
                         Ok(j) => j,
                         Err(_) => break,
                     };
-                    let _ = rtx.send(run_job(&job));
+                    let _ = rtx.send(run_job_cached(&job, Some(&cache)));
                 })
             })
             .collect();
@@ -213,7 +259,11 @@ impl Coordinator {
 
 /// JSON-lines server: one request object per line on stdin, one response
 /// per line on stdout. Request: `{"id": 1, "op": "analyze", "spec": {...}}`.
+/// Holds one [`AnalysisCache`] for the whole session, so repeat requests
+/// are answered incrementally (each response still reports per-request
+/// stats). Full protocol reference: `docs/SERVICE.md`.
 pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::Result<()> {
+    let cache = Arc::new(AnalysisCache::new());
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
@@ -234,7 +284,7 @@ pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::
         let resp = match req.get("op").as_str() {
             Some("analyze") => {
                 let spec = req.get("spec").to_string();
-                run_job(&Job::Analyze { id, spec }).payload
+                run_job_cached(&Job::Analyze { id, spec }, Some(&cache)).payload
             }
             Some("sweep") => {
                 let fractions: Vec<f64> = req
@@ -245,7 +295,7 @@ pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::
                         let n = req.get("points").as_f64().unwrap_or(40.0) as usize;
                         crate::coordinator::sweeper::fig7_fractions(n.max(1))
                     });
-                run_job(&Job::Sweep { id, fractions }).payload
+                run_job_cached(&Job::Sweep { id, fractions }, Some(&cache)).payload
             }
             Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
             other => Json::obj(vec![(
@@ -341,6 +391,10 @@ mod tests {
         let best = r.payload.get("best_fraction").as_f64().unwrap();
         assert!((best - 0.93).abs() < 1e-9, "{best}");
         assert_eq!(r.payload.get("totals").as_arr().unwrap().len(), 4);
+        // the incremental engine reports its cache behaviour
+        let cache = r.payload.get("cache");
+        assert!(cache.get("hits").as_f64().is_some());
+        assert!(cache.get("hit_rate").as_f64().unwrap() >= 0.0);
         let ranked = r.payload.get("ranked_bottlenecks").as_arr().unwrap();
         assert!(!ranked.is_empty());
         assert!(ranked
@@ -379,5 +433,28 @@ mod tests {
         assert_eq!(resp.get("id").as_f64(), Some(3.0));
         assert_eq!(resp.get("totals").as_arr().unwrap().len(), 2);
         assert!((resp.get("best_fraction").as_f64().unwrap() - 0.9).abs() < 1e-9);
+    }
+
+    /// The server holds one analysis cache for the session: a repeated
+    /// sweep request re-solves nothing, identical results, and the stats
+    /// are reported per request (not lifetime totals).
+    #[test]
+    fn stdio_sweep_reuses_cache_across_requests() {
+        let line = "{\"op\": \"sweep\", \"id\": 1, \"fractions\": [0.5, 0.9]}\n";
+        let input = format!("{line}{line}");
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let r1 = Json::parse(lines[0]).unwrap();
+        let r2 = Json::parse(lines[1]).unwrap();
+        assert_eq!(r1.get("totals"), r2.get("totals"));
+        assert_eq!(r1.get("ranked_bottlenecks"), r2.get("ranked_bottlenecks"));
+        let c1 = r1.get("cache");
+        let c2 = r2.get("cache");
+        assert!(c1.get("misses").as_f64().unwrap() > 0.0);
+        assert_eq!(c2.get("misses").as_f64(), Some(0.0), "{c2:?}");
+        assert!(c2.get("hits").as_f64().unwrap() > 0.0);
     }
 }

@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+pub use crate::runtime::cache::{AnalysisCache, CacheStats};
 pub use crate::runtime::sweep::{
     BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch,
 };
@@ -48,7 +49,11 @@ pub fn exact_sweep(sc: &VideoScenario, fractions: &[f64], threads: usize) -> Exa
 }
 
 /// Like [`exact_sweep`], but also returning the ranked cross-scenario
-/// bottleneck report (what the `bottlemod sweep` CLI prints).
+/// bottleneck report (what the `bottlemod sweep` CLI prints). Runs
+/// incrementally — a fresh [`crate::runtime::cache::AnalysisCache`] is
+/// attached, and its statistics land in [`BottleneckReport::cache`]
+/// (fraction sweeps share fixpoint re-solves; results are bit-for-bit the
+/// cold ones either way).
 pub fn exact_sweep_report(
     sc: &VideoScenario,
     fractions: &[f64],
@@ -57,6 +62,7 @@ pub fn exact_sweep_report(
     let batch: Vec<Perturbation> = fractions.iter().map(|&f| Perturbation::Fraction(f)).collect();
     let (outcomes, report) = SweepBatch::new(Arc::new(sc.clone()))
         .with_threads(threads)
+        .with_new_cache()
         .run_report(&batch)
         .expect("sweep analysis");
     (
@@ -137,5 +143,8 @@ mod tests {
             .ranked
             .iter()
             .any(|r| r.bottleneck == "res:link" && r.scenarios == 8));
+        // the report path runs incrementally and exposes its cache stats
+        let stats = report.cache.expect("cache stats attached");
+        assert!(stats.hits + stats.misses > 0);
     }
 }

@@ -15,6 +15,25 @@
 //!
 //! The per-chunk rate is fixed when the chunk is scheduled
 //! (`bandwidth / active_transfers`), a standard DES approximation.
+//!
+//! # Invariants
+//!
+//! * The event queue is a min-heap on `(time, sequence)`; ties resolve by
+//!   insertion sequence, so a run is **deterministic** for a given
+//!   workload and chunking — required for the §6 comparison tables to be
+//!   reproducible.
+//! * A task's compute begins only after *all* of its input files are fully
+//!   staged (the WRENCH "independent execution units" property); outputs
+//!   materialize atomically at completion.
+//!
+//! # Cost model
+//!
+//! Every transferred chunk is ≥ 1 heap event, so simulating `B` bytes at
+//! chunk size `c` costs `Θ(B/c · log q)` (`q` = queue length) — the cost
+//! **scales with data volume**. This is the deliberate foil to
+//! [`crate::solver::exact`], whose cost depends on model complexity only:
+//! the pair quantifies the paper's §6 speed claim (BottleMod flat,
+//! DES linear in bytes).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

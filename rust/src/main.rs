@@ -147,6 +147,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         fmt_duration(exact_dt / n as f64),
         sweep.events
     );
+    if let Some(stats) = report.cache {
+        println!("analysis cache: {stats}");
+    }
 
     // print a compact table at decile fractions
     let mut rows = vec![vec!["fraction".to_string(), "predicted total (s)".to_string()]];

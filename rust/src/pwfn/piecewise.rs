@@ -72,6 +72,16 @@ impl PwPoly {
 
     /// Piecewise-linear interpolation through `(x, y)` points (at least two),
     /// extended with a constant after the last point.
+    ///
+    /// ```
+    /// use bottlemod::pwfn::PwPoly;
+    ///
+    /// // a stream input: 2 B/s for 2 s, then complete at 4 B
+    /// let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0)]);
+    /// assert_eq!(f.eval(1.0), 2.0);
+    /// assert_eq!(f.eval(10.0), 4.0); // constant extension
+    /// assert!(f.is_nondecreasing());
+    /// ```
     pub fn from_points(points: &[(f64, f64)]) -> Self {
         assert!(points.len() >= 2, "need at least two points");
         let mut breaks = Vec::with_capacity(points.len() + 1);
@@ -404,6 +414,21 @@ impl PwPoly {
 
     /// Lower envelope of several functions with per-piece winner indices.
     /// Ties are broken toward the lower index (stable attribution).
+    ///
+    /// The winner index is the raw material of bottleneck attribution: the
+    /// paper's `P_D(t) = min_k P_Dk(t)` keeps track of *which* data input
+    /// is the limiting one.
+    ///
+    /// ```
+    /// use bottlemod::pwfn::PwPoly;
+    ///
+    /// let f = PwPoly::linear_from(0.0, 0.0, 1.0); // x
+    /// let g = PwPoly::constant(3.0);              // crosses f at x = 3
+    /// let env = PwPoly::min_envelope(&[&f, &g]);
+    /// assert_eq!(env.winner_at(1.0), 0);  // f is below
+    /// assert_eq!(env.winner_at(10.0), 1); // g is below
+    /// assert_eq!(env.func.eval(10.0), 3.0);
+    /// ```
     pub fn min_envelope(fns: &[&PwPoly]) -> Envelope {
         assert!(!fns.is_empty());
         let mut env = Envelope {
@@ -435,6 +460,15 @@ impl PwPoly {
 
     /// First `x >= from` where `eval(x) >= y` for a monotonically
     /// nondecreasing function; `None` if never reached before `x_max`.
+    ///
+    /// ```
+    /// use bottlemod::pwfn::PwPoly;
+    ///
+    /// // a burst input: nothing until t = 5, then 10 B at once
+    /// let f = PwPoly::step(0.0, 5.0, 0.0, 10.0);
+    /// assert_eq!(f.first_reach(2.0, 0.0), Some(5.0));
+    /// assert_eq!(f.first_reach(11.0, 0.0), None);
+    /// ```
     pub fn first_reach(&self, y: f64, from: f64) -> Option<f64> {
         let from = from.max(self.breaks[0]);
         if self.eval(from) >= y - EPS * (1.0 + y.abs()) {
@@ -517,6 +551,21 @@ impl PwPoly {
     /// Compose `self(inner(x))` where `inner` is monotonically nondecreasing.
     /// Result breakpoints: the union of `inner`'s breaks and the preimages of
     /// `self`'s breaks under `inner`.
+    ///
+    /// This is the paper's chaining mechanism: a successor's data input is
+    /// `O_m(P(t))`, the producer's output function composed with its
+    /// progress function.
+    ///
+    /// ```
+    /// use bottlemod::pwfn::PwPoly;
+    ///
+    /// // output function O(p) = 3p over a progress that saturates at 2
+    /// let outer = PwPoly::linear_from(0.0, 0.0, 3.0);
+    /// let inner = PwPoly::from_points(&[(0.0, 0.0), (2.0, 2.0)]);
+    /// let chained = outer.compose(&inner);
+    /// assert_eq!(chained.eval(1.0), 3.0);
+    /// assert_eq!(chained.eval(5.0), 6.0);
+    /// ```
     pub fn compose(&self, inner: &PwPoly) -> PwPoly {
         let mut cuts: Vec<f64> = vec![];
         for &b in &self.breaks {

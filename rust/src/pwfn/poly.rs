@@ -1,10 +1,31 @@
 //! Dense univariate polynomials over `f64`.
 //!
-//! The building block of the piecewise-function substrate ([`super::piecewise`]).
-//! Coefficients are stored lowest-degree first: `c[0] + c[1] x + c[2] x^2 + ...`.
+//! The building block of the piecewise-function substrate
+//! ([`super::piecewise`]), which in turn carries every model function of
+//! paper §2/§4 (requirements, inputs, outputs, progress). Coefficients are
+//! stored lowest-degree first: `c[0] + c[1] x + c[2] x^2 + ...`.
 //! All piecewise machinery evaluates polynomials in a *local* coordinate
 //! (offset from the piece's left break) to keep conditioning sane, so the
 //! raw polynomial type is deliberately simple and allocation-friendly.
+//!
+//! # Invariants
+//!
+//! * Trailing (near-)zero coefficients are trimmed by [`Poly::new`]; the
+//!   zero polynomial is exactly `[0.0]`, so `degree()` is always defined.
+//! * Every operation is a **pure `f64` computation** — identical operands
+//!   give bit-identical results on any thread, which the sweep engine's
+//!   determinism contract and the analysis-cache keys inherit.
+//! * Root finding is exact (closed-form) for degree ≤ 2 and bracketed
+//!   bisection for higher degrees; returned roots lie in the queried
+//!   interval and are deduplicated to [`EPS`] tolerance.
+//!
+//! # Cost model
+//!
+//! Evaluation is Horner's rule, `O(degree)`; add/sub/scale are
+//! `O(degree)`, multiplication and composition `O(degree²)` on the tiny
+//! degrees (≤ 3 in practice) the models produce. Nothing here allocates
+//! proportionally to *data volume* — only to piece/degree counts, keeping
+//! the solver's §6 "flat in bytes" property intact.
 
 use std::fmt;
 

@@ -1,0 +1,522 @@
+//! DAG-aware analysis caching for incremental sweeps.
+//!
+//! The exact solver ([`crate::solver::exact::solve`]) is a pure function of
+//! `(Process, ProcessInputs, SolverOpts)`: same inputs, bit-for-bit same
+//! [`Analysis`]. A sweep batch of N perturbed scenarios re-solves every node
+//! of every scenario, yet most perturbations (one task's CPU scale, a
+//! task-model swap, ...) leave the upstream subgraph's materialized inputs
+//! *identical* — and the fixpoint engine re-solves unchanged nodes once per
+//! pass on top of that. [`AnalysisCache`] memoizes `solve` across all of it:
+//!
+//! * the key is a **content hash** of the full solver input — every
+//!   breakpoint and coefficient of every requirement/input `PwPoly`, the
+//!   start time, and the solver options — via a deterministic 128-bit
+//!   FNV-1a ([`Fnv128`]); no pointer identity, no randomized hasher state;
+//! * the value is an [`Arc<NodeSolve>`]: the [`Analysis`] plus the derived
+//!   output-over-time and resource-demand functions downstream consumers
+//!   need, so a hit shares everything without cloning a single `PwPoly`
+//!   *and* skips the derived piecewise algebra (compose / derivative /
+//!   multiply), not just the solve;
+//! * the map is **sharded** (key-selected mutexes) and designed to be
+//!   `Arc`-shared across the sweep engine's worker threads;
+//! * hit/miss/insert/eviction counters are atomic and exported as
+//!   [`CacheStats`] (surfaced in `BottleneckReport` and the service's
+//!   `sweep` op).
+//!
+//! Determinism contract: because the cached value is exactly what a fresh
+//! `solve` would return, a cached (even parallel) run is **bit-for-bit
+//! identical** to a cold sequential run — asserted by
+//! `tests/incremental_equivalence.rs` and `benches/sweep_parallel.rs`.
+//! A 128-bit key makes an accidental collision astronomically unlikely
+//! (~2^-64 at a billion entries); there is no second-chance verification.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::model::process::{Process, ProcessInputs};
+use crate::pwfn::{Poly, PwPoly};
+use crate::solver::{Analysis, SolverOpts};
+
+// ------------------------------------------------------------------ hashing
+
+/// Incremental 128-bit FNV-1a. Deterministic across runs and platforms
+/// (unlike `DefaultHasher`, whose `RandomState` is seeded per process) —
+/// cache keys must be stable so tests can assert cross-run reuse.
+#[derive(Clone, Debug)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Fnv128 {
+            state: FNV128_OFFSET,
+        }
+    }
+}
+
+impl Fnv128 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Hash the exact bit pattern of the float. `-0.0` and `0.0` hash
+    /// differently, which only ever causes a spurious *miss* — never a
+    /// wrong hit.
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+/// Types whose full mathematical content can be folded into a cache key.
+pub trait ContentHash {
+    fn content_hash(&self, h: &mut Fnv128);
+}
+
+impl ContentHash for Poly {
+    fn content_hash(&self, h: &mut Fnv128) {
+        h.write_usize(self.coeffs.len());
+        for &c in &self.coeffs {
+            h.write_f64(c);
+        }
+    }
+}
+
+impl ContentHash for PwPoly {
+    fn content_hash(&self, h: &mut Fnv128) {
+        h.write_usize(self.breaks.len());
+        for &b in &self.breaks {
+            h.write_f64(b);
+        }
+        for p in &self.polys {
+            p.content_hash(h);
+        }
+    }
+}
+
+impl ContentHash for Process {
+    fn content_hash(&self, h: &mut Fnv128) {
+        h.write_str(&self.name);
+        h.write_f64(self.max_progress);
+        h.write_usize(self.data_reqs.len());
+        for d in &self.data_reqs {
+            h.write_str(&d.name);
+            d.func.content_hash(h);
+        }
+        h.write_usize(self.res_reqs.len());
+        for r in &self.res_reqs {
+            h.write_str(&r.name);
+            r.func.content_hash(h);
+        }
+        h.write_usize(self.outputs.len());
+        for o in &self.outputs {
+            h.write_str(&o.name);
+            o.func.content_hash(h);
+        }
+    }
+}
+
+impl ContentHash for ProcessInputs {
+    fn content_hash(&self, h: &mut Fnv128) {
+        h.write_f64(self.start_time);
+        h.write_usize(self.data.len());
+        for f in &self.data {
+            f.content_hash(h);
+        }
+        h.write_usize(self.resources.len());
+        for f in &self.resources {
+            f.content_hash(h);
+        }
+    }
+}
+
+impl ContentHash for SolverOpts {
+    fn content_hash(&self, h: &mut Fnv128) {
+        h.write_f64(self.horizon);
+        h.write_usize(self.max_events);
+        h.write_f64(self.tol);
+    }
+}
+
+/// The cache key of one node-level solve: everything `solve` reads.
+pub fn node_key(process: &Process, inputs: &ProcessInputs, opts: &SolverOpts) -> u128 {
+    let mut h = Fnv128::new();
+    process.content_hash(&mut h);
+    inputs.content_hash(&mut h);
+    opts.content_hash(&mut h);
+    h.finish()
+}
+
+// -------------------------------------------------------------- cache value
+
+/// Everything one node-level solve contributes to the rest of a workflow
+/// analysis: the analysis itself plus the derived functions the engine
+/// otherwise recomputes per consumer / per pool charge. All fields are pure
+/// functions of `(Process, ProcessInputs, SolverOpts)`, so they are exactly
+/// as cacheable as the analysis.
+///
+/// The derived vectors are sparse: the engine asks only for the outputs
+/// some consumer actually reads and the demands of pool-backed resources
+/// (a `None` slot is derived lazily from `analysis` by the engine — same
+/// expression, so results never depend on which slots were precomputed).
+/// The key does not cover wiring, so a value derived under one wiring may
+/// be hit by a node wired differently; sparseness + fallback keeps that
+/// correct.
+#[derive(Clone, Debug)]
+pub struct NodeSolve {
+    /// The solver result, `Arc`'d so `WorkflowAnalysis` shares it.
+    pub analysis: Arc<Analysis>,
+    /// `O_m(P(t))` per output `m` ([`Analysis::output_over_time`]) — the
+    /// data-input function of downstream consumers.
+    pub outputs: Vec<Option<PwPoly>>,
+    /// Simplified `P'(t)·R'_Rl(P(t))` per resource `l`
+    /// ([`Analysis::resource_demand`]) — what the engine charges against
+    /// shared pools.
+    pub demands: Vec<Option<PwPoly>>,
+}
+
+impl NodeSolve {
+    /// Derive the consumer-facing functions from a finished analysis —
+    /// only the slots flagged in `need_outputs` / `need_demands` (missing
+    /// flags count as not needed). Uses the very same expressions the
+    /// uncached engine evaluates lazily, so cached and cold runs stay
+    /// bit-for-bit identical.
+    pub fn derive(
+        process: &Process,
+        analysis: Arc<Analysis>,
+        need_outputs: &[bool],
+        need_demands: &[bool],
+    ) -> NodeSolve {
+        let outputs = (0..process.outputs.len())
+            .map(|m| {
+                need_outputs
+                    .get(m)
+                    .copied()
+                    .unwrap_or(false)
+                    .then(|| analysis.output_over_time(process, m))
+            })
+            .collect();
+        let demands = (0..process.res_reqs.len())
+            .map(|l| {
+                need_demands
+                    .get(l)
+                    .copied()
+                    .unwrap_or(false)
+                    .then(|| analysis.resource_demand(process, l).simplify())
+            })
+            .collect();
+        NodeSolve {
+            analysis,
+            outputs,
+            demands,
+        }
+    }
+}
+
+// -------------------------------------------------------------------- stats
+
+/// A point-in-time snapshot of the cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to a fresh solve.
+    pub misses: u64,
+    /// Values stored (== misses unless a racing worker inserted first).
+    pub inserts: u64,
+    /// Entries dropped by capacity eviction.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// `hits / (hits + misses)`, 0 when the cache was never consulted.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// The counter deltas between `earlier` and `self` (entries stay the
+    /// current count) — how a shared, long-lived cache reports one batch's
+    /// behaviour in isolation.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            inserts: self.inserts.saturating_sub(earlier.inserts),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            entries: self.entries,
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} hits / {} misses ({:.1}% hit rate), {} entries, {} evicted",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.entries,
+            self.evictions
+        )
+    }
+}
+
+// -------------------------------------------------------------------- cache
+
+/// A sharded, thread-safe memo table for node-level analyses.
+///
+/// Wrap it in an [`Arc`] and hand clones to every sweep worker; lookups
+/// contend only on the shard owning the key. Capacity is enforced per
+/// shard with a wholesale-clear eviction policy: eviction can only cause
+/// extra *misses*, never wrong results, so the cheapest correct policy
+/// wins.
+pub struct AnalysisCache {
+    shards: Vec<Mutex<HashMap<u128, Arc<NodeSolve>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    capacity_per_shard: usize,
+}
+
+const DEFAULT_SHARDS: usize = 16;
+const DEFAULT_CAPACITY: usize = 1 << 16;
+
+impl Default for AnalysisCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl AnalysisCache {
+    /// A cache with the default capacity (65 536 entries).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache holding up to `capacity` entries across all shards.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let per_shard = (capacity / DEFAULT_SHARDS).max(1);
+        AnalysisCache {
+            shards: (0..DEFAULT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            capacity_per_shard: per_shard,
+        }
+    }
+
+    fn shard(&self, key: u128) -> &Mutex<HashMap<u128, Arc<NodeSolve>>> {
+        // low bits of an FNV state are well mixed
+        &self.shards[(key as usize) % self.shards.len()]
+    }
+
+    /// Look up a node analysis, counting the hit or miss.
+    pub fn get(&self, key: u128) -> Option<Arc<NodeSolve>> {
+        let found = self.shard(key).lock().unwrap().get(&key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Store a freshly solved analysis. If the shard is at capacity it is
+    /// cleared first (counted as evictions).
+    pub fn insert(&self, key: u128, value: Arc<NodeSolve>) {
+        let mut shard = self.shard(key).lock().unwrap();
+        if shard.len() >= self.capacity_per_shard && !shard.contains_key(&key) {
+            self.evictions
+                .fetch_add(shard.len() as u64, Ordering::Relaxed);
+            shard.clear();
+        }
+        if shard.insert(key, value).is_none() {
+            self.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (counters keep running).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut shard = s.lock().unwrap();
+            self.evictions
+                .fetch_add(shard.len() as u64, Ordering::Relaxed);
+            shard.clear();
+        }
+    }
+
+    /// Zero the hit/miss/insert/eviction counters (entries stay resident) —
+    /// used to measure one batch in isolation.
+    pub fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.inserts.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ProcessBuilder;
+
+    fn sample_inputs(rate: f64) -> ProcessInputs {
+        ProcessInputs {
+            data: vec![PwPoly::constant(100.0)],
+            resources: vec![PwPoly::constant(rate)],
+            start_time: 0.0,
+        }
+    }
+
+    fn sample_process(cpu: f64) -> Process {
+        ProcessBuilder::new("p", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", cpu)
+            .identity_output("out")
+            .build()
+    }
+
+    #[test]
+    fn key_is_deterministic_and_content_sensitive() {
+        let p = sample_process(50.0);
+        let i = sample_inputs(1.0);
+        let o = SolverOpts::default();
+        let k1 = node_key(&p, &i, &o);
+        let k2 = node_key(&p.clone(), &i.clone(), &o.clone());
+        assert_eq!(k1, k2, "same content must give the same key");
+
+        // any single knob changes the key
+        assert_ne!(k1, node_key(&sample_process(51.0), &i, &o));
+        assert_ne!(k1, node_key(&p, &sample_inputs(2.0), &o));
+        let o2 = SolverOpts {
+            tol: 1e-8,
+            ..SolverOpts::default()
+        };
+        assert_ne!(k1, node_key(&p, &i, &o2));
+        let mut i2 = sample_inputs(1.0);
+        i2.start_time = 5.0;
+        assert_ne!(k1, node_key(&p, &i2, &o));
+    }
+
+    #[test]
+    fn get_insert_roundtrip_counts() {
+        let cache = AnalysisCache::new();
+        let p = sample_process(50.0);
+        let i = sample_inputs(1.0);
+        let o = SolverOpts::default();
+        let key = node_key(&p, &i, &o);
+        assert!(cache.get(key).is_none());
+        let solved = Arc::new(crate::solver::solve(&p, &i, &o).unwrap());
+        let a = Arc::new(NodeSolve::derive(&p, solved, &[true], &[true]));
+        cache.insert(key, a.clone());
+        let back = cache.get(key).expect("hit after insert");
+        assert!(Arc::ptr_eq(&a, &back), "hit must share, not clone");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_clears_full_shard() {
+        let cache = AnalysisCache::with_capacity(16); // 1 entry per shard
+        let p = sample_process(50.0);
+        let i = sample_inputs(1.0);
+        let solved = Arc::new(crate::solver::solve(&p, &i, &SolverOpts::default()).unwrap());
+        let a = Arc::new(NodeSolve::derive(&p, solved, &[true], &[true]));
+        // two keys landing in the same shard force an eviction
+        let k1 = 0u128;
+        let k2 = DEFAULT_SHARDS as u128; // same shard index
+        cache.insert(k1, a.clone());
+        cache.insert(k2, a.clone());
+        assert!(cache.get(k1).is_none(), "k1 evicted when shard was full");
+        assert!(cache.get(k2).is_some());
+        assert!(cache.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn reset_counters_keeps_entries() {
+        let cache = AnalysisCache::new();
+        let p = sample_process(50.0);
+        let i = sample_inputs(1.0);
+        let o = SolverOpts::default();
+        let key = node_key(&p, &i, &o);
+        let solved = Arc::new(crate::solver::solve(&p, &i, &o).unwrap());
+        cache.insert(key, Arc::new(NodeSolve::derive(&p, solved, &[true], &[true])));
+        let _ = cache.get(key);
+        cache.reset_counters();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        assert_eq!(s.entries, 1);
+        assert!(cache.get(key).is_some());
+    }
+
+    #[test]
+    fn fnv_distinguishes_field_boundaries() {
+        // [1.0, 2.0] vs [1.0], [2.0]: the length prefixes must disambiguate
+        let mut h1 = Fnv128::new();
+        PwPoly::constant(1.0).content_hash(&mut h1);
+        PwPoly::constant(2.0).content_hash(&mut h1);
+        let mut h2 = Fnv128::new();
+        PwPoly::constant(2.0).content_hash(&mut h2);
+        PwPoly::constant(1.0).content_hash(&mut h2);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+}

@@ -1,11 +1,13 @@
 //! Sweep runtimes: the CPU-parallel batched scenario-sweep engine
-//! ([`sweep`]) and the PJRT artifact path ([`pjrt`] + [`xla_sweep`],
-//! stubbed in offline builds).
+//! ([`sweep`]) with its DAG-aware analysis cache ([`cache`]), and the PJRT
+//! artifact path ([`pjrt`] + [`xla_sweep`], stubbed in offline builds).
 
+pub mod cache;
 pub mod pjrt;
 pub mod sweep;
 pub mod xla_sweep;
 
+pub use cache::{AnalysisCache, CacheStats};
 pub use pjrt::{ArtifactInfo, Runtime};
 pub use sweep::{BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch};
 pub use xla_sweep::{fig7_sweep, SweepResult};

@@ -17,13 +17,27 @@
 //! results at their input index — so a parallel run is **bit-for-bit
 //! identical** to the sequential one (`threads = 1`). The
 //! `sweep_parallel` bench asserts this on a 256-scenario batch.
+//!
+//! # Incremental sweeps
+//!
+//! With an [`AnalysisCache`] attached ([`SweepBatch::with_cache`]), the
+//! batch becomes *incremental*: each node-level solve is memoized on a
+//! content hash of its materialized inputs, so a perturbation only pays for
+//! its own dirty cone ([`Perturbation::dirty_set`]) — the upstream subgraph
+//! is served from the cache, as are the unchanged re-solves inside each
+//! scenario's fixpoint iteration. The planner ([`SweepBatch::plan`]) orders
+//! the batch by dirty-set shape so scenarios sharing a clean prefix run
+//! consecutively; results are still returned in input order, bit-for-bit
+//! equal to a cold run (the cache stores exactly what a fresh solve would
+//! produce). Cache statistics ride along in [`BottleneckReport::cache`].
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::runtime::cache::{AnalysisCache, CacheStats};
 use crate::solver::{Analysis, SolverOpts};
 use crate::util::par::{num_threads, par_map};
-use crate::workflow::engine::{analyze_fixpoint, WorkflowError};
+use crate::workflow::engine::{analyze_fixpoint_cached, WorkflowError};
 use crate::workflow::scenario::{Perturbation, VideoScenario};
 
 // The fan-out contract: everything a worker borrows must be Send + Sync.
@@ -59,8 +73,10 @@ pub struct ScenarioOutcome {
     pub passes: usize,
     /// Node names, aligned with `analyses`.
     pub node_names: Vec<String>,
-    /// Per-node exact analyses (progress functions, segments, metrics).
-    pub analyses: Vec<Analysis>,
+    /// Per-node exact analyses (progress functions, segments, metrics),
+    /// `Arc`-shared with the engine/cache so cached upstream results are
+    /// reused without cloning a `PwPoly`.
+    pub analyses: Vec<Arc<Analysis>>,
     /// Bottleneck attribution rows: `(process, bottleneck label, seconds)`,
     /// one per maximal constant-bottleneck segment.
     pub attributed: Vec<(String, String, f64)>,
@@ -85,6 +101,11 @@ pub struct BottleneckReport {
     pub ranked: Vec<RankedBottleneck>,
     pub scenarios: usize,
     pub total_events: usize,
+    /// Analysis-cache statistics for the batch that produced this report
+    /// (`None` when the sweep ran cold / uncached). Excluded from any
+    /// determinism comparison — cold and warm runs agree on everything
+    /// *except* this bookkeeping.
+    pub cache: Option<CacheStats>,
 }
 
 impl BottleneckReport {
@@ -125,6 +146,7 @@ impl BottleneckReport {
             ranked,
             scenarios: outcomes.len(),
             total_events: outcomes.iter().map(|o| o.events).sum(),
+            cache: None,
         }
     }
 }
@@ -136,17 +158,21 @@ pub struct SweepBatch {
     opts: SolverOpts,
     threads: usize,
     fixpoint_passes: usize,
+    cache: Option<Arc<AnalysisCache>>,
 }
 
 impl SweepBatch {
     /// New batch over a shared base scenario; worker count defaults to the
-    /// machine's parallelism (`BOTTLEMOD_THREADS` overrides).
+    /// machine's parallelism (`BOTTLEMOD_THREADS` overrides). Cold (no
+    /// cache) by default — attach one with [`SweepBatch::with_cache`] /
+    /// [`SweepBatch::with_new_cache`].
     pub fn new(base: Arc<VideoScenario>) -> SweepBatch {
         SweepBatch {
             base,
             opts: SolverOpts::default(),
             threads: num_threads(),
             fixpoint_passes: 6,
+            cache: None,
         }
     }
 
@@ -166,12 +192,71 @@ impl SweepBatch {
         self
     }
 
+    /// Attach a (possibly shared, possibly pre-warmed) analysis cache. The
+    /// batch becomes incremental: only each perturbation's dirty cone is
+    /// re-solved. Results stay bit-for-bit equal to an uncached run.
+    pub fn with_cache(mut self, cache: Arc<AnalysisCache>) -> SweepBatch {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Attach a fresh default-capacity cache.
+    pub fn with_new_cache(self) -> SweepBatch {
+        let cache = Arc::new(AnalysisCache::new());
+        self.with_cache(cache)
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// The attached cache, if any.
+    pub fn cache(&self) -> Option<&Arc<AnalysisCache>> {
+        self.cache.as_ref()
+    }
+
+    /// Statistics of the attached cache (`None` when running cold).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Processing order for a batch: scenarios grouped by dirty-set shape
+    /// ([`Perturbation::dirty_set`] fingerprints, largest clean prefix
+    /// first), stable within a group. Grouping maximizes shared-prefix
+    /// cache reuse and temporal locality (clean-node entries are touched
+    /// back-to-back instead of `N` scenarios apart). Pure reordering: the
+    /// per-scenario computation — and therefore every outcome — is
+    /// unchanged.
+    pub fn plan(&self, perturbations: &[Perturbation]) -> Vec<usize> {
+        let (wf, nodes) = self.base.build();
+        // a perturbation's dirty set depends on its *variant*, not its
+        // payload, so one dirty_set call per distinct variant suffices
+        // (each call rebuilds graph adjacency — don't pay it per element)
+        let mut memo: Vec<(std::mem::Discriminant<Perturbation>, (u32, u64))> = Vec::new();
+        let mut keyed: Vec<(usize, u32, u64)> = perturbations
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let disc = std::mem::discriminant(p);
+                let found = memo.iter().find(|(d, _)| *d == disc).map(|(_, v)| *v);
+                let (len, fp) = found.unwrap_or_else(|| {
+                    let dirty = p.dirty_set(&wf, &nodes);
+                    let v = (dirty.len() as u32, dirty.fingerprint());
+                    memo.push((disc, v));
+                    v
+                });
+                (i, len, fp)
+            })
+            .collect();
+        // smallest dirty sets first: their clean prefixes populate the
+        // cache entries the dirtier groups will reuse
+        keyed.sort_by(|a, b| a.1.cmp(&b.1).then(a.2.cmp(&b.2)).then(a.0.cmp(&b.0)));
+        keyed.into_iter().map(|(i, _, _)| i).collect()
+    }
+
     /// Analyze every perturbation of the base scenario. Results are in
-    /// batch order and independent of the worker count.
+    /// batch order and independent of the worker count and of whether a
+    /// cache is attached (bit-for-bit).
     pub fn run(
         &self,
         perturbations: &[Perturbation],
@@ -179,35 +264,68 @@ impl SweepBatch {
         let base = &self.base;
         let opts = &self.opts;
         let passes = self.fixpoint_passes;
-        par_map(perturbations, self.threads, |index, p| {
-            solve_one(base, opts, passes, index, p)
-        })
-        .into_iter()
-        .collect()
+        let cache = self.cache.as_deref();
+        let mut outcomes: Vec<ScenarioOutcome> = match cache {
+            None => par_map(perturbations, self.threads, |index, p| {
+                solve_one(base, opts, passes, index, p, None)
+            })
+            .into_iter()
+            .collect::<Result<_, _>>()?,
+            Some(c) => {
+                // planner order for cache locality; original indices ride
+                // along so outcomes can be restored to batch order below
+                let planned: Vec<(usize, Perturbation)> = self
+                    .plan(perturbations)
+                    .into_iter()
+                    .map(|i| (i, perturbations[i]))
+                    .collect();
+                par_map(&planned, self.threads, |_, (index, p)| {
+                    solve_one(base, opts, passes, *index, p, Some(c))
+                })
+                .into_iter()
+                .collect::<Result<_, _>>()?
+            }
+        };
+        outcomes.sort_by_key(|o| o.index);
+        Ok(outcomes)
     }
 
-    /// [`Self::run`] plus the aggregated ranked bottleneck report.
+    /// [`Self::run`] plus the aggregated ranked bottleneck report. With a
+    /// cache attached, the report carries *this batch's* cache behaviour
+    /// (counters diffed across the run, so a shared or pre-warmed cache
+    /// reports per-batch rates, not lifetime totals). Caveat: the counters
+    /// are cache-global, so if *other* batches run concurrently against
+    /// the same shared cache, their lookups land in this window too — the
+    /// per-batch stats are exact for sequential use and approximate under
+    /// concurrency. (Outcomes are unaffected either way.)
     pub fn run_report(
         &self,
         perturbations: &[Perturbation],
     ) -> Result<(Vec<ScenarioOutcome>, BottleneckReport), WorkflowError> {
+        let before = self.cache_stats();
         let outcomes = self.run(perturbations)?;
-        let report = BottleneckReport::aggregate(&outcomes);
+        let mut report = BottleneckReport::aggregate(&outcomes);
+        report.cache = match (before, self.cache_stats()) {
+            (Some(b), Some(a)) => Some(a.since(&b)),
+            _ => None,
+        };
         Ok((outcomes, report))
     }
 }
 
-/// Analyze one perturbed scenario (pure: same inputs → same outputs).
+/// Analyze one perturbed scenario (pure: same inputs → same outputs; the
+/// cache only changes *where* an identical analysis comes from).
 fn solve_one(
     base: &VideoScenario,
     opts: &SolverOpts,
     passes: usize,
     index: usize,
     p: &Perturbation,
+    cache: Option<&AnalysisCache>,
 ) -> Result<ScenarioOutcome, WorkflowError> {
     let sc = base.perturbed(p);
     let (wf, _) = sc.build();
-    let wa = analyze_fixpoint(&wf, opts, passes)?;
+    let wa = analyze_fixpoint_cached(&wf, opts, passes, cache)?;
 
     let node_names: Vec<String> = wf.nodes.iter().map(|n| n.process.name.clone()).collect();
     let mut attributed = vec![];
@@ -320,6 +438,58 @@ mod tests {
         for w in report.ranked.windows(2) {
             assert!(w[0].total_seconds >= w[1].total_seconds);
         }
+    }
+
+    /// The incremental path: a cached (warm) run is bit-for-bit the cold
+    /// run, the report carries the stats, and single-node perturbation
+    /// batches hit the cache on their clean prefixes.
+    #[test]
+    fn cached_sweep_is_bit_identical_and_hits() {
+        let base = Arc::new(VideoScenario::default());
+        let batch: Vec<Perturbation> = (0..12)
+            .map(|i| P::Task3TimeScale(0.5 + i as f64 / 8.0))
+            .collect();
+        let (cold, cold_report) = SweepBatch::new(base.clone())
+            .with_threads(1)
+            .run_report(&batch)
+            .unwrap();
+        let warm_batch = SweepBatch::new(base.clone()).with_threads(2).with_new_cache();
+        let (warm, warm_report) = warm_batch.run_report(&batch).unwrap();
+        assert_eq!(cold, warm, "cache must not change any outcome bit");
+        assert_eq!(cold_report.ranked, warm_report.ranked);
+        assert_eq!(cold_report.total_events, warm_report.total_events);
+        assert_eq!(cold_report.cache, None);
+        let stats = warm_report.cache.expect("warm report carries stats");
+        assert!(
+            stats.hit_rate() >= 0.5,
+            "single-node batch should be mostly hits: {stats}"
+        );
+    }
+
+    /// The planner groups scenarios by dirty-set shape and stays a
+    /// permutation of the batch.
+    #[test]
+    fn plan_groups_by_dirty_shape() {
+        let base = Arc::new(VideoScenario::default());
+        let batch = vec![
+            P::Fraction(0.3),        // whole graph dirty
+            P::Task3TimeScale(1.5),  // {task3}
+            P::Fraction(0.7),        // whole graph dirty
+            P::Task3TimeScale(2.5),  // {task3}
+            P::Task1CpuScale(2.0),   // {task1, task3}
+        ];
+        let sweep = SweepBatch::new(base).with_new_cache();
+        let order = sweep.plan(&batch);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4], "plan must be a permutation");
+        // smallest dirty sets first, same-shape scenarios adjacent and in
+        // batch order within the group
+        assert_eq!(order, vec![1, 3, 4, 0, 2]);
+        // and running through the plan still returns batch order
+        let out = sweep.run(&batch).unwrap();
+        let idx: Vec<usize> = out.iter().map(|o| o.index).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
     }
 
     /// Attribution durations of one scenario sum to (roughly) the busy

@@ -23,6 +23,32 @@
 //!   (resource-limited → data-limited);
 //! * the speed-limit envelope switching between resources;
 //! * `P` reaching `max_progress` (completion).
+//!
+//! # Invariants
+//!
+//! * **Purity & determinism**: [`solve`] reads nothing but its three
+//!   arguments and allocates no global state; identical inputs produce a
+//!   bit-for-bit identical [`Analysis`], including the event count. The
+//!   sweep engine's determinism contract and the analysis cache
+//!   ([`crate::runtime::cache`]) both rest on this — do not add wall-clock,
+//!   RNG or thread-dependent behavior here.
+//! * Requirement functions are monotone nondecreasing and resource
+//!   requirements piecewise-linear (checked by `Process::validate`), so the
+//!   speed divisor `R'_Rl(p)` is piecewise-constant in `p`.
+//! * The returned progress function is nondecreasing, right-continuous,
+//!   constant at `max_progress` after `finish_time`, and its bottleneck
+//!   segments tile `[start_time, finish]`.
+//!
+//! # Cost model
+//!
+//! Each loop iteration emits ≥ 1 solver event and advances `(t, p)` past at
+//! least one breakpoint, envelope crossing, stall payoff or completion, so
+//! the loop count is `O(pieces × limit changes)` — a function of **model
+//! complexity only**, independent of the simulated data volume (the §6
+//! headline; `benches/sec6_scaling.rs` measures it). Per event the work is
+//! small-degree polynomial root finding over the current pieces, i.e.
+//! `O(resources + data inputs)` with tiny constants. `SolverOpts::max_events`
+//! caps pathological cases.
 
 use crate::model::process::{ModelError, Process, ProcessInputs};
 use crate::pwfn::{poly::Poly, PwPoly};

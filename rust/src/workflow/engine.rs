@@ -18,9 +18,36 @@
 //! practice). [`analyze`] is a single pass with no hints — exactly the
 //! paper's §5.2 procedure, sufficient when prioritized consumers are
 //! analyzed first.
+//!
+//! # Invariants
+//!
+//! * Nodes are analyzed in Kahn topological order with node-id tie-breaks
+//!   ([`Workflow::topo_order`]), so pool residual assignment — which depends
+//!   on *analysis order* — is deterministic.
+//! * Each node's solve is a **pure function** of `(Process, ProcessInputs,
+//!   SolverOpts)`: the materialized `ProcessInputs` carry every upstream
+//!   effect (output-over-time functions, pool fractions/residuals, barrier
+//!   start times). This is what makes node-level memoization sound — see
+//!   [`crate::runtime::cache`].
+//! * Per-node analyses are stored as [`Arc<Analysis>`], so a cached (or
+//!   merely repeated) analysis is shared, never deep-cloned.
+//!
+//! # Cost model
+//!
+//! One pass costs `Σ_nodes solve(node)` plus `O(E)` piecewise algebra to
+//! materialize inputs; `solve` is event-driven, so the total is a function
+//! of **model complexity** (pieces × limit changes), independent of bytes
+//! moved (paper §6). The fixpoint multiplies that by the number of passes
+//! (≤ `max_passes`, 2–3 in practice). With an [`AnalysisCache`] attached
+//! ([`analyze_fixpoint_cached`]), any node whose materialized inputs are
+//! bit-identical to a previously solved one — across passes *or* across
+//! sweep scenarios — costs one content hash instead of one solve.
+
+use std::sync::Arc;
 
 use crate::model::process::ProcessInputs;
 use crate::pwfn::PwPoly;
+use crate::runtime::cache::{node_key, AnalysisCache, NodeSolve};
 use crate::solver::{solve, Analysis, SolveError, SolverOpts};
 
 use super::graph::{DataSource, GraphError, ResourceSource, Workflow};
@@ -28,8 +55,9 @@ use super::graph::{DataSource, GraphError, ResourceSource, Workflow};
 /// Result of analyzing a whole workflow.
 #[derive(Clone, Debug)]
 pub struct WorkflowAnalysis {
-    /// Per-node analyses, indexed like `Workflow::nodes`.
-    pub analyses: Vec<Analysis>,
+    /// Per-node analyses, indexed like `Workflow::nodes`. `Arc`-shared so
+    /// cache hits (and clones of this struct) never copy a `PwPoly`.
+    pub analyses: Vec<Arc<Analysis>>,
     /// Materialized inputs each node was analyzed under (useful for the
     /// §3.3 metrics, which need the `I` functions).
     pub inputs: Vec<ProcessInputs>,
@@ -78,39 +106,57 @@ impl From<GraphError> for WorkflowError {
     }
 }
 
-/// Consumers of each pool (node ids), from the wiring.
-fn pool_consumers(wf: &Workflow) -> Vec<Vec<usize>> {
-    let mut out = vec![vec![]; wf.pools.len()];
-    for (i, n) in wf.nodes.iter().enumerate() {
-        for s in &n.resource_sources {
-            let pid = match s {
-                ResourceSource::PoolFraction { pool, .. } => Some(*pool),
-                ResourceSource::PoolResidual { pool } => Some(*pool),
-                ResourceSource::Fixed(_) => None,
-            };
-            if let Some(p) = pid {
-                if !out[p].contains(&i) {
-                    out[p].push(i);
-                }
-            }
-        }
-    }
-    out
-}
-
 /// One analysis pass. `finish_hints[i]` carries node `i`'s finish time from
 /// a previous pass (used for pool release when `i` hasn't been analyzed yet
-/// in this pass).
+/// in this pass). With `cache`, each node's solve is memoized on a content
+/// hash of its materialized inputs ([`node_key`]).
 fn analyze_pass(
     wf: &Workflow,
     opts: &SolverOpts,
     finish_hints: &[Option<f64>],
+    cache: Option<&AnalysisCache>,
 ) -> Result<WorkflowAnalysis, WorkflowError> {
     let order = wf.topo_order()?;
     let n = wf.nodes.len();
-    let consumers = pool_consumers(wf);
+    let consumers = wf.pool_consumers();
 
-    let mut analyses: Vec<Option<Analysis>> = vec![None; n];
+    let mut analyses: Vec<Option<Arc<Analysis>>> = vec![None; n];
+    // cached mode: the full NodeSolve per node, so downstream consumers and
+    // pool charges reuse the precomputed output/demand functions
+    let mut solves: Vec<Option<Arc<NodeSolve>>> = vec![None; n];
+    // which outputs some consumer reads, and which resources feed a pool —
+    // the slots a NodeSolve must carry under this wiring (anything else
+    // would be derived work the cold path never does)
+    let consumed_outputs: Vec<Vec<bool>> = if cache.is_some() {
+        let mut used: Vec<Vec<bool>> = wf
+            .nodes
+            .iter()
+            .map(|nd| vec![false; nd.process.outputs.len()])
+            .collect();
+        for nd in &wf.nodes {
+            for s in &nd.data_sources {
+                if let DataSource::ProcessOutput { node, output } = s {
+                    used[*node][*output] = true;
+                }
+            }
+        }
+        used
+    } else {
+        vec![]
+    };
+    let pool_backed: Vec<Vec<bool>> = if cache.is_some() {
+        wf.nodes
+            .iter()
+            .map(|nd| {
+                nd.resource_sources
+                    .iter()
+                    .map(|s| !matches!(s, ResourceSource::Fixed(_)))
+                    .collect()
+            })
+            .collect()
+    } else {
+        vec![]
+    };
     let mut inputs_used: Vec<Option<ProcessInputs>> = vec![None; n];
     // per-pool charged demand functions of already-analyzed consumers
     let mut pool_claims: Vec<Vec<(usize, PwPoly)>> = vec![vec![]; wf.pools.len()];
@@ -134,10 +180,20 @@ fn analyze_pass(
             .iter()
             .map(|s| match s {
                 DataSource::External(f) => f.clone(),
-                DataSource::ProcessOutput { node: d, output } => analyses[*d]
-                    .as_ref()
-                    .unwrap()
-                    .output_over_time(&wf.nodes[*d].process, *output),
+                DataSource::ProcessOutput { node: d, output } => {
+                    // cached mode: `O_m(P(t))` was derived with the solve
+                    // (the slot can be empty if the entry was derived under
+                    // different wiring — fall back to the same expression)
+                    let derived = solves[*d]
+                        .as_ref()
+                        .and_then(|ns| ns.outputs[*output].clone());
+                    derived.unwrap_or_else(|| {
+                        analyses[*d]
+                            .as_ref()
+                            .unwrap()
+                            .output_over_time(&wf.nodes[*d].process, *output)
+                    })
+                }
             })
             .collect();
 
@@ -197,13 +253,39 @@ fn analyze_pass(
             resources,
             start_time: start,
         };
-        let analysis = solve(&node.process, &inputs, opts).map_err(|err| {
-            WorkflowError::Solve {
+        // `solve` is pure in (process, inputs, opts); a cache hit returns
+        // the bit-identical Arc'd analysis of an earlier solve, so cached
+        // and cold runs are indistinguishable in every output field
+        // (including the per-node event counts folded into `events`).
+        let solve_fresh = |inputs: &ProcessInputs| -> Result<Analysis, WorkflowError> {
+            solve(&node.process, inputs, opts).map_err(|err| WorkflowError::Solve {
                 node: i,
                 name: node.process.name.clone(),
                 err,
+            })
+        };
+        let analysis: Arc<Analysis> = match cache {
+            Some(c) => {
+                let key = node_key(&node.process, &inputs, opts);
+                let ns = match c.get(key) {
+                    Some(hit) => hit,
+                    None => {
+                        let fresh = Arc::new(NodeSolve::derive(
+                            &node.process,
+                            Arc::new(solve_fresh(&inputs)?),
+                            &consumed_outputs[i],
+                            &pool_backed[i],
+                        ));
+                        c.insert(key, fresh.clone());
+                        fresh
+                    }
+                };
+                let analysis = ns.analysis.clone();
+                solves[i] = Some(ns);
+                analysis
             }
-        })?;
+            None => Arc::new(solve_fresh(&inputs)?),
+        };
         events += analysis.events;
 
         // charge pool consumption retrospectively
@@ -214,7 +296,15 @@ fn analyze_pass(
                 ResourceSource::Fixed(_) => None,
             };
             if let Some(pid) = pid {
-                let demand = analysis.resource_demand(&node.process, l).simplify();
+                // cached mode: the simplified demand was derived with the
+                // solve (empty slot = entry from different wiring: fall
+                // back to the same expression)
+                let demand = solves[i]
+                    .as_ref()
+                    .and_then(|ns| ns.demands[l].clone())
+                    .unwrap_or_else(|| {
+                        analysis.resource_demand(&node.process, l).simplify()
+                    });
                 pool_claims[pid].push((i, demand));
             }
         }
@@ -258,7 +348,7 @@ fn analyze_pass(
 pub fn analyze(wf: &Workflow, opts: &SolverOpts) -> Result<WorkflowAnalysis, WorkflowError> {
     wf.validate()?;
     let hints = vec![None; wf.nodes.len()];
-    analyze_pass(wf, opts, &hints)
+    analyze_pass(wf, opts, &hints, None)
 }
 
 /// Fixpoint analysis: iterate passes, feeding each pass the previous pass's
@@ -272,13 +362,27 @@ pub fn analyze_fixpoint(
     opts: &SolverOpts,
     max_passes: usize,
 ) -> Result<WorkflowAnalysis, WorkflowError> {
+    analyze_fixpoint_cached(wf, opts, max_passes, None)
+}
+
+/// [`analyze_fixpoint`] with node-level memoization. Any node whose
+/// `(Process, ProcessInputs, SolverOpts)` content-hash was already solved —
+/// in an earlier pass of this call, or in *any* earlier workflow sharing the
+/// cache (the sweep engine's case) — reuses the `Arc`'d cached analysis.
+/// Results are bit-for-bit identical to the uncached path.
+pub fn analyze_fixpoint_cached(
+    wf: &Workflow,
+    opts: &SolverOpts,
+    max_passes: usize,
+    cache: Option<&AnalysisCache>,
+) -> Result<WorkflowAnalysis, WorkflowError> {
     wf.validate()?;
     let n = wf.nodes.len();
     let mut hints: Vec<Option<f64>> = vec![None; n];
     let mut last: Option<WorkflowAnalysis> = None;
     let mut total_events = 0usize;
     for pass in 0..max_passes.max(1) {
-        let wa = analyze_pass(wf, opts, &hints)?;
+        let wa = analyze_pass(wf, opts, &hints, cache)?;
         total_events += wa.events;
         let new_hints: Vec<Option<f64>> =
             wa.analyses.iter().map(|a| a.finish_time).collect();
@@ -513,6 +617,52 @@ mod tests {
         );
         let wa = analyze(&wf, &SolverOpts::default()).unwrap();
         assert_eq!(wa.makespan, None);
+    }
+
+    /// A cached fixpoint run is bit-for-bit the uncached one, and a second
+    /// identical run is answered (almost) entirely from the cache.
+    #[test]
+    fn cached_fixpoint_is_bit_identical() {
+        let mut wf = Workflow::new();
+        let pool = wf.add_pool("link", PwPoly::constant(10.0));
+        let d1 = wf.add_node(
+            dl_proc("dl1", 50.0),
+            vec![DataSource::External(PwPoly::constant(50.0))],
+            vec![ResourceSource::PoolFraction {
+                pool,
+                fraction: 0.5,
+            }],
+            StartRule::default(),
+        );
+        let d2 = wf.add_node(
+            dl_proc("dl2", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::PoolResidual { pool }],
+            StartRule::default(),
+        );
+        let opts = SolverOpts::default();
+        let cold = analyze_fixpoint(&wf, &opts, 5).unwrap();
+
+        let cache = AnalysisCache::new();
+        let warm = analyze_fixpoint_cached(&wf, &opts, 5, Some(&cache)).unwrap();
+        assert_eq!(cold.analyses, warm.analyses);
+        assert_eq!(cold.makespan, warm.makespan);
+        assert_eq!(cold.events, warm.events);
+        assert_eq!(cold.passes, warm.passes);
+        assert!(close(warm.analyses[d1].finish_time.unwrap(), 10.0));
+        assert!(close(warm.analyses[d2].finish_time.unwrap(), 15.0));
+
+        // the multi-pass fixpoint already reuses stable nodes across passes
+        let after_first = cache.stats();
+        assert!(after_first.hits > 0, "cross-pass reuse expected");
+
+        // a second identical run misses nothing
+        cache.reset_counters();
+        let again = analyze_fixpoint_cached(&wf, &opts, 5, Some(&cache)).unwrap();
+        assert_eq!(again.analyses, cold.analyses);
+        let s = cache.stats();
+        assert_eq!(s.misses, 0, "fully warm run must not re-solve: {s:?}");
+        assert!(s.hits > 0);
     }
 
     /// diamond DAG: two parallel branches joined by a two-input process.

@@ -66,6 +66,79 @@ pub struct Workflow {
     pub pools: Vec<Pool>,
 }
 
+/// A set of node ids of one workflow — the currency of dirty-set analysis
+/// (which nodes a [`crate::workflow::scenario::Perturbation`] invalidates).
+/// Backed by a bit vector sized to the workflow.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSet {
+    bits: Vec<bool>,
+}
+
+impl NodeSet {
+    /// The empty set over `n` nodes.
+    pub fn empty(n: usize) -> NodeSet {
+        NodeSet {
+            bits: vec![false; n],
+        }
+    }
+
+    /// The full set over `n` nodes.
+    pub fn all(n: usize) -> NodeSet {
+        NodeSet {
+            bits: vec![true; n],
+        }
+    }
+
+    /// Number of node slots (dirty or not).
+    pub fn capacity(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        self.bits[i] = true;
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.bits.get(i).copied().unwrap_or(false)
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| !b)
+    }
+
+    pub fn union_with(&mut self, other: &NodeSet) {
+        for (a, b) in self.bits.iter_mut().zip(other.bits.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// Member ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i)
+    }
+
+    /// A 64-bit membership fingerprint (node `i` folds onto bit `i % 64`).
+    /// Equal sets always share a fingerprint; the sweep planner uses it as
+    /// a grouping key to schedule scenarios with the same dirty shape
+    /// consecutively.
+    pub fn fingerprint(&self) -> u64 {
+        let mut f = 0u64;
+        for i in self.iter() {
+            f |= 1u64 << (i % 64);
+        }
+        f
+    }
+}
+
 /// Graph-structure error.
 #[derive(Debug, Clone)]
 pub enum GraphError {
@@ -139,6 +212,59 @@ impl Workflow {
         out.extend(&self.nodes[i].start.after);
         out.sort_unstable();
         out.dedup();
+        out
+    }
+
+    /// Successor adjacency: `successors()[d]` lists every node with a hard
+    /// dependency on `d` (inverse of [`Workflow::deps`]).
+    pub fn successors(&self) -> Vec<Vec<usize>> {
+        let mut succ: Vec<Vec<usize>> = vec![vec![]; self.nodes.len()];
+        for i in 0..self.nodes.len() {
+            for d in self.deps(i) {
+                succ[d].push(i);
+            }
+        }
+        succ
+    }
+
+    /// The downstream cone of `seeds`: the seeds plus every node reachable
+    /// from them along dependency edges. A perturbation that invalidates
+    /// exactly `seeds` invalidates exactly this set — everything else can be
+    /// served from the analysis cache.
+    pub fn downstream_closure(&self, seeds: &[usize]) -> NodeSet {
+        let succ = self.successors();
+        let mut set = NodeSet::empty(self.nodes.len());
+        let mut stack: Vec<usize> = seeds.to_vec();
+        while let Some(i) = stack.pop() {
+            if set.contains(i) {
+                continue;
+            }
+            set.insert(i);
+            stack.extend(succ[i].iter().copied());
+        }
+        set
+    }
+
+    /// Node ids consuming each pool (via fraction or residual), in node-id
+    /// order. Pool semantics couple these nodes: any change to the pool or
+    /// to one consumer's share dirties *all* of them (the engine charges
+    /// consumption retrospectively and releases capacity on finish).
+    pub fn pool_consumers(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![vec![]; self.pools.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for s in &n.resource_sources {
+                let pid = match s {
+                    ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                    ResourceSource::PoolResidual { pool } => Some(*pool),
+                    ResourceSource::Fixed(_) => None,
+                };
+                if let Some(p) = pid {
+                    if !out[p].contains(&i) {
+                        out[p].push(i);
+                    }
+                }
+            }
+        }
         out
     }
 
@@ -331,6 +457,62 @@ mod tests {
             wf.validate(),
             Err(GraphError::BadNode { node: 0, .. })
         ));
+    }
+
+    #[test]
+    fn downstream_closure_follows_edges() {
+        // a -> b -> c, plus isolated d
+        let mut wf = Workflow::new();
+        let a = wf.add_node(
+            simple_proc("a"),
+            vec![DataSource::External(PwPoly::constant(10.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let b = wf.add_node(
+            simple_proc("b"),
+            vec![DataSource::ProcessOutput { node: a, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        let c = wf.add_node(
+            simple_proc("c"),
+            vec![DataSource::ProcessOutput { node: b, output: 0 }],
+            vec![],
+            StartRule::default(),
+        );
+        let d = wf.add_node(
+            simple_proc("d"),
+            vec![DataSource::External(PwPoly::constant(10.0))],
+            vec![],
+            StartRule::default(),
+        );
+        let cone = wf.downstream_closure(&[b]);
+        assert!(!cone.contains(a));
+        assert!(cone.contains(b) && cone.contains(c));
+        assert!(!cone.contains(d));
+        assert_eq!(cone.len(), 2);
+        let from_a = wf.downstream_closure(&[a]);
+        assert_eq!(from_a.len(), 3);
+        assert_eq!(wf.successors()[a], vec![b]);
+    }
+
+    #[test]
+    fn nodeset_ops() {
+        let mut s = NodeSet::empty(5);
+        assert!(s.is_empty());
+        s.insert(1);
+        s.insert(3);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.len(), 2);
+        let mut t = NodeSet::empty(5);
+        t.insert(3);
+        t.insert(4);
+        s.union_with(&t);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.fingerprint(), (1u64 << 1) | (1u64 << 3) | (1u64 << 4));
+        assert_eq!(NodeSet::all(5).len(), 5);
+        assert_eq!(s.capacity(), 5);
     }
 
     #[test]

@@ -6,5 +6,9 @@ pub mod generator;
 pub mod graph;
 pub mod scenario;
 
-pub use engine::{analyze, analyze_fixpoint, WorkflowAnalysis, WorkflowError};
-pub use graph::{DataSource, GraphError, Node, Pool, ResourceSource, StartRule, Workflow};
+pub use engine::{
+    analyze, analyze_fixpoint, analyze_fixpoint_cached, WorkflowAnalysis, WorkflowError,
+};
+pub use graph::{
+    DataSource, GraphError, Node, NodeSet, Pool, ResourceSource, StartRule, Workflow,
+};

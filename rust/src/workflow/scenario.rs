@@ -19,7 +19,7 @@
 
 use crate::model::{Process, ProcessBuilder};
 use crate::pwfn::PwPoly;
-use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+use crate::workflow::graph::{DataSource, NodeSet, ResourceSource, StartRule, Workflow};
 
 /// Paper's measured constants (all sizes in bytes, times in seconds).
 #[derive(Clone, Debug)]
@@ -64,8 +64,13 @@ impl Default for VideoScenario {
 
 /// One scenario variation for a sweep batch: the knobs the paper's "what
 /// if" analyses turn (link prioritization, input rate, data volume,
-/// resource speed) plus a task-model variant. Applied to a base
+/// resource speed) plus task-model variants. Applied to a base
 /// [`VideoScenario`] via [`VideoScenario::perturbed`].
+///
+/// Each variant knows which workflow nodes it invalidates
+/// ([`Perturbation::dirty_set`]); everything outside that set is
+/// bit-identical to the base scenario's analysis and can be served from the
+/// [`crate::runtime::cache::AnalysisCache`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Perturbation {
     /// Set the link fraction assigned to task 1's download (Fig 7 x-axis).
@@ -76,6 +81,16 @@ pub enum Perturbation {
     InputScale(f64),
     /// Scale every task's CPU/IO cost (resource-demand variant).
     CpuScale(f64),
+    /// Scale only task 1's encode CPU seconds — a single-node perturbation
+    /// (its dirty cone is `{task1, task3}`; both downloads and task 2 stay
+    /// cache-clean).
+    Task1CpuScale(f64),
+    /// Scale only task 2's local execution seconds (dirty cone
+    /// `{task2, task3}`).
+    Task2TimeScale(f64),
+    /// Scale only task 3's mux seconds — the smallest possible dirty set:
+    /// the sink node alone.
+    Task3TimeScale(f64),
     /// Swap task 2's stream data requirement for a burst requirement
     /// (task-model variant).
     Task2Burst,
@@ -90,6 +105,37 @@ pub struct VideoNodes {
     pub task2: usize,
     pub task3: usize,
     pub link_pool: usize,
+}
+
+impl Perturbation {
+    /// The set of nodes whose analyses this perturbation can change — the
+    /// perturbation's *seed* nodes plus their downstream dependency cone
+    /// ([`Workflow::downstream_closure`]). Pool-level knobs (fraction, link
+    /// rate) seed **every consumer of the pool**: pool capacity is shared,
+    /// consumption is charged retrospectively, and finish-time release
+    /// couples all users, so no pool peer can be assumed clean.
+    ///
+    /// Nodes *outside* the dirty set are guaranteed to materialize
+    /// bit-identical solver inputs under the perturbed scenario, so the
+    /// sweep planner can count on the cache serving them.
+    pub fn dirty_set(&self, wf: &Workflow, nodes: &VideoNodes) -> NodeSet {
+        let seeds: Vec<usize> = match self {
+            // pool knobs couple every consumer of the link pool
+            Perturbation::Fraction(_) | Perturbation::LinkRateScale(_) => {
+                wf.pool_consumers()[nodes.link_pool].clone()
+            }
+            // the §6 axis rescales every process model
+            Perturbation::InputScale(_) => (0..wf.nodes.len()).collect(),
+            Perturbation::CpuScale(_) => {
+                vec![nodes.task1, nodes.task2, nodes.task3]
+            }
+            Perturbation::Task1CpuScale(_) => vec![nodes.task1],
+            Perturbation::Task2TimeScale(_) => vec![nodes.task2],
+            Perturbation::Task3TimeScale(_) => vec![nodes.task3],
+            Perturbation::Task2Burst => vec![nodes.task2],
+        };
+        wf.downstream_closure(&seeds)
+    }
 }
 
 impl VideoScenario {
@@ -128,6 +174,12 @@ impl VideoScenario {
                 sc.t2_time *= s;
                 sc.t3_time *= s;
             }
+            Perturbation::Task1CpuScale(s) => {
+                sc.t1_cpu *= s;
+                sc.t1_decode_cpu *= s;
+            }
+            Perturbation::Task2TimeScale(s) => sc.t2_time *= s,
+            Perturbation::Task3TimeScale(s) => sc.t3_time *= s,
             Perturbation::Task2Burst => sc.t2_burst = true,
         }
         sc
@@ -522,8 +574,90 @@ mod tests {
 
         let b = base.perturbed(&Perturbation::Task2Burst);
         assert!(b.t2_burst && !base.t2_burst);
+
+        let t1 = base.perturbed(&Perturbation::Task1CpuScale(2.0));
+        assert!((t1.t1_cpu - 164.0).abs() < 1e-9);
+        assert!((t1.t2_time - base.t2_time).abs() < 1e-12);
+        let t2 = base.perturbed(&Perturbation::Task2TimeScale(3.0));
+        assert!((t2.t2_time - 15.0).abs() < 1e-9);
+        assert!((t2.t1_cpu - base.t1_cpu).abs() < 1e-12);
+        let t3 = base.perturbed(&Perturbation::Task3TimeScale(2.0));
+        assert!((t3.t3_time - 6.0).abs() < 1e-9);
+
         // base untouched throughout
         assert_eq!(base.frac_task1, 0.5);
+    }
+
+    /// Dirty-set coverage, one assertion per perturbation variant. The
+    /// pool-level knobs must dirty *all* nodes sharing the pool (plus their
+    /// cones); single-task knobs dirty exactly the task and its cone.
+    #[test]
+    fn dirty_sets_per_variant() {
+        let (wf, nodes) = VideoScenario::default().build();
+        let members = |p: &Perturbation| -> Vec<usize> {
+            p.dirty_set(&wf, &nodes).iter().collect()
+        };
+
+        // every node is downstream of the two downloads -> whole graph
+        let frac = members(&Perturbation::Fraction(0.9));
+        assert_eq!(frac.len(), wf.nodes.len(), "{frac:?}");
+        // a pool change dirties all consumers of that pool in particular
+        let set = Perturbation::Fraction(0.9).dirty_set(&wf, &nodes);
+        for &c in &wf.pool_consumers()[nodes.link_pool] {
+            assert!(set.contains(c), "pool consumer {c} must be dirty");
+        }
+        assert_eq!(
+            members(&Perturbation::LinkRateScale(2.0)).len(),
+            wf.nodes.len()
+        );
+        assert_eq!(
+            members(&Perturbation::InputScale(10.0)).len(),
+            wf.nodes.len()
+        );
+
+        // CpuScale touches the three tasks, whose joint cone excludes the
+        // downloads
+        let cpu = members(&Perturbation::CpuScale(2.0));
+        assert_eq!(cpu, vec![nodes.task1, nodes.task2, nodes.task3]);
+
+        // single-task knobs: seed + downstream cone only
+        assert_eq!(
+            members(&Perturbation::Task1CpuScale(2.0)),
+            vec![nodes.task1, nodes.task3]
+        );
+        assert_eq!(
+            members(&Perturbation::Task2TimeScale(2.0)),
+            vec![nodes.task2, nodes.task3]
+        );
+        assert_eq!(
+            members(&Perturbation::Task3TimeScale(2.0)),
+            vec![nodes.task3]
+        );
+        assert_eq!(
+            members(&Perturbation::Task2Burst),
+            vec![nodes.task2, nodes.task3]
+        );
+    }
+
+    /// Single-task perturbations actually move the makespan the way their
+    /// dirty sets promise.
+    #[test]
+    fn single_task_perturbations_solve() {
+        let mk = |sc: VideoScenario| {
+            let (wf, _) = sc.build();
+            analyze_fixpoint(&wf, &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap()
+        };
+        let base = VideoScenario::default();
+        let t0 = mk(base.clone());
+        // doubling the mux time adds ~3 s to the tail
+        let t3 = mk(base.perturbed(&Perturbation::Task3TimeScale(2.0)));
+        assert!((t3 - t0 - base.t3_time).abs() < 1.0, "{t3} vs {t0}");
+        // scaling task 1's encode by 2 pushes the encode tail out by ~82 s
+        let t1 = mk(base.perturbed(&Perturbation::Task1CpuScale(2.0)));
+        assert!(t1 > t0 + 0.5 * base.t1_cpu, "{t1} vs {t0}");
     }
 
     /// The Task2Burst model variant delays the workflow at high fractions

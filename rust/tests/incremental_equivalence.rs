@@ -1,0 +1,167 @@
+//! Incremental-engine equivalence suite: the analysis cache must be purely
+//! an accelerator. For any perturbation batch, cold (uncached, sequential),
+//! warm (cached, sequential) and parallel-warm (cached, N threads) runs
+//! must produce **bit-for-bit identical** per-scenario analyses and ranked
+//! reports; the dirty-set oracle must over-approximate nothing the cache
+//! relies on (a clean node must hit once its entry exists).
+
+use std::sync::Arc;
+
+use bottlemod::runtime::cache::AnalysisCache;
+use bottlemod::runtime::sweep::SweepBatch;
+use bottlemod::util::rng::Rng;
+use bottlemod::workflow::scenario::{Perturbation, VideoScenario};
+
+/// A randomized batch mixing every perturbation kind.
+fn random_batch(seed: u64, n: usize) -> Vec<Perturbation> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| match rng.below(8) {
+            0 => Perturbation::Fraction(rng.range(0.05, 0.95)),
+            1 => Perturbation::LinkRateScale(rng.range(0.5, 2.0)),
+            2 => Perturbation::InputScale(rng.range(0.5, 4.0)),
+            3 => Perturbation::CpuScale(rng.range(0.5, 2.0)),
+            4 => Perturbation::Task1CpuScale(rng.range(0.5, 2.0)),
+            5 => Perturbation::Task2TimeScale(rng.range(0.5, 2.0)),
+            6 => Perturbation::Task3TimeScale(rng.range(0.5, 2.0)),
+            _ => Perturbation::Task2Burst,
+        })
+        .collect()
+}
+
+/// cold == warm == parallel-warm on randomized batches, several seeds.
+#[test]
+fn cold_warm_parallel_bitwise_equal_randomized() {
+    for seed in [7u64, 42, 2026] {
+        let base = Arc::new(VideoScenario::default());
+        let batch = random_batch(seed, 24);
+
+        let (cold, cold_rep) = SweepBatch::new(base.clone())
+            .with_threads(1)
+            .run_report(&batch)
+            .expect("cold run");
+        let (warm, warm_rep) = SweepBatch::new(base.clone())
+            .with_threads(1)
+            .with_new_cache()
+            .run_report(&batch)
+            .expect("warm run");
+        let (pwarm, pwarm_rep) = SweepBatch::new(base.clone())
+            .with_threads(4)
+            .with_new_cache()
+            .run_report(&batch)
+            .expect("parallel warm run");
+
+        assert_eq!(cold, warm, "seed {seed}: warm != cold");
+        assert_eq!(cold, pwarm, "seed {seed}: parallel warm != cold");
+        assert_eq!(cold_rep.ranked, warm_rep.ranked, "seed {seed}");
+        assert_eq!(cold_rep.ranked, pwarm_rep.ranked, "seed {seed}");
+        assert_eq!(cold_rep.total_events, warm_rep.total_events);
+        // outcomes arrive in batch order with their perturbations intact
+        for (i, o) in cold.iter().enumerate() {
+            assert_eq!(o.index, i);
+            assert_eq!(o.perturbation, batch[i]);
+        }
+    }
+}
+
+/// A cache shared across *consecutive batches* keeps results identical and
+/// answers the repeat batch almost entirely from memory.
+#[test]
+fn shared_cache_across_batches_is_transparent() {
+    let base = Arc::new(VideoScenario::default());
+    let batch = random_batch(99, 16);
+    let cold = SweepBatch::new(base.clone())
+        .with_threads(1)
+        .run(&batch)
+        .expect("cold");
+
+    let cache = Arc::new(AnalysisCache::new());
+    let sweep = SweepBatch::new(base.clone())
+        .with_threads(2)
+        .with_cache(cache.clone());
+    let first = sweep.run(&batch).expect("first warm");
+    assert_eq!(cold, first);
+
+    cache.reset_counters();
+    let second = sweep.run(&batch).expect("second warm");
+    assert_eq!(cold, second);
+    let s = cache.stats();
+    assert_eq!(s.misses, 0, "identical repeat batch must be all hits: {s:?}");
+    assert!(s.hits > 0);
+}
+
+/// Dirty-set oracle vs the cache: in a batch perturbing only task 3, the
+/// clean nodes (both downloads, tasks 1-2) must be served from the cache
+/// after the first scenario — the observable form of "only the downstream
+/// cone of each perturbation is re-solved".
+#[test]
+fn clean_prefix_hits_after_first_scenario() {
+    let base = Arc::new(VideoScenario::default());
+    let (wf, nodes) = base.build();
+    let dirty = Perturbation::Task3TimeScale(1.5).dirty_set(&wf, &nodes);
+    assert_eq!(dirty.iter().collect::<Vec<_>>(), vec![nodes.task3]);
+
+    let cache = Arc::new(AnalysisCache::new());
+    let sweep = SweepBatch::new(base.clone())
+        .with_threads(1)
+        .with_cache(cache.clone());
+
+    // scenario 0 populates the cache: every node misses at least once
+    // (later fixpoint passes may already hit pass-1 entries)
+    sweep
+        .run(&[Perturbation::Task3TimeScale(1.0 + 1.0 / 64.0)])
+        .expect("warm-up");
+    let warmup = cache.stats();
+    assert!(
+        warmup.misses >= wf.nodes.len() as u64,
+        "cold cache: every node solves once: {warmup:?}"
+    );
+
+    // every further scenario only misses on its dirty cone ({task3})
+    cache.reset_counters();
+    let n_more = 8usize;
+    let batch: Vec<Perturbation> = (0..n_more)
+        .map(|i| Perturbation::Task3TimeScale(1.5 + i as f64 / 16.0))
+        .collect();
+    sweep.run(&batch).expect("incremental batch");
+    let s = cache.stats();
+    let lookups = s.hits + s.misses;
+    // per scenario and pass, exactly one node (task3) may miss
+    let passes = lookups / (n_more as u64 * wf.nodes.len() as u64);
+    assert!(passes >= 1, "at least one pass per scenario: {s:?}");
+    assert!(
+        s.misses <= n_more as u64 * passes.max(2),
+        "only the dirty cone may miss: {s:?}"
+    );
+    assert!(
+        s.hit_rate() >= 0.5,
+        "single-node batch must be mostly cache hits: {s}"
+    );
+}
+
+/// Per-variant dirty sets drive real reuse: the smaller the dirty set, the
+/// fewer misses a fresh batch of that variant incurs.
+#[test]
+fn smaller_dirty_sets_miss_less() {
+    let misses_for = |mk: &dyn Fn(usize) -> Perturbation| -> u64 {
+        let base = Arc::new(VideoScenario::default());
+        let cache = Arc::new(AnalysisCache::new());
+        let batch: Vec<Perturbation> = (0..10usize).map(mk).collect();
+        SweepBatch::new(base)
+            .with_threads(1)
+            .with_cache(cache.clone())
+            .run(&batch)
+            .expect("batch");
+        cache.stats().misses
+    };
+    // whole-graph dirty: fractions (pool coupling dirties everything)
+    let frac = misses_for(&|i| Perturbation::Fraction(0.2 + 0.06 * i as f64));
+    // two-node dirty cone
+    let t1 = misses_for(&|i| Perturbation::Task1CpuScale(0.5 + 0.1 * i as f64));
+    // single-node dirty cone
+    let t3 = misses_for(&|i| Perturbation::Task3TimeScale(0.5 + 0.1 * i as f64));
+    assert!(
+        t3 < t1 && t1 < frac,
+        "miss counts should track dirty-set size: t3={t3} t1={t1} frac={frac}"
+    );
+}
