@@ -1,0 +1,113 @@
+//! Trace-calibration throughput: parse + fit a 10 000-row TSV trace (plus
+//! I/O series for a subset of tasks) and assert the cold path stays under
+//! a second — the budget that keeps `bottlemod calibrate` interactive and
+//! the service's `calibrate` op cheap enough to call per scheduling round.
+//!
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines).
+//!
+//! Run: `cargo bench --bench calibrate_throughput`
+
+use bottlemod::solver::SolverOpts;
+use bottlemod::trace::{
+    assemble, calibrate, parse_io_log, parse_tsv, replay, CalibrateOpts,
+};
+use bottlemod::util::harness::bench_once;
+use bottlemod::util::stats::fmt_duration;
+
+const N_TASKS: usize = 10_000;
+const CHAIN: usize = 10;
+const N_SERIES_TASKS: usize = 100;
+const SAMPLES_PER_SERIES: usize = 20;
+
+/// Synthesize a consistent trace: 1 000 independent 10-task chains, each
+/// task reading and writing 1e8 B over 10 s of one core, executed staged
+/// (every task starts when its predecessor completes). Chain roots look
+/// streaming to the memory heuristic, every dependent task burst-shaped —
+/// which is also what makes the staged timings replay consistently.
+fn synth_tsv() -> String {
+    let mut out = String::from(
+        "task_id\tname\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n",
+    );
+    for i in 0..N_TASKS {
+        let pos = i % CHAIN;
+        let deps = if pos == 0 {
+            "-".to_string()
+        } else {
+            format!("t{}", i - 1)
+        };
+        let start = 10.0 * pos as f64;
+        let rss = if pos == 0 { 1e6 } else { 9e7 };
+        out.push_str(&format!(
+            "t{i}\ttask-{i}\t{deps}\t{start}\t{}\t10\t100\t1e8\t1e8\t{rss:e}\n",
+            start + 10.0
+        ));
+    }
+    out
+}
+
+/// I/O series for the first tasks: input fully staged at task start
+/// (cumulative read already at its total), output growing linearly.
+fn synth_io_log() -> String {
+    let mut out = String::new();
+    for i in 0..N_SERIES_TASKS {
+        let pos = i % CHAIN;
+        let start = 10.0 * pos as f64;
+        for s in 0..=SAMPLES_PER_SERIES {
+            let rel = 10.0 * s as f64 / SAMPLES_PER_SERIES as f64;
+            out.push_str(&format!("t{i}\t{}\t1e8\t{}\n", start + rel, 1e7 * rel));
+        }
+    }
+    out
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+    let tsv = synth_tsv();
+    let io = synth_io_log();
+    println!(
+        "trace: {} TSV rows ({} KiB) + {} io samples ({} KiB)",
+        N_TASKS,
+        tsv.len() / 1024,
+        N_SERIES_TASKS * (SAMPLES_PER_SERIES + 1),
+        io.len() / 1024
+    );
+
+    // the asserted budget: cold parse + fit of every task
+    let opts = CalibrateOpts::default();
+    let r = bench_once("parse + fit (10k tasks, cold)", 5, || {
+        let trace = parse_tsv(&tsv).expect("tsv parses");
+        let series = parse_io_log(&io).expect("io log parses");
+        let cal = calibrate(&trace, &series, &opts).expect("calibrates");
+        assert_eq!(cal.len(), N_TASKS);
+        cal
+    });
+    println!("{}", r.report());
+
+    // the rest of the pipeline, reported for context (not asserted)
+    let trace = parse_tsv(&tsv).unwrap();
+    let series = parse_io_log(&io).unwrap();
+    let tasks = calibrate(&trace, &series, &opts).unwrap();
+    let t0 = std::time::Instant::now();
+    let cal = assemble(tasks).expect("assembles");
+    let report = replay(&cal, &SolverOpts::default()).expect("replays");
+    println!(
+        "assemble + replay: {} ({} nodes, max rel err {:.3}%)",
+        fmt_duration(t0.elapsed().as_secs_f64()),
+        cal.workflow.nodes.len(),
+        report.max_rel_err.unwrap_or(f64::NAN) * 100.0
+    );
+
+    let ok = r.per_iter.mean < 1.0;
+    if !ok && !no_assert {
+        panic!(
+            "cold calibration of {} rows took {} (budget: < 1 s)",
+            N_TASKS,
+            fmt_duration(r.per_iter.mean)
+        );
+    }
+    println!(
+        "acceptance: cold parse+fit {} 1 s budget",
+        if ok { "within" } else { "OVER (reported only)" }
+    );
+}

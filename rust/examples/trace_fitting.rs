@@ -1,133 +1,96 @@
-//! Trace-driven modeling — the paper's future work (§5.2/§8) realized:
-//! record BPF-style I/O traces of isolated task executions, *fit* the
-//! requirement functions from the logs, assemble the workflow model from
-//! the fitted processes, and verify the predictions against the testbed.
+//! Trace-driven modeling — the paper's future work (§5.2/§8) realized by
+//! the `trace` subsystem, end to end:
 //!
-//! The fitted task 1 model is strictly richer than the paper's hand model:
-//! the 26 s of read+decode CPU shows up in the log as up-front resource
-//! demand and is replayed by the solver as work that overlaps the download.
+//! 1. execute the Fig 5 workflow on the fluid testbed with the BPF-style
+//!    I/O recorder on (the ground truth a real cluster would log);
+//! 2. export the run in the raw trace formats (Nextflow-style TSV +
+//!    cumulative I/O series — `docs/TRACES.md`) and parse them back,
+//!    exactly as `bottlemod calibrate <trace.tsv> --io <series.log>` would;
+//! 3. calibrate requirement functions per task, assemble the workflow from
+//!    the trace's dependency edges, and replay it through the analytic
+//!    solver;
+//! 4. report per-task predicted-vs-observed completion error (≤ 2 %), and
+//!    compare with the paper's hand-built model.
+//!
+//! Bundled fixtures for the CLI live in `rust/examples/traces/`.
 //!
 //! Run: `cargo run --release --example trace_fitting`
 
-use bottlemod::model::fit::{fit_process, FitOpts};
-use bottlemod::model::ProcessBuilder;
-use bottlemod::pwfn::PwPoly;
 use bottlemod::solver::SolverOpts;
-use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::testbed::fluid::{execute, export_trace, FluidOpts};
+use bottlemod::trace::{calibrate_trace, write_io_log, write_tsv, CalibrateOpts};
 use bottlemod::util::stats::ascii_table;
 use bottlemod::workflow::engine::analyze_fixpoint;
-use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
 use bottlemod::workflow::scenario::VideoScenario;
 
 fn main() -> bottlemod::util::error::Result<()> {
     let sc = VideoScenario::default();
+    let (wf, _) = sc.build();
 
-    // ---- 1. record isolated executions (the paper's BPF monitoring) -----
-    let mut tb = VideoTestbed::new(sc.clone());
-    tb.sample_every = 0.25;
-    let trace1 = tb.isolated_task1();
-    tb.sample_every = 0.05;
-    let trace2 = tb.isolated_task2();
+    // ---- 1. run the workflow with the I/O recorder on --------------------
+    let run = execute(
+        &wf,
+        &FluidOpts {
+            dt: 0.02,
+            sample_every: 0.5,
+            ..FluidOpts::default()
+        },
+    );
+    let measured = run
+        .makespan
+        .ok_or_else(|| bottlemod::util::error::Error::msg("fluid run never finished"))?;
+
+    // ---- 2. export as raw trace text, parse back -------------------------
+    let (tsv_trace, series) = export_trace(&wf, &run)?;
+    let tsv = write_tsv(&tsv_trace);
+    let io_log = write_io_log(&series);
     println!(
-        "recorded {} + {} samples from isolated runs of task 1 / task 2",
-        trace1.ts.len(),
-        trace2.ts.len()
+        "exported trace: {} TSV rows, {} I/O samples ({} KiB total)",
+        tsv_trace.tasks.len(),
+        series.iter().map(|s| s.ts.len()).sum::<usize>(),
+        (tsv.len() + io_log.len()) / 1024
     );
 
-    // ---- 2. fit requirement functions from the logs ----------------------
-    let opts = FitOpts::default();
-    let t1 = fit_process("task1-fitted", &trace1, 1.0, &opts);
-    let t2 = fit_process("task2-fitted", &trace2, 1.0, &opts);
-    for p in [&t1, &t2] {
-        println!(
-            "{}: R_D with {} piece(s), R_R with {} piece(s), max_progress {:.1} MB",
-            p.name,
-            p.data_reqs[0].func.n_pieces(),
-            p.res_reqs[0].func.n_pieces(),
-            p.max_progress / 1e6
-        );
-        p.validate()?;
-    }
+    // ---- 3. calibrate + assemble + replay --------------------------------
+    let (cal, report) = calibrate_trace(
+        &tsv,
+        Some(&io_log),
+        &CalibrateOpts::default(),
+        &SolverOpts::default(),
+    )?;
 
-    // ---- 3. assemble the workflow from fitted processes ------------------
-    let build_fitted = |fraction: f64| {
-        let mut wf = Workflow::new();
-        let pool = wf.add_pool("link", PwPoly::constant(sc.link_rate));
-        let dl = |name: &str| {
-            ProcessBuilder::new(name, sc.input_size)
-                .stream_data("remote", sc.input_size)
-                .stream_resource("link", sc.input_size)
-                .identity_output("file")
-                .build()
-        };
-        let d1 = wf.add_node(
-            dl("dl1"),
-            vec![DataSource::External(PwPoly::constant(sc.input_size))],
-            vec![ResourceSource::PoolFraction { pool, fraction }],
-            StartRule::default(),
-        );
-        let d2 = wf.add_node(
-            dl("dl2"),
-            vec![DataSource::External(PwPoly::constant(sc.input_size))],
-            vec![ResourceSource::PoolResidual { pool }],
-            StartRule::default(),
-        );
-        let n1 = wf.add_node(
-            t1.clone(),
-            vec![DataSource::ProcessOutput { node: d1, output: 0 }],
-            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
-            StartRule::default(),
-        );
-        let n2 = wf.add_node(
-            t2.clone(),
-            vec![DataSource::ProcessOutput { node: d2, output: 0 }],
-            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
-            StartRule::default(),
-        );
-        let t3_total = t1.max_progress + t2.max_progress;
-        let t3 = ProcessBuilder::new("task3", t3_total)
-            .stream_resource("io", sc.t3_time)
-            .identity_output("result")
-            .build();
-        wf.add_node(
-            t3,
-            vec![],
-            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
-            StartRule {
-                at: 0.0,
-                after: vec![n1, n2],
-            },
-        );
-        wf
-    };
-
-    // ---- 4. predict vs testbed across fractions --------------------------
     let mut rows = vec![vec![
-        "fraction".into(),
-        "fitted-model prediction".into(),
-        "hand-model prediction".into(),
-        "testbed measured".into(),
+        "task".into(),
+        "model".into(),
+        "R_D/R_R pieces".into(),
+        "observed".into(),
+        "predicted".into(),
+        "err %".into(),
     ]];
-    let sopts = SolverOpts::default();
-    let mut worst = 0.0f64;
-    for f in [0.3, 0.5, 0.75, 0.93] {
-        let fitted = analyze_fixpoint(&build_fitted(f), &sopts, 6)?
-            .makespan
-            .unwrap();
-        let (hand_wf, _) = sc.clone().with_fraction(f).build();
-        let hand = analyze_fixpoint(&hand_wf, &sopts, 6)?.makespan.unwrap();
-        let measured = VideoTestbed::new(sc.clone().with_fraction(f)).run(None).total;
-        worst = worst.max((fitted - measured).abs() / measured);
+    for s in cal.task_summaries(&report) {
         rows.push(vec![
-            format!("{f:.2}"),
-            format!("{fitted:.1} s"),
-            format!("{hand:.1} s"),
-            format!("{measured:.1} s"),
+            s.id,
+            s.model,
+            format!("{}/{}", s.data_pieces, s.res_pieces),
+            format!("{:.1} s", s.observed.unwrap_or(f64::NAN)),
+            format!("{:.1} s", s.predicted.unwrap_or(f64::NAN)),
+            format!("{:.2}", s.rel_err.unwrap_or(f64::NAN) * 100.0),
         ]);
     }
     print!("{}", ascii_table(&rows));
-    println!("worst fitted-model error vs testbed: {:.2}%", worst * 100.0);
-    bottlemod::ensure!(worst < 0.02, "fitted model diverged");
-    println!("trace fitting OK — models learned from logs predict the workflow");
+
+    // ---- 4. acceptance: calibrated model ≈ reality ≈ hand model ----------
+    let hand = analyze_fixpoint(&wf, &SolverOpts::default(), 6)?
+        .makespan
+        .unwrap();
+    let calibrated = report.predicted_makespan.unwrap();
+    println!(
+        "makespan — testbed {measured:.1} s, calibrated model {calibrated:.1} s, \
+         hand model {hand:.1} s"
+    );
+    let worst = report.max_rel_err.unwrap();
+    println!("worst per-task completion error: {:.2}%", worst * 100.0);
+    bottlemod::ensure!(worst < 0.02, "calibrated model diverged: {worst}");
+    println!("trace calibration OK — models learned from logs replay the workflow");
     Ok(())
 }

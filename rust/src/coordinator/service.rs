@@ -18,6 +18,7 @@ use std::thread::JoinHandle;
 use crate::model::spec::parse_workflow;
 use crate::runtime::cache::AnalysisCache;
 use crate::solver::SolverOpts;
+use crate::trace::{calibrate_trace, CalibrateOpts, CalibratedWorkflow, ReplayReport};
 use crate::util::Json;
 use crate::workflow::engine::analyze_fixpoint_cached;
 use crate::workflow::scenario::VideoScenario;
@@ -33,6 +34,52 @@ pub enum Job {
     /// Run a fraction sweep of the Fig 5 scenario and report the ranked
     /// bottlenecks (the batched engine behind one service call).
     Sweep { id: u64, fractions: Vec<f64> },
+    /// Calibrate solver-ready models from a raw trace (TSV text plus an
+    /// optional I/O series log) and replay-validate them.
+    Calibrate {
+        id: u64,
+        tsv: String,
+        io: Option<String>,
+    },
+}
+
+/// The `calibrate` op's response payload: per-task model summary + replay
+/// error, and the makespans. Shared by the stdio server and the worker
+/// pool; schema documented in `docs/SERVICE.md`.
+fn calibration_json(cal: &CalibratedWorkflow, report: &ReplayReport) -> Json {
+    let tasks: Vec<Json> = cal
+        .task_summaries(report)
+        .into_iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("id", Json::Str(s.id)),
+                ("model", Json::Str(s.model)),
+                ("data_pieces", Json::Num(s.data_pieces as f64)),
+                ("res_pieces", Json::Num(s.res_pieces as f64)),
+                ("predicted_start", Json::Num(s.predicted_start)),
+                ("predicted", s.predicted.map(Json::Num).unwrap_or(Json::Null)),
+                ("observed", s.observed.map(Json::Num).unwrap_or(Json::Null)),
+                ("rel_err", s.rel_err.map(Json::Num).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("tasks", Json::Arr(tasks)),
+        (
+            "predicted_makespan",
+            report.predicted_makespan.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "observed_makespan",
+            report.observed_makespan.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "max_rel_err",
+            report.max_rel_err.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("events", Json::Num(report.events as f64)),
+        ("passes", Json::Num(report.passes as f64)),
+    ])
 }
 
 /// Result of a job, as JSON (so the stdio server can emit it directly).
@@ -201,6 +248,18 @@ pub fn run_job_cached(job: &Job, cache: Option<&Arc<AnalysisCache>>) -> JobResul
                 payload: Json::obj(fields),
             }
         }
+        Job::Calibrate { id, tsv, io } => {
+            let payload = match calibrate_trace(
+                tsv,
+                io.as_deref(),
+                &CalibrateOpts::default(),
+                &SolverOpts::default(),
+            ) {
+                Ok((cal, report)) => calibration_json(&cal, &report),
+                Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+            };
+            JobResult { id: *id, payload }
+        }
     }
 }
 
@@ -297,6 +356,29 @@ pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::
                     });
                 run_job_cached(&Job::Sweep { id, fractions }, Some(&cache)).payload
             }
+            Some("calibrate") => match (req.get("tsv").as_str(), req.get("io")) {
+                (None, _) => Json::obj(vec![(
+                    "error",
+                    Json::Str("calibrate needs a 'tsv' string field".into()),
+                )]),
+                // a malformed 'io' must not silently degrade to the
+                // summary-only fallback
+                (Some(_), io) if !matches!(io, Json::Null | Json::Str(_)) => {
+                    Json::obj(vec![(
+                        "error",
+                        Json::Str("calibrate 'io' must be a string when present".into()),
+                    )])
+                }
+                (Some(tsv), io) => run_job_cached(
+                    &Job::Calibrate {
+                        id,
+                        tsv: tsv.to_string(),
+                        io: io.as_str().map(str::to_string),
+                    },
+                    Some(&cache),
+                )
+                .payload,
+            },
             Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
             other => Json::obj(vec![(
                 "error",
@@ -433,6 +515,93 @@ mod tests {
         assert_eq!(resp.get("id").as_f64(), Some(3.0));
         assert_eq!(resp.get("totals").as_arr().unwrap().len(), 2);
         assert!((resp.get("best_fraction").as_f64().unwrap() - 0.9).abs() < 1e-9);
+    }
+
+    const CHAIN_TSV: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+        dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+        enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+
+    #[test]
+    fn calibrate_job_reports_replay_error() {
+        let r = run_job(&Job::Calibrate {
+            id: 11,
+            tsv: CHAIN_TSV.to_string(),
+            io: None,
+        });
+        assert_eq!(r.id, 11);
+        let tasks = r.payload.get("tasks").as_arr().unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].get("id").as_str(), Some("dl"));
+        assert_eq!(tasks[0].get("model").as_str(), Some("summary/stream"));
+        let mk = r.payload.get("predicted_makespan").as_f64().unwrap();
+        assert!((mk - 20.0).abs() < 0.1, "{mk}");
+        let err = r.payload.get("max_rel_err").as_f64().unwrap();
+        assert!(err < 0.01, "{err}");
+    }
+
+    #[test]
+    fn calibrate_job_reports_parse_errors() {
+        let r = run_job(&Job::Calibrate {
+            id: 12,
+            tsv: "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\toops\t1\n".into(),
+            io: None,
+        });
+        let e = r.payload.get("error").as_str().unwrap();
+        assert!(e.contains("line 2") && e.contains("oops"), "{e}");
+    }
+
+    #[test]
+    fn stdio_calibrate_op() {
+        let req = Json::obj(vec![
+            ("id", Json::Num(5.0)),
+            ("op", Json::Str("calibrate".into())),
+            ("tsv", Json::Str(CHAIN_TSV.into())),
+        ]);
+        let input = format!("{req}\n{{\"op\": \"calibrate\", \"id\": 6}}\n");
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let r1 = Json::parse(lines[0]).unwrap();
+        assert_eq!(r1.get("id").as_f64(), Some(5.0));
+        assert_eq!(r1.get("tasks").as_arr().unwrap().len(), 2);
+        assert!(r1.get("max_rel_err").as_f64().unwrap() < 0.01);
+        // missing tsv field is a per-request error, not a dead server
+        let r2 = Json::parse(lines[1]).unwrap();
+        assert!(r2.get("error").as_str().unwrap().contains("tsv"));
+    }
+
+    /// A malformed 'io' field must error, not silently degrade to the
+    /// summary-only fallback.
+    #[test]
+    fn stdio_calibrate_rejects_non_string_io() {
+        let req = Json::obj(vec![
+            ("id", Json::Num(9.0)),
+            ("op", Json::Str("calibrate".into())),
+            ("tsv", Json::Str(CHAIN_TSV.into())),
+            ("io", Json::Num(42.0)),
+        ]);
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(format!("{req}\n")), &mut out).unwrap();
+        let resp = Json::parse(String::from_utf8(out).unwrap().lines().next().unwrap())
+            .unwrap();
+        assert!(
+            resp.get("error").as_str().unwrap().contains("io"),
+            "{resp:?}"
+        );
+        // explicit null is fine (treated as absent)
+        let req = Json::obj(vec![
+            ("id", Json::Num(10.0)),
+            ("op", Json::Str("calibrate".into())),
+            ("tsv", Json::Str(CHAIN_TSV.into())),
+            ("io", Json::Null),
+        ]);
+        let mut out = Vec::new();
+        serve_stdio(std::io::Cursor::new(format!("{req}\n")), &mut out).unwrap();
+        let resp = Json::parse(String::from_utf8(out).unwrap().lines().next().unwrap())
+            .unwrap();
+        assert_eq!(resp.get("tasks").as_arr().unwrap().len(), 2);
     }
 
     /// The server holds one analysis cache for the session: a repeated

@@ -12,6 +12,7 @@ pub mod pwfn;
 pub mod runtime;
 pub mod sched;
 pub mod solver;
+pub mod trace;
 pub mod workflow;
 pub mod testbed;
 pub mod util;

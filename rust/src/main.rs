@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   analyze <spec.json>           analyze a workflow spec, print schedule +
 //!                                 bottleneck segments
+//!   calibrate <trace.tsv>         fit solver-ready models from a raw
+//!     [--io <series.log>]         workflow trace and replay-validate them
+//!     [--tol <t>]                 (formats: docs/TRACES.md)
 //!   sweep [N] [--pjrt]            Fig 7 prioritization sweep (exact engine,
 //!                                 optionally also the batched PJRT path)
 //!   measure [points] [runs]       virtual-testbed measurements (Fig 7 bars)
@@ -24,6 +27,7 @@ use bottlemod::runtime::Runtime;
 use bottlemod::sched;
 use bottlemod::solver::SolverOpts;
 use bottlemod::testbed::video::VideoTestbed;
+use bottlemod::trace::{calibrate_trace, CalibrateOpts};
 use bottlemod::util::error::{Error, Result};
 use bottlemod::util::stats::{ascii_table, fmt_duration, Summary};
 use bottlemod::workflow::engine::analyze_fixpoint;
@@ -35,6 +39,7 @@ fn main() -> ExitCode {
     let rest = &args[1.min(args.len())..];
     let result = match cmd {
         "analyze" => cmd_analyze(rest),
+        "calibrate" => cmd_calibrate(rest),
         "sweep" => cmd_sweep(rest),
         "measure" => cmd_measure(rest),
         "compare-des" => cmd_compare_des(rest),
@@ -68,8 +73,9 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "bottlemod — fast bottleneck analysis for scientific workflows\n\
-         usage: bottlemod <analyze|sweep|measure|compare-des|export-figures|\
-         advisor|online-demo|serve|artifacts> [args]"
+         usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|\
+         export-figures|advisor|online-demo|serve|artifacts> [args]\n\
+         calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]"
     );
 }
 
@@ -124,6 +130,88 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
         wa.events,
         wa.passes
     );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    let usage = "usage: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]";
+    let mut tsv_path: Option<&String> = None;
+    let mut io_path: Option<&String> = None;
+    let mut opts = CalibrateOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--io" => {
+                io_path = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--io needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--tol" => {
+                opts.tol = args
+                    .get(i + 1)
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::msg(format!("--tol needs a number\n{usage}")))?;
+                i += 2;
+            }
+            a if !a.starts_with("--") => {
+                if tsv_path.is_none() {
+                    tsv_path = Some(&args[i]);
+                } else {
+                    return Err(Error::msg(format!("unexpected argument '{a}'\n{usage}")));
+                }
+                i += 1;
+            }
+            other => {
+                return Err(Error::msg(format!("unknown flag '{other}'\n{usage}")));
+            }
+        }
+    }
+    let tsv_path = tsv_path.ok_or_else(|| Error::msg(usage))?;
+    let tsv = std::fs::read_to_string(tsv_path)?;
+    let io = match io_path {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => None,
+    };
+    let t0 = std::time::Instant::now();
+    let (cal, report) =
+        calibrate_trace(&tsv, io.as_deref(), &opts, &SolverOpts::default())?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let fmt_opt = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
+    let mut rows = vec![vec![
+        "task".to_string(),
+        "model".to_string(),
+        "R_D/R_R pieces".to_string(),
+        "observed".to_string(),
+        "predicted".to_string(),
+        "err %".to_string(),
+    ]];
+    for s in cal.task_summaries(&report) {
+        rows.push(vec![
+            s.id,
+            s.model,
+            format!("{}/{}", s.data_pieces, s.res_pieces),
+            fmt_opt(s.observed),
+            fmt_opt(s.predicted),
+            s.rel_err
+                .map(|e| format!("{:.2}", e * 100.0))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    println!(
+        "calibrated {} task(s) in {}; predicted makespan {} (observed {})",
+        cal.tasks.len(),
+        fmt_duration(dt),
+        fmt_opt(report.predicted_makespan),
+        fmt_opt(report.observed_makespan),
+    );
+    match report.max_rel_err {
+        Some(e) => println!("worst per-task completion error: {:.2}%", e * 100.0),
+        None => println!("trace logs no completion times; replay error unavailable"),
+    }
     Ok(())
 }
 

@@ -3,9 +3,10 @@
 //! The paper leaves this as future work (§5.2: "executions of such tasks
 //! can be logged and the requirement functions can be derived from such
 //! logs. However, that is part of future work."; §8 suggests eBPF traces).
-//! This module implements it: given a BPF-style cumulative I/O trace of an
-//! *isolated* task execution (input fully available, known constant
-//! resource allocation), it fits
+//! This module implements it for the virtual testbed's isolated-execution
+//! [`IoTrace`]s: given a BPF-style cumulative I/O trace of an *isolated*
+//! task execution (input fully available, known constant resource
+//! allocation), it fits
 //!
 //! * the data requirement `R_D(n)` from the (bytes-read → bytes-written)
 //!   relation — a stream task yields a proportional curve, a
@@ -17,14 +18,22 @@
 //!   let that up-front work overlap a slow download);
 //! * an identity output function (progress metric = output bytes).
 //!
-//! Curves are compacted by greedy piecewise-linear segmentation with a
-//! relative tolerance, so fitted models stay small (few pieces) and the
-//! solver stays fast.
+//! The fitting machinery lives in the trace subsystem and is shared with
+//! full workflow-trace calibration: segmentation in
+//! [`crate::trace::segment`] (re-exported here under the historical names
+//! [`fit_pl`] / [`pl_to_pwpoly`] / [`pl_to_pwpoly_dir`]), the fit itself
+//! in [`crate::trace::calibrate::fit_series`], to which [`fit_process`]
+//! delegates. Curves are compacted by greedy piecewise-linear
+//! segmentation with a relative tolerance, so fitted models stay small
+//! (few pieces) and the solver stays fast.
 
-use crate::pwfn::{poly::Poly, PwPoly};
 use crate::testbed::video::IoTrace;
 
-use super::process::{DataRequirement, OutputFn, Process, ResourceRequirement};
+pub use crate::trace::segment::{
+    compact as fit_pl, to_pwpoly as pl_to_pwpoly, to_pwpoly_dir as pl_to_pwpoly_dir,
+};
+
+use super::process::Process;
 
 /// Options for trace fitting.
 #[derive(Clone, Debug)]
@@ -44,188 +53,30 @@ impl Default for FitOpts {
     }
 }
 
-/// Greedy PL segmentation of a monotone curve: returns breakpoints
-/// `(x, y)` such that linear interpolation stays within `tol * y_span` of
-/// every sample. Input must be sorted by x (ties allowed, last wins).
-pub fn fit_pl(points: &[(f64, f64)], tol: f64) -> Vec<(f64, f64)> {
-    assert!(points.len() >= 2, "need at least two samples");
-    let y_span = points
-        .iter()
-        .map(|p| p.1)
-        .fold(f64::NEG_INFINITY, f64::max)
-        - points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
-    let eps = tol * y_span.max(1e-300);
-
-    let mut out = vec![points[0]];
-    let mut seg_start = 0usize;
-    let mut i = 1;
-    while i < points.len() {
-        // try extending the current segment to point i+1; check deviation
-        let cand_end = (i + 1).min(points.len() - 1);
-        let (x0, y0) = points[seg_start];
-        let (x1, y1) = points[cand_end];
-        let dx = x1 - x0;
-        let ok = if dx.abs() < 1e-300 {
-            true
-        } else {
-            let slope = (y1 - y0) / dx;
-            points[seg_start..=cand_end].iter().all(|&(x, y)| {
-                let pred = y0 + slope * (x - x0);
-                (pred - y).abs() <= eps
-            })
-        };
-        if ok && cand_end > i {
-            i = cand_end;
-            continue;
-        }
-        if ok && cand_end == i {
-            // reached the end
-            break;
-        }
-        // cut the segment at i
-        out.push(points[i]);
-        seg_start = i;
-        i += 1;
-    }
-    let last = *points.last().unwrap();
-    if out.last() != Some(&last) {
-        out.push(last);
-    }
-    out
-}
-
-/// Build a monotone PwPoly from fitted breakpoints. Near-vertical steps
-/// (consecutive points closer in x than `jump_eps_abs`) are widened into
-/// steep piecewise-linear ramps of width `jump_eps_abs` — exactly
-/// equivalent for the solver (the cumulative amount is preserved, and the
-/// function stays PL so Algorithm 2's §4 restriction holds), and crucially
-/// visible at the domain edge, where a true jump at `x = x_min` would
-/// degenerate into an invisible constant offset of a derivative-based
-/// model.
-pub fn pl_to_pwpoly(points: &[(f64, f64)], jump_eps_abs: f64) -> PwPoly {
-    pl_to_pwpoly_dir(points, jump_eps_abs, false)
-}
-
-/// Like [`pl_to_pwpoly`], but widening direction is selectable: forward
-/// (steps keep their left edge — right for resource requirements, whose
-/// up-front cost must be payable from the start) or backward (steps keep
-/// their right edge — right for data requirements, whose burst threshold
-/// must not exceed the actually-available input).
-pub fn pl_to_pwpoly_dir(points: &[(f64, f64)], jump_eps_abs: f64, backward: bool) -> PwPoly {
-    assert!(points.len() >= 2);
-    let eps = jump_eps_abs.max(1e-12);
-    // enforce strictly increasing x by widening steps
-    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(points.len());
-    if backward {
-        for &(x, y) in points.iter().rev() {
-            let x = match pts.last() {
-                Some(&(nx, ny)) => {
-                    if y >= ny - 1e-300 && x >= nx - eps {
-                        continue; // duplicate sample
-                    }
-                    x.min(nx - eps)
-                }
-                None => x,
-            };
-            pts.push((x, y));
-        }
-        pts.reverse();
-        // backward widening may push the first x negative; clamp by
-        // dropping points left of the original start
-        let x0 = points[0].0;
-        pts.retain(|&(x, _)| x >= x0 - 1e-300);
-        if pts.first().map(|p| p.0) != Some(x0) {
-            pts.insert(0, points[0]);
-        }
-    } else {
-        for &(x, y) in points {
-            let x = match pts.last() {
-                Some(&(px, py)) => {
-                    if y <= py + 1e-300 && x <= px + eps {
-                        continue; // duplicate sample
-                    }
-                    x.max(px + eps)
-                }
-                None => x,
-            };
-            pts.push((x, y));
-        }
-    }
-    if pts.len() < 2 {
-        return PwPoly::constant_from(points[0].0, points.last().unwrap().1);
-    }
-    let mut breaks: Vec<f64> = Vec::with_capacity(pts.len() + 1);
-    let mut polys: Vec<Poly> = Vec::with_capacity(pts.len());
-    for w in pts.windows(2) {
-        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
-        breaks.push(x0);
-        polys.push(Poly::linear(y0, (y1 - y0) / (x1 - x0)));
-    }
-    breaks.push(pts[pts.len() - 1].0);
-    breaks.push(f64::INFINITY);
-    polys.push(Poly::constant(pts[pts.len() - 1].1));
-    PwPoly::new(breaks, polys)
-}
-
 /// Fit a full process model from an isolated-execution I/O trace.
 ///
 /// `alloc` is the (constant) resource rate the task had during the traced
 /// run (e.g. 1.0 CPU). The returned process uses output bytes as its
-/// progress metric.
+/// progress metric. Delegates to [`crate::trace::calibrate::fit_series`].
 pub fn fit_process(name: &str, trace: &IoTrace, alloc: f64, opts: &FitOpts) -> Process {
     assert_eq!(trace.ts.len(), trace.read.len());
     assert_eq!(trace.ts.len(), trace.written.len());
-    let total_out = *trace.written.last().unwrap();
-    let total_in = *trace.read.last().unwrap();
-    let x_span = total_in.max(1e-300);
-
-    // ---- data requirement: written as a function of read ----------------
-    // enforce monotone x by taking the running max of read
-    let mut dw: Vec<(f64, f64)> = vec![];
-    let mut max_read: f64 = 0.0;
-    for i in 0..trace.ts.len() {
-        max_read = max_read.max(trace.read[i]);
-        dw.push((max_read, trace.written[i]));
-    }
-    let fitted = fit_pl(&dw, opts.tol);
-    let data_req = pl_to_pwpoly_dir(&fitted, opts.jump_eps * x_span, true);
-
-    // ---- resource requirement: cumulative resource vs written -----------
-    // (time * alloc) as a function of output; up-front time becomes a jump
-    let pw: Vec<(f64, f64)> = {
-        let mut v: Vec<(f64, f64)> = vec![];
-        let mut max_w: f64 = 0.0;
-        for i in 0..trace.ts.len() {
-            max_w = max_w.max(trace.written[i]);
-            v.push((max_w, trace.ts[i] * alloc));
-        }
-        v
-    };
-    let fitted_r = fit_pl(&pw, opts.tol);
-    let res_req = pl_to_pwpoly(&fitted_r, opts.jump_eps * total_out.max(1e-300));
-
-    Process {
-        name: name.to_string(),
-        data_reqs: vec![DataRequirement {
-            name: "in".to_string(),
-            func: data_req,
-        }],
-        res_reqs: vec![ResourceRequirement {
-            name: "cpu".to_string(),
-            func: res_req,
-        }],
-        outputs: vec![OutputFn {
-            name: "out".to_string(),
-            func: PwPoly::linear_from(0.0, 0.0, 1.0),
-        }],
-        max_progress: total_out,
-    }
+    crate::trace::calibrate::fit_series(
+        name,
+        &trace.ts,
+        &trace.read,
+        &trace.written,
+        alloc,
+        opts.tol,
+        opts.jump_eps,
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::process::ProcessInputs;
+    use crate::pwfn::PwPoly;
     use crate::solver::{solve, SolverOpts};
     use crate::testbed::video::VideoTestbed;
     use crate::workflow::scenario::VideoScenario;

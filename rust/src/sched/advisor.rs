@@ -16,19 +16,36 @@ pub struct Recommendation {
     pub gain: f64,
 }
 
+/// Candidate fractions for [`recommend`]: the Fig 7 grid plus the fair
+/// 50:50 baseline, sorted and deduplicated. The dedup matters: for grid
+/// sizes where `0.5` (or a float within rounding of it) is already a grid
+/// point, a naive push would sweep a duplicate and make the `fair_total`
+/// lookup ambiguous.
+pub fn candidate_fractions(points: usize) -> Vec<f64> {
+    let mut fractions = fig7_fractions(points);
+    fractions.push(0.5);
+    fractions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    fractions.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    fractions
+}
+
 /// Sweep `points` candidate fractions and recommend the best one.
 pub fn recommend(sc: &VideoScenario, points: usize, threads: usize) -> Recommendation {
-    let mut fractions = fig7_fractions(points);
-    if !fractions.iter().any(|f| (f - 0.5).abs() < 1e-12) {
-        fractions.push(0.5);
-    }
+    let fractions = candidate_fractions(points);
     let sweep = exact_sweep(sc, &fractions, threads);
     let (best_f, best_t) = best_fraction(&sweep);
+    // the list always contains exactly one fraction within 1e-9 of 0.5;
+    // pick the closest rather than an exact bit-match
     let fair_total = sweep
         .fractions
         .iter()
         .zip(&sweep.totals)
-        .find(|(f, _)| (**f - 0.5).abs() < 1e-12)
+        .min_by(|(a, _), (b, _)| {
+            (**a - 0.5)
+                .abs()
+                .partial_cmp(&(**b - 0.5).abs())
+                .unwrap()
+        })
         .map(|(_, t)| *t)
         .unwrap();
     Recommendation {
@@ -42,6 +59,25 @@ pub fn recommend(sc: &VideoScenario, points: usize, threads: usize) -> Recommend
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn candidates_sorted_unique_and_contain_fair_share() {
+        // n = 49: fig7_fractions contains 25/50 = 0.5 exactly — the push
+        // used to duplicate it; n = 50 has no exact 0.5
+        for n in [1, 49, 50, 200] {
+            let c = candidate_fractions(n);
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "not sorted/unique: n={n}");
+            assert_eq!(
+                c.iter().filter(|f| (**f - 0.5).abs() < 1e-9).count(),
+                1,
+                "n={n}: {c:?}"
+            );
+            assert!(c.len() >= n, "n={n}");
+        }
+        // the exact-grid case keeps exactly n entries (no duplicate sweep)
+        assert_eq!(candidate_fractions(49).len(), 49);
+        assert_eq!(candidate_fractions(50).len(), 51);
+    }
 
     #[test]
     fn recommends_the_paper_headline() {

@@ -4,5 +4,5 @@
 pub mod advisor;
 pub mod online;
 
-pub use advisor::{recommend, Recommendation};
+pub use advisor::{candidate_fractions, recommend, Recommendation};
 pub use online::{predict_remaining, run_online, Decision, LiveState, OnlineResult};

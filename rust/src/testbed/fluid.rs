@@ -12,8 +12,10 @@
 //! end-to-end correctness signal, exercised by property tests.
 
 use crate::pwfn::PwPoly;
+use crate::trace::format::{IoSeries, TsvTask, TsvTrace};
 use crate::util::Rng;
 use crate::workflow::graph::{DataSource, ResourceSource, Workflow};
+use crate::{bail, ensure};
 
 /// Executor options.
 #[derive(Clone, Debug)]
@@ -26,6 +28,10 @@ pub struct FluidOpts {
     /// factors resampled every `jitter_period` seconds.
     pub jitter: Option<(u64, f64)>,
     pub jitter_period: f64,
+    /// Record per-node cumulative I/O series at this interval (seconds);
+    /// 0 disables recording. Each node also gets a final sample exactly at
+    /// its completion, so exported counters match the summary row.
+    pub sample_every: f64,
 }
 
 impl Default for FluidOpts {
@@ -35,6 +41,7 @@ impl Default for FluidOpts {
             horizon: 1e5,
             jitter: None,
             jitter_period: 1.0,
+            sample_every: 0.0,
         }
     }
 }
@@ -48,12 +55,30 @@ pub struct FluidRun {
     pub progress: Vec<f64>,
     /// Steps actually executed (cost accounting: scales with horizon/dt).
     pub steps: usize,
+    /// Wall-clock time each node actually started (gating satisfied).
+    pub started: Vec<Option<f64>>,
+    /// Wall-clock time each node first *consumed* anything (progress or
+    /// jump-debt payment) — what a process monitor logs as the task start.
+    /// Later than `started` for nodes that sat waiting on input; the trace
+    /// exporter uses this as the TSV `start`, so data-stall time is not
+    /// double-counted as resource demand by the calibrator.
+    pub active: Vec<Option<f64>>,
+    /// Total resource actually consumed per node (summed across its
+    /// resource inputs; the monitoring ground truth for `pcpu`).
+    pub resource_used: Vec<f64>,
+    /// Per-node cumulative I/O series (empty unless
+    /// [`FluidOpts::sample_every`] > 0). `read` counts input bytes
+    /// available to (i.e. ingestible by) the node, `written` its output
+    /// bytes — the BPF view of a task that buffers its input.
+    pub traces: Vec<IoSeries>,
 }
 
 struct NodeState {
     p: f64,
     done: Option<f64>,
     started: bool,
+    started_at: Option<f64>,
+    active_at: Option<f64>,
     /// outstanding resource-jump debt per resource
     debt: Vec<f64>,
     paid: Vec<Vec<bool>>,
@@ -106,6 +131,8 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
                 None
             },
             started: false,
+            started_at: None,
+            active_at: None,
             debt: vec![0.0; nd.process.res_reqs.len()],
             paid: jumps[i].iter().map(|js| vec![false; js.len()]).collect(),
             jitter: 1.0,
@@ -116,6 +143,17 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
     let mut t = 0.0;
     let mut steps = 0usize;
     let mut next_jitter_refresh = 0.0;
+    let mut resource_used = vec![0.0f64; n];
+    let mut traces: Vec<IoSeries> = wf
+        .nodes
+        .iter()
+        .map(|nd| IoSeries {
+            task: nd.process.name.clone(),
+            ..IoSeries::default()
+        })
+        .collect();
+    let mut trace_closed = vec![false; n];
+    let mut next_sample = 0.0f64;
 
     while t < opts.horizon && st.iter().any(|s| s.done.is_none()) {
         steps += 1;
@@ -137,6 +175,7 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
                     && nd.start.after.iter().all(|&d| st[d].done.is_some());
                 if ok {
                     st[i].started = true;
+                    st[i].started_at = Some(t);
                 }
             }
         }
@@ -208,6 +247,10 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
                     } * st[i].jitter;
                     // pay jump debt
                     if st[i].debt[l] > 0.0 {
+                        if alloc * dt > 0.0 {
+                            st[i].active_at.get_or_insert(t);
+                        }
+                        resource_used[i] += (alloc * dt).min(st[i].debt[l]);
                         st[i].debt[l] -= alloc * dt;
                         if st[i].debt[l] > 0.0 {
                             dp = 0.0;
@@ -241,15 +284,66 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
                     let used_rate = c * dp / dt;
                     if used_rate > 0.0 {
                         charge_pool(src, used_rate, &mut pool_used);
+                        resource_used[i] += c * dp;
                     }
                 }
 
+                if dp > 1e-15 * (1.0 + nd.process.max_progress) {
+                    st[i].active_at.get_or_insert(t);
+                }
                 st[i].p += dp;
                 if st[i].p >= nd.process.max_progress - 1e-9 * (1.0 + nd.process.max_progress)
                 {
                     st[i].p = nd.process.max_progress;
                     st[i].done = Some(t + dt);
                 }
+            }
+        }
+
+        // ---- I/O recording (BPF-style cumulative counters) -------------
+        if opts.sample_every > 0.0 {
+            let due = t >= next_sample;
+            for i in 0..n {
+                if trace_closed[i] {
+                    continue;
+                }
+                let finished = st[i].done.is_some();
+                if !(due || finished) {
+                    continue;
+                }
+                let nd = &wf.nodes[i];
+                let read: f64 = nd
+                    .data_sources
+                    .iter()
+                    .map(|src| match src {
+                        DataSource::External(f) => f.eval(t),
+                        DataSource::ProcessOutput { node, output } => {
+                            wf.nodes[*node].process.outputs[*output].func.eval(st[*node].p)
+                        }
+                    })
+                    .sum();
+                let written = match nd.process.outputs.first() {
+                    Some(o) => o.func.eval(st[i].p),
+                    None => st[i].p,
+                };
+                let ts = if finished { st[i].done.unwrap() } else { t };
+                let tr = &mut traces[i];
+                if tr.ts.last().map(|&l| ts > l + 1e-12).unwrap_or(true) {
+                    tr.ts.push(ts);
+                    tr.read.push(read);
+                    tr.written.push(written);
+                } else {
+                    // same timestamp as the previous sample: keep the maxima
+                    let k = tr.ts.len() - 1;
+                    tr.read[k] = tr.read[k].max(read);
+                    tr.written[k] = tr.written[k].max(written);
+                }
+                if finished {
+                    trace_closed[i] = true;
+                }
+            }
+            if due {
+                next_sample = t + opts.sample_every;
             }
         }
         t += dt;
@@ -264,7 +358,93 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
         makespan,
         progress: st.iter().map(|s| s.p).collect(),
         steps,
+        started: st.iter().map(|s| s.started_at).collect(),
+        active: st.iter().map(|s| s.active_at).collect(),
+        resource_used,
+        traces: if opts.sample_every > 0.0 { traces } else { vec![] },
     }
+}
+
+/// Export a recorded fluid execution in the trace-subsystem formats: a
+/// Nextflow-style TSV row per node (ids = process names, deps from the
+/// DAG, `pcpu` from the actually consumed resource) plus the recorded
+/// cumulative I/O series. Feeding the result back through
+/// [`crate::trace::calibrate_trace`] closes the round trip the
+/// calibration tests assert on.
+///
+/// Requires unique process names, at most one resource requirement per
+/// node (the TSV has a single `pcpu` column), and a run in which every
+/// node finished.
+pub fn export_trace(wf: &Workflow, run: &FluidRun) -> crate::util::Result<(TsvTrace, Vec<IoSeries>)> {
+    let n = wf.nodes.len();
+    ensure!(run.finish.len() == n, "run does not match workflow");
+    let mut names: std::collections::HashSet<&str> = std::collections::HashSet::new();
+    for (i, nd) in wf.nodes.iter().enumerate() {
+        ensure!(
+            nd.process.res_reqs.len() <= 1,
+            "node {i} ('{}') has {} resource requirements; the TSV export models one",
+            nd.process.name,
+            nd.process.res_reqs.len()
+        );
+        ensure!(
+            !nd.process.name.is_empty()
+                && !nd.process.name.starts_with('#')
+                && !nd.process.name.contains(|c: char| c.is_whitespace() || c == ','),
+            "process name '{}' cannot be exported: empty, starts with '#' (a trace \
+             comment), or contains whitespace/comma (it would corrupt the TSV/io-log \
+             columns or the deps list)",
+            nd.process.name
+        );
+        ensure!(
+            names.insert(nd.process.name.as_str()),
+            "duplicate process name '{}'",
+            nd.process.name
+        );
+    }
+    let mut tasks = Vec::with_capacity(n);
+    for (i, nd) in wf.nodes.iter().enumerate() {
+        let finish = match run.finish[i] {
+            Some(f) => f,
+            None => bail!(
+                "node {i} ('{}') never finished; cannot export a complete trace",
+                nd.process.name
+            ),
+        };
+        let start = run.active[i]
+            .or(run.started[i])
+            .unwrap_or_else(|| nd.start.at.min(finish))
+            .min(finish);
+        let realtime = (finish - start).max(0.0);
+        let rchar: f64 = nd
+            .data_sources
+            .iter()
+            .map(|src| match src {
+                DataSource::External(f) => f.eval(finish),
+                DataSource::ProcessOutput { node, output } => {
+                    wf.nodes[*node].process.outputs[*output].func.eval(run.progress[*node])
+                }
+            })
+            .sum();
+        let wchar = match nd.process.outputs.first() {
+            Some(o) => o.func.eval(run.progress[i]),
+            None => run.progress[i],
+        };
+        let pcpu = (!nd.process.res_reqs.is_empty() && realtime > 1e-12)
+            .then(|| 100.0 * run.resource_used[i] / realtime);
+        tasks.push(TsvTask {
+            id: nd.process.name.clone(),
+            name: nd.process.name.clone(),
+            deps: wf.deps(i).iter().map(|&d| wf.nodes[d].process.name.clone()).collect(),
+            start: Some(start),
+            complete: Some(finish),
+            realtime,
+            pcpu,
+            rchar,
+            wchar,
+            peak_rss: 0.0,
+        });
+    }
+    Ok((TsvTrace { tasks }, run.traces.clone()))
 }
 
 fn charge_pool(src: &ResourceSource, rate: f64, pool_used: &mut [f64]) {
@@ -371,6 +551,66 @@ mod tests {
             assert!((m - base).abs() < 0.05 * base, "seed {seed}: {m} vs {base}");
         }
         assert!(different, "jitter had no effect");
+    }
+
+    /// Recording + export produce traces the strict parsers accept, with
+    /// counters that match the run's summary facts.
+    #[test]
+    fn recording_and_export_parse_back() {
+        let mut wf = Workflow::new();
+        let dl = ProcessBuilder::new("dl", 100.0)
+            .stream_data("remote", 100.0)
+            .stream_resource("link", 100.0)
+            .identity_output("file")
+            .build();
+        let d = wf.add_node(
+            dl,
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let rev = ProcessBuilder::new("rev", 100.0)
+            .burst_data("in", 100.0)
+            .stream_resource("cpu", 20.0)
+            .identity_output("out")
+            .build();
+        wf.add_node(
+            rev,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let run = execute(
+            &wf,
+            &FluidOpts {
+                dt: 0.01,
+                sample_every: 0.5,
+                ..FluidOpts::default()
+            },
+        );
+        assert!(run.makespan.is_some());
+        let (tsv, series) = export_trace(&wf, &run).unwrap();
+        assert_eq!(tsv.tasks.len(), 2);
+        let t_dl = tsv.task("dl").unwrap();
+        assert!(close(t_dl.complete.unwrap(), 10.0, 0.1));
+        assert!(close(t_dl.rchar, 100.0, 1e-6));
+        assert!(close(t_dl.wchar, 100.0, 1e-6));
+        // pcpu = 100 * consumed / realtime: 100 link-units over ~10 s
+        assert!(close(t_dl.pcpu.unwrap(), 1000.0, 20.0), "{:?}", t_dl.pcpu);
+        let t_rev = tsv.task("rev").unwrap();
+        assert_eq!(t_rev.deps, vec!["dl".to_string()]);
+        assert!(close(t_rev.complete.unwrap(), 30.0, 0.2));
+        // the writers emit exactly what the strict parsers accept
+        let tsv2 = crate::trace::format::parse_tsv(&crate::trace::format::write_tsv(&tsv))
+            .unwrap();
+        assert_eq!(tsv2, tsv);
+        let log = crate::trace::format::write_io_log(&series);
+        let series2 = crate::trace::format::parse_io_log(&log).unwrap();
+        assert_eq!(series2.len(), 2);
+        // the final sample lands exactly on the summary counters
+        let s_rev = series2.iter().find(|s| s.task == "rev").unwrap();
+        assert!(close(*s_rev.written.last().unwrap(), 100.0, 1e-6));
+        assert!(close(*s_rev.ts.last().unwrap(), t_rev.complete.unwrap(), 1e-9));
     }
 
     #[test]

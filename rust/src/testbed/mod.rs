@@ -10,4 +10,4 @@
 pub mod fluid;
 pub mod video;
 
-pub use fluid::{execute, FluidOpts, FluidRun};
+pub use fluid::{execute, export_trace, FluidOpts, FluidRun};

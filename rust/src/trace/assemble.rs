@@ -1,0 +1,421 @@
+//! From calibrated tasks to a solver-ready [`Workflow`], plus the replay
+//! validator that closes the loop.
+//!
+//! Wiring rules (documented in `docs/TRACES.md`):
+//!
+//! * a task with **exactly one** dependency whose producer wrote bytes —
+//!   and whose own read volume the producer's output can actually cover —
+//!   is wired *pipelined*: its data input is the producer's
+//!   output-over-time function `O(P(t))`, so streaming overlap replays;
+//! * a task with **zero or several** dependencies (or one the producer
+//!   cannot feed) gets Nextflow stage-in semantics: all dependencies
+//!   become barrier edges (`StartRule::after`) and its input is modeled as
+//!   fully staged (`DataSource::External` at `rchar` bytes);
+//! * every resource requirement is wired `Fixed(alloc)` with the same
+//!   constant allocation the calibrator assumed, so fit and replay agree.
+//!
+//! [`replay`] then re-runs the analytic solver on the assembled model and
+//! compares each task's predicted completion against the trace's observed
+//! completion. The relative error is the end-to-end quality metric of the
+//! whole pipeline: parse → fit → assemble → solve. Segmentation loss,
+//! fallback-shape mismatch and wiring approximations all land in it.
+
+use crate::pwfn::PwPoly;
+use crate::solver::SolverOpts;
+use crate::util::error::Result;
+use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+use crate::{bail, ensure};
+
+use super::calibrate::{calibrate, CalibrateOpts, CalibratedTask};
+use super::format::{parse_io_log, parse_tsv};
+
+/// A calibrated workflow: the DAG plus the per-node trace facts
+/// (`tasks[i]` describes `workflow.nodes[i]`).
+#[derive(Clone, Debug)]
+pub struct CalibratedWorkflow {
+    pub workflow: Workflow,
+    pub tasks: Vec<CalibratedTask>,
+}
+
+/// Assemble calibrated tasks into a workflow (see module docs for the
+/// wiring rules). Fails with a descriptive error on unknown dependency
+/// ids, duplicate ids, arity surprises, or dependency cycles.
+pub fn assemble(tasks: Vec<CalibratedTask>) -> Result<CalibratedWorkflow> {
+    let mut index: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        ensure!(
+            index.insert(t.id.as_str(), i).is_none(),
+            "duplicate task id '{}'",
+            t.id
+        );
+    }
+    for t in &tasks {
+        for d in &t.deps {
+            ensure!(
+                index.contains_key(d.as_str()),
+                "task '{}' depends on unknown task '{d}'",
+                t.id
+            );
+        }
+    }
+    let index_of = |id: &str| index[id];
+
+    let mut wf = Workflow::new();
+    for t in &tasks {
+        let n_data = t.process.data_reqs.len();
+        ensure!(
+            n_data <= 1,
+            "task '{}': calibrated processes carry at most one data requirement, got {n_data}",
+            t.id
+        );
+        let mut after: Vec<usize> = vec![];
+        let mut data_sources: Vec<DataSource> = vec![];
+        if n_data == 0 {
+            after.extend(t.deps.iter().map(|d| index_of(d)));
+        } else {
+            let pipelined = if t.deps.len() == 1 {
+                let dep = &tasks[index_of(&t.deps[0])];
+                // the producer must actually deliver the bytes this task read
+                (dep.wchar > 1e-9 && t.rchar <= dep.wchar * 1.001 + 1e-6)
+                    .then(|| index_of(&t.deps[0]))
+            } else {
+                None
+            };
+            match pipelined {
+                Some(node) => {
+                    data_sources.push(DataSource::ProcessOutput { node, output: 0 });
+                }
+                None => {
+                    // stage-in semantics: barrier on every dep, input staged
+                    after.extend(t.deps.iter().map(|d| index_of(d)));
+                    data_sources.push(DataSource::External(PwPoly::constant(
+                        t.rchar.max(1e-9),
+                    )));
+                }
+            }
+        }
+        let resource_sources: Vec<ResourceSource> = t
+            .process
+            .res_reqs
+            .iter()
+            .map(|_| ResourceSource::Fixed(PwPoly::constant(t.alloc)))
+            .collect();
+        // a root task's start is exogenous (submit/queue delay the DAG
+        // cannot derive) — honor the trace so a late-starting root does
+        // not register as replay error. Dependent tasks' starts are
+        // predictions, derived from their producers.
+        let at = if t.deps.is_empty() {
+            t.observed_start.unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        wf.add_node(
+            t.process.clone(),
+            data_sources,
+            resource_sources,
+            StartRule { at, after },
+        );
+    }
+    if let Err(e) = wf.validate() {
+        bail!("assembled workflow is invalid: {e}");
+    }
+    Ok(CalibratedWorkflow {
+        workflow: wf,
+        tasks,
+    })
+}
+
+/// Predicted-vs-observed completion of one task.
+#[derive(Clone, Debug)]
+pub struct TaskReplay {
+    pub id: String,
+    pub predicted_start: f64,
+    pub predicted: Option<f64>,
+    pub observed: Option<f64>,
+    /// `|predicted − observed| / observed`, when both are known.
+    pub rel_err: Option<f64>,
+}
+
+/// Result of replaying a calibrated workflow through the solver.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub per_task: Vec<TaskReplay>,
+    pub predicted_makespan: Option<f64>,
+    /// Latest observed completion in the trace (`None` if the trace logs
+    /// no completion times at all).
+    pub observed_makespan: Option<f64>,
+    /// Worst per-task relative error (`None` if nothing was comparable).
+    pub max_rel_err: Option<f64>,
+    pub events: usize,
+    pub passes: usize,
+}
+
+/// One row of the calibration report: model provenance + curve sizes +
+/// replay numbers for a task. The CLI table, the service JSON and the
+/// examples all derive from [`CalibratedWorkflow::task_summaries`] so the
+/// three surfaces cannot drift.
+#[derive(Clone, Debug)]
+pub struct TaskSummary {
+    pub id: String,
+    /// `"series"`, `"summary/stream"` or `"summary/burst"`.
+    pub model: String,
+    pub data_pieces: usize,
+    pub res_pieces: usize,
+    pub predicted_start: f64,
+    pub predicted: Option<f64>,
+    pub observed: Option<f64>,
+    pub rel_err: Option<f64>,
+}
+
+impl CalibratedWorkflow {
+    /// Per-task report rows, index-aligned with `report.per_task`.
+    pub fn task_summaries(&self, report: &ReplayReport) -> Vec<TaskSummary> {
+        self.tasks
+            .iter()
+            .zip(&report.per_task)
+            .map(|(t, r)| TaskSummary {
+                id: t.id.clone(),
+                model: t.source.to_string(),
+                data_pieces: t
+                    .process
+                    .data_reqs
+                    .first()
+                    .map(|d| d.func.n_pieces())
+                    .unwrap_or(0),
+                res_pieces: t
+                    .process
+                    .res_reqs
+                    .first()
+                    .map(|q| q.func.n_pieces())
+                    .unwrap_or(0),
+                predicted_start: r.predicted_start,
+                predicted: r.predicted,
+                observed: r.observed,
+                rel_err: r.rel_err,
+            })
+            .collect()
+    }
+}
+
+/// Re-run the analytic solver on the calibrated model and report per-task
+/// predicted-vs-observed completion error.
+pub fn replay(cal: &CalibratedWorkflow, opts: &SolverOpts) -> Result<ReplayReport> {
+    let wa = analyze_fixpoint(&cal.workflow, opts, 8)
+        .map_err(|e| crate::util::error::Error::msg(format!("replay failed: {e}")))?;
+    let mut per_task = Vec::with_capacity(cal.tasks.len());
+    let mut max_rel_err: Option<f64> = None;
+    let mut observed_makespan: Option<f64> = None;
+    for (i, t) in cal.tasks.iter().enumerate() {
+        let predicted = wa.analyses[i].finish_time;
+        let observed = t.observed_complete;
+        if let Some(o) = observed {
+            observed_makespan = Some(observed_makespan.unwrap_or(0.0).max(o));
+        }
+        let rel_err = match (predicted, observed) {
+            (Some(p), Some(o)) => Some((p - o).abs() / o.abs().max(1e-9)),
+            _ => None,
+        };
+        if let Some(e) = rel_err {
+            max_rel_err = Some(max_rel_err.unwrap_or(0.0).max(e));
+        }
+        per_task.push(TaskReplay {
+            id: t.id.clone(),
+            predicted_start: wa.analyses[i].start_time,
+            predicted,
+            observed,
+            rel_err,
+        });
+    }
+    Ok(ReplayReport {
+        per_task,
+        predicted_makespan: wa.makespan,
+        observed_makespan,
+        max_rel_err,
+        events: wa.events,
+        passes: wa.passes,
+    })
+}
+
+/// The whole pipeline in one call: parse the TSV (and optional I/O log),
+/// calibrate every task, assemble the workflow and replay it. This is
+/// what the `calibrate` CLI subcommand and the service `calibrate` op
+/// wrap.
+pub fn calibrate_trace(
+    tsv: &str,
+    io_log: Option<&str>,
+    opts: &CalibrateOpts,
+    solver: &SolverOpts,
+) -> Result<(CalibratedWorkflow, ReplayReport)> {
+    let trace = parse_tsv(tsv)?;
+    let series = match io_log {
+        Some(text) => parse_io_log(text)?,
+        None => vec![],
+    };
+    let tasks = calibrate(&trace, &series, opts)?;
+    let cal = assemble(tasks)?;
+    let report = replay(&cal, solver)?;
+    Ok((cal, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::graph::DataSource;
+
+    const CHAIN: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+        dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+        enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n\
+        mux\tdl,enc\t20\t23\t3\t100\t1.5e8\t1.5e8\t1.4e8\n";
+
+    #[test]
+    fn chain_assembles_with_expected_wiring() {
+        let (cal, _) = calibrate_trace(
+            CHAIN,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        let wf = &cal.workflow;
+        assert_eq!(wf.nodes.len(), 3);
+        // enc is pipelined onto dl
+        assert!(matches!(
+            wf.nodes[1].data_sources[0],
+            DataSource::ProcessOutput { node: 0, output: 0 }
+        ));
+        assert!(wf.nodes[1].start.after.is_empty());
+        // mux has two deps: barrier wiring, staged input
+        assert!(matches!(wf.nodes[2].data_sources[0], DataSource::External(_)));
+        assert_eq!(wf.nodes[2].start.after, vec![0, 1]);
+    }
+
+    #[test]
+    fn consistent_summary_trace_replays_exactly() {
+        let (_, report) = calibrate_trace(
+            CHAIN,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        let max = report.max_rel_err.unwrap();
+        assert!(max < 0.005, "max rel err {max}: {:?}", report.per_task);
+        let m = report.predicted_makespan.unwrap();
+        assert!((m - 23.0).abs() < 0.1, "{m}");
+        assert_eq!(report.observed_makespan, Some(23.0));
+        assert_eq!(report.per_task.len(), 3);
+        // barrier start is predicted, not copied from the trace
+        assert!((report.per_task[2].predicted_start - 20.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn series_trace_replays_exactly() {
+        // enc gets a full I/O series: resource-limited at 2.5e6 B/s while
+        // input arrives at 1e7 B/s (buffered reads)
+        let mut log = String::from("# task t read written\n");
+        for i in 0..=20 {
+            let t = i as f64;
+            log.push_str(&format!(
+                "enc\t{t}\t{}\t{}\n",
+                (1e7 * t).min(1e8),
+                2.5e6 * t
+            ));
+        }
+        let (cal, report) = calibrate_trace(
+            CHAIN,
+            Some(&log),
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            cal.tasks[1].source,
+            crate::trace::calibrate::ModelSource::Series
+        );
+        let max = report.max_rel_err.unwrap();
+        assert!(max < 0.01, "max rel err {max}: {:?}", report.per_task);
+    }
+
+    #[test]
+    fn oversized_read_falls_back_to_barrier() {
+        // enc reads 2e8 but its only dep wrote 1e8: cannot be pipelined
+        let tsv = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+            dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+            enc\tdl\t10\t30\t20\t100\t2e8\t5e7\t8e6\n";
+        let (cal, report) = calibrate_trace(
+            tsv,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert!(matches!(
+            cal.workflow.nodes[1].data_sources[0],
+            DataSource::External(_)
+        ));
+        assert_eq!(cal.workflow.nodes[1].start.after, vec![0]);
+        // barrier start at 10, 20 s of cpu => completes at 30, as observed
+        assert!(report.max_rel_err.unwrap() < 0.005, "{:?}", report.per_task);
+    }
+
+    /// A root task that sat in a queue until t=100 must not register its
+    /// submit delay as replay error: its start is exogenous and honored.
+    #[test]
+    fn delayed_root_start_is_honored() {
+        // the child is burst-shaped (peak_rss ≈ rchar): it observedly ran
+        // staged, 110 → 130, which the burst data gate reproduces
+        let tsv = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+            late\t-\t100\t110\t10\t100\t1e8\t1e8\t0\n\
+            child\tlate\t110\t130\t20\t100\t1e8\t5e7\t9e7\n";
+        let (cal, report) = calibrate_trace(
+            tsv,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert!((cal.workflow.nodes[0].start.at - 100.0).abs() < 1e-9);
+        // the child's start stays a prediction (data-gated, not copied)
+        assert!((cal.workflow.nodes[1].start.at).abs() < 1e-9);
+        assert!(
+            report.max_rel_err.unwrap() < 0.005,
+            "{:?}",
+            report.per_task
+        );
+        assert!((report.predicted_makespan.unwrap() - 130.0).abs() < 0.1);
+    }
+
+    /// TSV rchar and the I/O series can disagree (different monitors);
+    /// the staged input must cover the fitted R_D's domain or the replay
+    /// would starve forever.
+    #[test]
+    fn staged_input_covers_series_read_total() {
+        let tsv = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+            a\t-\t0\t5\t5\t100\t4e7\t5e7\t0\n";
+        let log = "a 0 5e7 0\na 2.5 5e7 2.5e7\na 5 5e7 5e7\n";
+        let (cal, report) = calibrate_trace(
+            tsv,
+            Some(log),
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(cal.tasks[0].rchar, 5e7);
+        assert!(report.max_rel_err.unwrap() < 0.005, "{:?}", report.per_task);
+    }
+
+    #[test]
+    fn cycle_reported() {
+        let tsv = "task_id\tdeps\trealtime\trchar\twchar\na\tb\t1\t1\t1\nb\ta\t1\t1\t1\n";
+        let e = calibrate_trace(
+            tsv,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("cycle"), "{e}");
+    }
+}

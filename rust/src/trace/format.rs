@@ -1,0 +1,462 @@
+//! Raw trace formats: Nextflow-style per-task TSV and BPF-style I/O series.
+//!
+//! Two complementary inputs, mirroring what real workflow engines emit
+//! (cf. *Low-level I/O Monitoring for Scientific Workflows*, Witzke et al.
+//! 2024, and Nextflow's `trace.txt`):
+//!
+//! * **TSV trace** — one row per task with summary statistics: identity,
+//!   dependency edges, wall time, average CPU utilization, cumulative bytes
+//!   read/written (`rchar`/`wchar`) and peak resident set. Enough to build
+//!   a coarse model of every task ([`mod@crate::trace::calibrate`]'s
+//!   summary-stats fallback).
+//! * **I/O series log** — timestamped cumulative `(read, written)` byte
+//!   counters per task, the Fig 6 shape. When present for a task, the
+//!   calibrator fits full requirement curves from it instead of the
+//!   summary fallback.
+//!
+//! Both parsers are strict: malformed rows fail with the line number and
+//! the offending value (via [`crate::util::error`]), never silently skip.
+//! Numbers accept scientific notation (`1.2e9` byte counts are common in
+//! real traces). The writers ([`write_tsv`], [`write_io_log`]) emit the
+//! exact same dialect, which is what makes the fluid-testbed round trip
+//! (`execute` → export → parse → calibrate → replay) a byte-level test of
+//! the whole pipeline.
+
+use crate::util::error::{Error, Result};
+use crate::{bail, ensure};
+
+/// One TSV row: summary statistics of a single task execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TsvTask {
+    /// Unique task id (the `deps` column refers to these).
+    pub id: String,
+    /// Human-readable name (defaults to the id).
+    pub name: String,
+    /// Upstream task ids this task consumed data from / waited on.
+    pub deps: Vec<String>,
+    /// Wall-clock start on the workflow clock, if logged.
+    pub start: Option<f64>,
+    /// Wall-clock completion on the workflow clock, if logged.
+    pub complete: Option<f64>,
+    /// Wall-clock duration in seconds.
+    pub realtime: f64,
+    /// Average CPU utilization in percent (100 = one busy core), if logged.
+    pub pcpu: Option<f64>,
+    /// Cumulative bytes read.
+    pub rchar: f64,
+    /// Cumulative bytes written.
+    pub wchar: f64,
+    /// Peak resident set size in bytes, if logged (0 = unknown).
+    pub peak_rss: f64,
+}
+
+/// A parsed TSV trace: one entry per task, in file order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TsvTrace {
+    pub tasks: Vec<TsvTask>,
+}
+
+/// Timestamped cumulative I/O counters of one task (BPF-style).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IoSeries {
+    pub task: String,
+    /// Sample times (workflow clock, strictly increasing).
+    pub ts: Vec<f64>,
+    /// Cumulative bytes read at each sample (nondecreasing).
+    pub read: Vec<f64>,
+    /// Cumulative bytes written at each sample (nondecreasing).
+    pub written: Vec<f64>,
+}
+
+impl TsvTrace {
+    /// Look up a task by id.
+    pub fn task(&self, id: &str) -> Option<&TsvTask> {
+        self.tasks.iter().find(|t| t.id == id)
+    }
+}
+
+fn parse_num(field: &str, value: &str, line: usize) -> Result<f64> {
+    value
+        .parse::<f64>()
+        .ok()
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| {
+            Error::msg(format!(
+                "trace line {line}: bad number '{value}' in column '{field}'"
+            ))
+        })
+}
+
+fn parse_opt_num(field: &str, value: &str, line: usize) -> Result<Option<f64>> {
+    if value == "-" || value.is_empty() {
+        return Ok(None);
+    }
+    parse_num(field, value, line).map(Some)
+}
+
+/// Parse a Nextflow-style TSV trace.
+///
+/// The first non-comment line is a tab-separated header naming the columns;
+/// rows follow in any column order. Required columns: `task_id`, `deps`,
+/// `rchar`, `wchar`, and timing (`realtime`, or both `start` and
+/// `complete`). Optional: `name`, `start`, `complete`, `pcpu`, `peak_rss`.
+/// `-` means "not logged" in any optional field; `deps` is a
+/// comma-separated list of task ids or `-` for none. Unknown columns are
+/// ignored. Lines starting with `#` are comments.
+pub fn parse_tsv(text: &str) -> Result<TsvTrace> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l))
+        .filter(|(_, l)| !l.trim().is_empty() && !l.trim_start().starts_with('#'));
+
+    let (header_line, header) = lines
+        .next()
+        .ok_or_else(|| Error::msg("empty trace: no header line"))?;
+    let cols: Vec<&str> = header.split('\t').map(str::trim).collect();
+    let col = |name: &str| cols.iter().position(|c| *c == name);
+    let need = |name: &str| {
+        col(name).ok_or_else(|| {
+            Error::msg(format!(
+                "trace line {header_line}: header is missing required column '{name}'"
+            ))
+        })
+    };
+    let c_id = need("task_id")?;
+    let c_deps = need("deps")?;
+    let c_rchar = need("rchar")?;
+    let c_wchar = need("wchar")?;
+    let c_realtime = col("realtime");
+    let c_start = col("start");
+    let c_complete = col("complete");
+    if c_realtime.is_none() && (c_start.is_none() || c_complete.is_none()) {
+        bail!(
+            "trace line {header_line}: need a 'realtime' column, or both 'start' and 'complete'"
+        );
+    }
+    let c_name = col("name");
+    let c_pcpu = col("pcpu");
+    let c_rss = col("peak_rss");
+
+    let mut tasks: Vec<TsvTask> = vec![];
+    let mut seen_ids: std::collections::HashSet<String> = std::collections::HashSet::new();
+    for (ln, line) in lines {
+        let fields: Vec<&str> = line.split('\t').map(str::trim).collect();
+        ensure!(
+            fields.len() == cols.len(),
+            "trace line {ln}: {} fields for {} header columns",
+            fields.len(),
+            cols.len()
+        );
+        let id = fields[c_id].to_string();
+        ensure!(!id.is_empty(), "trace line {ln}: empty task_id");
+        ensure!(
+            seen_ids.insert(id.clone()),
+            "trace line {ln}: duplicate task_id '{id}'"
+        );
+        let deps: Vec<String> = match fields[c_deps] {
+            "-" | "" => vec![],
+            d => d.split(',').map(|s| s.trim().to_string()).collect(),
+        };
+        ensure!(
+            deps.iter().all(|d| !d.is_empty()),
+            "trace line {ln}: empty dep id in '{}'",
+            fields[c_deps]
+        );
+        ensure!(
+            !deps.iter().any(|d| *d == id),
+            "trace line {ln}: task '{id}' depends on itself"
+        );
+        let start = match c_start {
+            Some(c) => parse_opt_num("start", fields[c], ln)?,
+            None => None,
+        };
+        let complete = match c_complete {
+            Some(c) => parse_opt_num("complete", fields[c], ln)?,
+            None => None,
+        };
+        let realtime = match c_realtime {
+            Some(c) => parse_opt_num("realtime", fields[c], ln)?,
+            None => None,
+        };
+        let realtime = match (realtime, start, complete) {
+            (Some(r), _, _) => r,
+            (None, Some(s), Some(e)) => e - s,
+            _ => bail!(
+                "trace line {ln}: task '{id}' has neither realtime nor start+complete"
+            ),
+        };
+        ensure!(
+            realtime.is_finite() && realtime >= 0.0,
+            "trace line {ln}: task '{id}' has negative or non-finite realtime {realtime}"
+        );
+        if let (Some(s), Some(e)) = (start, complete) {
+            ensure!(
+                e >= s,
+                "trace line {ln}: task '{id}' completes at {e} before its start {s}"
+            );
+        }
+        let pcpu = match c_pcpu {
+            Some(c) => parse_opt_num("pcpu", fields[c], ln)?,
+            None => None,
+        };
+        let rchar = parse_num("rchar", fields[c_rchar], ln)?;
+        let wchar = parse_num("wchar", fields[c_wchar], ln)?;
+        ensure!(
+            rchar >= 0.0 && wchar >= 0.0,
+            "trace line {ln}: task '{id}' has negative I/O counters"
+        );
+        let peak_rss = match c_rss {
+            Some(c) => parse_opt_num("peak_rss", fields[c], ln)?.unwrap_or(0.0),
+            None => 0.0,
+        };
+        tasks.push(TsvTask {
+            name: match c_name {
+                Some(c) if !fields[c].is_empty() && fields[c] != "-" => {
+                    fields[c].to_string()
+                }
+                _ => id.clone(),
+            },
+            id,
+            deps,
+            start,
+            complete,
+            realtime,
+            pcpu,
+            rchar,
+            wchar,
+            peak_rss,
+        });
+    }
+    ensure!(!tasks.is_empty(), "trace has a header but no task rows");
+    // referential integrity: every dep must name a task in this trace
+    for t in &tasks {
+        for d in &t.deps {
+            ensure!(
+                seen_ids.contains(d),
+                "task '{}' depends on unknown task '{d}'",
+                t.id
+            );
+        }
+    }
+    Ok(TsvTrace { tasks })
+}
+
+/// Parse a BPF-style cumulative I/O log: whitespace-separated
+/// `task_id  t  bytes_read  bytes_written` per line, `#` comments allowed.
+/// Samples are grouped per task in file order; per task, timestamps must be
+/// strictly increasing and both counters nondecreasing (they are
+/// cumulative) — violations are errors, with the line number.
+pub fn parse_io_log(text: &str) -> Result<Vec<IoSeries>> {
+    let mut out: Vec<IoSeries> = vec![];
+    let mut index: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    for (ln, line) in text.lines().enumerate().map(|(i, l)| (i + 1, l)) {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        ensure!(
+            f.len() == 4,
+            "io log line {ln}: expected 'task t read written', got {} field(s)",
+            f.len()
+        );
+        let t = parse_num("t", f[1], ln)?;
+        let read = parse_num("read", f[2], ln)?;
+        let written = parse_num("written", f[3], ln)?;
+        ensure!(
+            t.is_finite() && read.is_finite() && written.is_finite(),
+            "io log line {ln}: non-finite sample"
+        );
+        ensure!(
+            read >= 0.0 && written >= 0.0,
+            "io log line {ln}: negative cumulative counter"
+        );
+        let idx = match index.get(f[0]) {
+            Some(&i) => i,
+            None => {
+                out.push(IoSeries {
+                    task: f[0].to_string(),
+                    ..IoSeries::default()
+                });
+                index.insert(f[0].to_string(), out.len() - 1);
+                out.len() - 1
+            }
+        };
+        let series = &mut out[idx];
+        if let Some(&last_t) = series.ts.last() {
+            ensure!(
+                t > last_t,
+                "io log line {ln}: task '{}' timestamp {t} not after {last_t}",
+                series.task
+            );
+            ensure!(
+                read >= *series.read.last().unwrap() - 1e-9
+                    && written >= *series.written.last().unwrap() - 1e-9,
+                "io log line {ln}: task '{}' cumulative counter decreased",
+                series.task
+            );
+        }
+        series.ts.push(t);
+        series.read.push(read);
+        series.written.push(written);
+    }
+    Ok(out)
+}
+
+/// Serialize a TSV trace in the dialect [`parse_tsv`] reads.
+pub fn write_tsv(trace: &TsvTrace) -> String {
+    let mut out = String::from(
+        "task_id\tname\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n",
+    );
+    let num = |x: f64| format!("{x}");
+    let opt = |x: Option<f64>| x.map(&num).unwrap_or_else(|| "-".into());
+    for t in &trace.tasks {
+        let deps = if t.deps.is_empty() {
+            "-".to_string()
+        } else {
+            t.deps.join(",")
+        };
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+            t.id,
+            t.name,
+            deps,
+            opt(t.start),
+            opt(t.complete),
+            num(t.realtime),
+            opt(t.pcpu),
+            num(t.rchar),
+            num(t.wchar),
+            num(t.peak_rss),
+        ));
+    }
+    out
+}
+
+/// Serialize I/O series in the dialect [`parse_io_log`] reads.
+pub fn write_io_log(series: &[IoSeries]) -> String {
+    let mut out = String::from("# task t read written\n");
+    for s in series {
+        for i in 0..s.ts.len() {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\n",
+                s.task, s.ts[i], s.read[i], s.written[i]
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = "task_id\tname\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+        dl\tdownload\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+        enc\tencode\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n\
+        mux\tmux\tdl,enc\t20\t23\t3\t100\t1.5e8\t1.5e8\t4e6\n";
+
+    #[test]
+    fn parses_demo_tsv() {
+        let tr = parse_tsv(DEMO).unwrap();
+        assert_eq!(tr.tasks.len(), 3);
+        let enc = tr.task("enc").unwrap();
+        assert_eq!(enc.deps, vec!["dl".to_string()]);
+        assert_eq!(enc.rchar, 1e8);
+        assert_eq!(enc.wchar, 5e7);
+        assert_eq!(enc.pcpu, Some(100.0));
+        let mux = tr.task("mux").unwrap();
+        assert_eq!(mux.deps.len(), 2);
+        assert_eq!(mux.start, Some(20.0));
+        // scientific notation survives
+        assert_eq!(tr.task("dl").unwrap().pcpu, Some(1e9));
+    }
+
+    #[test]
+    fn header_driven_column_order_and_extras() {
+        let text = "extra\trchar\twchar\ttask_id\tdeps\trealtime\n\
+            x\t100\t50\ta\t-\t5\n";
+        let tr = parse_tsv(text).unwrap();
+        assert_eq!(tr.tasks[0].id, "a");
+        assert_eq!(tr.tasks[0].rchar, 100.0);
+        assert_eq!(tr.tasks[0].pcpu, None);
+        assert_eq!(tr.tasks[0].name, "a"); // defaults to id
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let bad_num = "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\toops\t0\n";
+        let e = parse_tsv(bad_num).unwrap_err().to_string();
+        assert!(e.contains("line 2") && e.contains("oops") && e.contains("rchar"), "{e}");
+
+        let missing = "task_id\trealtime\trchar\twchar\na\t5\t1\t1\n";
+        let e = parse_tsv(missing).unwrap_err().to_string();
+        assert!(e.contains("deps"), "{e}");
+
+        let no_timing = "task_id\tdeps\trchar\twchar\na\t-\t1\t1\n";
+        let e = parse_tsv(no_timing).unwrap_err().to_string();
+        assert!(e.contains("realtime"), "{e}");
+
+        let unknown_dep = "task_id\tdeps\trealtime\trchar\twchar\na\tzz\t5\t1\t1\n";
+        let e = parse_tsv(unknown_dep).unwrap_err().to_string();
+        assert!(e.contains("unknown task 'zz'"), "{e}");
+
+        let dup = "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\t1\t1\na\t-\t5\t1\t1\n";
+        let e = parse_tsv(dup).unwrap_err().to_string();
+        assert!(e.contains("duplicate"), "{e}");
+
+        let self_dep = "task_id\tdeps\trealtime\trchar\twchar\na\ta\t5\t1\t1\n";
+        let e = parse_tsv(self_dep).unwrap_err().to_string();
+        assert!(e.contains("itself"), "{e}");
+    }
+
+    #[test]
+    fn realtime_derived_from_start_complete() {
+        let text = "task_id\tdeps\tstart\tcomplete\trchar\twchar\na\t-\t2\t7.5\t1\t1\n";
+        let tr = parse_tsv(text).unwrap();
+        assert_eq!(tr.tasks[0].realtime, 5.5);
+    }
+
+    #[test]
+    fn io_log_roundtrip_and_grouping() {
+        let text = "# comment\n\
+            a 0.0 0 0\n\
+            b 0.0 10 0\n\
+            a 1.0 100 50\n\
+            a 2.0 2e2 1e2\n\
+            b 1.5 20 5\n";
+        let series = parse_io_log(text).unwrap();
+        assert_eq!(series.len(), 2);
+        let a = &series[0];
+        assert_eq!(a.task, "a");
+        assert_eq!(a.ts, vec![0.0, 1.0, 2.0]);
+        assert_eq!(a.read, vec![0.0, 100.0, 200.0]);
+        assert_eq!(a.written[2], 100.0);
+        // writer emits what the parser reads
+        let again = parse_io_log(&write_io_log(&series)).unwrap();
+        assert_eq!(again, series);
+    }
+
+    #[test]
+    fn io_log_rejects_nonmonotone() {
+        let back_in_time = "a 1.0 10 0\na 0.5 20 0\n";
+        let e = parse_io_log(back_in_time).unwrap_err().to_string();
+        assert!(e.contains("line 2") && e.contains("not after"), "{e}");
+
+        let shrinking = "a 0.0 10 0\na 1.0 5 0\n";
+        let e = parse_io_log(shrinking).unwrap_err().to_string();
+        assert!(e.contains("decreased"), "{e}");
+
+        let short = "a 1.0 10\n";
+        let e = parse_io_log(short).unwrap_err().to_string();
+        assert!(e.contains("expected"), "{e}");
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let tr = parse_tsv(DEMO).unwrap();
+        let again = parse_tsv(&write_tsv(&tr)).unwrap();
+        assert_eq!(again, tr);
+    }
+}

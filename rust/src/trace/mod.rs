@@ -1,0 +1,45 @@
+//! Trace ingestion & calibration: from raw workflow traces to solver-ready
+//! models.
+//!
+//! The paper's evaluation hand-builds its models and defers acquisition to
+//! future work ("executions of such tasks can be logged and the requirement
+//! functions can be derived from such logs", §5.2/§8). This subsystem is
+//! that path, end to end:
+//!
+//! ```text
+//!  trace.tsv ──parse──┐
+//!                     ├─ calibrate ─ assemble ─ replay ─ error report
+//!  series.log ─parse──┘      │           │         │
+//!   (optional)          Process per   Workflow   solver re-run vs
+//!                         task        (DAG +     observed completions
+//!                                     wiring)
+//! ```
+//!
+//! * [`mod@format`] — strict parsers/writers for a Nextflow-style per-task
+//!   TSV trace and a BPF-style cumulative I/O series log;
+//! * [`mod@segment`] — the reusable greedy piecewise-linear compactor
+//!   behind every fitted curve (also used by [`crate::model::fit`]);
+//! * [`mod@calibrate`] — per-task fitting of `R_D`, `R_R` and output
+//!   functions, with a summary-statistics fallback when only TSV rows
+//!   exist;
+//! * [`mod@assemble`] — DAG assembly ([`crate::workflow::graph::Workflow`])
+//!   plus the replay validator reporting per-task predicted-vs-observed
+//!   completion error.
+//!
+//! Surfaces: `bottlemod calibrate <trace.tsv> [--io <series.log>]`, the
+//! JSON-lines service's `calibrate` op (`docs/SERVICE.md`), example
+//! fixtures under `rust/examples/traces/`, and the
+//! `examples/trace_fitting.rs` walkthrough. Formats, heuristics and error
+//! semantics are documented in `docs/TRACES.md`.
+
+pub mod assemble;
+pub mod calibrate;
+pub mod format;
+pub mod segment;
+
+pub use assemble::{
+    assemble, calibrate_trace, replay, CalibratedWorkflow, ReplayReport, TaskReplay,
+    TaskSummary,
+};
+pub use calibrate::{calibrate, fit_series, CalibrateOpts, CalibratedTask, ModelSource};
+pub use format::{parse_io_log, parse_tsv, write_io_log, write_tsv, IoSeries, TsvTask, TsvTrace};

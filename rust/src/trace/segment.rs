@@ -1,0 +1,209 @@
+//! Greedy piecewise-linear segmentation of monotone sample series.
+//!
+//! This is the single compaction engine behind every trace-derived curve in
+//! the repo: [`crate::model::fit`] (isolated-execution fitting) and
+//! [`mod@crate::trace::calibrate`] (workflow-trace calibration) both
+//! delegate here. Given a cloud of `(x, y)` samples sorted by `x`, [`compact`]
+//! returns the few breakpoints whose linear interpolation stays within a
+//! relative tolerance of every sample, and [`to_pwpoly`] /
+//! [`to_pwpoly_dir`] turn breakpoints into a solver-ready [`PwPoly`],
+//! widening near-vertical steps into steep PL ramps so the §4 restriction
+//! (piecewise-linear resource requirements) holds and jumps at the domain
+//! edge stay visible.
+//!
+//! Keeping fitted models small matters twice: the solver's cost is
+//! proportional to piece count (paper §6), and the sweep engine's cache
+//! keys hash every coefficient.
+
+use crate::pwfn::{poly::Poly, PwPoly};
+
+/// Greedy PL segmentation of a monotone curve: returns breakpoints
+/// `(x, y)` such that linear interpolation stays within `tol * y_span` of
+/// every sample. Input must be sorted by x (ties allowed, last wins).
+pub fn compact(points: &[(f64, f64)], tol: f64) -> Vec<(f64, f64)> {
+    assert!(points.len() >= 2, "need at least two samples");
+    let y_span = points
+        .iter()
+        .map(|p| p.1)
+        .fold(f64::NEG_INFINITY, f64::max)
+        - points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let eps = tol * y_span.max(1e-300);
+
+    let mut out = vec![points[0]];
+    let mut seg_start = 0usize;
+    let mut i = 1;
+    while i < points.len() {
+        // try extending the current segment to point i+1; check deviation
+        let cand_end = (i + 1).min(points.len() - 1);
+        let (x0, y0) = points[seg_start];
+        let (x1, y1) = points[cand_end];
+        let dx = x1 - x0;
+        let ok = if dx.abs() < 1e-300 {
+            true
+        } else {
+            let slope = (y1 - y0) / dx;
+            points[seg_start..=cand_end].iter().all(|&(x, y)| {
+                let pred = y0 + slope * (x - x0);
+                (pred - y).abs() <= eps
+            })
+        };
+        if ok && cand_end > i {
+            i = cand_end;
+            continue;
+        }
+        if ok && cand_end == i {
+            // reached the end
+            break;
+        }
+        // cut the segment at i
+        out.push(points[i]);
+        seg_start = i;
+        i += 1;
+    }
+    let last = *points.last().unwrap();
+    if out.last() != Some(&last) {
+        out.push(last);
+    }
+    out
+}
+
+/// Build a monotone PwPoly from fitted breakpoints. Near-vertical steps
+/// (consecutive points closer in x than `jump_eps_abs`) are widened into
+/// steep piecewise-linear ramps of width `jump_eps_abs` — exactly
+/// equivalent for the solver (the cumulative amount is preserved, and the
+/// function stays PL so Algorithm 2's §4 restriction holds), and crucially
+/// visible at the domain edge, where a true jump at `x = x_min` would
+/// degenerate into an invisible constant offset of a derivative-based
+/// model.
+pub fn to_pwpoly(points: &[(f64, f64)], jump_eps_abs: f64) -> PwPoly {
+    to_pwpoly_dir(points, jump_eps_abs, false)
+}
+
+/// Like [`to_pwpoly`], but widening direction is selectable: forward
+/// (steps keep their left edge — right for resource requirements, whose
+/// up-front cost must be payable from the start) or backward (steps keep
+/// their right edge — right for data requirements, whose burst threshold
+/// must not exceed the actually-available input).
+pub fn to_pwpoly_dir(points: &[(f64, f64)], jump_eps_abs: f64, backward: bool) -> PwPoly {
+    assert!(points.len() >= 2);
+    let eps = jump_eps_abs.max(1e-12);
+    // enforce strictly increasing x by widening steps
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(points.len());
+    if backward {
+        for &(x, y) in points.iter().rev() {
+            let x = match pts.last() {
+                Some(&(nx, ny)) => {
+                    if y >= ny - 1e-300 && x >= nx - eps {
+                        continue; // duplicate sample
+                    }
+                    x.min(nx - eps)
+                }
+                None => x,
+            };
+            pts.push((x, y));
+        }
+        pts.reverse();
+        // backward widening may push the first x negative; clamp by
+        // dropping points left of the original start
+        let x0 = points[0].0;
+        pts.retain(|&(x, _)| x >= x0 - 1e-300);
+        if pts.first().map(|p| p.0) != Some(x0) {
+            pts.insert(0, points[0]);
+        }
+    } else {
+        for &(x, y) in points {
+            let x = match pts.last() {
+                Some(&(px, py)) => {
+                    if y <= py + 1e-300 && x <= px + eps {
+                        continue; // duplicate sample
+                    }
+                    x.max(px + eps)
+                }
+                None => x,
+            };
+            pts.push((x, y));
+        }
+    }
+    if pts.len() < 2 {
+        return PwPoly::constant_from(points[0].0, points.last().unwrap().1);
+    }
+    let mut breaks: Vec<f64> = Vec::with_capacity(pts.len() + 1);
+    let mut polys: Vec<Poly> = Vec::with_capacity(pts.len());
+    for w in pts.windows(2) {
+        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+        breaks.push(x0);
+        polys.push(Poly::linear(y0, (y1 - y0) / (x1 - x0)));
+    }
+    breaks.push(pts[pts.len() - 1].0);
+    breaks.push(f64::INFINITY);
+    polys.push(Poly::constant(pts[pts.len() - 1].1));
+    PwPoly::new(breaks, polys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_collapses_straight_line() {
+        let pts: Vec<(f64, f64)> = (0..1000).map(|i| (i as f64, 3.0 * i as f64)).collect();
+        let fitted = compact(&pts, 0.01);
+        assert!(fitted.len() <= 3, "{}", fitted.len());
+        assert_eq!(fitted.first(), Some(&(0.0, 0.0)));
+        assert_eq!(fitted.last(), Some(&(999.0, 2997.0)));
+    }
+
+    #[test]
+    fn compact_respects_tolerance() {
+        // noisy line: deviation within 0.5% of the span must be absorbed
+        let pts: Vec<(f64, f64)> = (0..200)
+            .map(|i| {
+                let x = i as f64;
+                (x, x + if i % 2 == 0 { 0.4 } else { -0.4 })
+            })
+            .collect();
+        let fitted = compact(&pts, 0.01);
+        assert!(fitted.len() <= 4, "{}", fitted.len());
+        // interpolation stays within tol * span of every sample
+        let span = 199.8;
+        for &(x, y) in &pts {
+            let w = fitted
+                .windows(2)
+                .find(|w| w[0].0 <= x && x <= w[1].0)
+                .unwrap();
+            let pred = w[0].1 + (w[1].1 - w[0].1) * (x - w[0].0) / (w[1].0 - w[0].0);
+            assert!((pred - y).abs() <= 0.011 * span, "at {x}: {pred} vs {y}");
+        }
+    }
+
+    #[test]
+    fn to_pwpoly_widens_vertical_step() {
+        // a burst: flat, then a vertical rise at x = 10
+        let pts = vec![(0.0, 0.0), (10.0, 0.0), (10.0, 5.0), (12.0, 5.0)];
+        let f = to_pwpoly_dir(&pts, 1e-3, true);
+        assert!(f.is_nondecreasing());
+        assert!(f.eval(9.9) < 1e-9);
+        assert!((f.eval(10.0) - 5.0).abs() < 1e-9, "{}", f.eval(10.0));
+        // backward widening: the threshold does not exceed x = 10
+        assert!(f.eval(10.0 - 2e-3) < 5.0);
+    }
+
+    #[test]
+    fn to_pwpoly_forward_keeps_left_edge() {
+        // up-front cost: jump at x = 0 must be payable from the start
+        let pts = vec![(0.0, 0.0), (0.0, 26.0), (80.0, 108.0)];
+        let f = to_pwpoly(&pts, 1e-3);
+        assert!(f.is_nondecreasing());
+        assert!((f.eval(0.0) - 0.0).abs() < 1e-9);
+        assert!((f.eval(1e-3) - 26.0).abs() < 1e-6, "{}", f.eval(1e-3));
+        assert!((f.eval(80.0) - 108.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_all_same_x_becomes_constant_or_step() {
+        let pts = vec![(5.0, 1.0), (5.0, 2.0), (5.0, 3.0)];
+        let f = to_pwpoly(&pts, 1e-6);
+        assert!(f.is_nondecreasing());
+        assert!((f.eval(6.0) - 3.0).abs() < 1e-9);
+    }
+}

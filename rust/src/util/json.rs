@@ -251,7 +251,7 @@ impl<'a> Parser<'a> {
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) if c == b'-' || c == b'+' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
     }
@@ -265,7 +265,16 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Numbers: f64 literals including scientific notation (`1.2e9`,
+    /// `3E+8`, `-1.5e-3`) — trace files routinely log byte counts that
+    /// way. A leading `+` is accepted as a documented extension beyond
+    /// strict JSON (skipped here; the rest goes through `f64::from_str`).
     fn number(&mut self) -> Result<Json, JsonError> {
+        if self.peek() == Some(b'+')
+            && matches!(self.b.get(self.pos + 1), Some(c) if c.is_ascii_digit() || *c == b'.')
+        {
+            self.pos += 1;
+        }
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -399,6 +408,24 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    /// Scientific-notation byte counts, as trace files emit them.
+    #[test]
+    fn parse_scientific_notation() {
+        assert_eq!(Json::parse("1.2e9").unwrap(), Json::Num(1.2e9));
+        assert_eq!(Json::parse("3E+8").unwrap(), Json::Num(3e8));
+        assert_eq!(Json::parse("5e-3").unwrap(), Json::Num(0.005));
+        assert_eq!(Json::parse("+2.5").unwrap(), Json::Num(2.5));
+        assert_eq!(Json::parse("+1e2").unwrap(), Json::Num(100.0));
+        let v = Json::parse(r#"{"rchar": 1.137486559e9, "wchar": 8e7}"#).unwrap();
+        assert_eq!(v.get("rchar").as_f64(), Some(1.137486559e9));
+        assert_eq!(v.get("wchar").as_f64(), Some(8e7));
+        // malformed exponents still fail loudly
+        assert!(Json::parse("1.2e").is_err());
+        assert!(Json::parse("1e+").is_err());
+        assert!(Json::parse("+").is_err());
+        assert!(Json::parse("++1").is_err());
     }
 
     #[test]

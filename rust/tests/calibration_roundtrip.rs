@@ -1,0 +1,239 @@
+//! The calibration subsystem's acceptance test: synthesize a workflow,
+//! execute it on the fluid testbed (independent ground truth), export the
+//! run through the raw trace formats (TSV + I/O series **text**, so the
+//! parsers are on the round trip), calibrate models from the text, replay
+//! through the analytic solver — and require per-task completion-time
+//! error ≤ 2 %.
+
+use bottlemod::model::ProcessBuilder;
+use bottlemod::pwfn::PwPoly;
+use bottlemod::solver::SolverOpts;
+use bottlemod::testbed::fluid::{execute, export_trace, FluidOpts};
+use bottlemod::trace::{
+    calibrate_trace, write_io_log, write_tsv, CalibrateOpts, ModelSource, ReplayReport,
+};
+use bottlemod::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
+use bottlemod::workflow::scenario::VideoScenario;
+
+const TOL: f64 = 0.02;
+
+/// Execute, export as text, calibrate from the text, replay; assert the
+/// per-task error bound and return the report for extra checks.
+fn roundtrip(wf: &Workflow, dt: f64, sample_every: f64) -> ReplayReport {
+    let run = execute(
+        wf,
+        &FluidOpts {
+            dt,
+            sample_every,
+            ..FluidOpts::default()
+        },
+    );
+    assert!(run.makespan.is_some(), "fluid run must finish");
+    let (tsv_trace, series) = export_trace(wf, &run).expect("export");
+    let tsv = write_tsv(&tsv_trace);
+    let io_log = write_io_log(&series);
+    let (cal, report) = calibrate_trace(
+        &tsv,
+        Some(&io_log),
+        &CalibrateOpts::default(),
+        &SolverOpts::default(),
+    )
+    .expect("calibrate");
+    assert_eq!(cal.tasks.len(), wf.nodes.len());
+    for r in &report.per_task {
+        let err = r.rel_err.unwrap_or_else(|| panic!("{}: no replay error", r.id));
+        assert!(
+            err <= TOL,
+            "task '{}': predicted {:?} vs observed {:?} (rel err {err})",
+            r.id,
+            r.predicted,
+            r.observed
+        );
+    }
+    report
+}
+
+/// download → streaming transcode → burst archive.
+fn chain() -> Workflow {
+    let mut wf = Workflow::new();
+    let dl = ProcessBuilder::new("dl", 1e8)
+        .stream_data("remote", 1e8)
+        .stream_resource("link", 1e8)
+        .identity_output("file")
+        .build();
+    let d = wf.add_node(
+        dl,
+        vec![DataSource::External(PwPoly::constant(1e8))],
+        vec![ResourceSource::Fixed(PwPoly::constant(1e7))],
+        StartRule::default(),
+    );
+    let xcode = ProcessBuilder::new("xcode", 5e7)
+        .stream_data("in", 1e8)
+        .stream_resource("cpu", 20.0)
+        .identity_output("out")
+        .build();
+    let x = wf.add_node(
+        xcode,
+        vec![DataSource::ProcessOutput { node: d, output: 0 }],
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule::default(),
+    );
+    let arch = ProcessBuilder::new("arch", 5e7)
+        .burst_data("in", 5e7)
+        .stream_resource("io", 5.0)
+        .identity_output("tar")
+        .build();
+    wf.add_node(
+        arch,
+        vec![DataSource::ProcessOutput { node: x, output: 0 }],
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule::default(),
+    );
+    wf
+}
+
+#[test]
+fn chain_roundtrip_within_two_percent() {
+    let report = roundtrip(&chain(), 0.005, 0.1);
+    // the chain is dl(10) → xcode(20, resource-limited) → arch(25)
+    let mk = report.predicted_makespan.unwrap();
+    assert!((mk - 25.0).abs() < 0.5, "{mk}");
+    assert!((report.observed_makespan.unwrap() - 25.0).abs() < 0.5);
+}
+
+/// Diamond: src fans out to a streaming and a bursting branch, joined by a
+/// two-input mux — exercising the multi-dependency barrier wiring.
+#[test]
+fn diamond_roundtrip_within_two_percent() {
+    let mut wf = Workflow::new();
+    let src = ProcessBuilder::new("src", 1e8)
+        .stream_data("remote", 1e8)
+        .stream_resource("link", 1e8)
+        .identity_output("file")
+        .build();
+    let s = wf.add_node(
+        src,
+        vec![DataSource::External(PwPoly::constant(1e8))],
+        vec![ResourceSource::Fixed(PwPoly::constant(1e7))],
+        StartRule::default(),
+    );
+    let a = ProcessBuilder::new("branch-a", 5e7)
+        .stream_data("in", 1e8)
+        .stream_resource("cpu", 25.0)
+        .identity_output("out")
+        .build();
+    let na = wf.add_node(
+        a,
+        vec![DataSource::ProcessOutput { node: s, output: 0 }],
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule::default(),
+    );
+    let b = ProcessBuilder::new("branch-b", 1e8)
+        .burst_data("in", 1e8)
+        .stream_resource("io", 8.0)
+        .identity_output("out")
+        .build();
+    let nb = wf.add_node(
+        b,
+        vec![DataSource::ProcessOutput { node: s, output: 0 }],
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule::default(),
+    );
+    let join = ProcessBuilder::new("join", 1.5e8)
+        .burst_data("ina", 5e7)
+        .burst_data("inb", 1e8)
+        .stream_resource("io", 6.0)
+        .identity_output("result")
+        .build();
+    wf.add_node(
+        join,
+        vec![
+            DataSource::ProcessOutput { node: na, output: 0 },
+            DataSource::ProcessOutput { node: nb, output: 0 },
+        ],
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule::default(),
+    );
+    let report = roundtrip(&wf, 0.005, 0.1);
+    // src 10; a resource-limited 25; b bursts at 10 + 8 = 18; join 25 + 6
+    let mk = report.predicted_makespan.unwrap();
+    assert!((mk - 31.0).abs() < 0.6, "{mk}");
+}
+
+/// The full Fig 5 workflow — shared link pool with fraction + residual
+/// consumers, release on completion, a burst task, a stream task and a
+/// barrier mux — round-trips through the trace formats too.
+#[test]
+fn video_workflow_roundtrip_within_two_percent() {
+    let (wf, _) = VideoScenario::default().build();
+    let report = roundtrip(&wf, 0.02, 0.5);
+    // consistency with the independently-predicted hand model
+    let hand = bottlemod::workflow::engine::analyze_fixpoint(
+        &wf,
+        &SolverOpts::default(),
+        6,
+    )
+    .unwrap()
+    .makespan
+    .unwrap();
+    let calibrated = report.predicted_makespan.unwrap();
+    assert!(
+        (calibrated - hand).abs() / hand < 0.03,
+        "calibrated {calibrated} vs hand model {hand}"
+    );
+}
+
+/// The bundled fixtures parse and replay: with the I/O series the encode
+/// task is series-fitted; TSV-only falls back to the summary heuristics
+/// (the mux's high peak RSS selects the burst shape) — both within 2 %.
+#[test]
+fn bundled_fixtures_replay() {
+    let tsv = include_str!("../examples/traces/demo.tsv");
+    let io = include_str!("../examples/traces/demo_io.log");
+
+    let (cal, report) = calibrate_trace(
+        tsv,
+        Some(io),
+        &CalibrateOpts::default(),
+        &SolverOpts::default(),
+    )
+    .expect("fixtures calibrate");
+    assert_eq!(cal.tasks[1].id, "enc");
+    assert_eq!(cal.tasks[1].source, ModelSource::Series);
+    assert!(report.max_rel_err.unwrap() <= TOL, "{:?}", report.per_task);
+    assert!((report.predicted_makespan.unwrap() - 23.0).abs() < 0.2);
+
+    let (cal2, report2) =
+        calibrate_trace(tsv, None, &CalibrateOpts::default(), &SolverOpts::default())
+            .expect("tsv-only calibrates");
+    assert_eq!(cal2.tasks[1].source, ModelSource::SummaryStream);
+    assert_eq!(cal2.tasks[2].source, ModelSource::SummaryBurst);
+    assert!(report2.max_rel_err.unwrap() <= TOL, "{:?}", report2.per_task);
+}
+
+/// Calibration is robust to a trace of a *jittered* run: the model fitted
+/// from a noisy execution still replays that execution closely (the noise
+/// is baked into the observed trajectory, and the fit follows it).
+#[test]
+fn jittered_run_still_replays() {
+    let wf = chain();
+    let run = execute(
+        &wf,
+        &FluidOpts {
+            dt: 0.005,
+            sample_every: 0.1,
+            jitter: Some((7, 0.02)),
+            ..FluidOpts::default()
+        },
+    );
+    let (tsv_trace, series) = export_trace(&wf, &run).expect("export");
+    let (_, report) = calibrate_trace(
+        &write_tsv(&tsv_trace),
+        Some(&write_io_log(&series)),
+        &CalibrateOpts::default(),
+        &SolverOpts::default(),
+    )
+    .expect("calibrate");
+    // noise widens the bound a little, but the replay must stay close
+    assert!(report.max_rel_err.unwrap() < 0.05, "{:?}", report.per_task);
+}
