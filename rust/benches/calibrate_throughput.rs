@@ -12,7 +12,8 @@ use bottlemod::solver::SolverOpts;
 use bottlemod::trace::{
     assemble, calibrate, parse_io_log, parse_tsv, replay, CalibrateOpts,
 };
-use bottlemod::util::harness::bench_once;
+use bottlemod::util::harness::{bench_once, write_bench_artifact};
+use bottlemod::util::json::Json;
 use bottlemod::util::stats::fmt_duration;
 
 const N_TASKS: usize = 10_000;
@@ -110,4 +111,18 @@ fn main() {
         "acceptance: cold parse+fit {} 1 s budget",
         if ok { "within" } else { "OVER (reported only)" }
     );
+
+    match write_bench_artifact(
+        "calibrate_throughput",
+        vec![
+            ("rows", Json::Num(N_TASKS as f64)),
+            ("cold_parse_fit_s", Json::Num(r.per_iter.mean)),
+            ("rows_per_s", Json::Num(N_TASKS as f64 / r.per_iter.mean)),
+            ("budget_s", Json::Num(1.0)),
+            ("within_budget", Json::Bool(ok)),
+        ],
+    ) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
 }

@@ -1,0 +1,202 @@
+//! Microbenchmarks of the allocation-lean pwfn kernel: add/mul/min/
+//! compose/eval on 10–10 000-piece functions, plus the two acceptance
+//! properties of the k-way rewrite:
+//!
+//!  * the single-sweep `min_envelope` beats the retained pairwise fold
+//!    (`min_envelope_pairwise`) by **≥ 2×** at k ≥ 8 inputs;
+//!  * `eval` on 1 000 pieces behaves like the O(log n) binary search it
+//!    is — the 1 000-piece / 10-piece time ratio stays far below the
+//!    O(n) ratio (asserted ≤ 10×, vs 100× for a linear scan).
+//!
+//! Correctness is spot-checked inline (k-way vs pairwise envelope values);
+//! the full differential suite lives in `tests/pwfn_differential.rs`.
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1`. Results are persisted as
+//! `BENCH_pwfn_kernel.json` at the repo root (the perf trajectory).
+//!
+//! Run: `cargo bench --bench pwfn_kernel`
+
+use bottlemod::pwfn::{poly::Poly, PwPoly};
+use bottlemod::util::harness::{bench, write_bench_artifact};
+use bottlemod::util::json::Json;
+use bottlemod::util::Rng;
+
+/// Random piecewise polynomial (degree ≤ `degree`) with an infinite tail.
+fn random_pw(rng: &mut Rng, pieces: usize, degree: usize) -> PwPoly {
+    let mut breaks = Vec::with_capacity(pieces + 1);
+    breaks.push(0.0);
+    for i in 0..pieces - 1 {
+        let prev = breaks[i];
+        breaks.push(prev + rng.range(0.5, 3.0));
+    }
+    breaks.push(f64::INFINITY);
+    let polys = (0..pieces)
+        .map(|_| Poly::new((0..=degree).map(|_| rng.range(-2.0, 2.0)).collect()))
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+/// Nondecreasing PL function — the data-envelope workload shape.
+fn monotone_pl(rng: &mut Rng, pieces: usize) -> PwPoly {
+    let mut points = Vec::with_capacity(pieces + 1);
+    points.push((0.0, rng.range(0.0, 2.0)));
+    for i in 0..pieces {
+        let (x, y) = points[i];
+        points.push((x + rng.range(0.5, 2.0), y + rng.range(0.0, 3.0)));
+    }
+    PwPoly::from_points(&points)
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+    let mut rng = Rng::new(0x5EED_17);
+    let mut results = vec![];
+    let mut fields: Vec<(String, f64)> = vec![];
+
+    // ---- eval: O(log n) piece lookup --------------------------------------
+    let sizes = [10usize, 100, 1_000, 10_000];
+    let mut eval_means = vec![];
+    for &n in &sizes {
+        let f = random_pw(&mut rng, n, 2);
+        let span = f.breaks[n - 1]; // last finite break
+        let xs: Vec<f64> = (0..64).map(|i| span * (i as f64 + 0.5) / 64.0).collect();
+        let r = bench(&format!("eval x64 ({n} pieces)"), 10, || {
+            let mut acc = 0.0;
+            for &x in &xs {
+                acc += f.eval(x);
+            }
+            acc
+        });
+        eval_means.push(r.per_iter.mean);
+        fields.push((format!("eval64_{n}p_s"), r.per_iter.mean));
+        results.push(r);
+    }
+    let eval_ratio = eval_means[2] / eval_means[0]; // 1k pieces vs 10 pieces
+    fields.push(("eval_ratio_1k_vs_10".to_string(), eval_ratio));
+
+    // ---- binary algebra on big operands -----------------------------------
+    let a1k = random_pw(&mut rng, 1_000, 2);
+    let b1k = random_pw(&mut rng, 1_000, 2);
+    let r = bench("add 1k⊕1k pieces", 10, || a1k.add(&b1k));
+    fields.push(("add_1k_s".to_string(), r.per_iter.mean));
+    results.push(r);
+    let r = bench("mul 1k⊗1k pieces", 10, || a1k.mul(&b1k));
+    fields.push(("mul_1k_s".to_string(), r.per_iter.mean));
+    results.push(r);
+
+    // ---- compose ----------------------------------------------------------
+    let m64 = monotone_pl(&mut rng, 64);
+    let m64b = monotone_pl(&mut rng, 64);
+    let r = bench("compose 64∘64 (monotone)", 10, || m64.compose(&m64b));
+    fields.push(("compose_64_s".to_string(), r.per_iter.mean));
+    results.push(r);
+
+    // ---- k-way envelope vs pairwise fold ----------------------------------
+    let mut kway_speedups: Vec<(usize, f64)> = vec![];
+    for &k in &[4usize, 8, 16] {
+        let fns: Vec<PwPoly> = (0..k).map(|_| monotone_pl(&mut rng, 64)).collect();
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+
+        // spot-check: the sweep and the fold agree on values and on
+        // winner validity at sample points
+        let kway = PwPoly::min_envelope(&refs);
+        let pair = PwPoly::min_envelope_pairwise(&refs);
+        for i in 0..200 {
+            let x = 80.0 * i as f64 / 199.0;
+            let (kv, pv) = (kway.func.eval(x), pair.func.eval(x));
+            assert!(
+                (kv - pv).abs() <= 1e-7 * (1.0 + pv.abs()),
+                "k-way vs pairwise at k={k}, x={x}: {kv} vs {pv}"
+            );
+            let wv = fns[kway.winner_at(x)].eval(x);
+            assert!(
+                (wv - kv).abs() <= 1e-7 * (1.0 + kv.abs()),
+                "winner off envelope at k={k}, x={x}"
+            );
+        }
+
+        let rk = bench(&format!("min_envelope k-way (k={k}, 64p)"), 10, || {
+            PwPoly::min_envelope(&refs)
+        });
+        let rp = bench(&format!("min_envelope pairwise (k={k}, 64p)"), 10, || {
+            PwPoly::min_envelope_pairwise(&refs)
+        });
+        let speedup = rp.per_iter.mean / rk.per_iter.mean;
+        kway_speedups.push((k, speedup));
+        fields.push((format!("minall_kway_k{k}_s"), rk.per_iter.mean));
+        fields.push((format!("minall_pairwise_k{k}_s"), rp.per_iter.mean));
+        fields.push((format!("minall_speedup_k{k}"), speedup));
+        results.push(rk);
+        results.push(rp);
+    }
+
+    // ---- sum_all vs pairwise fold -----------------------------------------
+    let fns8: Vec<PwPoly> = (0..8).map(|_| random_pw(&mut rng, 64, 2)).collect();
+    let refs8: Vec<&PwPoly> = fns8.iter().collect();
+    let rk = bench("sum_all k-way (k=8, 64p)", 10, || PwPoly::sum_all(&refs8));
+    let rp = bench("sum pairwise fold (k=8, 64p)", 10, || {
+        let mut acc = fns8[0].clone();
+        for f in &fns8[1..] {
+            acc = acc.add(f);
+        }
+        acc
+    });
+    let sum_speedup = rp.per_iter.mean / rk.per_iter.mean;
+    fields.push(("sumall_speedup_k8".to_string(), sum_speedup));
+    results.push(rk);
+    results.push(rp);
+
+    // ---- in-place vs pure -------------------------------------------------
+    let r = bench("scale (pure, 1k pieces)", 10, || a1k.scale(1.000001));
+    fields.push(("scale_pure_1k_s".to_string(), r.per_iter.mean));
+    results.push(r);
+    let mut scratch = a1k.clone();
+    let r = bench("scale_mut (in place, 1k pieces)", 10, || {
+        scratch.scale_mut(1.000001)
+    });
+    fields.push(("scale_mut_1k_s".to_string(), r.per_iter.mean));
+    results.push(r);
+
+    println!("\n== pwfn kernel micro-benchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+    println!(
+        "\neval scaling: 1k-piece / 10-piece time ratio {eval_ratio:.2}x \
+         (O(n) would be ~100x; binary search keeps it logarithmic)"
+    );
+    for (k, s) in &kway_speedups {
+        println!("k-way envelope speedup over pairwise at k={k}: {s:.2}x");
+    }
+    println!("k-way sum speedup over pairwise fold at k=8: {sum_speedup:.2}x");
+
+    // ---- acceptance -------------------------------------------------------
+    if no_assert {
+        println!("\n(asserts downgraded to reporting: BOTTLEMOD_BENCH_NO_ASSERT)");
+    } else {
+        assert!(
+            eval_ratio <= 10.0,
+            "eval on 1k pieces should be O(log n) in practice: \
+             1k/10-piece ratio {eval_ratio:.2}x > 10x"
+        );
+        for (k, s) in &kway_speedups {
+            if *k >= 8 {
+                assert!(
+                    *s >= 2.0,
+                    "k-way envelope should beat the pairwise fold >= 2x at \
+                     k={k}, got {s:.2}x"
+                );
+            }
+        }
+        println!("\nacceptance: eval ratio {eval_ratio:.2}x <= 10x, k-way >= 2x at k >= 8 ✓");
+    }
+
+    let json_fields: Vec<(&str, Json)> = fields
+        .iter()
+        .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+        .collect();
+    match write_bench_artifact("pwfn_kernel", json_fields) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

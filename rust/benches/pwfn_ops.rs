@@ -5,7 +5,8 @@
 //! Run: `cargo bench --bench pwfn_ops`
 
 use bottlemod::pwfn::{poly::Poly, PwLinear, PwPoly, Rat};
-use bottlemod::util::harness::bench;
+use bottlemod::util::harness::{bench, write_bench_artifact};
+use bottlemod::util::json::Json;
 use bottlemod::util::Rng;
 
 fn random_pwpoly(rng: &mut Rng, pieces: usize, degree: usize) -> PwPoly {
@@ -83,5 +84,15 @@ fn main() {
     println!("\n== pwfn substrate micro-benchmarks ==");
     for r in &results {
         println!("{}", r.report());
+    }
+
+    // machine-readable trajectory: mean seconds/iter per op
+    let fields: Vec<(&str, Json)> = results
+        .iter()
+        .map(|r| (r.name.as_str(), Json::Num(r.per_iter.mean)))
+        .collect();
+    match write_bench_artifact("pwfn_ops", fields) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
     }
 }

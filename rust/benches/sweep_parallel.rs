@@ -16,13 +16,19 @@
 //! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines); the
 //! bit-for-bit checks always assert.
 //!
+//! Results are persisted as `BENCH_sweep_parallel.json` at the repo root
+//! (the perf trajectory across PRs); a previous artifact, if present, is
+//! compared against. Setting `BOTTLEMOD_BASELINE_SPS` (scenarios/s of the
+//! pre-optimization kernel) additionally asserts a ≥ 1.5× throughput gain.
+//!
 //! Run: `cargo bench --bench sweep_parallel`
 
 use std::sync::Arc;
 
-use bottlemod::runtime::cache::AnalysisCache;
+use bottlemod::runtime::cache::{AnalysisCache, CacheStats};
 use bottlemod::runtime::sweep::{BottleneckReport, SweepBatch};
-use bottlemod::util::harness::bench_once;
+use bottlemod::util::harness::{bench_once, read_bench_artifact, write_bench_artifact};
+use bottlemod::util::json::Json;
 use bottlemod::util::par::num_threads;
 use bottlemod::util::stats::fmt_duration;
 use bottlemod::workflow::scenario::{Perturbation, VideoScenario};
@@ -103,13 +109,58 @@ fn main() {
         println!("\n(acceptance assert skipped: only {threads} threads available)");
     }
 
-    incremental_section(&base, assert_ok);
+    let (inc_cold_s, inc_warm_s, cache_stats) = incremental_section(&base, assert_ok);
+
+    // ---- perf trajectory: persist + compare across PRs ------------------
+    let scenarios_per_s = N as f64 / par.per_iter.mean;
+    if let Some(prev) = read_bench_artifact("sweep_parallel") {
+        if let Some(prev_sps) = prev.get("scenarios_per_s").as_f64() {
+            println!(
+                "\nperf trajectory: {prev_sps:.0} scen/s (previous run) -> \
+                 {scenarios_per_s:.0} scen/s ({:.2}x)",
+                scenarios_per_s / prev_sps
+            );
+        }
+    }
+    if let Ok(base_sps) = std::env::var("BOTTLEMOD_BASELINE_SPS") {
+        if let Ok(base_sps) = base_sps.parse::<f64>() {
+            let gain = scenarios_per_s / base_sps;
+            println!("vs provided baseline: {gain:.2}x over {base_sps:.0} scen/s");
+            if assert_ok {
+                assert!(
+                    gain >= 1.5,
+                    "expected >= 1.5x over the pre-optimization baseline \
+                     ({base_sps:.0} scen/s), got {gain:.2}x"
+                );
+                println!("acceptance: {gain:.2}x >= 1.5x over baseline ✓");
+            }
+        }
+    }
+    match write_bench_artifact(
+        "sweep_parallel",
+        vec![
+            ("scenarios", Json::Num(N as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("seq_batch_s", Json::Num(seq.per_iter.mean)),
+            ("par_batch_s", Json::Num(par.per_iter.mean)),
+            ("scenarios_per_s", Json::Num(scenarios_per_s)),
+            ("speedup_parallel", Json::Num(speedup)),
+            ("incremental_cold_s", Json::Num(inc_cold_s)),
+            ("incremental_cached_s", Json::Num(inc_warm_s)),
+            ("incremental_speedup", Json::Num(inc_cold_s / inc_warm_s)),
+            ("cache_hit_rate", Json::Num(cache_stats.hit_rate())),
+        ],
+    ) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
 }
 
 /// The incremental-engine acceptance: a 256-scenario batch of single-node
 /// perturbations (each touches only task 1's CPU model, dirty cone
-/// `{task1, task3}`), cold vs cached.
-fn incremental_section(base: &Arc<VideoScenario>, assert_ok: bool) {
+/// `{task1, task3}`), cold vs cached. Returns `(cold batch s, cached
+/// batch s, cache stats)` for the persisted artifact.
+fn incremental_section(base: &Arc<VideoScenario>, assert_ok: bool) -> (f64, f64, CacheStats) {
     const N: usize = 256;
     let batch: Vec<Perturbation> = (0..N)
         .map(|i| Perturbation::Task1CpuScale(0.25 + 1.5 * i as f64 / N as f64))
@@ -176,4 +227,5 @@ fn incremental_section(base: &Arc<VideoScenario>, assert_ok: bool) {
             stats.hit_rate() * 100.0
         );
     }
+    (cold.per_iter.mean, warm.per_iter.mean, stats)
 }

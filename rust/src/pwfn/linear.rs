@@ -169,7 +169,8 @@ impl PwLinear {
     /// Exact compose `self(inner(x))` for nondecreasing `inner`.
     pub fn compose(&self, inner: &PwLinear) -> Result<PwLinear, Overflow> {
         // cut points: inner breaks + preimages of self breaks
-        let mut cuts: Vec<Rat> = inner.starts.clone();
+        let mut cuts: Vec<Rat> = Vec::with_capacity(inner.starts.len() + self.starts.len());
+        cuts.extend_from_slice(&inner.starts);
         for &b in &self.starts {
             if let Some(x) = inner.first_reach(b, inner.starts[0])? {
                 cuts.push(x);
@@ -248,7 +249,8 @@ impl PwLinear {
 
     /// Bridge into the general f64 engine.
     pub fn to_pwpoly(&self) -> PwPoly {
-        let mut breaks: Vec<f64> = self.starts.iter().map(|r| r.to_f64()).collect();
+        let mut breaks: Vec<f64> = Vec::with_capacity(self.starts.len() + 1);
+        breaks.extend(self.starts.iter().map(|r| r.to_f64()));
         breaks.push(f64::INFINITY);
         let polys = self
             .vals
@@ -265,16 +267,12 @@ impl ExactEnvelope {
         let f = &self.func;
         // candidate cut points: both functions' starts + pairwise
         // intersections inside shared pieces
-        let mut cuts: Vec<Rat> = f
-            .starts
-            .iter()
-            .chain(g.starts.iter())
-            .copied()
-            .collect();
+        let mut cuts: Vec<Rat> = Vec::with_capacity(f.starts.len() + g.starts.len());
+        cuts.extend_from_slice(&f.starts);
+        cuts.extend_from_slice(&g.starts);
         cuts.sort();
         cuts.dedup();
-        let lo = cuts[0];
-        let mut xs: Vec<Rat> = vec![];
+        let mut xs: Vec<Rat> = Vec::with_capacity(cuts.len());
         for (i, &s) in cuts.iter().enumerate() {
             let e = cuts.get(i + 1).copied();
             // lines at s
@@ -294,11 +292,11 @@ impl ExactEnvelope {
         cuts.sort();
         cuts.dedup();
 
-        let mut starts = vec![];
-        let mut vals: Vec<Rat> = vec![];
-        let mut slopes: Vec<Rat> = vec![];
-        let mut winners = vec![];
-        for (i, &s) in cuts.iter().enumerate() {
+        let mut starts = Vec::with_capacity(cuts.len());
+        let mut vals: Vec<Rat> = Vec::with_capacity(cuts.len());
+        let mut slopes: Vec<Rat> = Vec::with_capacity(cuts.len());
+        let mut winners = Vec::with_capacity(cuts.len());
+        for &s in &cuts {
             let (fv, fs) = (f.eval(s)?, f.slopes[f.piece_index(s.max(f.starts[0]))]);
             let (gv, gs) = (g.eval(s)?, g.slopes[g.piece_index(s.max(g.starts[0]))]);
             // decide winner on this interval: compare at s, tie-break by slope
@@ -317,8 +315,6 @@ impl ExactEnvelope {
                     continue;
                 }
             }
-            let _ = i;
-            let _ = lo;
             starts.push(s);
             vals.push(v);
             slopes.push(sl);

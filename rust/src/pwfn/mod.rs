@@ -8,9 +8,17 @@
 //!   high-degree root finding.
 //! * [`piecewise`] — [`piecewise::PwPoly`], right-continuous piecewise
 //!   polynomials with jumps, lower envelopes with winner attribution,
-//!   monotone composition/inversion, and calculus.
+//!   monotone composition/inversion, and calculus. The kernel is
+//!   allocation-lean: binary ops run on a streaming two-sequence
+//!   breakpoint merge, the n-ary `sum_all`/`min_all`/`max_all` on a
+//!   single k-way sweep, and the in-place variants (`add_assign`,
+//!   `scale_mut`, `shift_x_mut`, `refine_in_place`) avoid cloning vectors
+//!   that are immediately overwritten (cost model: `docs/PERF.md`).
 //! * [`rat`] / [`linear`] — the exact rational piecewise-linear fast path
 //!   (the paper's "only rational numbers are needed" observation).
+//!
+//! All breakpoint dedup/merge decisions derive from one tolerance,
+//! [`piecewise::EPS_BREAK`] / [`piecewise::break_tol`].
 
 pub mod linear;
 pub mod piecewise;
@@ -18,6 +26,6 @@ pub mod poly;
 pub mod rat;
 
 pub use linear::{ExactEnvelope, PwLinear};
-pub use piecewise::{Envelope, PwPoly};
+pub use piecewise::{break_tol, Envelope, PwPoly, EPS_BREAK};
 pub use poly::Poly;
 pub use rat::Rat;

@@ -13,11 +13,50 @@
 //! cumulative data inputs and requirement functions are monotone and defined
 //! "from here on".
 
+use std::borrow::Cow;
+
 use super::poly::{Poly, EPS};
 
-/// Relative tolerance for breakpoint deduplication.
+/// Canonical breakpoint-coincidence tolerance (relative): two breakpoints
+/// `a` and `b` denote the *same* break iff `|a - b| < break_tol(a, b)`.
+/// Every dedup/merge in the piecewise substrate — the streaming common
+/// refinement, [`PwPoly::refine`], [`PwPoly::simplify`], the envelope
+/// piece merge, the solver's progress builder and the trace compactor's
+/// step widening ([`crate::trace::segment`]) — derives its tolerance from
+/// this one constant, so near-coincident breaks collapse identically
+/// everywhere (asserted in `tests/pwfn_differential.rs`). It doubles as
+/// the relative coefficient tolerance of the "same polynomial
+/// continuation" test (`poly_continues`).
+pub const EPS_BREAK: f64 = EPS;
+
+/// The absolute coincidence tolerance for breakpoints `a`, `b` (see
+/// [`EPS_BREAK`]).
+pub fn break_tol(a: f64, b: f64) -> f64 {
+    EPS_BREAK * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Internal shorthand for [`break_tol`].
 fn btol(a: f64, b: f64) -> f64 {
-    EPS * (1.0 + a.abs().max(b.abs()))
+    break_tol(a, b)
+}
+
+/// Does `poly` (local origin `start`) continue `prev` (local origin
+/// `prev_origin`) as the same polynomial? The shared piece-merge criterion
+/// of [`PwPoly::simplify`], the envelope dedup, the simplify-on-build
+/// merge used by the k-way ops, and the exact solver's progress builder:
+/// coefficients of the shifted continuation agree to [`EPS_BREAK`]
+/// relative to the largest coefficient magnitude involved.
+pub(crate) fn poly_continues(prev: &Poly, prev_origin: f64, start: f64, poly: &Poly) -> bool {
+    let cont = prev.shift(start - prev_origin);
+    let scale = cont
+        .coeffs
+        .iter()
+        .chain(poly.coeffs.iter())
+        .fold(1.0f64, |m, c| m.max(c.abs()));
+    cont.sub(poly)
+        .coeffs
+        .iter()
+        .all(|c| c.abs() <= EPS_BREAK * scale)
 }
 
 /// A piecewise polynomial function (PPoly-style, right-continuous).
@@ -231,15 +270,41 @@ impl PwPoly {
     // ------------------------------------------------------- restructuring
 
     /// Insert additional breakpoints (values outside the domain or duplicates
-    /// are ignored). The function is unchanged.
+    /// are ignored). The function is unchanged. Allocation note: when there
+    /// is nothing to insert this clones; use [`PwPoly::refine_cow`] /
+    /// [`PwPoly::refine_in_place`] on hot paths.
     pub fn refine(&self, extra: &[f64]) -> PwPoly {
+        self.refine_cow(extra).into_owned()
+    }
+
+    /// [`PwPoly::refine`] without the full clone when there is nothing to
+    /// insert: empty or entirely out-of-domain cut sets return
+    /// `Cow::Borrowed(self)`.
+    pub fn refine_cow<'a>(&'a self, extra: &[f64]) -> Cow<'a, PwPoly> {
+        match self.refined_parts(extra) {
+            None => Cow::Borrowed(self),
+            Some((breaks, polys)) => Cow::Owned(PwPoly::new(breaks, polys)),
+        }
+    }
+
+    /// In-place [`PwPoly::refine`]: a true no-op (not even a clone) when
+    /// `extra` adds nothing.
+    pub fn refine_in_place(&mut self, extra: &[f64]) {
+        if let Some((breaks, polys)) = self.refined_parts(extra) {
+            *self = PwPoly::new(breaks, polys);
+        }
+    }
+
+    /// Shared refine worker: `None` when no cut falls strictly inside the
+    /// domain (the function would be unchanged).
+    fn refined_parts(&self, extra: &[f64]) -> Option<(Vec<f64>, Vec<Poly>)> {
         let mut cuts: Vec<f64> = extra
             .iter()
             .copied()
             .filter(|&x| x > self.breaks[0] && x < self.x_max() && x.is_finite())
             .collect();
         if cuts.is_empty() {
-            return self.clone();
+            return None;
         }
         cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut breaks = Vec::with_capacity(self.breaks.len() + cuts.len());
@@ -261,41 +326,56 @@ impl PwPoly {
             }
         }
         breaks.push(self.x_max());
-        PwPoly::new(breaks, polys)
+        Some((breaks, polys))
     }
 
-    /// Merge adjacent pieces that are continuations of the same polynomial.
+    /// Merge adjacent pieces that are continuations of the same polynomial
+    /// (the `poly_continues` criterion, [`EPS_BREAK`]-relative).
     pub fn simplify(&self) -> PwPoly {
         let mut breaks = vec![self.breaks[0]];
         let mut polys: Vec<Poly> = vec![self.polys[0].clone()];
         for i in 1..self.polys.len() {
             let prev_origin = breaks[breaks.len() - 1];
-            let cur_start = self.breaks[i];
-            // candidate: previous poly continued to this piece's range
-            let cont = polys.last().unwrap().shift(cur_start - prev_origin);
-            let scale = cont
-                .coeffs
-                .iter()
-                .chain(self.polys[i].coeffs.iter())
-                .fold(1.0f64, |m, c| m.max(c.abs()));
-            let same = cont.sub(&self.polys[i])
-                .coeffs
-                .iter()
-                .all(|c| c.abs() <= 1e-9 * scale);
-            if !same {
-                breaks.push(cur_start);
-                polys.push(self.polys[i].clone());
+            if poly_continues(
+                polys.last().unwrap(),
+                prev_origin,
+                self.breaks[i],
+                &self.polys[i],
+            ) {
+                continue;
             }
+            breaks.push(self.breaks[i]);
+            polys.push(self.polys[i].clone());
         }
         breaks.push(self.x_max());
         PwPoly::new(breaks, polys)
+    }
+
+    /// True when `clip(a, b)` would return the function unchanged (the
+    /// whole-domain clip).
+    fn is_clip_noop(&self, a: f64, b: f64) -> bool {
+        a <= self.breaks[0] && b == self.x_max()
+    }
+
+    /// By-value [`PwPoly::clip`]: the whole-domain clip returns `self`
+    /// with no copy at all (the hot `data_envelope` path, where inputs
+    /// usually already start at the process start time).
+    pub fn clipped(self, a: f64, b: f64) -> PwPoly {
+        if b > a && self.is_clip_noop(a, b) {
+            self
+        } else {
+            self.clip(a, b)
+        }
     }
 
     /// Restrict to `[a, b]`, keeping constant extension semantics (the last
     /// piece is truncated at `b`; `b` may be `inf`).
     pub fn clip(&self, a: f64, b: f64) -> PwPoly {
         assert!(b > a);
-        let r = self.refine(&[a, b]);
+        if self.is_clip_noop(a, b) {
+            return self.clone();
+        }
+        let r = self.refine_cow(&[a, b]);
         let mut breaks = vec![];
         let mut polys = vec![];
         for i in 0..r.polys.len() {
@@ -326,6 +406,9 @@ impl PwPoly {
     // ------------------------------------------------------------- algebra
 
     /// The union of both functions' breakpoints, within the joint span.
+    /// Retained as the reference for [`merged_breaks`] (the streaming
+    /// one-pass equivalent) and by the pairwise envelope reference; the
+    /// differential tests pin both to the same output.
     fn common_breaks(&self, other: &PwPoly) -> Vec<f64> {
         let lo = self.breaks[0].min(other.breaks[0]);
         let hi = self.x_max().max(other.x_max());
@@ -345,17 +428,104 @@ impl PwPoly {
         all
     }
 
-    /// Pointwise combination on a common refinement.
+    /// Pointwise combination on the streaming common refinement: the
+    /// result's `breaks`/`polys` are each written exactly once, with no
+    /// intermediate break-set allocation, no sort, and no per-piece binary
+    /// search (both inputs' break lists are already sorted, so a
+    /// two-pointer merge + forward piece cursors suffice). Bit-for-bit
+    /// identical to the `common_breaks` + `local_poly_at` reference
+    /// (pinned by `tests/pwfn_differential.rs`).
     fn zip_with(&self, other: &PwPoly, f: impl Fn(&Poly, &Poly) -> Poly) -> PwPoly {
-        let breaks = self.common_breaks(other);
+        let breaks = merged_breaks(&[self, other]);
+        let mut ca = PieceCursor::new(self);
+        let mut cb = PieceCursor::new(other);
         let mut polys = Vec::with_capacity(breaks.len() - 1);
-        for i in 0..breaks.len() - 1 {
-            let s = breaks[i];
-            let a = self.local_poly_at(s);
-            let b = other.local_poly_at(s);
-            polys.push(f(&a, &b));
+        for &s in &breaks[..breaks.len() - 1] {
+            polys.push(f(&ca.local_at(s), &cb.local_at(s)));
         }
         PwPoly::new(breaks, polys)
+    }
+
+    // ------------------------------------------------------- k-way algebra
+
+    /// n-ary sum on a single k-way streaming merge: one pass over the
+    /// union of all inputs' breakpoints, one output allocation, and *no*
+    /// intermediate `PwPoly` temporaries (a pairwise fold materializes
+    /// `k - 1` of them, re-sorting the growing break union each time).
+    /// Adjacent result pieces that continue the same polynomial are merged
+    /// on build.
+    ///
+    /// Accumulation order is input order, identical to
+    /// `fns[1..].iter().fold(fns[0], add)` up to the sign of exact zeros;
+    /// values match the pairwise fold to ≤ 1e-9 relative (bit-for-bit when
+    /// no two inputs carry near-coincident breakpoints — there the two
+    /// orders may keep different [`EPS_BREAK`]-cluster representatives).
+    /// Pinned by `tests/pwfn_differential.rs`.
+    pub fn sum_all(fns: &[&PwPoly]) -> PwPoly {
+        assert!(!fns.is_empty(), "sum_all needs at least one function");
+        if fns.len() == 1 {
+            return fns[0].clone();
+        }
+        let breaks = merged_breaks(fns);
+        let mut cursors: Vec<PieceCursor> = fns.iter().map(|&f| PieceCursor::new(f)).collect();
+        let mut b = PwBuilder::with_capacity(breaks.len());
+        for &s in &breaks[..breaks.len() - 1] {
+            let mut acc = cursors[0].local_at(s);
+            for c in &mut cursors[1..] {
+                acc.add_assign(&c.local_at(s));
+            }
+            b.push(s, acc);
+        }
+        b.finish(*breaks.last().unwrap())
+    }
+
+    /// n-ary minimum on a single k-way sweep (see [`PwPoly::min_envelope`],
+    /// which this shares its implementation with).
+    pub fn min_all(fns: &[&PwPoly]) -> PwPoly {
+        Self::min_envelope(fns).func
+    }
+
+    /// n-ary maximum via `max_i f_i = -min_i(-f_i)`, with the final
+    /// negation done in place. Matches a `max_with` fold to ≤ 1e-9
+    /// relative (same caveats as [`PwPoly::sum_all`]).
+    pub fn max_all(fns: &[&PwPoly]) -> PwPoly {
+        assert!(!fns.is_empty(), "max_all needs at least one function");
+        let neg: Vec<PwPoly> = fns.iter().map(|f| f.scale(-1.0)).collect();
+        let refs: Vec<&PwPoly> = neg.iter().collect();
+        let mut out = Self::min_envelope(&refs).func;
+        out.scale_mut(-1.0);
+        out
+    }
+
+    // ----------------------------------------------------- in-place algebra
+
+    /// `self += other`, reusing `self`'s break vector when both functions
+    /// share it exactly (the common chained-update case: derived functions
+    /// built on the same refinement); other inputs fall back to the pure
+    /// streaming [`PwPoly::add`]. Matches `add` bit-for-bit except for the
+    /// sign of exact zeros.
+    pub fn add_assign(&mut self, other: &PwPoly) {
+        if self.breaks == other.breaks {
+            for (p, q) in self.polys.iter_mut().zip(other.polys.iter()) {
+                p.add_assign(q);
+            }
+        } else {
+            *self = self.add(other);
+        }
+    }
+
+    /// In-place [`PwPoly::scale`]: no break-vector clone.
+    pub fn scale_mut(&mut self, k: f64) {
+        for p in &mut self.polys {
+            p.scale_in_place(k);
+        }
+    }
+
+    /// In-place [`PwPoly::shift_x`]: no vector clones at all.
+    pub fn shift_x_mut(&mut self, dx: f64) {
+        for b in &mut self.breaks {
+            *b += dx;
+        }
     }
 
     /// The polynomial governing `x`, re-expressed in local coordinates with
@@ -431,6 +601,42 @@ impl PwPoly {
     /// ```
     pub fn min_envelope(fns: &[&PwPoly]) -> Envelope {
         assert!(!fns.is_empty());
+        if fns.len() == 1 {
+            // a single input: with uniform winners the reference's dedup
+            // degenerates to `simplify`, so one simplify pass reproduces
+            // the pairwise output bit-for-bit without the intermediate
+            // clone the old path paid (clone + dedup rebuild)
+            let func = fns[0].simplify();
+            let winners = vec![0; func.n_pieces()];
+            return Envelope { func, winners };
+        }
+        // single k-way sweep: one pass over the merged breakpoint union,
+        // winner-chasing within each interval over *borrowed* piece views
+        // (no per-interval clones; linear crossings in closed form). The
+        // pairwise fold below is kept as the semantic reference (O(k) full
+        // envelope rebuilds).
+        let breaks = merged_breaks(fns);
+        let mut cursors: Vec<PieceCursor> = fns.iter().map(|&f| PieceCursor::new(f)).collect();
+        let mut eb = EnvBuilder::with_capacity(breaks.len());
+        let mut views: Vec<LocalView> = Vec::with_capacity(fns.len());
+        for w in breaks.windows(2) {
+            let (s, e) = (w[0], w[1]);
+            views.clear();
+            for c in &mut cursors {
+                views.push(c.view_at(s));
+            }
+            sweep_min_interval(&views, s, e, &mut eb);
+        }
+        eb.finish(*breaks.last().unwrap())
+    }
+
+    /// The pre-refactor pairwise envelope: fold `min_with` over the
+    /// inputs, rebuilding the running envelope `k - 1` times. Retained as
+    /// the semantic reference implementation — `tests/pwfn_differential.rs`
+    /// pins the k-way sweep against it, and `benches/pwfn_kernel.rs`
+    /// measures the k-way speedup over it.
+    pub fn min_envelope_pairwise(fns: &[&PwPoly]) -> Envelope {
+        assert!(!fns.is_empty());
         let mut env = Envelope {
             func: fns[0].clone(),
             winners: vec![0; fns[0].n_pieces()],
@@ -447,9 +653,12 @@ impl PwPoly {
         Self::min_envelope(fns).func
     }
 
-    /// Pointwise maximum (via `max(f,g) = -min(-f,-g)`).
+    /// Pointwise maximum (via `max(f,g) = -min(-f,-g)`; the outer negation
+    /// is done in place).
     pub fn max_with(&self, other: &PwPoly) -> PwPoly {
-        PwPoly::min(&[&self.scale(-1.0), &other.scale(-1.0)]).scale(-1.0)
+        let mut out = PwPoly::min(&[&self.scale(-1.0), &other.scale(-1.0)]);
+        out.scale_mut(-1.0);
+        out
     }
 
     /// Clamp below at zero — used for pool residual capacities.
@@ -576,7 +785,7 @@ impl PwPoly {
                 cuts.push(x);
             }
         }
-        let refined = inner.refine(&cuts);
+        let refined = inner.refine_cow(&cuts);
         let mut breaks = Vec::with_capacity(refined.polys.len() + 1);
         let mut polys = Vec::with_capacity(refined.polys.len());
         for i in 0..refined.polys.len() {
@@ -654,6 +863,345 @@ impl PwPoly {
     }
 }
 
+// ----------------------------------------------------- streaming machinery
+
+/// Sorted union of every input's finite breakpoints in one pass (the
+/// inputs' break lists are already sorted — no sort, no intermediate
+/// collection), deduplicated to [`EPS_BREAK`] keeping the smallest member
+/// of each near-coincident cluster (exactly what sort + `dedup_by` keeps),
+/// with a trailing `+inf` iff any input extends forever. For two inputs
+/// this is bit-for-bit `common_breaks`.
+fn merged_breaks(fns: &[&PwPoly]) -> Vec<f64> {
+    let mut ends_infinite = false;
+    let mut total = 0usize;
+    let mut lists: Vec<&[f64]> = Vec::with_capacity(fns.len());
+    for f in fns {
+        let mut b: &[f64] = &f.breaks;
+        if b.last().copied() == Some(f64::INFINITY) {
+            ends_infinite = true;
+            b = &b[..b.len() - 1];
+        }
+        total += b.len();
+        lists.push(b);
+    }
+    let mut pos = vec![0usize; lists.len()];
+    let mut out: Vec<f64> = Vec::with_capacity(total + 1);
+    loop {
+        // smallest pending break; ties keep the earliest input, matching
+        // the stable sort of the reference (k is small — linear scan)
+        let mut best: Option<f64> = None;
+        let mut best_k = 0usize;
+        for (k, l) in lists.iter().enumerate() {
+            if let Some(&b) = l.get(pos[k]) {
+                let smaller = match best {
+                    None => true,
+                    Some(bb) => b < bb,
+                };
+                if smaller {
+                    best = Some(b);
+                    best_k = k;
+                }
+            }
+        }
+        let Some(b) = best else { break };
+        pos[best_k] += 1;
+        match out.last() {
+            Some(&last) if (b - last).abs() < btol(b, last) => {}
+            _ => out.push(b),
+        }
+    }
+    if ends_infinite {
+        out.push(f64::INFINITY);
+    }
+    out
+}
+
+/// A forward-only cursor over one function's pieces. `local_at(x)`
+/// re-expresses the piece governing `x` in local coordinates with origin
+/// `x`, exactly like [`PwPoly::local_poly_at`] (including the clamp /
+/// constant-extension edges), but amortizes the piece lookup to O(1) per
+/// call when queried at nondecreasing positions — the streaming sweeps.
+struct PieceCursor<'a> {
+    f: &'a PwPoly,
+    idx: usize,
+}
+
+impl<'a> PieceCursor<'a> {
+    fn new(f: &'a PwPoly) -> Self {
+        PieceCursor { f, idx: 0 }
+    }
+
+    /// `x` must be nondecreasing across calls.
+    fn local_at(&mut self, x: f64) -> Poly {
+        let f = self.f;
+        if x < f.breaks[0] || x >= f.x_max() {
+            // left clamp / right constant extension: same as the reference
+            return f.local_poly_at(x);
+        }
+        while self.idx + 1 < f.polys.len() && f.breaks[self.idx + 1] <= x {
+            self.idx += 1;
+        }
+        f.polys[self.idx].shift(x - f.breaks[self.idx])
+    }
+
+    /// Borrowed view of the piece governing `x` (same clamp semantics as
+    /// [`PieceCursor::local_at`], no clone). `x` must be nondecreasing
+    /// across calls, mixing freely with `local_at`.
+    fn view_at(&mut self, x: f64) -> LocalView<'a> {
+        let f = self.f;
+        if x < f.breaks[0] {
+            return LocalView::Const(f.polys[0].eval(0.0));
+        }
+        if x >= f.x_max() {
+            return LocalView::Const(f.eval_left(f.x_max()));
+        }
+        while self.idx + 1 < f.polys.len() && f.breaks[self.idx + 1] <= x {
+            self.idx += 1;
+        }
+        LocalView::Piece {
+            poly: &f.polys[self.idx],
+            origin: f.breaks[self.idx],
+        }
+    }
+}
+
+/// One function restricted to the current sweep interval: either a
+/// borrowed polynomial piece (evaluated in its *own* origin — no shifted
+/// clone is ever materialized during the sweep) or the clamp/extension
+/// constant. Everything takes *global* coordinates.
+enum LocalView<'a> {
+    Piece { poly: &'a Poly, origin: f64 },
+    Const(f64),
+}
+
+impl LocalView<'_> {
+    fn eval(&self, x: f64) -> f64 {
+        match self {
+            LocalView::Const(c) => *c,
+            LocalView::Piece { poly, origin } => poly.eval(x - origin),
+        }
+    }
+
+    fn degree(&self) -> usize {
+        match self {
+            LocalView::Const(_) => 0,
+            LocalView::Piece { poly, .. } => poly.degree(),
+        }
+    }
+
+    /// Slope — only meaningful for `degree() <= 1`.
+    fn slope(&self) -> f64 {
+        match self {
+            LocalView::Const(_) => 0.0,
+            LocalView::Piece { poly, .. } => poly.coeffs.get(1).copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Materialize the piece re-expressed in local coordinates with origin
+    /// `at` — the one allocation per emitted envelope piece.
+    fn to_local_poly(&self, at: f64) -> Poly {
+        match self {
+            LocalView::Const(c) => Poly::constant(*c),
+            LocalView::Piece { poly, origin } => {
+                if at == *origin {
+                    (*poly).clone()
+                } else {
+                    poly.shift(at - origin)
+                }
+            }
+        }
+    }
+}
+
+/// Simplify-on-build accumulator: a piece that continues the previous
+/// polynomial ([`poly_continues`]) is merged instead of emitted, so k-way
+/// results never need a separate `simplify` pass.
+struct PwBuilder {
+    breaks: Vec<f64>,
+    polys: Vec<Poly>,
+}
+
+impl PwBuilder {
+    fn with_capacity(n: usize) -> Self {
+        PwBuilder {
+            breaks: Vec::with_capacity(n),
+            polys: Vec::with_capacity(n),
+        }
+    }
+
+    fn push(&mut self, start: f64, poly: Poly) {
+        if let Some(prev) = self.polys.last() {
+            let prev_origin = self.breaks[self.breaks.len() - 1];
+            if poly_continues(prev, prev_origin, start, &poly) {
+                return;
+            }
+        }
+        self.breaks.push(start);
+        self.polys.push(poly);
+    }
+
+    fn finish(mut self, x_end: f64) -> PwPoly {
+        self.breaks.push(x_end);
+        PwPoly::new(self.breaks, self.polys)
+    }
+}
+
+/// [`PwBuilder`] plus per-piece winner attribution; merges only pieces
+/// that share the winner *and* continue the polynomial — the same
+/// criterion as `Envelope::dedup` in the pairwise reference.
+struct EnvBuilder {
+    breaks: Vec<f64>,
+    polys: Vec<Poly>,
+    winners: Vec<usize>,
+}
+
+impl EnvBuilder {
+    fn with_capacity(n: usize) -> Self {
+        EnvBuilder {
+            breaks: Vec::with_capacity(n),
+            polys: Vec::with_capacity(n),
+            winners: Vec::with_capacity(n),
+        }
+    }
+
+    fn push(&mut self, start: f64, poly: Poly, winner: usize) {
+        if let (Some(prev), Some(&pw)) = (self.polys.last(), self.winners.last()) {
+            let prev_origin = self.breaks[self.breaks.len() - 1];
+            if pw == winner && poly_continues(prev, prev_origin, start, &poly) {
+                return;
+            }
+        }
+        self.breaks.push(start);
+        self.polys.push(poly);
+        self.winners.push(winner);
+    }
+
+    fn finish(mut self, x_end: f64) -> Envelope {
+        self.breaks.push(x_end);
+        Envelope {
+            func: PwPoly::new(self.breaks, self.polys),
+            winners: self.winners,
+        }
+    }
+}
+
+/// Winner at `x+` (global): smallest value just right of `x`; near-ties
+/// (1e-9 relative, the envelope comparison tolerance of the pairwise
+/// reference) are re-ordered at a second, *still-local* probe — `1e-5` of
+/// the remaining span (`+1e-5` on infinite intervals) — far enough past
+/// `x` for the tied candidates' leading divergence term to register,
+/// close enough not to jump past a dip-and-return of the true winner
+/// (polynomials tied at `x` diverge monotonically as `c·u^m` until their
+/// next crossing, so a far probe like the interval midpoint could pick a
+/// function that only wins *after* a missed dip). Ultimate ties break
+/// toward the lower index (stable attribution).
+fn min_winner_at(views: &[LocalView], x: f64, e: f64) -> usize {
+    let probe = x + 1e-9 * (1.0 + x.abs());
+    let mut vmin = f64::INFINITY;
+    for v in views {
+        vmin = vmin.min(v.eval(probe));
+    }
+    let tol = 1e-9 * (1.0 + vmin.abs());
+    let span = if e.is_finite() { e - x } else { 1.0 };
+    let probe2 = x + (1e-5 * span).max(1e-9 * (1.0 + x.abs()));
+    let mut best = 0usize;
+    let mut best_v2 = f64::INFINITY;
+    for (i, v) in views.iter().enumerate() {
+        if v.eval(probe) <= vmin + tol {
+            let v2 = v.eval(probe2);
+            if v2 < best_v2 - 1e-12 * (1.0 + v2.abs()) {
+                best = i;
+                best_v2 = v2;
+            }
+        }
+    }
+    best
+}
+
+/// Earliest global `x` in `(cur, e)` where `views[j]` drops strictly below
+/// `views[w]`, if any. Linear-vs-linear pairs (the §4 workload) are solved
+/// in closed form with zero allocation; higher degrees materialize the
+/// local difference polynomial and use the kernel's root finder.
+fn next_downward_crossing(views: &[LocalView], w: usize, cur: f64, e: f64) -> Option<f64> {
+    let vw = &views[w];
+    // the winner's local polynomial is only needed on the non-linear path;
+    // materialize it lazily, once per leg (not once per opponent)
+    let mut pw_local: Option<Poly> = None;
+    let mut next: Option<f64> = None;
+    for (j, vj) in views.iter().enumerate() {
+        if j == w {
+            continue;
+        }
+        let cand = if vj.degree() <= 1 && vw.degree() <= 1 {
+            // d(x) = dv + db·(x − cur); j falls below w iff db < 0 and j
+            // is still above at cur
+            let db = vj.slope() - vw.slope();
+            let dv = vj.eval(cur) - vw.eval(cur);
+            if db < -1e-15 * (1.0 + vj.slope().abs().max(vw.slope().abs())) && dv > 0.0 {
+                Some(cur - dv / db)
+            } else {
+                None
+            }
+        } else {
+            let pw = pw_local.get_or_insert_with(|| vw.to_local_poly(cur));
+            let pj = vj.to_local_poly(cur);
+            let d = pj.sub(pw);
+            let span = if e.is_finite() {
+                e - cur
+            } else {
+                cauchy_bound(&d).max(1.0)
+            };
+            let mut found = None;
+            for r in d.roots_in(0.0, span) {
+                let x = cur + r;
+                if x <= cur + btol(cur, x) {
+                    continue; // the crossing we just advanced past
+                }
+                if d.eval(r + 1e-9 * (1.0 + r.abs())) < 0.0 {
+                    found = Some(x);
+                    break;
+                }
+            }
+            found
+        };
+        if let Some(x) = cand {
+            let past_cur = x > cur + btol(cur, x);
+            let before_end = !e.is_finite() || x < e - btol(x, e);
+            let earliest = match next {
+                None => true,
+                Some(n) => x < n,
+            };
+            if past_cur && before_end && earliest {
+                next = Some(x);
+            }
+        }
+    }
+    next
+}
+
+/// Lower-envelope sweep of one common-refinement interval `[s, e)`:
+/// `views[i]` is input `i`'s governing piece (no input changes piece
+/// inside the interval). Chases the winner from `s` to the earliest
+/// downward crossing by any other input, emitting one envelope piece per
+/// leg; only the emitted winner pieces are ever materialized.
+fn sweep_min_interval(views: &[LocalView], s: f64, e: f64, eb: &mut EnvBuilder) {
+    let mut cur = s;
+    // each leg advances past ≥ 1 crossing; degree-≤ 2 differences cross at
+    // most twice per pair, so this bounds well-formed inputs — the cap
+    // only guards degenerate numerics
+    let mut guard = 2 * views.len() * views.len() + 2;
+    loop {
+        let w = min_winner_at(views, cur, e);
+        let next = next_downward_crossing(views, w, cur, e);
+        eb.push(cur, views[w].to_local_poly(cur), w);
+        guard -= 1;
+        match next {
+            Some(x) if guard > 0 => cur = x,
+            _ => return,
+        }
+    }
+}
+
 impl Envelope {
     fn min_with(&self, g: &PwPoly, g_idx: usize) -> Envelope {
         let f = &self.func;
@@ -714,7 +1262,7 @@ impl Envelope {
     }
 
     /// Merge adjacent pieces with identical winner *and* continuous equal
-    /// polynomials (keeps attribution segments tidy).
+    /// polynomials ([`poly_continues`] — keeps attribution segments tidy).
     fn dedup(&mut self) {
         let f = &self.func;
         let mut breaks = vec![f.breaks[0]];
@@ -722,17 +1270,8 @@ impl Envelope {
         let mut winners = vec![self.winners[0]];
         for i in 1..f.polys.len() {
             let prev_origin = breaks[breaks.len() - 1];
-            let cont = polys.last().unwrap().shift(f.breaks[i] - prev_origin);
-            let scale = cont
-                .coeffs
-                .iter()
-                .chain(f.polys[i].coeffs.iter())
-                .fold(1.0f64, |m, c| m.max(c.abs()));
-            let same_poly = cont
-                .sub(&f.polys[i])
-                .coeffs
-                .iter()
-                .all(|c| c.abs() <= 1e-9 * scale);
+            let same_poly =
+                poly_continues(polys.last().unwrap(), prev_origin, f.breaks[i], &f.polys[i]);
             if same_poly && self.winners[i] == *winners.last().unwrap() {
                 continue;
             }
@@ -1001,5 +1540,153 @@ mod tests {
         assert_close(d.eval(1.0), 0.0);
         assert_close(d.eval(2.0), 1.0);
         assert_close(f.scale(0.5).eval(4.0), 4.0);
+    }
+
+    #[test]
+    fn sum_all_matches_pairwise_fold() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0)]);
+        let g = PwPoly::step(0.0, 3.0, 1.0, 5.0);
+        let h = PwPoly::linear_from(1.0, 2.0, 0.5);
+        let kway = PwPoly::sum_all(&[&f, &g, &h]);
+        let fold = f.add(&g).add(&h);
+        for x in [0.0, 0.5, 1.0, 1.5, 2.0, 2.9, 3.0, 3.5, 10.0] {
+            assert_close(kway.eval(x), fold.eval(x));
+        }
+        // single input: identity
+        assert_eq!(PwPoly::sum_all(&[&f]), f);
+    }
+
+    #[test]
+    fn sum_all_merges_continuations_on_build() {
+        // two copies of the same line: the sum is one line — the k-way
+        // builder merges the redundant interior break of the refinement
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0).refine(&[2.0, 4.0]);
+        let g = PwPoly::linear_from(0.0, 1.0, 1.0).refine(&[1.0, 3.0]);
+        let s = PwPoly::sum_all(&[&f, &g]);
+        assert_eq!(s.n_pieces(), 1, "{:?}", s.breaks);
+        assert_close(s.eval(5.0), 11.0);
+    }
+
+    #[test]
+    fn min_all_and_max_all_match_pairwise() {
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0);
+        let g = PwPoly::constant(3.0);
+        let h = PwPoly::linear_from(0.0, 6.0, -0.5);
+        let kway = PwPoly::min_all(&[&f, &g, &h]);
+        let pair = PwPoly::min_envelope_pairwise(&[&f, &g, &h]).func;
+        for x in [0.0, 1.0, 2.9, 3.1, 5.9, 6.1, 10.0, 20.0] {
+            assert_close(kway.eval(x), pair.eval(x));
+        }
+        let mx = PwPoly::max_all(&[&f, &g, &h]);
+        for x in [0.0, 1.0, 3.0, 5.0, 7.0, 12.0] {
+            let want = f.eval(x).max(g.eval(x)).max(h.eval(x));
+            assert_close(mx.eval(x), want);
+        }
+    }
+
+    #[test]
+    fn kway_envelope_matches_pairwise_winners() {
+        // the three-function quadratic case of the pairwise tests
+        let f = PwPoly::linear_from(0.0, 0.0, 1.0);
+        let g = PwPoly::constant(4.0);
+        let h = PwPoly::new(
+            vec![0.0, f64::INFINITY],
+            vec![Poly::new(vec![0.0, 0.0, 0.125])],
+        );
+        let env = PwPoly::min_envelope(&[&f, &g, &h]);
+        assert_close(env.func.eval(2.0), 0.5);
+        assert_close(env.func.eval(1.0), 0.125);
+        assert_close(env.func.eval(7.0), 4.0);
+        assert_eq!(env.winner_at(2.0), 2);
+        assert_eq!(env.winner_at(7.0), 1);
+    }
+
+    #[test]
+    fn kway_envelope_catches_tangent_dip() {
+        // w = 1 (const) and j = 1 − u/2 + u²/4 are equal at u = 0; j dips
+        // to 0.75 at u = 1 and re-crosses at u = 2. A tie-break toward the
+        // function that is lower *far* into the interval would pick w and
+        // miss the dip entirely — the local second probe must not.
+        let w = PwPoly::constant(1.0);
+        let j = PwPoly::new(
+            vec![0.0, f64::INFINITY],
+            vec![Poly::new(vec![1.0, -0.5, 0.25])],
+        );
+        let env = PwPoly::min_envelope(&[&w, &j]);
+        assert_close(env.func.eval(1.0), 0.75);
+        assert_eq!(env.winner_at(1.0), 1);
+        assert_close(env.func.eval(5.0), 1.0); // j(5) = 4.75: w wins again
+        assert_eq!(env.winner_at(5.0), 0);
+        // and the pairwise reference agrees
+        let pair = PwPoly::min_envelope_pairwise(&[&w, &j]);
+        for x in [0.3, 1.0, 1.7, 2.5, 5.0] {
+            assert_close(env.func.eval(x), pair.func.eval(x));
+        }
+    }
+
+    #[test]
+    fn in_place_ops_match_pure() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0), (5.0, 5.0)]);
+        let g = PwPoly::step(0.0, 3.0, 1.0, 2.0);
+        // add_assign, general breaks (falls back to streaming add)
+        let mut a = f.clone();
+        a.add_assign(&g);
+        assert_eq!(a, f.add(&g));
+        // add_assign, shared breaks (in-place fast path)
+        let mut b = f.clone();
+        b.add_assign(&f);
+        assert_eq!(b, f.add(&f));
+        // scale_mut / shift_x_mut
+        let mut c = f.clone();
+        c.scale_mut(-2.5);
+        assert_eq!(c, f.scale(-2.5));
+        let mut d = f.clone();
+        d.shift_x_mut(3.0);
+        assert_eq!(d, f.shift_x(3.0));
+        // refine_in_place
+        let mut e = f.clone();
+        e.refine_in_place(&[1.0, 4.0]);
+        assert_eq!(e, f.refine(&[1.0, 4.0]));
+        let mut n = f.clone();
+        n.refine_in_place(&[]);
+        assert_eq!(n, f);
+    }
+
+    #[test]
+    fn refine_cow_borrows_when_empty() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0)]);
+        assert!(matches!(f.refine_cow(&[]), Cow::Borrowed(_)));
+        // out-of-domain cuts (left of or at the domain start) add nothing
+        assert!(matches!(f.refine_cow(&[-5.0, 0.0]), Cow::Borrowed(_)));
+        assert!(matches!(f.refine_cow(&[1.0]), Cow::Owned(_)));
+    }
+
+    #[test]
+    fn clip_full_domain_is_identity() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (2.0, 4.0)]);
+        assert_eq!(f.clip(0.0, f64::INFINITY), f);
+        assert_eq!(f.clip(-3.0, f64::INFINITY), f);
+        assert_eq!(f.clone().clipped(0.0, f64::INFINITY), f);
+        // a real clip still clips
+        let c = f.clone().clipped(1.0, 3.0);
+        assert_close(c.x_min(), 1.0);
+        assert_close(c.x_max(), 3.0);
+    }
+
+    #[test]
+    fn near_coincident_breaks_collapse_consistently() {
+        // a second break within EPS_BREAK of an existing one collapses in
+        // the binary refinement, in refine, and in the k-way merge alike
+        let x = 2.0;
+        let near = x + 0.3 * break_tol(x, x);
+        let f = PwPoly::from_points(&[(0.0, 0.0), (x, 4.0)]);
+        let g = PwPoly::from_points(&[(0.0, 1.0), (near, 2.0)]);
+        let sum = f.add(&g);
+        let kway = PwPoly::sum_all(&[&f, &g]);
+        // the cluster {x, near} yields exactly one interior break in both
+        let count_near = |b: &[f64]| b.iter().filter(|v| (**v - x).abs() < 1e-6).count();
+        assert_eq!(count_near(&sum.breaks), 1, "{:?}", sum.breaks);
+        assert_eq!(count_near(&kway.breaks), 1, "{:?}", kway.breaks);
+        assert_eq!(count_near(&f.refine(&[near]).breaks), 1);
     }
 }

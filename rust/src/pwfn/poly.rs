@@ -151,6 +151,35 @@ impl Poly {
         Poly::new(out)
     }
 
+    /// In-place [`Poly::add`]: grows `self` only when `other` has the
+    /// larger degree, otherwise allocation-free. Matches `add` bit-for-bit
+    /// except for the sign of exact zeros (`0.0 + x` vs `x`).
+    pub fn add_assign(&mut self, other: &Poly) {
+        if other.coeffs.len() > self.coeffs.len() {
+            self.coeffs.resize(other.coeffs.len(), 0.0);
+        }
+        for (i, c) in other.coeffs.iter().enumerate() {
+            self.coeffs[i] += c;
+        }
+        self.trim();
+    }
+
+    /// In-place [`Poly::scale`]: allocation-free.
+    pub fn scale_in_place(&mut self, k: f64) {
+        for c in &mut self.coeffs {
+            *c *= k;
+        }
+        self.trim();
+    }
+
+    /// Re-establish the [`Poly::new`] trimming invariant after an in-place
+    /// edit (trailing exact zeros removed, zero polynomial stays `[0.0]`).
+    fn trim(&mut self) {
+        while self.coeffs.len() > 1 && self.coeffs.last() == Some(&0.0) {
+            self.coeffs.pop();
+        }
+    }
+
     pub fn sub(&self, other: &Poly) -> Poly {
         let n = self.coeffs.len().max(other.coeffs.len());
         let mut out = vec![0.0; n];
@@ -391,6 +420,32 @@ mod tests {
         assert_eq!(prod.coeffs, vec![-1.0, 0.0, 1.0]);
         assert_eq!(a.add(&b).coeffs, vec![0.0, 2.0]);
         assert_eq!(a.sub(&b).coeffs, vec![2.0]);
+    }
+
+    #[test]
+    fn in_place_ops_match_pure() {
+        let a = Poly::new(vec![1.5, -2.0, 3.25]);
+        let b = Poly::new(vec![0.5, 4.0]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c, a.add(&b));
+        // growth path: other has the larger degree
+        let mut d = b.clone();
+        d.add_assign(&a);
+        assert_eq!(d, b.add(&a));
+        // cancellation re-trims the degree
+        let mut e = Poly::new(vec![1.0, 0.0, 2.0]);
+        e.add_assign(&Poly::new(vec![0.0, 0.0, -2.0]));
+        assert_eq!(e.degree(), 0);
+        assert_eq!(e, Poly::new(vec![1.0, 0.0, 2.0]).add(&Poly::new(vec![0.0, 0.0, -2.0])));
+        // scale, including the degree-collapsing k = 0 case
+        let mut f = a.clone();
+        f.scale_in_place(-0.5);
+        assert_eq!(f, a.scale(-0.5));
+        let mut g = a.clone();
+        g.scale_in_place(0.0);
+        assert_eq!(g, a.scale(0.0));
+        assert_eq!(g.degree(), 0);
     }
 
     #[test]

@@ -224,13 +224,17 @@ impl NodeSolve {
                     .then(|| analysis.output_over_time(process, m))
             })
             .collect();
+        // one progress derivative shared across all charged resources
+        let any_demand = (0..process.res_reqs.len())
+            .any(|l| need_demands.get(l).copied().unwrap_or(false));
+        let dp = any_demand.then(|| analysis.progress.derivative());
         let demands = (0..process.res_reqs.len())
             .map(|l| {
-                need_demands
-                    .get(l)
-                    .copied()
-                    .unwrap_or(false)
-                    .then(|| analysis.resource_demand(process, l).simplify())
+                need_demands.get(l).copied().unwrap_or(false).then(|| {
+                    analysis
+                        .resource_demand_with(dp.as_ref().unwrap(), process, l)
+                        .simplify()
+                })
             })
             .collect();
         NodeSolve {

@@ -65,7 +65,15 @@ impl Analysis {
     /// consumed at its allocated rate; the evaluation models use stream-type
     /// resources where stalls do not occur.
     pub fn resource_demand(&self, process: &Process, l: usize) -> PwPoly {
-        let dp = self.progress.derivative();
+        self.resource_demand_with(&self.progress.derivative(), process, l)
+    }
+
+    /// [`Analysis::resource_demand`] with the progress derivative `P'(t)`
+    /// precomputed — hot callers (the cache's `NodeSolve::derive`) charge
+    /// several resources from one analysis and should not rebuild the
+    /// derivative per resource. `dp` must be `self.progress.derivative()`;
+    /// results are bit-for-bit those of `resource_demand`.
+    pub fn resource_demand_with(&self, dp: &PwPoly, process: &Process, l: usize) -> PwPoly {
         let drl = process.res_reqs[l].func.derivative();
         let cost_along_p = drl.compose(&self.progress);
         dp.mul(&cost_along_p)

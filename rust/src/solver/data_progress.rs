@@ -26,7 +26,9 @@ pub fn data_envelope(process: &Process, inputs: &ProcessInputs) -> (Vec<PwPoly>,
             } else {
                 input.clone()
             };
-            req.func.compose(&shifted).clip(t0, f64::INFINITY)
+            // by-value clip: the common "input already starts at t0" case
+            // returns the compose result itself, no copy
+            req.func.compose(&shifted).clipped(t0, f64::INFINITY)
         })
         .collect();
     let env = if data_progress.is_empty() {
@@ -35,6 +37,7 @@ pub fn data_envelope(process: &Process, inputs: &ProcessInputs) -> (Vec<PwPoly>,
             winners: vec![0],
         }
     } else {
+        // single k-way sweep (with a clone-light single-input fast path)
         let refs: Vec<&PwPoly> = data_progress.iter().collect();
         PwPoly::min_envelope(&refs)
     };

@@ -51,6 +51,7 @@
 //! caps pathological cases.
 
 use crate::model::process::{ModelError, Process, ProcessInputs};
+use crate::pwfn::piecewise::poly_continues;
 use crate::pwfn::{poly::Poly, PwPoly};
 
 use super::analysis::{Analysis, Bottleneck, Segment};
@@ -130,19 +131,12 @@ impl ProgressBuilder {
             return; // zero-width: skip (value continuity is the caller's p)
         }
         // merge with previous piece when same label and same polynomial
-        // continuation
+        // continuation (the kernel's shared EPS_BREAK criterion)
         let mergeable = if let (Some(last_poly), Some(last_seg)) =
             (self.polys.last(), self.segments.last())
         {
             let prev_start = self.breaks[self.breaks.len() - 2];
-            let cont = last_poly.shift(start - prev_start);
-            let scale = cont
-                .coeffs
-                .iter()
-                .chain(poly.coeffs.iter())
-                .fold(1.0f64, |m, c| m.max(c.abs()));
-            last_seg.bottleneck == label
-                && cont.sub(&poly).coeffs.iter().all(|c| c.abs() <= 1e-9 * scale)
+            last_seg.bottleneck == label && poly_continues(last_poly, prev_start, start, &poly)
         } else {
             false
         };
@@ -196,13 +190,43 @@ impl ProgressBuilder {
 }
 
 /// First breakpoint of `f` strictly greater than `t` (`inf` if none).
+/// Binary search — this runs several times per solver event, and pd / the
+/// allocation functions can carry hundreds of breaks.
 fn next_break_after(f: &PwPoly, t: f64) -> f64 {
-    for &b in &f.breaks {
-        if b > t + 1e-12 * (1.0 + t.abs()) {
-            return b;
+    let thr = t + 1e-12 * (1.0 + t.abs());
+    let i = f.breaks.partition_point(|&b| b <= thr);
+    f.breaks.get(i).copied().unwrap_or(f64::INFINITY)
+}
+
+/// Reusable per-solve scratch buffers: the event loop runs one iteration
+/// per solver event, and every iteration used to allocate fresh
+/// cost/limiting/speed vectors (plus an allocation-integral `PwPoly` per
+/// stall check). One `SolveScratch` owned by [`solve`] amortizes all of it
+/// across the whole run; the buffers never escape, so results are
+/// bit-for-bit those of the allocating version.
+struct SolveScratch {
+    /// `R'_Rl(p)` per resource, for the current p-region.
+    costs: Vec<f64>,
+    /// Resources with nonzero cost in the current p-region.
+    limiting: Vec<usize>,
+    /// `(l, I_Rl local poly / cost_l)` speed candidates of one
+    /// resource-limited step.
+    speeds: Vec<(usize, Poly)>,
+    /// Lazily built antiderivatives of the resource allocations (stall
+    /// checks); the inputs are immutable for the whole solve, so each is
+    /// built at most once.
+    res_accum: Vec<Option<PwPoly>>,
+}
+
+impl SolveScratch {
+    fn new(l_count: usize) -> Self {
+        SolveScratch {
+            costs: Vec::with_capacity(l_count),
+            limiting: Vec::with_capacity(l_count),
+            speeds: Vec::with_capacity(l_count),
+            res_accum: vec![None; l_count],
         }
     }
-    f64::INFINITY
 }
 
 /// Analyze one process under the given inputs (Algorithm 2).
@@ -230,6 +254,7 @@ pub fn solve(
     let mut t = t0;
     let mut p = 0.0f64.min(process.max_progress);
     let mut builder = ProgressBuilder::new(t0);
+    let mut scratch = SolveScratch::new(l_count);
     let mut events = 0usize;
     let mut finished = false;
 
@@ -260,8 +285,10 @@ pub fn solve(
                 .find(|&b| b.is_finite() && (b - p).abs() <= tolp && r.func.jump_at(b) > tolp);
             if let Some(b) = jump_break {
                 let need = r.func.jump_at(b);
-                // accumulate allocation: A(t') - A(t) >= need
-                let acc = inputs.resources[l].antiderivative(0.0);
+                // accumulate allocation: A(t') - A(t) >= need (the
+                // antiderivative is built once per resource per solve)
+                let acc = scratch.res_accum[l]
+                    .get_or_insert_with(|| inputs.resources[l].antiderivative(0.0));
                 let target = acc.eval(t) + need;
                 match acc.first_reach(target, t) {
                     Some(tl) if tl < opts.horizon => {
@@ -304,7 +331,10 @@ pub fn solve(
         let gap = pd_now - p;
 
         // ---- current p-region: cost per progress for each resource -----
-        let costs: Vec<f64> = dres.iter().map(|d| d.eval(p + 2.0 * tolp)).collect();
+        scratch.costs.clear();
+        for d in &dres {
+            scratch.costs.push(d.eval(p + 2.0 * tolp));
+        }
         let next_p_break = dres
             .iter()
             .map(|d| next_break_after(d, p + 2.0 * tolp))
@@ -318,7 +348,12 @@ pub fn solve(
         }
         debug_assert!(window > t);
 
-        let limiting: Vec<usize> = (0..l_count).filter(|&l| costs[l] > 1e-15).collect();
+        scratch.limiting.clear();
+        for l in 0..l_count {
+            if scratch.costs[l] > 1e-15 {
+                scratch.limiting.push(l);
+            }
+        }
 
         if gap <= tolp {
             // =============== potentially data-limited ===================
@@ -350,9 +385,9 @@ pub fn solve(
             // check resource-speed violation: c_l * pd'(t) - I_Rl(t) > 0
             let mut violated_now = false;
             let mut t_viol = f64::INFINITY;
-            for &l in &limiting {
+            for &l in &scratch.limiting {
                 let g = df
-                    .scale(costs[l])
+                    .scale(scratch.costs[l])
                     .sub(&inputs.resources[l].local_poly_at(t));
                 let gscale = g.coeffs.iter().fold(1e-12f64, |m, c| m.max(c.abs()));
                 if g.eval(1e-9) > 1e-9 * gscale {
@@ -372,7 +407,7 @@ pub fn solve(
                 // resource-limited from here on: fall through to the
                 // resource branch on the next iteration
                 handle_resource_limited(
-                    &mut t, &mut p, &mut finished, process, inputs, &pd, &costs, &limiting,
+                    &mut t, &mut p, &mut finished, process, inputs, &pd, &mut scratch,
                     next_p_break, window, opts, &mut builder, tolp,
                 )?;
                 continue;
@@ -399,7 +434,7 @@ pub fn solve(
         } else {
             // ================== resource-limited =========================
             handle_resource_limited(
-                &mut t, &mut p, &mut finished, process, inputs, &pd, &costs, &limiting,
+                &mut t, &mut p, &mut finished, process, inputs, &pd, &mut scratch,
                 next_p_break, window, opts, &mut builder, tolp,
             )?;
         }
@@ -426,7 +461,8 @@ pub fn solve(
 
 /// One resource-limited step: integrate `P' = min_l I_Rl(t)/c_l` from
 /// `(t, p)` until the first event, pushing the piece into `builder` and
-/// advancing `(t, p)`.
+/// advancing `(t, p)`. Speed candidates live in `scratch.speeds` (cleared
+/// and refilled — no per-step vector or winner-poly clone).
 #[allow(clippy::too_many_arguments)]
 fn handle_resource_limited(
     t: &mut f64,
@@ -435,8 +471,7 @@ fn handle_resource_limited(
     process: &Process,
     inputs: &ProcessInputs,
     pd: &crate::pwfn::Envelope,
-    costs: &[f64],
-    limiting: &[usize],
+    scratch: &mut SolveScratch,
     next_p_break: f64,
     window: f64,
     opts: &SolverOpts,
@@ -445,7 +480,7 @@ fn handle_resource_limited(
 ) -> Result<(), SolveError> {
     let pd_now = pd.func.eval(*t);
 
-    if limiting.is_empty() {
+    if scratch.limiting.is_empty() {
         // no resource needed in this p-region: instantaneous progress up to
         // the next p-break / pd / completion
         let target = pd_now.min(next_p_break).min(process.max_progress);
@@ -484,22 +519,25 @@ fn handle_resource_limited(
 
     // speed_l(t) = I_Rl(t) / c_l on [t, window); find the envelope winner at t
     // and the earliest crossing with any other resource's speed.
-    let mut speeds: Vec<(usize, Poly)> = Vec::with_capacity(limiting.len());
-    for &l in limiting {
-        speeds.push((l, inputs.resources[l].local_poly_at(*t).scale(1.0 / costs[l])));
+    scratch.speeds.clear();
+    for &l in &scratch.limiting {
+        scratch
+            .speeds
+            .push((l, inputs.resources[l].local_poly_at(*t).scale(1.0 / scratch.costs[l])));
     }
+    let speeds = &scratch.speeds;
     // winner at t+ (smallest speed just right of t; tie-break lower index)
     let probe = 1e-9 * (1.0 + t.abs());
-    let (mut win_l, mut win_poly) = (speeds[0].0, speeds[0].1.clone());
-    let mut win_val = win_poly.eval(probe);
-    for (l, s) in speeds.iter().skip(1) {
+    let mut win = 0usize;
+    let mut win_val = speeds[0].1.eval(probe);
+    for (si, (_, s)) in speeds.iter().enumerate().skip(1) {
         let v = s.eval(probe);
         if v < win_val - 1e-12 * (1.0 + v.abs()) {
-            win_l = *l;
-            win_poly = s.clone();
+            win = si;
             win_val = v;
         }
     }
+    let win_l = speeds[win].0;
     let hi_local = if window.is_finite() {
         window - *t
     } else {
@@ -507,11 +545,11 @@ fn handle_resource_limited(
     };
     // crossing with any other speed
     let mut t_cross = f64::INFINITY;
-    for (l, s) in &speeds {
-        if *l == win_l {
+    for (si, (_, s)) in speeds.iter().enumerate() {
+        if si == win {
             continue;
         }
-        let d = s.sub(&win_poly);
+        let d = s.sub(&speeds[win].1);
         for r in d.roots_in(0.0, hi_local) {
             if r > probe && d.eval(r + probe) < 0.0 {
                 t_cross = t_cross.min(*t + r);
@@ -521,7 +559,7 @@ fn handle_resource_limited(
     }
 
     // integrate the winning speed: P_cand(u) = p + ∫0^u speed
-    let cand = win_poly.antiderivative(*p);
+    let cand = speeds[win].1.antiderivative(*p);
 
     // events: reach next_p_break / max_progress / catch pd
     let mut event = window.min(t_cross).min(opts.horizon);
@@ -564,14 +602,16 @@ fn handle_resource_limited(
     if !event.is_finite() {
         // speed never limited again and no target reachable: give up at
         // horizon
-        builder.push(*t, opts.horizon, cand.clone(), Bottleneck::Resource(win_l));
-        *p = cand.eval(opts.horizon - *t);
+        let p_next = cand.eval(opts.horizon - *t);
+        builder.push(*t, opts.horizon, cand, Bottleneck::Resource(win_l));
+        *p = p_next;
         *t = opts.horizon;
         return Ok(());
     }
 
-    builder.push(*t, event, cand.clone(), Bottleneck::Resource(win_l));
-    *p = cand.eval(event - *t);
+    let p_next = cand.eval(event - *t);
+    builder.push(*t, event, cand, Bottleneck::Resource(win_l));
+    *p = p_next;
     *t = event;
     if event_kind == 3 || *p >= process.max_progress - tolp {
         *p = process.max_progress;

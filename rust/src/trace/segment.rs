@@ -15,7 +15,7 @@
 //! proportional to piece count (paper §6), and the sweep engine's cache
 //! keys hash every coefficient.
 
-use crate::pwfn::{poly::Poly, PwPoly};
+use crate::pwfn::{break_tol, poly::Poly, PwPoly};
 
 /// Greedy PL segmentation of a monotone curve: returns breakpoints
 /// `(x, y)` such that linear interpolation stays within `tol * y_span` of
@@ -86,7 +86,14 @@ pub fn to_pwpoly(points: &[(f64, f64)], jump_eps_abs: f64) -> PwPoly {
 /// must not exceed the actually-available input).
 pub fn to_pwpoly_dir(points: &[(f64, f64)], jump_eps_abs: f64, backward: bool) -> PwPoly {
     assert!(points.len() >= 2);
-    let eps = jump_eps_abs.max(1e-12);
+    // floor the ramp width at twice the kernel's breakpoint-coincidence
+    // tolerance ([`crate::pwfn::EPS_BREAK`], relative) at this x scale:
+    // any narrower and the widened step's two breaks would collapse back
+    // into one deduplicated break the moment the fitted model re-enters
+    // the piecewise algebra, smearing the step's slope across the merged
+    // interval
+    let xmag = points.iter().fold(0.0f64, |m, p| m.max(p.0.abs()));
+    let eps = jump_eps_abs.max(2.0 * break_tol(xmag, xmag));
     // enforce strictly increasing x by widening steps
     let mut pts: Vec<(f64, f64)> = Vec::with_capacity(points.len());
     if backward {

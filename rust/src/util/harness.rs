@@ -7,8 +7,10 @@
 //! harness drives seeded generators and reports the failing seed for
 //! reproduction.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::{fmt_duration, Summary};
 
 /// Result of a single benchmark.
@@ -80,6 +82,59 @@ pub fn bench_once<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Be
     }
 }
 
+// --------------------------------------------------------- bench artifacts
+
+/// Directory for machine-readable bench artifacts (`BENCH_<name>.json`):
+/// `BOTTLEMOD_BENCH_DIR` if set, else the repo root (the parent of the
+/// package's `CARGO_MANIFEST_DIR`, which cargo exports when running
+/// benches), else the current directory.
+pub fn bench_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("BOTTLEMOD_BENCH_DIR") {
+        return PathBuf::from(d);
+    }
+    if let Ok(m) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(m);
+        if let Some(parent) = p.parent() {
+            return parent.to_path_buf();
+        }
+    }
+    PathBuf::from(".")
+}
+
+/// Path of one bench's JSON artifact, `BENCH_<bench>.json`.
+pub fn bench_artifact_path(bench: &str) -> PathBuf {
+    bench_artifact_dir().join(format!("BENCH_{bench}.json"))
+}
+
+/// Read a previously persisted artifact — the perf trajectory's last
+/// recorded point (e.g. the prior PR's run). `None` when absent or
+/// unparsable.
+pub fn read_bench_artifact(bench: &str) -> Option<Json> {
+    let s = std::fs::read_to_string(bench_artifact_path(bench)).ok()?;
+    Json::parse(&s).ok()
+}
+
+/// Persist a bench's results as `BENCH_<bench>.json` (one pretty-printed
+/// object, deterministic key order) so the perf trajectory is tracked
+/// across PRs; CI uploads these as artifacts. Returns the written path.
+pub fn write_bench_artifact(bench: &str, fields: Vec<(&str, Json)>) -> std::io::Result<PathBuf> {
+    write_bench_artifact_in(&bench_artifact_dir(), bench, fields)
+}
+
+/// [`write_bench_artifact`] into an explicit directory (tests; callers
+/// that resolve the directory themselves).
+pub fn write_bench_artifact_in(
+    dir: &std::path::Path,
+    bench: &str,
+    fields: Vec<(&str, Json)>,
+) -> std::io::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let mut body = Json::obj(fields).to_string_pretty();
+    body.push('\n');
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
 /// Property-test driver: runs `prop(rng)` for `cases` seeded cases; on a
 /// panic-free failure (returning `Err(msg)`) it reports the seed and case.
 pub fn check_property(
@@ -114,6 +169,30 @@ mod tests {
         let r = bench_once("once", 5, || count += 1);
         assert_eq!(count, 5);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn bench_artifact_roundtrip() {
+        // explicit directory: no process-global env mutation (tests run on
+        // parallel threads; setenv would race with concurrent env reads)
+        let dir = std::env::temp_dir().join("bottlemod_bench_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_bench_artifact_in(
+            &dir,
+            "unit_test",
+            vec![
+                ("scenarios", Json::Num(256.0)),
+                ("speedup", Json::Num(3.5)),
+                ("tag", Json::Str("test".into())),
+            ],
+        )
+        .unwrap();
+        assert_eq!(path, dir.join("BENCH_unit_test.json"));
+        let body = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&body).expect("parses back");
+        assert_eq!(back.get("scenarios").as_f64(), Some(256.0));
+        assert_eq!(back.get("tag").as_str(), Some("test"));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -239,11 +239,7 @@ fn analyze_pass(
                     }
                 }
                 ResourceSource::PoolResidual { pool } => {
-                    let mut rem = wf.pools[*pool].capacity.clone();
-                    for (_, demand) in &pool_claims[*pool] {
-                        rem = rem.sub(demand).max_with_zero();
-                    }
-                    rem.simplify()
+                    residual_capacity(&wf.pools[*pool].capacity, &pool_claims[*pool])
                 }
             })
             .collect();
@@ -325,13 +321,7 @@ fn analyze_pass(
         .pools
         .iter()
         .enumerate()
-        .map(|(pid, pool)| {
-            let mut rem = pool.capacity.clone();
-            for (_, demand) in &pool_claims[pid] {
-                rem = rem.sub(demand).max_with_zero();
-            }
-            rem.simplify()
-        })
+        .map(|(pid, pool)| residual_capacity(&pool.capacity, &pool_claims[pid]))
         .collect();
 
     Ok(WorkflowAnalysis {
@@ -404,6 +394,22 @@ pub fn analyze_fixpoint_cached(
         }
     }
     Ok(last.unwrap())
+}
+
+/// Remaining pool capacity after charging `claims`: one k-way demand sum
+/// ([`PwPoly::sum_all`]) and a single clamp, instead of a subtract-and-
+/// clamp chain that rebuilds the growing refinement per claim. Value-
+/// identical for the nonnegative demand functions the engine charges
+/// (`max(0, max(0, c − d₁) − d₂) = max(0, c − d₁ − d₂)` for `dᵢ ≥ 0`).
+fn residual_capacity(capacity: &PwPoly, claims: &[(usize, PwPoly)]) -> PwPoly {
+    if claims.is_empty() {
+        return capacity.simplify();
+    }
+    let demands: Vec<&PwPoly> = claims.iter().map(|(_, d)| d).collect();
+    capacity
+        .sub(&PwPoly::sum_all(&demands))
+        .max_with_zero()
+        .simplify()
 }
 
 /// Concatenate two piecewise functions with adjacent domains.

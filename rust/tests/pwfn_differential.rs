@@ -1,0 +1,358 @@
+//! Differential property tests pinning the pre-refactor pwfn semantics.
+//!
+//! The allocation-lean kernel (streaming two-sequence merge, k-way
+//! `sum_all`/`min_all`/`max_all`, in-place ops) must not change results:
+//!
+//! * **bit-for-bit** where the computation is reordering-free — the
+//!   streaming binary `add`/`sub`/`mul` against a verbatim copy of the old
+//!   `common_breaks` + `local_poly_at` implementation, the in-place ops
+//!   against their pure counterparts, `refine`/`clip` fast paths against
+//!   the identity;
+//! * **≤ 1e-9 relative** where accumulation order changes (`sum_all` vs
+//!   the sequential pairwise fold) — near-coincident breakpoints may keep
+//!   a different `EPS_BREAK`-cluster representative, and `x + 0.0` vs `x`
+//!   flips the sign of exact zeros;
+//! * **≤ 1e-6 relative** for the k-way envelope against the retained
+//!   pairwise reference (`min_envelope_pairwise`) — crossing placement is
+//!   root-finding, so the two agree to root tolerance (the historical
+//!   envelope property-test tolerance), and every claimed winner must
+//!   attain the envelope.
+//!
+//! Inputs cover step discontinuities, constant and single-piece functions,
+//! finite domains (constant extension), differing domain starts, and
+//! near-coincident breakpoints.
+
+use bottlemod::pwfn::{break_tol, poly::Poly, PwPoly};
+use bottlemod::util::harness::check_property;
+use bottlemod::util::Rng;
+
+// ------------------------------------------------------------- generators
+
+/// Random piecewise polynomial: degree ≤ 2 pieces with jumps, 20% constant
+/// pieces, 25% finite domains, random domain start.
+fn random_pw(rng: &mut Rng) -> PwPoly {
+    let pieces = 1 + rng.below(6);
+    let mut breaks = vec![rng.range(-3.0, 3.0)];
+    for i in 0..pieces - 1 {
+        let prev = breaks[i];
+        breaks.push(prev + rng.range(0.5, 6.0));
+    }
+    if rng.f64() < 0.25 {
+        let prev = *breaks.last().unwrap();
+        breaks.push(prev + rng.range(0.5, 6.0));
+    } else {
+        breaks.push(f64::INFINITY);
+    }
+    let polys = (0..pieces)
+        .map(|_| {
+            if rng.f64() < 0.2 {
+                Poly::constant(rng.range(-4.0, 4.0))
+            } else {
+                let deg = rng.below(3);
+                Poly::new((0..=deg).map(|_| rng.range(-3.0, 3.0)).collect())
+            }
+        })
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+/// A function sharing `f`'s break skeleton, each finite break perturbed
+/// *upward* by a sub-[`break_tol`] offset — the near-coincident dedup
+/// stressor. (Upward so the perturbed break dedups against the original:
+/// the kernel — old and new alike — only collapses a cut against the
+/// preceding break.)
+fn near_coincident_variant(rng: &mut Rng, f: &PwPoly) -> PwPoly {
+    let breaks: Vec<f64> = f
+        .breaks
+        .iter()
+        .map(|&b| {
+            if b.is_finite() {
+                b + 0.3 * break_tol(b, b) * rng.f64()
+            } else {
+                b
+            }
+        })
+        .collect();
+    let polys = f
+        .polys
+        .iter()
+        .map(|_| Poly::new((0..=rng.below(2)).map(|_| rng.range(-3.0, 3.0)).collect()))
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+/// Sample points spanning both functions' finite spans (plus margins),
+/// random so exact breakpoints are hit with probability 0.
+fn sample_xs(rng: &mut Rng, fns: &[&PwPoly], n: usize) -> Vec<f64> {
+    let lo = fns.iter().map(|f| f.x_min()).fold(f64::INFINITY, f64::min) - 3.0;
+    let hi = fns
+        .iter()
+        .flat_map(|f| f.breaks.iter())
+        .copied()
+        .filter(|b| b.is_finite())
+        .fold(lo, f64::max)
+        + 10.0;
+    (0..n).map(|_| rng.range(lo, hi)).collect()
+}
+
+// --------------------------------------------------- reference (PR 3) code
+
+/// Verbatim copy of the pre-refactor `common_breaks` (sorted union,
+/// `dedup_by` to the same tolerance).
+fn ref_common_breaks(f: &PwPoly, g: &PwPoly) -> Vec<f64> {
+    let lo = f.breaks[0].min(g.breaks[0]);
+    let hi = f.x_max().max(g.x_max());
+    let mut all: Vec<f64> = f
+        .breaks
+        .iter()
+        .chain(g.breaks.iter())
+        .copied()
+        .filter(|x| x.is_finite())
+        .collect();
+    all.push(lo);
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.dedup_by(|a, b| (*a - *b).abs() < break_tol(*a, *b));
+    if hi.is_infinite() {
+        all.push(f64::INFINITY);
+    }
+    all
+}
+
+/// Verbatim copy of the pre-refactor `zip_with` (per-interval
+/// `local_poly_at`, i.e. a binary search + shift per operand per piece).
+fn ref_zip(f: &PwPoly, g: &PwPoly, op: impl Fn(&Poly, &Poly) -> Poly) -> PwPoly {
+    let breaks = ref_common_breaks(f, g);
+    let mut polys = Vec::with_capacity(breaks.len() - 1);
+    for i in 0..breaks.len() - 1 {
+        let s = breaks[i];
+        polys.push(op(&f.local_poly_at(s), &g.local_poly_at(s)));
+    }
+    PwPoly::new(breaks, polys)
+}
+
+// ------------------------------------------------------------------- tests
+
+#[test]
+fn streaming_binary_ops_bitwise_match_reference() {
+    check_property("add/sub/mul == PR3 reference, bitwise", 400, |rng| {
+        let f = random_pw(rng);
+        let g = if rng.f64() < 0.3 {
+            near_coincident_variant(rng, &f)
+        } else {
+            random_pw(rng)
+        };
+        for (name, got, want) in [
+            ("add", f.add(&g), ref_zip(&f, &g, |a, b| a.add(b))),
+            ("sub", f.sub(&g), ref_zip(&f, &g, |a, b| a.sub(b))),
+            ("mul", f.mul(&g), ref_zip(&f, &g, |a, b| a.mul(b))),
+        ] {
+            if got != want {
+                return Err(format!(
+                    "{name} diverged from reference:\n got {got:?}\nwant {want:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sum_all_matches_sequential_fold() {
+    check_property("sum_all == pairwise fold (<= 1e-9 rel)", 300, |rng| {
+        let k = 1 + rng.below(5);
+        let mut fns: Vec<PwPoly> = (0..k).map(|_| random_pw(rng)).collect();
+        if k >= 2 && rng.f64() < 0.3 {
+            let v = near_coincident_variant(rng, &fns[0]);
+            fns[1] = v;
+        }
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+        let kway = PwPoly::sum_all(&refs);
+        let fold = fns[1..]
+            .iter()
+            .fold(fns[0].clone(), |acc, f| acc.add(f));
+        for &x in &sample_xs(rng, &refs, 60) {
+            let (a, b) = (kway.eval(x), fold.eval(x));
+            if (a - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                return Err(format!("sum_all({x}) = {a} vs fold {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kway_envelope_matches_pairwise_reference() {
+    check_property("min_envelope == pairwise (<= 1e-6 rel)", 300, |rng| {
+        let k = 2 + rng.below(4);
+        let fns: Vec<PwPoly> = (0..k).map(|_| random_pw(rng)).collect();
+        // single input: the fast path must be bitwise the pairwise output
+        // (the reference dedups even a lone function)
+        let lone = PwPoly::min_envelope(&[&fns[0]]);
+        let lone_ref = PwPoly::min_envelope_pairwise(&[&fns[0]]);
+        if lone != lone_ref {
+            return Err(format!(
+                "k=1 envelope diverged:\n got {lone:?}\nwant {lone_ref:?}"
+            ));
+        }
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+        let kway = PwPoly::min_envelope(&refs);
+        let pair = PwPoly::min_envelope_pairwise(&refs);
+        for &x in &sample_xs(rng, &refs, 80) {
+            let (a, b) = (kway.func.eval(x), pair.func.eval(x));
+            let tol = 1e-6 * (1.0 + b.abs());
+            if (a - b).abs() > tol {
+                return Err(format!("envelope({x}) = {a} vs pairwise {b}"));
+            }
+            // pointwise minimum, both implementations
+            let min_v = fns.iter().map(|f| f.eval(x)).fold(f64::INFINITY, f64::min);
+            if (a - min_v).abs() > tol {
+                return Err(format!("envelope({x}) = {a} but min = {min_v}"));
+            }
+            // the claimed winner attains the envelope
+            let w = kway.winner_at(x);
+            if w >= fns.len() {
+                return Err(format!("winner {w} out of range at x = {x}"));
+            }
+            let wv = fns[w].eval(x);
+            if (wv - a).abs() > tol {
+                return Err(format!("winner {w} at {x} has {wv}, envelope {a}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn max_all_matches_max_with_fold() {
+    check_property("max_all == max_with fold (<= 1e-6 rel)", 200, |rng| {
+        let k = 2 + rng.below(3);
+        let fns: Vec<PwPoly> = (0..k).map(|_| random_pw(rng)).collect();
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+        let kway = PwPoly::max_all(&refs);
+        let fold = fns[1..]
+            .iter()
+            .fold(fns[0].clone(), |acc, f| acc.max_with(f));
+        for &x in &sample_xs(rng, &refs, 60) {
+            let (a, b) = (kway.eval(x), fold.eval(x));
+            if (a - b).abs() > 1e-6 * (1.0 + b.abs()) {
+                return Err(format!("max_all({x}) = {a} vs fold {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn in_place_ops_bitwise_match_pure() {
+    check_property("in-place == pure, bitwise", 300, |rng| {
+        let f = random_pw(rng);
+        let g = random_pw(rng);
+        // add_assign, general breaks (streaming fallback)
+        let mut a = f.clone();
+        a.add_assign(&g);
+        if a != f.add(&g) {
+            return Err("add_assign (general) != add".into());
+        }
+        // add_assign, shared breaks (true in-place path)
+        let same_breaks = PwPoly::new(
+            f.breaks.clone(),
+            f.polys
+                .iter()
+                .map(|_| Poly::new((0..=rng.below(3)).map(|_| rng.range(-3.0, 3.0)).collect()))
+                .collect(),
+        );
+        let mut b = f.clone();
+        b.add_assign(&same_breaks);
+        if b != f.add(&same_breaks) {
+            return Err("add_assign (shared breaks) != add".into());
+        }
+        // scale_mut / shift_x_mut
+        let kf = rng.range(-3.0, 3.0);
+        let mut c = f.clone();
+        c.scale_mut(kf);
+        if c != f.scale(kf) {
+            return Err(format!("scale_mut({kf}) != scale"));
+        }
+        let dx = rng.range(-5.0, 5.0);
+        let mut d = f.clone();
+        d.shift_x_mut(dx);
+        if d != f.shift_x(dx) {
+            return Err(format!("shift_x_mut({dx}) != shift_x"));
+        }
+        // refine_in_place, including duplicates and out-of-domain cuts
+        let cuts: Vec<f64> = (0..4).map(|_| rng.range(-8.0, 30.0)).collect();
+        let mut e = f.clone();
+        e.refine_in_place(&cuts);
+        if e != f.refine(&cuts) {
+            return Err("refine_in_place != refine".into());
+        }
+        let mut n = f.clone();
+        n.refine_in_place(&[]);
+        if n != f {
+            return Err("refine_in_place(&[]) changed the function".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cheap_paths_are_identities() {
+    check_property("refine(&[]) / whole-domain clip identities", 200, |rng| {
+        let f = random_pw(rng);
+        if f.refine(&[]) != f {
+            return Err("refine(&[]) != self".into());
+        }
+        if f.clip(f.x_min(), f.x_max()) != f {
+            return Err("whole-domain clip != self".into());
+        }
+        if f.clone().clipped(f.x_min() - 1.0, f.x_max()) != f {
+            return Err("clipped (from left of domain) != self".into());
+        }
+        // a genuine clip agrees between by-ref and by-value
+        let last_finite = f
+            .breaks
+            .iter()
+            .copied()
+            .filter(|b| b.is_finite())
+            .fold(f.x_min(), f64::max);
+        let a = f.x_min() + 0.25;
+        let b = last_finite + 2.0;
+        if b > a && f.clone().clipped(a, b) != f.clip(a, b) {
+            return Err("clipped != clip on a real restriction".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn near_coincident_breaks_collapse_identically() {
+    check_property("EPS_BREAK cluster collapse is op-independent", 200, |rng| {
+        let f = random_pw(rng);
+        let g = near_coincident_variant(rng, &f);
+        // every op sees one break per cluster: binary add (streaming),
+        // the PR3 reference, and refine with g's breaks as cuts agree on
+        // the merged break count
+        let sum = f.add(&g);
+        let reference = ref_zip(&f, &g, |a, b| a.add(b));
+        if sum.breaks != reference.breaks {
+            return Err(format!(
+                "streaming vs reference break sets:\n {:?}\nvs {:?}",
+                sum.breaks, reference.breaks
+            ));
+        }
+        let finite_cuts: Vec<f64> = g
+            .breaks
+            .iter()
+            .copied()
+            .filter(|b| b.is_finite())
+            .collect();
+        let refined = f.refine(&finite_cuts);
+        if refined.breaks.len() != f.breaks.len() {
+            return Err(format!(
+                "refine added a break inside an EPS_BREAK cluster: {:?} from {:?}",
+                refined.breaks, f.breaks
+            ));
+        }
+        Ok(())
+    });
+}
