@@ -1,0 +1,134 @@
+//! The structured error taxonomy of the wire API.
+//!
+//! Every failure that crosses the API boundary — malformed JSON, a bad
+//! field, an unsupported knob, a solve that blew up — is an [`ApiError`]:
+//! a machine-readable [`ErrorCode`], a human-readable message, and an
+//! optional structured `detail` payload (e.g. the index of the offending
+//! batch item). The full code table with examples lives in
+//! `docs/SERVICE.md`.
+
+use std::fmt;
+
+use crate::util::Json;
+
+/// Machine-readable error classes. Stable wire strings (`as_str`) — new
+/// codes may be added, existing ones never change meaning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed JSON, a missing/wrong-typed field, an unknown
+    /// perturbation kind, or a knob the selected workflow does not expose.
+    BadRequest,
+    /// The `op` is not one the protocol defines.
+    UnknownOp,
+    /// The `v` envelope field names a protocol this server does not speak.
+    UnsupportedVersion,
+    /// The workflow spec parsed as JSON but is not a valid model.
+    InvalidSpec,
+    /// The trace (TSV / I/O log) failed strict parsing, calibration or
+    /// assembly.
+    InvalidTrace,
+    /// The model was well-formed but the analysis failed (e.g. a barrier
+    /// dependency that never finishes).
+    AnalysisFailed,
+    /// A server-side invariant broke. Never expected; file a bug.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The wire string (`"bad_request"`, `"unknown_op"`, ...).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::InvalidSpec => "invalid_spec",
+            ErrorCode::InvalidTrace => "invalid_trace",
+            ErrorCode::AnalysisFailed => "analysis_failed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A structured API error: code + message + optional detail.
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    /// Optional structured context (e.g. `{"index": 2}` for the offending
+    /// element of an array field).
+    pub detail: Option<Json>,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError {
+            code,
+            message: message.into(),
+            detail: None,
+        }
+    }
+
+    /// Shorthand for the most common class.
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, message)
+    }
+
+    /// Attach a structured detail payload.
+    pub fn with_detail(mut self, detail: Json) -> ApiError {
+        self.detail = Some(detail);
+        self
+    }
+
+    /// The v1 wire object: `{"code", "detail"?, "message"}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::Str(self.code.as_str().to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ];
+        if let Some(d) = &self.detail {
+            fields.push(("detail", d.clone()));
+        }
+        Json::obj(fields)
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_strings_are_stable() {
+        assert_eq!(ErrorCode::BadRequest.as_str(), "bad_request");
+        assert_eq!(ErrorCode::UnknownOp.as_str(), "unknown_op");
+        assert_eq!(ErrorCode::UnsupportedVersion.as_str(), "unsupported_version");
+        assert_eq!(ErrorCode::InvalidSpec.as_str(), "invalid_spec");
+        assert_eq!(ErrorCode::InvalidTrace.as_str(), "invalid_trace");
+        assert_eq!(ErrorCode::AnalysisFailed.as_str(), "analysis_failed");
+        assert_eq!(ErrorCode::Internal.as_str(), "internal");
+    }
+
+    #[test]
+    fn to_json_shape() {
+        let e = ApiError::bad_request("nope");
+        assert_eq!(e.to_json().to_string(), r#"{"code":"bad_request","message":"nope"}"#);
+        let e = e.with_detail(Json::obj(vec![("index", Json::Num(2.0))]));
+        assert_eq!(
+            e.to_json().to_string(),
+            r#"{"code":"bad_request","detail":{"index":2},"message":"nope"}"#
+        );
+    }
+}

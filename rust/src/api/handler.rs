@@ -1,0 +1,418 @@
+//! The one place API requests are executed.
+//!
+//! [`ApiHandler`] owns the session state — the [`AnalysisCache`] every op
+//! runs against and the lazily-created worker pool `batch` fans out over —
+//! and [`execute`] is the pure per-request dispatch the pool's workers
+//! share with the inline path. The CLI (`main.rs`), the stdio service
+//! (`coordinator::service::serve_stdio`) and the worker pool all delegate
+//! here; none of them parses or assembles wire JSON of their own.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::service::{Coordinator, Job};
+use crate::model::spec::parse_workflow;
+use crate::runtime::cache::AnalysisCache;
+use crate::runtime::sweep::{FixedWorkflow, SweepBatch, SweepError, SweepModel};
+use crate::solver::SolverOpts;
+use crate::trace::{
+    assemble, calibrate, parse_io_log, parse_tsv, replay, CalibrateOpts, CalibratedWorkflow,
+};
+use crate::util::par::num_threads;
+use crate::util::Json;
+use crate::workflow::engine::analyze_fixpoint_cached;
+use crate::workflow::scenario::{GenomicsScenario, Perturbation, VideoScenario};
+
+use super::error::{ApiError, ErrorCode};
+use super::request::{decode_line, Request, WorkflowSel};
+use super::response::{
+    encode, AnalyzeResult, CalibrateResult, Response, ScheduleRow, SegmentRow, SweepResult,
+};
+
+/// Session-stateful API front end: one analysis cache (so repeat requests
+/// are answered incrementally, per the paper's §7 "repeatedly executed
+/// online" deployment) and one worker pool for `batch` requests, created
+/// on first use and kept for the handler's lifetime.
+pub struct ApiHandler {
+    cache: Arc<AnalysisCache>,
+    threads: usize,
+    pool: Mutex<Option<Coordinator>>,
+}
+
+impl Default for ApiHandler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ApiHandler {
+    pub fn new() -> ApiHandler {
+        ApiHandler::with_threads(num_threads())
+    }
+
+    /// Handler whose `batch` pool has exactly `threads` workers.
+    pub fn with_threads(threads: usize) -> ApiHandler {
+        ApiHandler {
+            cache: Arc::new(AnalysisCache::new()),
+            threads: threads.max(1),
+            pool: Mutex::new(None),
+        }
+    }
+
+    /// The session-lifetime analysis cache every op runs against.
+    pub fn cache(&self) -> &Arc<AnalysisCache> {
+        &self.cache
+    }
+
+    /// Handle one typed request. `batch` fans out over the owned worker
+    /// pool; every other op executes inline on the caller's thread.
+    pub fn handle(&self, req: &Request) -> Result<Response, ApiError> {
+        match req {
+            Request::Batch { requests } => self.handle_batch(requests),
+            other => execute(other, &self.cache),
+        }
+    }
+
+    /// The full wire path: decode one JSON line (v1 envelope or legacy
+    /// v0), execute, and encode the response in the request's dialect.
+    /// Never panics on wire input; always returns exactly one response
+    /// object echoing the request id (`null` when the id was unusable).
+    pub fn handle_wire(&self, line: &str) -> Json {
+        let wire = decode_line(line);
+        let outcome = wire.body.and_then(|req| self.handle(&req));
+        encode(wire.v, wire.id, &outcome)
+    }
+
+    fn handle_batch(&self, requests: &[Request]) -> Result<Response, ApiError> {
+        if requests.is_empty() {
+            return Err(ApiError::bad_request("batch needs at least one request"));
+        }
+        let mut pool = self
+            .pool
+            .lock()
+            .map_err(|_| ApiError::new(ErrorCode::Internal, "worker pool poisoned"))?;
+        let pool = pool
+            .get_or_insert_with(|| Coordinator::with_cache(self.threads, Arc::clone(&self.cache)));
+        for (i, req) in requests.iter().enumerate() {
+            pool.submit(Job {
+                id: i as u64,
+                request: req.clone(),
+            });
+        }
+        let mut results = pool.collect(requests.len());
+        results.sort_by_key(|r| r.id);
+        Ok(Response::Batch(
+            results.into_iter().map(|r| r.outcome).collect(),
+        ))
+    }
+}
+
+/// Execute one non-batch request against a shared analysis cache with the
+/// machine's full parallelism. Pure apart from the cache (results are
+/// bit-for-bit identical with or without it).
+pub fn execute(req: &Request, cache: &Arc<AnalysisCache>) -> Result<Response, ApiError> {
+    execute_with_threads(req, cache, num_threads())
+}
+
+/// [`execute`] with an explicit solver fan-out budget for `sweep`
+/// requests. Pool workers pass `1` — the pool itself is the parallelism
+/// across jobs, and K concurrent sweeps each spawning `num_threads()`
+/// scoped threads would oversubscribe the machine quadratically. Results
+/// are identical for any budget (the engine's determinism contract).
+pub fn execute_with_threads(
+    req: &Request,
+    cache: &Arc<AnalysisCache>,
+    sweep_threads: usize,
+) -> Result<Response, ApiError> {
+    match req {
+        Request::Ping => Ok(Response::Pong),
+        Request::Analyze { spec } => run_analyze(spec, cache),
+        Request::Sweep {
+            workflow,
+            perturbations,
+        } => run_sweep(workflow, perturbations, cache, sweep_threads),
+        Request::Calibrate { tsv, io, tol } => run_calibrate(tsv, io.as_deref(), *tol),
+        Request::Batch { .. } => Err(ApiError::bad_request("batch requests cannot nest")),
+    }
+}
+
+fn run_analyze(spec: &str, cache: &Arc<AnalysisCache>) -> Result<Response, ApiError> {
+    let wf = parse_workflow(spec)
+        .map_err(|e| ApiError::new(ErrorCode::InvalidSpec, e.to_string()))?;
+    let wa = analyze_fixpoint_cached(&wf, &SolverOpts::default(), 6, Some(cache.as_ref()))
+        .map_err(|e| ApiError::new(ErrorCode::AnalysisFailed, e.to_string()))?;
+    let schedule = wa
+        .schedule(&wf)
+        .into_iter()
+        .map(|(name, start, finish)| ScheduleRow {
+            name,
+            start,
+            finish,
+        })
+        .collect();
+    let mut bottlenecks = Vec::new();
+    for (i, a) in wa.analyses.iter().enumerate() {
+        let p = &wf.nodes[i].process;
+        for s in &a.segments {
+            bottlenecks.push(SegmentRow {
+                process: p.name.clone(),
+                start: s.start,
+                end: s.end,
+                bottleneck: a.bottleneck_name(p, s.bottleneck),
+            });
+        }
+    }
+    Ok(Response::Analyze(AnalyzeResult {
+        makespan: wa.makespan,
+        events: wa.events,
+        passes: wa.passes,
+        schedule,
+        bottlenecks,
+    }))
+}
+
+fn run_sweep(
+    sel: &WorkflowSel,
+    perturbations: &[Perturbation],
+    cache: &Arc<AnalysisCache>,
+    threads: usize,
+) -> Result<Response, ApiError> {
+    if perturbations.is_empty() {
+        return Err(ApiError::bad_request("sweep needs at least one perturbation"));
+    }
+    let model: Arc<dyn SweepModel> = match sel {
+        WorkflowSel::Video => Arc::new(VideoScenario::default()),
+        WorkflowSel::Genomics => Arc::new(GenomicsScenario::default()),
+        WorkflowSel::Spec(text) => {
+            let wf = parse_workflow(text)
+                .map_err(|e| ApiError::new(ErrorCode::InvalidSpec, e.to_string()))?;
+            Arc::new(FixedWorkflow::new("spec", wf))
+        }
+        WorkflowSel::Trace { tsv, io } => {
+            // parse → calibrate → assemble only: the replay validation a
+            // `calibrate` op performs would be solved and thrown away here
+            let cal = calibrated_workflow(tsv, io.as_deref(), &CalibrateOpts::default())?;
+            Arc::new(FixedWorkflow::new("trace", cal.workflow))
+        }
+    };
+    let label = model.label().to_string();
+    let engine = SweepBatch::over(model)
+        .with_threads(threads)
+        .with_cache(Arc::clone(cache));
+    let (outcomes, report) = engine.run_report(perturbations).map_err(|e| match e {
+        SweepError::Unsupported(m) => ApiError::bad_request(m),
+        SweepError::Analysis(err) => ApiError::new(ErrorCode::AnalysisFailed, err.to_string()),
+    })?;
+    let makespans: Vec<Option<f64>> = outcomes.iter().map(|o| o.makespan).collect();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, m) in makespans.iter().enumerate() {
+        if let Some(t) = m {
+            let better = match best {
+                None => true,
+                Some((_, bt)) => *t < bt,
+            };
+            if better {
+                best = Some((i, *t));
+            }
+        }
+    }
+    Ok(Response::Sweep(SweepResult {
+        workflow: label,
+        perturbations: perturbations.to_vec(),
+        makespans,
+        best,
+        events: report.total_events,
+        ranked: report.ranked,
+        cache: report.cache,
+    }))
+}
+
+/// The trace pipeline up to a solver-ready model (parse → calibrate →
+/// assemble, **no replay**): every failure here is the input's fault, so
+/// the code is `invalid_trace`.
+fn calibrated_workflow(
+    tsv: &str,
+    io: Option<&str>,
+    opts: &CalibrateOpts,
+) -> Result<CalibratedWorkflow, ApiError> {
+    let build = || -> crate::util::Result<CalibratedWorkflow> {
+        let trace = parse_tsv(tsv)?;
+        let series = match io {
+            Some(text) => parse_io_log(text)?,
+            None => vec![],
+        };
+        assemble(calibrate(&trace, &series, opts)?)
+    };
+    build().map_err(|e| ApiError::new(ErrorCode::InvalidTrace, e.to_string()))
+}
+
+fn run_calibrate(tsv: &str, io: Option<&str>, tol: Option<f64>) -> Result<Response, ApiError> {
+    let mut opts = CalibrateOpts::default();
+    if let Some(t) = tol {
+        opts.tol = t;
+    }
+    let cal = calibrated_workflow(tsv, io, &opts)?;
+    // the replay is an *analysis* of a well-formed model — its failures
+    // (e.g. a task that never finishes) are `analysis_failed`, per the
+    // documented taxonomy
+    let report = replay(&cal, &SolverOpts::default())
+        .map_err(|e| ApiError::new(ErrorCode::AnalysisFailed, e.to_string()))?;
+    Ok(Response::Calibrate(CalibrateResult {
+        tasks: cal.task_summaries(&report),
+        predicted_makespan: report.predicted_makespan,
+        observed_makespan: report.observed_makespan,
+        max_rel_err: report.max_rel_err,
+        events: report.events,
+        passes: report.passes,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::test_fixtures::TINY_SPEC;
+
+    #[test]
+    fn analyze_through_the_handler() {
+        let h = ApiHandler::new();
+        let r = h
+            .handle(&Request::Analyze {
+                spec: TINY_SPEC.to_string(),
+            })
+            .unwrap();
+        match r {
+            Response::Analyze(a) => {
+                assert!((a.makespan.unwrap() - 5.0).abs() < 1e-6);
+                assert_eq!(a.schedule.len(), 1);
+                assert!(!a.bottlenecks.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_spec_is_invalid_spec() {
+        let h = ApiHandler::new();
+        let e = h
+            .handle(&Request::Analyze { spec: "{}".into() })
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidSpec);
+    }
+
+    /// The acceptance scenario: a generic sweep over the genomics workflow
+    /// with a non-fraction (pool-capacity) knob returns a ranked report
+    /// with cache stats.
+    #[test]
+    fn generic_genomics_sweep_with_pool_knob() {
+        let h = ApiHandler::new();
+        let r = h
+            .handle(&Request::Sweep {
+                workflow: WorkflowSel::Genomics,
+                perturbations: vec![
+                    Perturbation::LinkRateScale(2.0),
+                    Perturbation::Identity,
+                ],
+            })
+            .unwrap();
+        match r {
+            Response::Sweep(s) => {
+                assert_eq!(s.workflow, "genomics");
+                assert_eq!(s.makespans.len(), 2);
+                assert!(s.makespans.iter().all(|m| m.is_some()));
+                assert!(!s.ranked.is_empty());
+                assert!(s.cache.is_some());
+                assert!(s.best.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unsupported_knob_maps_to_bad_request() {
+        let h = ApiHandler::new();
+        let e = h
+            .handle(&Request::Sweep {
+                workflow: WorkflowSel::Genomics,
+                perturbations: vec![Perturbation::Task3TimeScale(2.0)],
+            })
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert!(e.message.contains("task3_time_scale"), "{}", e.message);
+    }
+
+    #[test]
+    fn sweep_over_inline_spec_identity() {
+        let h = ApiHandler::new();
+        let r = h
+            .handle(&Request::Sweep {
+                workflow: WorkflowSel::Spec(TINY_SPEC.to_string()),
+                perturbations: vec![Perturbation::Identity],
+            })
+            .unwrap();
+        match r {
+            Response::Sweep(s) => {
+                assert_eq!(s.workflow, "spec");
+                assert!((s.makespans[0].unwrap() - 5.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Batch runs heterogeneous requests through the pool and reports
+    /// per-item outcomes in submission order.
+    #[test]
+    fn batch_heterogeneous_through_pool() {
+        let h = ApiHandler::with_threads(3);
+        let r = h
+            .handle(&Request::Batch {
+                requests: vec![
+                    Request::Ping,
+                    Request::Analyze {
+                        spec: TINY_SPEC.to_string(),
+                    },
+                    Request::Analyze { spec: "{}".into() },
+                ],
+            })
+            .unwrap();
+        match r {
+            Response::Batch(items) => {
+                assert_eq!(items.len(), 3);
+                assert!(matches!(items[0], Ok(Response::Pong)));
+                match &items[1] {
+                    Ok(Response::Analyze(a)) => {
+                        assert!((a.makespan.unwrap() - 5.0).abs() < 1e-6)
+                    }
+                    other => panic!("{other:?}"),
+                }
+                assert_eq!(items[2].as_ref().unwrap_err().code, ErrorCode::InvalidSpec);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The handler's cache is session-lifetime: a repeated sweep re-solves
+    /// nothing.
+    #[test]
+    fn session_cache_spans_requests() {
+        let h = ApiHandler::new();
+        let req = Request::Sweep {
+            workflow: WorkflowSel::Video,
+            perturbations: vec![
+                Perturbation::Fraction(0.5),
+                Perturbation::Fraction(0.9),
+            ],
+        };
+        let first = match h.handle(&req).unwrap() {
+            Response::Sweep(s) => s,
+            other => panic!("{other:?}"),
+        };
+        let second = match h.handle(&req).unwrap() {
+            Response::Sweep(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(first.makespans, second.makespans);
+        assert!(first.cache.unwrap().misses > 0);
+        let c2 = second.cache.unwrap();
+        assert_eq!(c2.misses, 0, "{c2}");
+        assert!(c2.hits > 0);
+    }
+}

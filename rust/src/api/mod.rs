@@ -1,0 +1,58 @@
+//! The typed, versioned request/response boundary of the system.
+//!
+//! Everything that crosses a process boundary — the CLI, the JSON-lines
+//! stdio service (`bottlemod serve`), the in-process worker pool — speaks
+//! through this one layer:
+//!
+//! * [`Request`] / [`Response`] — the typed op vocabulary (`ping`,
+//!   `analyze`, generic `sweep` over any [`request::WorkflowSel`],
+//!   `calibrate`, heterogeneous `batch`);
+//! * [`request::decode_line`] / [`response::encode`] — the `{"v": 1, ...}`
+//!   envelope with a legacy-v0 compatibility shim (pre-envelope shapes
+//!   keep working, tagged `"deprecated": true`);
+//! * [`ApiError`] / [`ErrorCode`] — the structured error taxonomy that
+//!   replaced the ad-hoc `{"error": "..."}` strings;
+//! * [`ApiHandler`] — the session front end owning the analysis cache and
+//!   the `batch` worker pool.
+//!
+//! Wire reference with runnable, CI-conformance-checked examples:
+//! `docs/SERVICE.md`.
+
+pub mod error;
+pub mod handler;
+pub mod request;
+pub mod response;
+
+pub use error::{ApiError, ErrorCode};
+pub use handler::{execute, execute_with_threads, ApiHandler};
+pub use request::{
+    decode_line, decode_value, encode_request, Request, Wire, WorkflowSel, PROTOCOL_VERSION,
+};
+pub use response::{
+    encode, encode_v0, encode_v1, AnalyzeResult, CalibrateResult, Response, ScheduleRow,
+    SegmentRow, SweepResult,
+};
+
+/// Workloads shared by the in-crate protocol test suites (the
+/// integration test `tests/service_protocol.rs` keeps its own copy —
+/// `cfg(test)` items are invisible across crate boundaries).
+#[cfg(test)]
+pub(crate) mod test_fixtures {
+    /// A one-process spec solving to makespan 5.
+    pub(crate) const TINY_SPEC: &str = r#"{
+      "processes": [
+        {"name": "a", "max_progress": 10.0,
+         "data": [{"req": {"type": "stream", "total": 10.0},
+                   "source": {"external_constant": 10.0}}],
+         "resources": [{"req": {"type": "stream", "total": 5.0},
+                        "source": {"constant": 1.0}}],
+         "outputs": [{"name": "out", "type": "identity"}]}
+      ]
+    }"#;
+
+    /// A two-task chain trace: dl (10 s) → enc (completes at 20 s).
+    pub(crate) const CHAIN_TSV: &str =
+        "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+         dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+         enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+}

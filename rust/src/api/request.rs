@@ -1,0 +1,555 @@
+//! Versioned request decoding: the v1 envelope and the legacy v0 shim.
+//!
+//! A v1 request is one JSON object per line with an explicit envelope:
+//!
+//! ```json
+//! {"v": 1, "id": 7, "op": "sweep", "workflow": "genomics",
+//!  "perturbations": [{"kind": "link_rate_scale", "value": 2}]}
+//! ```
+//!
+//! * `v` — protocol version ([`PROTOCOL_VERSION`]). Missing (or `0`) means
+//!   a **legacy v0** request: the pre-envelope shapes keep working through
+//!   the v0 shim, and their responses are tagged `"deprecated": true`.
+//!   Any other version is rejected with `unsupported_version`.
+//! * `id` — a required non-negative integer, echoed verbatim on every
+//!   response (including errors; `null` when the id itself was
+//!   missing/invalid or the line did not parse).
+//! * `op` + op-specific fields — see `docs/SERVICE.md`.
+//!
+//! Decoding is *strict*: wrong-typed fields are `bad_request` errors, not
+//! silent defaults. All decode errors are structured [`ApiError`]s; this
+//! module never panics on wire input.
+
+use crate::util::Json;
+use crate::workflow::scenario::Perturbation;
+
+use super::error::{ApiError, ErrorCode};
+
+/// The protocol version this build speaks natively.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Which workflow model a `sweep` runs over.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkflowSel {
+    /// The built-in Fig 5 video scenario (the default).
+    Video,
+    /// The built-in genomics scenario.
+    Genomics,
+    /// An inline workflow spec (the `model::spec` JSON schema, as text).
+    Spec(String),
+    /// A model calibrated from a raw trace (TSV text + optional I/O log).
+    Trace { tsv: String, io: Option<String> },
+}
+
+/// A fully decoded API request — the single typed surface behind the CLI,
+/// the stdio service and the worker pool.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Analyze {
+        /// The workflow spec as JSON text.
+        spec: String,
+    },
+    Sweep {
+        workflow: WorkflowSel,
+        perturbations: Vec<Perturbation>,
+    },
+    Calibrate {
+        tsv: String,
+        io: Option<String>,
+        /// Segment-fit tolerance override (`CalibrateOpts::tol`).
+        tol: Option<f64>,
+    },
+    /// Heterogeneous requests executed through the worker pool in one
+    /// call; results come back in submission order. Batches cannot nest.
+    Batch { requests: Vec<Request> },
+}
+
+/// One decoded wire line: the response dialect (`v == 0` → legacy), the
+/// echoed id (`None` when missing or invalid), and the request or its
+/// decode error.
+#[derive(Clone, Debug)]
+pub struct Wire {
+    pub v: u64,
+    pub id: Option<u64>,
+    pub body: Result<Request, ApiError>,
+}
+
+/// Decode one wire line (JSON parse + envelope + body).
+pub fn decode_line(line: &str) -> Wire {
+    match Json::parse(line) {
+        Ok(j) => decode_value(&j),
+        Err(e) => Wire {
+            v: PROTOCOL_VERSION,
+            id: None,
+            body: Err(ApiError::bad_request(format!("bad request: {e}"))),
+        },
+    }
+}
+
+/// Decode one parsed request object.
+pub fn decode_value(j: &Json) -> Wire {
+    let id = j.get("id").as_u64();
+    let v = match j.get("v") {
+        Json::Null => 0,
+        val => match val.as_u64() {
+            Some(n) => n,
+            None => {
+                return Wire {
+                    v: PROTOCOL_VERSION,
+                    id,
+                    body: Err(ApiError::bad_request(
+                        "envelope field 'v' must be a non-negative integer",
+                    )),
+                }
+            }
+        },
+    };
+    if v != 0 && v != PROTOCOL_VERSION {
+        return Wire {
+            v: PROTOCOL_VERSION,
+            id,
+            body: Err(ApiError::new(
+                ErrorCode::UnsupportedVersion,
+                format!("unsupported protocol version {v} (supported: {PROTOCOL_VERSION})"),
+            )),
+        };
+    }
+    let body = if id.is_none() {
+        Err(ApiError::bad_request(
+            "request 'id' must be a non-negative integer",
+        ))
+    } else if v == 0 {
+        decode_v0(j)
+    } else {
+        decode_v1_body(j)
+    };
+    Wire { v, id, body }
+}
+
+fn decode_v1_body(j: &Json) -> Result<Request, ApiError> {
+    let op = j
+        .get("op")
+        .as_str()
+        .ok_or_else(|| ApiError::bad_request("request needs a string 'op' field"))?;
+    decode_v1_op(op, j, true)
+}
+
+/// One v1 op body. `allow_batch` is false for items nested inside a
+/// `batch` request (batches cannot nest).
+fn decode_v1_op(op: &str, j: &Json, allow_batch: bool) -> Result<Request, ApiError> {
+    match op {
+        "ping" => Ok(Request::Ping),
+        "analyze" => {
+            let spec = j.get("spec");
+            if spec.as_obj().is_none() {
+                return Err(ApiError::bad_request("analyze needs an object 'spec' field"));
+            }
+            Ok(Request::Analyze {
+                spec: spec.to_string(),
+            })
+        }
+        "sweep" => Ok(Request::Sweep {
+            workflow: decode_workflow_sel(j.get("workflow"))?,
+            perturbations: decode_perturbations(j)?,
+        }),
+        "calibrate" => {
+            let tsv = j
+                .get("tsv")
+                .as_str()
+                .ok_or_else(|| ApiError::bad_request("calibrate needs a 'tsv' string field"))?
+                .to_string();
+            let io = match j.get("io") {
+                Json::Null => None,
+                Json::Str(s) => Some(s.clone()),
+                _ => {
+                    return Err(ApiError::bad_request(
+                        "calibrate 'io' must be a string when present",
+                    ))
+                }
+            };
+            let tol = match j.get("tol") {
+                Json::Null => None,
+                val => match val.as_f64() {
+                    Some(t) if t > 0.0 && t.is_finite() => Some(t),
+                    _ => {
+                        return Err(ApiError::bad_request(
+                            "calibrate 'tol' must be a positive number",
+                        ))
+                    }
+                },
+            };
+            Ok(Request::Calibrate { tsv, io, tol })
+        }
+        "batch" => {
+            if !allow_batch {
+                return Err(ApiError::bad_request("batch requests cannot nest"));
+            }
+            let items = j
+                .get("requests")
+                .as_arr()
+                .ok_or_else(|| ApiError::bad_request("batch needs a 'requests' array"))?;
+            if items.is_empty() {
+                return Err(ApiError::bad_request("batch needs at least one request"));
+            }
+            let mut requests = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                // `detail.index` always names the offending batch *item*;
+                // an inner error's own detail (e.g. a perturbation index)
+                // moves under `detail.in_item`
+                let tag = |mut e: ApiError| {
+                    let mut fields = vec![("index", Json::Num(i as f64))];
+                    if let Some(inner) = e.detail.take() {
+                        fields.push(("in_item", inner));
+                    }
+                    e.with_detail(Json::obj(fields))
+                };
+                let op = item.get("op").as_str().ok_or_else(|| {
+                    tag(ApiError::bad_request(format!(
+                        "batch item {i} needs a string 'op' field"
+                    )))
+                })?;
+                requests.push(decode_v1_op(op, item, false).map_err(tag)?);
+            }
+            Ok(Request::Batch { requests })
+        }
+        other => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown op {other:?}"),
+        )),
+    }
+}
+
+fn decode_workflow_sel(j: &Json) -> Result<WorkflowSel, ApiError> {
+    match j {
+        Json::Null => Ok(WorkflowSel::Video),
+        Json::Str(name) => match name.as_str() {
+            "video" => Ok(WorkflowSel::Video),
+            "genomics" => Ok(WorkflowSel::Genomics),
+            other => Err(ApiError::bad_request(format!(
+                "unknown workflow '{other}' (named workflows: \"video\", \"genomics\")"
+            ))),
+        },
+        Json::Obj(_) => {
+            let spec = j.get("spec");
+            let trace = j.get("trace");
+            match (spec, trace) {
+                (Json::Obj(_), Json::Null) => Ok(WorkflowSel::Spec(spec.to_string())),
+                (Json::Null, Json::Obj(_)) => {
+                    let tsv = trace
+                        .get("tsv")
+                        .as_str()
+                        .ok_or_else(|| {
+                            ApiError::bad_request("workflow.trace needs a 'tsv' string field")
+                        })?
+                        .to_string();
+                    let io = match trace.get("io") {
+                        Json::Null => None,
+                        Json::Str(s) => Some(s.clone()),
+                        _ => {
+                            return Err(ApiError::bad_request(
+                                "workflow.trace 'io' must be a string when present",
+                            ))
+                        }
+                    };
+                    Ok(WorkflowSel::Trace { tsv, io })
+                }
+                _ => Err(ApiError::bad_request(
+                    "workflow object needs exactly one of 'spec' (object) or 'trace' (object)",
+                )),
+            }
+        }
+        _ => Err(ApiError::bad_request(
+            "'workflow' must be a name or an object",
+        )),
+    }
+}
+
+fn decode_perturbations(j: &Json) -> Result<Vec<Perturbation>, ApiError> {
+    let ps = j.get("perturbations");
+    let fr = j.get("fractions");
+    match (ps, fr) {
+        (Json::Null, Json::Null) => Err(ApiError::bad_request(
+            "sweep needs a 'perturbations' (or 'fractions') array",
+        )),
+        (Json::Arr(items), Json::Null) => {
+            if items.is_empty() {
+                return Err(ApiError::bad_request("sweep needs at least one perturbation"));
+            }
+            let mut out = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                out.push(Perturbation::from_json(item).map_err(|m| {
+                    ApiError::bad_request(m)
+                        .with_detail(Json::obj(vec![("index", Json::Num(i as f64))]))
+                })?);
+            }
+            Ok(out)
+        }
+        (Json::Null, Json::Arr(xs)) => {
+            if xs.is_empty() {
+                return Err(ApiError::bad_request("sweep needs at least one fraction"));
+            }
+            xs.iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    x.as_f64().map(Perturbation::Fraction).ok_or_else(|| {
+                        ApiError::bad_request("'fractions' must be an array of numbers")
+                            .with_detail(Json::obj(vec![("index", Json::Num(i as f64))]))
+                    })
+                })
+                .collect()
+        }
+        (Json::Null, _) => Err(ApiError::bad_request("'fractions' must be an array")),
+        (_, Json::Null) => Err(ApiError::bad_request("'perturbations' must be an array")),
+        _ => Err(ApiError::bad_request(
+            "sweep takes 'perturbations' or 'fractions', not both",
+        )),
+    }
+}
+
+/// The legacy v0 shim: the pre-envelope request shapes, mapped onto the
+/// same typed [`Request`]s. Field semantics and error strings are
+/// preserved verbatim from the v0 server so old clients see identical
+/// behaviour (plus the `"deprecated": true` response tag).
+fn decode_v0(j: &Json) -> Result<Request, ApiError> {
+    match j.get("op").as_str() {
+        Some("ping") => Ok(Request::Ping),
+        // v0 forwarded the spec verbatim (object or not) and let the model
+        // parser report the failure; keep that
+        Some("analyze") => Ok(Request::Analyze {
+            spec: j.get("spec").to_string(),
+        }),
+        Some("sweep") => {
+            let fractions: Vec<f64> = match j.get("fractions").as_arr() {
+                Some(a) => a.iter().filter_map(|x| x.as_f64()).collect(),
+                None => {
+                    // the canonical Fig-7 grid — same helper as the CLI,
+                    // advisor and exporter, so the shim cannot diverge
+                    let n = (j.get("points").as_f64().unwrap_or(40.0) as usize).max(1);
+                    crate::coordinator::sweeper::fig7_fractions(n)
+                }
+            };
+            if fractions.is_empty() {
+                return Err(ApiError::bad_request("sweep needs at least one fraction"));
+            }
+            Ok(Request::Sweep {
+                workflow: WorkflowSel::Video,
+                perturbations: fractions.into_iter().map(Perturbation::Fraction).collect(),
+            })
+        }
+        Some("calibrate") => match (j.get("tsv").as_str(), j.get("io")) {
+            (None, _) => Err(ApiError::bad_request(
+                "calibrate needs a 'tsv' string field",
+            )),
+            // a malformed 'io' must not silently degrade to the
+            // summary-only fallback
+            (Some(_), io) if !matches!(io, Json::Null | Json::Str(_)) => Err(
+                ApiError::bad_request("calibrate 'io' must be a string when present"),
+            ),
+            (Some(tsv), io) => Ok(Request::Calibrate {
+                tsv: tsv.to_string(),
+                io: io.as_str().map(str::to_string),
+                tol: None,
+            }),
+        },
+        other => Err(ApiError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown op {other:?}"),
+        )),
+    }
+}
+
+impl WorkflowSel {
+    /// The v1 wire encoding of the selector.
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkflowSel::Video => Json::Str("video".to_string()),
+            WorkflowSel::Genomics => Json::Str("genomics".to_string()),
+            WorkflowSel::Spec(text) => Json::obj(vec![(
+                "spec",
+                Json::parse(text).unwrap_or(Json::Null),
+            )]),
+            WorkflowSel::Trace { tsv, io } => {
+                let mut fields = vec![("tsv", Json::Str(tsv.clone()))];
+                if let Some(io) = io {
+                    fields.push(("io", Json::Str(io.clone())));
+                }
+                Json::obj(vec![("trace", Json::obj(fields))])
+            }
+        }
+    }
+}
+
+impl Request {
+    /// The v1 JSON body (op + params, no envelope). `decode` ∘ `to_json`
+    /// is the identity for every well-formed request.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".to_string()))]),
+            Request::Analyze { spec } => Json::obj(vec![
+                ("op", Json::Str("analyze".to_string())),
+                ("spec", Json::parse(spec).unwrap_or(Json::Null)),
+            ]),
+            Request::Sweep {
+                workflow,
+                perturbations,
+            } => Json::obj(vec![
+                ("op", Json::Str("sweep".to_string())),
+                ("workflow", workflow.to_json()),
+                (
+                    "perturbations",
+                    Json::Arr(perturbations.iter().map(|p| p.to_json()).collect()),
+                ),
+            ]),
+            Request::Calibrate { tsv, io, tol } => {
+                let mut fields = vec![
+                    ("op", Json::Str("calibrate".to_string())),
+                    ("tsv", Json::Str(tsv.clone())),
+                ];
+                if let Some(io) = io {
+                    fields.push(("io", Json::Str(io.clone())));
+                }
+                if let Some(t) = tol {
+                    fields.push(("tol", Json::Num(*t)));
+                }
+                Json::obj(fields)
+            }
+            Request::Batch { requests } => Json::obj(vec![
+                ("op", Json::Str("batch".to_string())),
+                (
+                    "requests",
+                    Json::Arr(requests.iter().map(|r| r.to_json()).collect()),
+                ),
+            ]),
+        }
+    }
+}
+
+/// Wrap a request body in the full v1 envelope.
+pub fn encode_request(id: u64, req: &Request) -> Json {
+    match req.to_json() {
+        Json::Obj(mut m) => {
+            m.insert("id".to_string(), Json::Num(id as f64));
+            m.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            Json::Obj(m)
+        }
+        other => other, // unreachable: request bodies are objects
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_envelope_decodes() {
+        let w = decode_line(r#"{"v": 1, "id": 7, "op": "ping"}"#);
+        assert_eq!(w.v, 1);
+        assert_eq!(w.id, Some(7));
+        assert_eq!(w.body.unwrap(), Request::Ping);
+    }
+
+    #[test]
+    fn missing_or_fractional_id_is_rejected() {
+        for line in [
+            r#"{"v": 1, "op": "ping"}"#,
+            r#"{"v": 1, "id": 1.5, "op": "ping"}"#,
+            r#"{"v": 1, "id": "7", "op": "ping"}"#,
+            r#"{"v": 1, "id": -2, "op": "ping"}"#,
+            r#"{"op": "ping"}"#, // the v0 shim requires an id too, now
+        ] {
+            let w = decode_line(line);
+            assert_eq!(w.id, None, "{line}");
+            let e = w.body.unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+            assert!(e.message.contains("'id'"), "{line}: {}", e.message);
+        }
+    }
+
+    #[test]
+    fn unsupported_version_is_typed() {
+        let w = decode_line(r#"{"v": 3, "id": 1, "op": "ping"}"#);
+        assert_eq!(w.body.unwrap_err().code, ErrorCode::UnsupportedVersion);
+        // the id still rides along for the response
+        assert_eq!(w.id, Some(1));
+    }
+
+    #[test]
+    fn legacy_shapes_map_onto_v1() {
+        let w = decode_line(r#"{"id": 2, "op": "sweep", "fractions": [0.5, 0.9]}"#);
+        assert_eq!(w.v, 0);
+        match w.body.unwrap() {
+            Request::Sweep {
+                workflow,
+                perturbations,
+            } => {
+                assert_eq!(workflow, WorkflowSel::Video);
+                assert_eq!(
+                    perturbations,
+                    vec![Perturbation::Fraction(0.5), Perturbation::Fraction(0.9)]
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        // points sugar
+        let w = decode_line(r#"{"id": 3, "op": "sweep", "points": 3}"#);
+        match w.body.unwrap() {
+            Request::Sweep { perturbations, .. } => assert_eq!(perturbations.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// An unknown perturbation kind on the wire is `ErrorCode::BadRequest`
+    /// (the satellite contract), with the offending index in `detail`.
+    #[test]
+    fn unknown_perturbation_kind_is_bad_request() {
+        let w = decode_line(
+            r#"{"v": 1, "id": 4, "op": "sweep", "perturbations": [{"kind": "identity"}, {"kind": "warp"}]}"#,
+        );
+        let e = w.body.unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert!(e.message.contains("unknown perturbation kind 'warp'"), "{}", e.message);
+        assert_eq!(e.detail.unwrap().get("index").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn sweep_request_roundtrips_through_v1_json() {
+        let req = Request::Sweep {
+            workflow: WorkflowSel::Genomics,
+            perturbations: vec![
+                Perturbation::LinkRateScale(2.0),
+                Perturbation::Identity,
+                Perturbation::Task2Burst,
+            ],
+        };
+        let wire = encode_request(11, &req);
+        let w = decode_value(&wire);
+        assert_eq!(w.v, 1);
+        assert_eq!(w.id, Some(11));
+        assert_eq!(w.body.unwrap(), req);
+    }
+
+    #[test]
+    fn batches_cannot_nest() {
+        let w = decode_line(
+            r#"{"v": 1, "id": 5, "op": "batch", "requests": [{"op": "batch", "requests": [{"op": "ping"}]}]}"#,
+        );
+        let e = w.body.unwrap_err();
+        assert!(e.message.contains("cannot nest"), "{}", e.message);
+        assert_eq!(e.detail.unwrap().get("index").as_f64(), Some(0.0));
+    }
+
+    /// `detail.index` names the failing batch *item*; an inner error's own
+    /// detail (here: the perturbation index inside the item) nests under
+    /// `detail.in_item`.
+    #[test]
+    fn batch_decode_detail_indexes_the_item() {
+        let w = decode_line(
+            r#"{"v": 1, "id": 6, "op": "batch", "requests": [{"op": "ping"}, {"op": "sweep", "perturbations": [{"kind": "identity"}, {"kind": "warp"}]}]}"#,
+        );
+        let e = w.body.unwrap_err();
+        let detail = e.detail.unwrap();
+        assert_eq!(detail.get("index").as_f64(), Some(1.0), "{detail}");
+        assert_eq!(detail.get("in_item").get("index").as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,399 @@
+//! Typed results and the versioned response encoders.
+//!
+//! Handlers produce [`Response`] values built from domain types
+//! ([`crate::trace::TaskSummary`], [`crate::runtime::sweep::RankedBottleneck`],
+//! [`crate::runtime::cache::CacheStats`], ...); encoding to the wire
+//! happens here and only here:
+//!
+//! * [`encode_v1`] — the v1 envelope
+//!   `{"v": 1, "id": ..., "ok": true, "result": {...}}` /
+//!   `{"v": 1, "id": ..., "ok": false, "error": {...}}`;
+//! * [`encode_v0`] — the legacy flat payload (identical field-for-field to
+//!   the pre-envelope server), tagged `"deprecated": true`.
+//!
+//! Object keys serialize sorted (`Json::Obj` is a `BTreeMap`), so every
+//! response is byte-deterministic — the property the golden protocol tests
+//! and the docs-conformance CI step pin.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::cache::CacheStats;
+use crate::runtime::sweep::RankedBottleneck;
+use crate::trace::TaskSummary;
+use crate::util::Json;
+use crate::workflow::scenario::Perturbation;
+
+use super::error::ApiError;
+use super::request::PROTOCOL_VERSION;
+
+/// One row of an analysis schedule.
+#[derive(Clone, Debug)]
+pub struct ScheduleRow {
+    pub name: String,
+    pub start: f64,
+    pub finish: Option<f64>,
+}
+
+/// One maximal constant-bottleneck segment of one process.
+#[derive(Clone, Debug)]
+pub struct SegmentRow {
+    pub process: String,
+    pub start: f64,
+    pub end: f64,
+    /// `"res:link"`, `"data:video"`, `"unconstrained"`, ...
+    pub bottleneck: String,
+}
+
+/// Result of an `analyze` op.
+#[derive(Clone, Debug)]
+pub struct AnalyzeResult {
+    pub makespan: Option<f64>,
+    pub events: usize,
+    pub passes: usize,
+    pub schedule: Vec<ScheduleRow>,
+    pub bottlenecks: Vec<SegmentRow>,
+}
+
+/// Result of a generic `sweep` op.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// Workload label (`"video"`, `"genomics"`, `"spec"`, `"trace"`).
+    pub workflow: String,
+    /// The evaluated batch, echoed in order.
+    pub perturbations: Vec<Perturbation>,
+    /// Per-scenario completion time (`None` = never finishes), batch order.
+    pub makespans: Vec<Option<f64>>,
+    /// Argmin over the finished scenarios: `(batch index, makespan)`.
+    pub best: Option<(usize, f64)>,
+    /// Total solver events across the batch.
+    pub events: usize,
+    /// Ranked cross-scenario bottlenecks, descending by limited seconds.
+    pub ranked: Vec<RankedBottleneck>,
+    /// Incremental-engine statistics for this request.
+    pub cache: Option<CacheStats>,
+}
+
+/// Result of a `calibrate` op.
+#[derive(Clone, Debug)]
+pub struct CalibrateResult {
+    pub tasks: Vec<TaskSummary>,
+    pub predicted_makespan: Option<f64>,
+    pub observed_makespan: Option<f64>,
+    pub max_rel_err: Option<f64>,
+    pub events: usize,
+    pub passes: usize,
+}
+
+/// A typed API response, paired with [`super::request::Request`].
+#[derive(Clone, Debug)]
+pub enum Response {
+    Pong,
+    Analyze(AnalyzeResult),
+    Sweep(SweepResult),
+    Calibrate(CalibrateResult),
+    /// Per-item outcomes of a `batch`, in submission order.
+    Batch(Vec<Result<Response, ApiError>>),
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map(Json::Num).unwrap_or(Json::Null)
+}
+
+fn cache_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("hit_rate", Json::Num(s.hit_rate())),
+        ("entries", Json::Num(s.entries as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+    ])
+}
+
+fn ranked_json(rows: &[RankedBottleneck]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("process", Json::Str(r.process.clone())),
+                    ("bottleneck", Json::Str(r.bottleneck.clone())),
+                    ("total_seconds", Json::Num(r.total_seconds)),
+                    ("scenarios", Json::Num(r.scenarios as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn analyze_json(r: &AnalyzeResult) -> Json {
+    let schedule: Vec<Json> = r
+        .schedule
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("start", Json::Num(s.start)),
+                ("finish", opt_num(s.finish)),
+            ])
+        })
+        .collect();
+    let bottlenecks: Vec<Json> = r
+        .bottlenecks
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("process", Json::Str(s.process.clone())),
+                ("start", Json::Num(s.start)),
+                ("end", Json::Num(s.end)),
+                ("bottleneck", Json::Str(s.bottleneck.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("makespan", opt_num(r.makespan)),
+        ("events", Json::Num(r.events as f64)),
+        ("passes", Json::Num(r.passes as f64)),
+        ("schedule", Json::Arr(schedule)),
+        ("bottlenecks", Json::Arr(bottlenecks)),
+    ])
+}
+
+fn calibrate_json(r: &CalibrateResult) -> Json {
+    let tasks: Vec<Json> = r
+        .tasks
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("id", Json::Str(s.id.clone())),
+                ("model", Json::Str(s.model.clone())),
+                ("data_pieces", Json::Num(s.data_pieces as f64)),
+                ("res_pieces", Json::Num(s.res_pieces as f64)),
+                ("predicted_start", Json::Num(s.predicted_start)),
+                ("predicted", opt_num(s.predicted)),
+                ("observed", opt_num(s.observed)),
+                ("rel_err", opt_num(s.rel_err)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("tasks", Json::Arr(tasks)),
+        ("predicted_makespan", opt_num(r.predicted_makespan)),
+        ("observed_makespan", opt_num(r.observed_makespan)),
+        ("max_rel_err", opt_num(r.max_rel_err)),
+        ("events", Json::Num(r.events as f64)),
+        ("passes", Json::Num(r.passes as f64)),
+    ])
+}
+
+fn sweep_json_v1(r: &SweepResult) -> Json {
+    let best = match r.best {
+        Some((i, t)) => Json::obj(vec![
+            ("index", Json::Num(i as f64)),
+            ("makespan", Json::Num(t)),
+            ("perturbation", r.perturbations[i].to_json()),
+        ]),
+        None => Json::Null,
+    };
+    let mut fields = vec![
+        ("workflow", Json::Str(r.workflow.clone())),
+        (
+            "perturbations",
+            Json::Arr(r.perturbations.iter().map(|p| p.to_json()).collect()),
+        ),
+        (
+            "makespans",
+            Json::Arr(r.makespans.iter().map(|m| opt_num(*m)).collect()),
+        ),
+        ("best", best),
+        ("events", Json::Num(r.events as f64)),
+        ("ranked_bottlenecks", ranked_json(&r.ranked)),
+    ];
+    if let Some(s) = &r.cache {
+        fields.push(("cache", cache_json(s)));
+    }
+    Json::obj(fields)
+}
+
+/// The legacy Fig-5 fraction-sweep shape (x-axis echoed as `fractions`,
+/// top-8 ranked bottlenecks) — only reachable from v0 requests, whose
+/// perturbations are all `Fraction`s by construction.
+fn sweep_json_v0(r: &SweepResult) -> Json {
+    let fractions: Vec<f64> = r
+        .perturbations
+        .iter()
+        .map(|p| match p {
+            Perturbation::Fraction(f) => *f,
+            _ => f64::NAN,
+        })
+        .collect();
+    let totals: Vec<f64> = r
+        .makespans
+        .iter()
+        .map(|m| m.unwrap_or(f64::INFINITY))
+        .collect();
+    let (best_f, best_t) = match r.best {
+        Some((i, t)) => (Json::Num(fractions[i]), Json::Num(t)),
+        None => (Json::Null, Json::Null),
+    };
+    let top = &r.ranked[..r.ranked.len().min(8)];
+    let mut fields = vec![
+        ("fractions", Json::arr_f64(&fractions)),
+        ("totals", Json::arr_f64(&totals)),
+        ("best_fraction", best_f),
+        ("best_total", best_t),
+        ("events", Json::Num(r.events as f64)),
+        ("ranked_bottlenecks", ranked_json(top)),
+    ];
+    if let Some(s) = &r.cache {
+        fields.push(("cache", cache_json(s)));
+    }
+    Json::obj(fields)
+}
+
+impl Response {
+    /// The v1 `result` payload.
+    pub fn result_json(&self) -> Json {
+        match self {
+            Response::Pong => Json::obj(vec![("pong", Json::Bool(true))]),
+            Response::Analyze(r) => analyze_json(r),
+            Response::Sweep(r) => sweep_json_v1(r),
+            Response::Calibrate(r) => calibrate_json(r),
+            Response::Batch(items) => {
+                let results: Vec<Json> = items
+                    .iter()
+                    .map(|item| match item {
+                        Ok(r) => Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("result", r.result_json()),
+                        ]),
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", e.to_json()),
+                        ]),
+                    })
+                    .collect();
+                Json::obj(vec![("results", Json::Arr(results))])
+            }
+        }
+    }
+
+    /// The flat pre-envelope payload (v0 dialect).
+    fn legacy_payload(&self) -> Json {
+        match self {
+            Response::Sweep(r) => sweep_json_v0(r),
+            // ping/analyze/calibrate payloads are identical in both
+            // dialects; batch is unreachable from v0 (no such op)
+            other => other.result_json(),
+        }
+    }
+}
+
+/// Encode a v1 response envelope.
+pub fn encode_v1(id: Option<u64>, outcome: &Result<Response, ApiError>) -> Json {
+    let id_json = id.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null);
+    match outcome {
+        Ok(r) => Json::obj(vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", id_json),
+            ("ok", Json::Bool(true)),
+            ("result", r.result_json()),
+        ]),
+        Err(e) => Json::obj(vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("id", id_json),
+            ("ok", Json::Bool(false)),
+            ("error", e.to_json()),
+        ]),
+    }
+}
+
+/// Encode a legacy (v0) response: the flat pre-envelope shape — errors as
+/// plain `{"error": "<message>"}` strings — tagged `"deprecated": true`.
+pub fn encode_v0(id: Option<u64>, outcome: &Result<Response, ApiError>) -> Json {
+    let payload = match outcome {
+        Ok(r) => r.legacy_payload(),
+        Err(e) => Json::obj(vec![("error", Json::Str(e.message.clone()))]),
+    };
+    let mut obj = match payload {
+        Json::Obj(m) => m,
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("result".to_string(), other);
+            m
+        }
+    };
+    obj.insert(
+        "id".to_string(),
+        id.map(|i| Json::Num(i as f64)).unwrap_or(Json::Null),
+    );
+    obj.insert("deprecated".to_string(), Json::Bool(true));
+    Json::Obj(obj)
+}
+
+/// Encode in the dialect the request was decoded as (`v == 0` → legacy).
+pub fn encode(v: u64, id: Option<u64>, outcome: &Result<Response, ApiError>) -> Json {
+    if v == 0 {
+        encode_v0(id, outcome)
+    } else {
+        encode_v1(id, outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_envelopes_are_byte_deterministic() {
+        let ok = encode_v1(Some(1), &Ok(Response::Pong));
+        assert_eq!(ok.to_string(), r#"{"id":1,"ok":true,"result":{"pong":true},"v":1}"#);
+        let err = encode_v1(None, &Err(ApiError::bad_request("nope")));
+        assert_eq!(
+            err.to_string(),
+            r#"{"error":{"code":"bad_request","message":"nope"},"id":null,"ok":false,"v":1}"#
+        );
+    }
+
+    #[test]
+    fn v0_is_flat_and_tagged_deprecated() {
+        let ok = encode_v0(Some(8), &Ok(Response::Pong));
+        assert_eq!(ok.to_string(), r#"{"deprecated":true,"id":8,"pong":true}"#);
+        let err = encode_v0(Some(3), &Err(ApiError::bad_request("kaput")));
+        assert_eq!(
+            err.to_string(),
+            r#"{"deprecated":true,"error":"kaput","id":3}"#
+        );
+    }
+
+    #[test]
+    fn v0_sweep_payload_keeps_the_legacy_shape() {
+        let r = SweepResult {
+            workflow: "video".to_string(),
+            perturbations: vec![Perturbation::Fraction(0.5), Perturbation::Fraction(0.9)],
+            makespans: vec![Some(263.0), Some(181.0)],
+            best: Some((1, 181.0)),
+            events: 10,
+            ranked: vec![],
+            cache: None,
+        };
+        let j = encode_v0(Some(2), &Ok(Response::Sweep(r)));
+        assert_eq!(j.get("fractions").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("best_fraction").as_f64(), Some(0.9));
+        assert_eq!(j.get("best_total").as_f64(), Some(181.0));
+        assert_eq!(j.get("totals").as_arr().unwrap()[0].as_f64(), Some(263.0));
+        assert_eq!(j.get("deprecated").as_bool(), Some(true));
+        // v1 of the same result uses the generic shape
+        let j1 = encode_v1(Some(2), &Ok(Response::Sweep(SweepResult {
+            workflow: "video".to_string(),
+            perturbations: vec![Perturbation::Fraction(0.5)],
+            makespans: vec![None],
+            best: None,
+            events: 1,
+            ranked: vec![],
+            cache: None,
+        })));
+        let res = j1.get("result");
+        assert_eq!(res.get("workflow").as_str(), Some("video"));
+        assert_eq!(res.get("makespans").as_arr().unwrap()[0], Json::Null);
+        assert_eq!(res.get("best"), &Json::Null);
+    }
+}

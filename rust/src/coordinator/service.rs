@@ -1,269 +1,93 @@
-//! The analysis service: a leader/worker job queue over the exact engine.
+//! The analysis service: a leader/worker job queue plus the JSON-lines
+//! stdio front end (`bottlemod serve`).
 //!
 //! BottleMod's intended deployment (paper §7, "repeatedly executed online
 //! with an updated state from monitoring") is as a sidecar service that a
 //! resource manager queries. This module provides that shape without any
-//! network dependency: a worker pool consuming analysis jobs from a queue,
-//! plus a JSON-lines stdio front end (`bottlemod serve`).
-//!
-//! The wire protocol — request/response schemas for the `analyze`, `sweep`
-//! and `ping` ops, error payloads, and the sweep response's cache-stats
-//! fields — is documented with runnable examples in `docs/SERVICE.md`.
+//! network dependency — but it contains **no protocol logic of its own**:
+//! a [`Job`] carries a typed [`Request`], workers run
+//! [`crate::api::execute`], and [`serve_stdio`] is a line pump over
+//! [`crate::api::ApiHandler::handle_wire`]. All request decoding, response
+//! encoding and error construction lives in [`crate::api`]; the wire
+//! reference (v1 envelope, legacy v0 shim, error codes) is
+//! `docs/SERVICE.md`.
 
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::model::spec::parse_workflow;
+use crate::api::{execute, execute_with_threads, ApiError, ApiHandler, ErrorCode, Request, Response};
 use crate::runtime::cache::AnalysisCache;
-use crate::solver::SolverOpts;
-use crate::trace::{calibrate_trace, CalibrateOpts, CalibratedWorkflow, ReplayReport};
-use crate::util::Json;
-use crate::workflow::engine::analyze_fixpoint_cached;
-use crate::workflow::scenario::VideoScenario;
 
-use super::sweeper::{best_fraction, ExactSweep, SweepBatch};
-use crate::workflow::scenario::Perturbation;
-
-/// A job for the worker pool.
-#[derive(Debug, Clone)]
-pub enum Job {
-    /// Analyze a workflow spec (JSON text).
-    Analyze { id: u64, spec: String },
-    /// Run a fraction sweep of the Fig 5 scenario and report the ranked
-    /// bottlenecks (the batched engine behind one service call).
-    Sweep { id: u64, fractions: Vec<f64> },
-    /// Calibrate solver-ready models from a raw trace (TSV text plus an
-    /// optional I/O series log) and replay-validate them.
-    Calibrate {
-        id: u64,
-        tsv: String,
-        io: Option<String>,
-    },
+/// A job for the worker pool: any API request plus a caller-chosen
+/// correlation id (the `batch` op uses the submission index).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub request: Request,
 }
 
-/// The `calibrate` op's response payload: per-task model summary + replay
-/// error, and the makespans. Shared by the stdio server and the worker
-/// pool; schema documented in `docs/SERVICE.md`.
-fn calibration_json(cal: &CalibratedWorkflow, report: &ReplayReport) -> Json {
-    let tasks: Vec<Json> = cal
-        .task_summaries(report)
-        .into_iter()
-        .map(|s| {
-            Json::obj(vec![
-                ("id", Json::Str(s.id)),
-                ("model", Json::Str(s.model)),
-                ("data_pieces", Json::Num(s.data_pieces as f64)),
-                ("res_pieces", Json::Num(s.res_pieces as f64)),
-                ("predicted_start", Json::Num(s.predicted_start)),
-                ("predicted", s.predicted.map(Json::Num).unwrap_or(Json::Null)),
-                ("observed", s.observed.map(Json::Num).unwrap_or(Json::Null)),
-                ("rel_err", s.rel_err.map(Json::Num).unwrap_or(Json::Null)),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("tasks", Json::Arr(tasks)),
-        (
-            "predicted_makespan",
-            report.predicted_makespan.map(Json::Num).unwrap_or(Json::Null),
-        ),
-        (
-            "observed_makespan",
-            report.observed_makespan.map(Json::Num).unwrap_or(Json::Null),
-        ),
-        (
-            "max_rel_err",
-            report.max_rel_err.map(Json::Num).unwrap_or(Json::Null),
-        ),
-        ("events", Json::Num(report.events as f64)),
-        ("passes", Json::Num(report.passes as f64)),
-    ])
-}
-
-/// Result of a job, as JSON (so the stdio server can emit it directly).
-#[derive(Debug, Clone)]
+/// Result of a job: the typed outcome, correlated by id.
+#[derive(Clone, Debug)]
 pub struct JobResult {
     pub id: u64,
-    pub payload: Json,
+    pub outcome: Result<Response, ApiError>,
 }
 
-/// Run one job to completion with no *shared* analysis cache: `analyze`
-/// runs uncached; `sweep` still attaches a fresh per-call cache (the
-/// incremental engine is its normal mode and the response always carries
-/// a `cache` stats object), it just cannot reuse anything across calls.
+/// Run one job with a private, per-call analysis cache.
 pub fn run_job(job: &Job) -> JobResult {
     run_job_cached(job, None)
 }
 
 /// Run one job, optionally against a service-lifetime [`AnalysisCache`]:
-/// repeat or overlapping requests (the §7 "repeatedly executed online"
-/// deployment) are answered incrementally, while every response still
-/// reports per-request cache stats. Results are bit-for-bit identical with
-/// or without the cache. The per-request stats are counter deltas on the
-/// shared cache: exact for the sequential stdio server, approximate when
-/// [`Coordinator`] workers run jobs concurrently (another job's lookups
-/// can land in the window; outcomes are never affected).
+/// repeat or overlapping requests are answered incrementally, and results
+/// are bit-for-bit identical with or without the cache. This is a thin
+/// shim over [`crate::api::execute`] — the pool does no per-op work of
+/// its own.
 pub fn run_job_cached(job: &Job, cache: Option<&Arc<AnalysisCache>>) -> JobResult {
-    match job {
-        Job::Analyze { id, spec } => {
-            let payload = match parse_workflow(spec) {
-                Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
-                Ok(wf) => match analyze_fixpoint_cached(
-                    &wf,
-                    &SolverOpts::default(),
-                    6,
-                    cache.map(|c| c.as_ref()),
-                ) {
-                    Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
-                    Ok(wa) => {
-                        let schedule: Vec<Json> = wa
-                            .schedule(&wf)
-                            .into_iter()
-                            .map(|(name, start, finish)| {
-                                Json::obj(vec![
-                                    ("name", Json::Str(name)),
-                                    ("start", Json::Num(start)),
-                                    (
-                                        "finish",
-                                        finish.map(Json::Num).unwrap_or(Json::Null),
-                                    ),
-                                ])
-                            })
-                            .collect();
-                        let bottlenecks: Vec<Json> = wa
-                            .analyses
-                            .iter()
-                            .enumerate()
-                            .flat_map(|(i, a)| {
-                                let p = &wf.nodes[i].process;
-                                a.segments
-                                    .iter()
-                                    .map(|s| {
-                                        Json::obj(vec![
-                                            ("process", Json::Str(p.name.clone())),
-                                            ("start", Json::Num(s.start)),
-                                            ("end", Json::Num(s.end)),
-                                            (
-                                                "bottleneck",
-                                                Json::Str(a.bottleneck_name(p, s.bottleneck)),
-                                            ),
-                                        ])
-                                    })
-                                    .collect::<Vec<_>>()
-                            })
-                            .collect();
-                        Json::obj(vec![
-                            (
-                                "makespan",
-                                wa.makespan.map(Json::Num).unwrap_or(Json::Null),
-                            ),
-                            ("events", Json::Num(wa.events as f64)),
-                            ("passes", Json::Num(wa.passes as f64)),
-                            ("schedule", Json::Arr(schedule)),
-                            ("bottlenecks", Json::Arr(bottlenecks)),
-                        ])
-                    }
-                },
-            };
-            JobResult { id: *id, payload }
+    let fresh;
+    let cache = match cache {
+        Some(c) => c,
+        None => {
+            fresh = Arc::new(AnalysisCache::new());
+            &fresh
         }
-        Job::Sweep { id, fractions } => {
-            if fractions.is_empty() {
-                return JobResult {
-                    id: *id,
-                    payload: Json::obj(vec![(
-                        "error",
-                        Json::Str("sweep needs at least one fraction".into()),
-                    )]),
-                };
-            }
-            // unlike the CLI path, never panic on a degenerate scenario —
-            // a bad request must come back as an error payload
-            let batch: Vec<Perturbation> = fractions
-                .iter()
-                .map(|&f| Perturbation::Fraction(f))
-                .collect();
-            let engine = SweepBatch::new(std::sync::Arc::new(VideoScenario::default()))
-                .with_threads(crate::util::par::num_threads());
-            let engine = match cache {
-                Some(c) => engine.with_cache(c.clone()),
-                None => engine.with_new_cache(),
-            };
-            let run = engine.run_report(&batch);
-            let (outcomes, report) = match run {
-                Ok(r) => r,
-                Err(e) => {
-                    return JobResult {
-                        id: *id,
-                        payload: Json::obj(vec![("error", Json::Str(e.to_string()))]),
-                    };
-                }
-            };
-            let sweep = ExactSweep {
-                fractions: fractions.clone(),
-                totals: outcomes
-                    .iter()
-                    .map(|o| o.makespan.unwrap_or(f64::INFINITY))
-                    .collect(),
-                events: report.total_events,
-            };
-            let (best_f, best_t) = best_fraction(&sweep);
-            let ranked: Vec<Json> = report
-                .ranked
-                .iter()
-                .take(8)
-                .map(|r| {
-                    Json::obj(vec![
-                        ("process", Json::Str(r.process.clone())),
-                        ("bottleneck", Json::Str(r.bottleneck.clone())),
-                        ("total_seconds", Json::Num(r.total_seconds)),
-                        ("scenarios", Json::Num(r.scenarios as f64)),
-                    ])
-                })
-                .collect();
-            let mut fields = vec![
-                ("fractions", Json::arr_f64(&sweep.fractions)),
-                ("totals", Json::arr_f64(&sweep.totals)),
-                ("best_fraction", Json::Num(best_f)),
-                ("best_total", Json::Num(best_t)),
-                ("events", Json::Num(sweep.events as f64)),
-                ("ranked_bottlenecks", Json::Arr(ranked)),
-            ];
-            if let Some(stats) = report.cache {
-                fields.push((
-                    "cache",
-                    Json::obj(vec![
-                        ("hits", Json::Num(stats.hits as f64)),
-                        ("misses", Json::Num(stats.misses as f64)),
-                        ("hit_rate", Json::Num(stats.hit_rate())),
-                        ("entries", Json::Num(stats.entries as f64)),
-                        ("evictions", Json::Num(stats.evictions as f64)),
-                    ]),
-                ));
-            }
-            JobResult {
-                id: *id,
-                payload: Json::obj(fields),
-            }
-        }
-        Job::Calibrate { id, tsv, io } => {
-            let payload = match calibrate_trace(
-                tsv,
-                io.as_deref(),
-                &CalibrateOpts::default(),
-                &SolverOpts::default(),
-            ) {
-                Ok((cal, report)) => calibration_json(&cal, &report),
-                Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
-            };
-            JobResult { id: *id, payload }
-        }
+    };
+    JobResult {
+        id: job.id,
+        outcome: execute(&job.request, cache),
     }
 }
 
-/// A fixed-size worker pool consuming jobs.
+/// Worker-loop execution. Two differences from [`run_job_cached`]:
+///
+/// * a panicking job (a solver invariant tripped by a pathological model)
+///   is caught and reported as an `internal` error instead of killing the
+///   worker — a dead worker would leave `collect` blocking forever on a
+///   result that never comes, wedging every future batch;
+/// * a job's own solver fan-out is capped at 1 thread: the pool is the
+///   parallelism across jobs, and K concurrent sweeps each spawning
+///   `num_threads()` scoped threads would oversubscribe the machine.
+///   Results are identical for any thread budget.
+fn run_job_pooled(job: &Job, cache: &Arc<AnalysisCache>) -> JobResult {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_with_threads(&job.request, cache, 1)
+    }))
+    .unwrap_or_else(|_| {
+        Err(ApiError::new(
+            ErrorCode::Internal,
+            "job panicked mid-execution; see server logs",
+        ))
+    });
+    JobResult {
+        id: job.id,
+        outcome,
+    }
+}
+
+/// A fixed-size worker pool consuming jobs. Dropping the pool closes the
+/// queue and joins the workers.
 pub struct Coordinator {
     tx: Option<mpsc::Sender<Job>>,
     results: mpsc::Receiver<JobResult>,
@@ -271,13 +95,20 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Pool with its own private analysis cache.
     pub fn new(n_workers: usize) -> Self {
+        Self::with_cache(n_workers, Arc::new(AnalysisCache::new()))
+    }
+
+    /// Pool over a shared (e.g. [`ApiHandler`]-owned) cache: repeat or
+    /// overlapping jobs are answered incrementally across workers. The
+    /// per-request cache stats in sweep responses are counter deltas on
+    /// the shared cache — exact under sequential use, approximate when
+    /// workers run jobs concurrently (outcomes are never affected).
+    pub fn with_cache(n_workers: usize, cache: Arc<AnalysisCache>) -> Self {
         let (tx, rx) = mpsc::channel::<Job>();
         let (rtx, rrx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
-        // one analysis cache for the pool's lifetime: repeat/overlapping
-        // jobs are answered incrementally across workers
-        let cache = Arc::new(AnalysisCache::new());
         let workers = (0..n_workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -288,7 +119,7 @@ impl Coordinator {
                         Ok(j) => j,
                         Err(_) => break,
                     };
-                    let _ = rtx.send(run_job_cached(&job, Some(&cache)));
+                    let _ = rtx.send(run_job_pooled(&job, &cache));
                 })
             })
             .collect();
@@ -308,7 +139,12 @@ impl Coordinator {
         (0..n).map(|_| self.results.recv().expect("worker alive")).collect()
     }
 
-    pub fn shutdown(mut self) {
+    /// Explicit shutdown; equivalent to dropping the pool.
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
         self.tx.take(); // close the queue
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -317,84 +153,18 @@ impl Coordinator {
 }
 
 /// JSON-lines server: one request object per line on stdin, one response
-/// per line on stdout. Request: `{"id": 1, "op": "analyze", "spec": {...}}`.
-/// Holds one [`AnalysisCache`] for the whole session, so repeat requests
-/// are answered incrementally (each response still reports per-request
-/// stats). Full protocol reference: `docs/SERVICE.md`.
+/// per line on stdout. Speaks the v1 envelope and the legacy v0 shapes
+/// (`docs/SERVICE.md`); holds one [`ApiHandler`] — and therefore one
+/// [`AnalysisCache`] — for the whole session, so repeat requests are
+/// answered incrementally.
 pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::Result<()> {
-    let cache = Arc::new(AnalysisCache::new());
+    let handler = ApiHandler::new();
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let req = match Json::parse(&line) {
-            Ok(j) => j,
-            Err(e) => {
-                writeln!(
-                    output,
-                    "{}",
-                    Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))])
-                )?;
-                continue;
-            }
-        };
-        let id = req.get("id").as_f64().unwrap_or(0.0) as u64;
-        let resp = match req.get("op").as_str() {
-            Some("analyze") => {
-                let spec = req.get("spec").to_string();
-                run_job_cached(&Job::Analyze { id, spec }, Some(&cache)).payload
-            }
-            Some("sweep") => {
-                let fractions: Vec<f64> = req
-                    .get("fractions")
-                    .as_arr()
-                    .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                    .unwrap_or_else(|| {
-                        let n = req.get("points").as_f64().unwrap_or(40.0) as usize;
-                        crate::coordinator::sweeper::fig7_fractions(n.max(1))
-                    });
-                run_job_cached(&Job::Sweep { id, fractions }, Some(&cache)).payload
-            }
-            Some("calibrate") => match (req.get("tsv").as_str(), req.get("io")) {
-                (None, _) => Json::obj(vec![(
-                    "error",
-                    Json::Str("calibrate needs a 'tsv' string field".into()),
-                )]),
-                // a malformed 'io' must not silently degrade to the
-                // summary-only fallback
-                (Some(_), io) if !matches!(io, Json::Null | Json::Str(_)) => {
-                    Json::obj(vec![(
-                        "error",
-                        Json::Str("calibrate 'io' must be a string when present".into()),
-                    )])
-                }
-                (Some(tsv), io) => run_job_cached(
-                    &Job::Calibrate {
-                        id,
-                        tsv: tsv.to_string(),
-                        io: io.as_str().map(str::to_string),
-                    },
-                    Some(&cache),
-                )
-                .payload,
-            },
-            Some("ping") => Json::obj(vec![("pong", Json::Bool(true))]),
-            other => Json::obj(vec![(
-                "error",
-                Json::Str(format!("unknown op {other:?}")),
-            )]),
-        };
-        let mut obj = match resp {
-            Json::Obj(m) => m,
-            other => {
-                let mut m = std::collections::BTreeMap::new();
-                m.insert("result".to_string(), other);
-                m
-            }
-        };
-        obj.insert("id".to_string(), Json::Num(id as f64));
-        writeln!(output, "{}", Json::Obj(obj))?;
+        writeln!(output, "{}", handler.handle_wire(&line))?;
     }
     Ok(())
 }
@@ -402,37 +172,54 @@ pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::test_fixtures::{CHAIN_TSV, TINY_SPEC};
+    use crate::util::Json;
+    use crate::workflow::scenario::Perturbation;
 
-    const TINY_SPEC: &str = r#"{
-      "processes": [
-        {"name": "a", "max_progress": 10.0,
-         "data": [{"req": {"type": "stream", "total": 10.0},
-                   "source": {"external_constant": 10.0}}],
-         "resources": [{"req": {"type": "stream", "total": 5.0},
-                        "source": {"constant": 1.0}}],
-         "outputs": [{"name": "out", "type": "identity"}]}
-      ]
-    }"#;
+    fn analyze_job(id: u64, spec: &str) -> Job {
+        Job {
+            id,
+            request: Request::Analyze {
+                spec: spec.to_string(),
+            },
+        }
+    }
+
+    fn sweep_job(id: u64, fractions: &[f64]) -> Job {
+        Job {
+            id,
+            request: Request::Sweep {
+                workflow: crate::api::WorkflowSel::Video,
+                perturbations: fractions.iter().map(|&f| Perturbation::Fraction(f)).collect(),
+            },
+        }
+    }
+
+    fn makespan(r: &JobResult) -> f64 {
+        match r.outcome.as_ref().unwrap() {
+            Response::Analyze(a) => a.makespan.unwrap(),
+            other => panic!("{other:?}"),
+        }
+    }
 
     #[test]
     fn pool_processes_jobs() {
         let c = Coordinator::new(3);
         for id in 0..6 {
-            c.submit(Job::Analyze {
-                id,
-                spec: TINY_SPEC.to_string(),
-            });
+            c.submit(analyze_job(id, TINY_SPEC));
         }
         let mut results = c.collect(6);
         c.shutdown();
         results.sort_by_key(|r| r.id);
         assert_eq!(results.len(), 6);
         for r in &results {
-            let mk = r.payload.get("makespan").as_f64().unwrap();
+            let mk = makespan(r);
             assert!((mk - 5.0).abs() < 1e-6, "{mk}");
         }
     }
 
+    /// Legacy v0 requests still round-trip through the stdio server with
+    /// the flat payload shape, now tagged deprecated.
     #[test]
     fn stdio_server_roundtrip() {
         let spec_json = Json::parse(TINY_SPEC).unwrap();
@@ -450,59 +237,52 @@ mod tests {
         let r1 = Json::parse(lines[0]).unwrap();
         assert_eq!(r1.get("id").as_f64(), Some(7.0));
         assert!((r1.get("makespan").as_f64().unwrap() - 5.0).abs() < 1e-6);
+        assert_eq!(r1.get("deprecated").as_bool(), Some(true));
         let r2 = Json::parse(lines[1]).unwrap();
         assert_eq!(r2.get("pong").as_bool(), Some(true));
+        assert_eq!(r2.get("deprecated").as_bool(), Some(true));
     }
 
     #[test]
     fn bad_spec_reports_error() {
-        let r = run_job(&Job::Analyze {
-            id: 1,
-            spec: "{}".into(),
-        });
-        assert!(r.payload.get("error").as_str().is_some());
+        let r = run_job(&analyze_job(1, "{}"));
+        let e = r.outcome.unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidSpec);
     }
 
     #[test]
     fn sweep_job_reports_best_fraction_and_bottlenecks() {
-        let r = run_job(&Job::Sweep {
-            id: 9,
-            fractions: vec![0.25, 0.5, 0.75, 0.93],
-        });
+        let r = run_job(&sweep_job(9, &[0.25, 0.5, 0.75, 0.93]));
         assert_eq!(r.id, 9);
-        let best = r.payload.get("best_fraction").as_f64().unwrap();
-        assert!((best - 0.93).abs() < 1e-9, "{best}");
-        assert_eq!(r.payload.get("totals").as_arr().unwrap().len(), 4);
+        let s = match r.outcome.unwrap() {
+            Response::Sweep(s) => s,
+            other => panic!("{other:?}"),
+        };
+        let (best_i, _) = s.best.unwrap();
+        assert_eq!(best_i, 3, "0.93 wins the batch");
+        assert_eq!(s.makespans.len(), 4);
         // the incremental engine reports its cache behaviour
-        let cache = r.payload.get("cache");
-        assert!(cache.get("hits").as_f64().is_some());
-        assert!(cache.get("hit_rate").as_f64().unwrap() >= 0.0);
-        let ranked = r.payload.get("ranked_bottlenecks").as_arr().unwrap();
-        assert!(!ranked.is_empty());
-        assert!(ranked
-            .iter()
-            .any(|b| b.get("bottleneck").as_str() == Some("res:link")));
+        let stats = s.cache.expect("cache stats attached");
+        assert!(stats.hit_rate() >= 0.0);
+        assert!(!s.ranked.is_empty());
+        assert!(s.ranked.iter().any(|b| b.bottleneck == "res:link"));
     }
 
     /// A degenerate request (fraction 0 starves dl1 forever, so the
-    /// barrier node's dependency never finishes) must come back as an
-    /// error payload — not a panic that kills the server.
+    /// barrier node's dependency never finishes) must come back as a typed
+    /// error — not a panic that kills the server.
     #[test]
     fn degenerate_fraction_reports_error_not_panic() {
-        let r = run_job(&Job::Sweep {
-            id: 4,
-            fractions: vec![0.0],
-        });
-        assert!(r.payload.get("error").as_str().is_some());
+        let r = run_job(&sweep_job(4, &[0.0]));
+        let e = r.outcome.unwrap_err();
+        assert_eq!(e.code, ErrorCode::AnalysisFailed);
     }
 
     #[test]
     fn empty_sweep_is_an_error() {
-        let r = run_job(&Job::Sweep {
-            id: 2,
-            fractions: vec![],
-        });
-        assert!(r.payload.get("error").as_str().is_some());
+        let r = run_job(&sweep_job(2, &[]));
+        let e = r.outcome.unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
     }
 
     #[test]
@@ -515,39 +295,49 @@ mod tests {
         assert_eq!(resp.get("id").as_f64(), Some(3.0));
         assert_eq!(resp.get("totals").as_arr().unwrap().len(), 2);
         assert!((resp.get("best_fraction").as_f64().unwrap() - 0.9).abs() < 1e-9);
+        assert_eq!(resp.get("deprecated").as_bool(), Some(true));
     }
 
-    const CHAIN_TSV: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
-        dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
-        enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+    fn calibrate_job(id: u64, tsv: &str) -> Job {
+        Job {
+            id,
+            request: Request::Calibrate {
+                tsv: tsv.to_string(),
+                io: None,
+                tol: None,
+            },
+        }
+    }
 
     #[test]
     fn calibrate_job_reports_replay_error() {
-        let r = run_job(&Job::Calibrate {
-            id: 11,
-            tsv: CHAIN_TSV.to_string(),
-            io: None,
-        });
+        let r = run_job(&calibrate_job(11, CHAIN_TSV));
         assert_eq!(r.id, 11);
-        let tasks = r.payload.get("tasks").as_arr().unwrap();
-        assert_eq!(tasks.len(), 2);
-        assert_eq!(tasks[0].get("id").as_str(), Some("dl"));
-        assert_eq!(tasks[0].get("model").as_str(), Some("summary/stream"));
-        let mk = r.payload.get("predicted_makespan").as_f64().unwrap();
+        let c = match r.outcome.unwrap() {
+            Response::Calibrate(c) => c,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(c.tasks.len(), 2);
+        assert_eq!(c.tasks[0].id, "dl");
+        assert_eq!(c.tasks[0].model, "summary/stream");
+        let mk = c.predicted_makespan.unwrap();
         assert!((mk - 20.0).abs() < 0.1, "{mk}");
-        let err = r.payload.get("max_rel_err").as_f64().unwrap();
-        assert!(err < 0.01, "{err}");
+        assert!(c.max_rel_err.unwrap() < 0.01);
     }
 
     #[test]
     fn calibrate_job_reports_parse_errors() {
-        let r = run_job(&Job::Calibrate {
-            id: 12,
-            tsv: "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\toops\t1\n".into(),
-            io: None,
-        });
-        let e = r.payload.get("error").as_str().unwrap();
-        assert!(e.contains("line 2") && e.contains("oops"), "{e}");
+        let r = run_job(&calibrate_job(
+            12,
+            "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\toops\t1\n",
+        ));
+        let e = r.outcome.unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidTrace);
+        assert!(
+            e.message.contains("line 2") && e.message.contains("oops"),
+            "{}",
+            e.message
+        );
     }
 
     #[test]

@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 pub use crate::runtime::cache::{AnalysisCache, CacheStats};
 pub use crate::runtime::sweep::{
-    BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch,
+    BottleneckReport, FixedWorkflow, RankedBottleneck, ScenarioOutcome, SweepBatch, SweepError,
+    SweepModel,
 };
 use crate::workflow::scenario::{Perturbation, VideoScenario};
 

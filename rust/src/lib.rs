@@ -5,6 +5,7 @@
 //! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and the
 //! per-experiment index.
 
+pub mod api;
 pub mod coordinator;
 pub mod des;
 pub mod model;

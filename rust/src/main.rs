@@ -7,7 +7,8 @@
 //!     [--io <series.log>]         workflow trace and replay-validate them
 //!     [--tol <t>]                 (formats: docs/TRACES.md)
 //!   sweep [N] [--pjrt]            Fig 7 prioritization sweep (exact engine,
-//!                                 optionally also the batched PJRT path)
+//!     [--workflow video|genomics] optionally also the batched PJRT path;
+//!                                 --workflow picks the swept model)
 //!   measure [points] [runs]       virtual-testbed measurements (Fig 7 bars)
 //!   compare-des [gb ...]          §6 performance comparison table
 //!   export-figures <dir>          regenerate every figure's data as JSON
@@ -20,18 +21,17 @@
 
 use std::process::ExitCode;
 
+use bottlemod::api::{ApiHandler, Request, Response, WorkflowSel};
 use bottlemod::coordinator::exporter;
-use bottlemod::coordinator::sweeper::{exact_sweep_report, fig7_fractions};
-use bottlemod::model::spec::parse_workflow;
+use bottlemod::coordinator::sweeper::fig7_fractions;
 use bottlemod::runtime::Runtime;
 use bottlemod::sched;
 use bottlemod::solver::SolverOpts;
 use bottlemod::testbed::video::VideoTestbed;
-use bottlemod::trace::{calibrate_trace, CalibrateOpts};
 use bottlemod::util::error::{Error, Result};
 use bottlemod::util::stats::{ascii_table, fmt_duration, Summary};
 use bottlemod::workflow::engine::analyze_fixpoint;
-use bottlemod::workflow::scenario::VideoScenario;
+use bottlemod::workflow::scenario::{Perturbation, VideoScenario};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -75,18 +75,24 @@ fn print_help() {
         "bottlemod — fast bottleneck analysis for scientific workflows\n\
          usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|\
          export-figures|advisor|online-demo|serve|artifacts> [args]\n\
-         calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]"
+         calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]\n\
+         sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]"
     );
 }
 
+/// All JSON-speaking subcommands (`analyze`, `calibrate`, `sweep`) build a
+/// typed [`Request`] and delegate to the same [`ApiHandler`] the service
+/// runs on — the CLI does no spec parsing or response assembly of its own.
 fn cmd_analyze(args: &[String]) -> Result<()> {
     let path = args
         .first()
         .ok_or_else(|| Error::msg("usage: bottlemod analyze <spec.json>"))?;
     let text = std::fs::read_to_string(path)?;
-    let wf = parse_workflow(&text)?;
     let t0 = std::time::Instant::now();
-    let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6)?;
+    let res = match ApiHandler::new().handle(&Request::Analyze { spec: text })? {
+        Response::Analyze(r) => r,
+        other => return Err(Error::msg(format!("unexpected response {other:?}"))),
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     let mut rows = vec![vec![
@@ -95,40 +101,33 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
         "finish".to_string(),
         "bottlenecks over time".to_string(),
     ]];
-    for (i, a) in wa.analyses.iter().enumerate() {
-        let p = &wf.nodes[i].process;
-        let segs = a
-            .segments
+    for row in &res.schedule {
+        let segs = res
+            .bottlenecks
             .iter()
-            .map(|s| {
-                format!(
-                    "[{:.1}-{:.1}] {}",
-                    s.start,
-                    s.end.min(1e9),
-                    a.bottleneck_name(p, s.bottleneck)
-                )
-            })
+            .filter(|s| s.process == row.name)
+            .map(|s| format!("[{:.1}-{:.1}] {}", s.start, s.end.min(1e9), s.bottleneck))
             .collect::<Vec<_>>()
             .join(", ");
         rows.push(vec![
-            p.name.clone(),
-            format!("{:.2}", a.start_time),
-            a.finish_time
+            row.name.clone(),
+            format!("{:.2}", row.start),
+            row.finish
                 .map(|f| format!("{f:.2}"))
                 .unwrap_or_else(|| "never".into()),
             segs,
         ]);
     }
     print!("{}", ascii_table(&rows));
-    match wa.makespan {
+    match res.makespan {
         Some(m) => println!("makespan: {m:.2} s"),
         None => println!("makespan: never finishes"),
     }
     println!(
         "analysis: {} ({} events, {} passes)",
         fmt_duration(dt),
-        wa.events,
-        wa.passes
+        res.events,
+        res.passes
     );
     Ok(())
 }
@@ -137,7 +136,7 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
     let usage = "usage: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]";
     let mut tsv_path: Option<&String> = None;
     let mut io_path: Option<&String> = None;
-    let mut opts = CalibrateOpts::default();
+    let mut tol: Option<f64> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -149,10 +148,11 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
                 i += 2;
             }
             "--tol" => {
-                opts.tol = args
-                    .get(i + 1)
-                    .and_then(|a| a.parse().ok())
-                    .ok_or_else(|| Error::msg(format!("--tol needs a number\n{usage}")))?;
+                tol = Some(
+                    args.get(i + 1)
+                        .and_then(|a| a.parse().ok())
+                        .ok_or_else(|| Error::msg(format!("--tol needs a number\n{usage}")))?,
+                );
                 i += 2;
             }
             a if !a.starts_with("--") => {
@@ -175,8 +175,10 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
         None => None,
     };
     let t0 = std::time::Instant::now();
-    let (cal, report) =
-        calibrate_trace(&tsv, io.as_deref(), &opts, &SolverOpts::default())?;
+    let res = match ApiHandler::new().handle(&Request::Calibrate { tsv, io, tol })? {
+        Response::Calibrate(r) => r,
+        other => return Err(Error::msg(format!("unexpected response {other:?}"))),
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     let fmt_opt = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
@@ -188,10 +190,10 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
         "predicted".to_string(),
         "err %".to_string(),
     ]];
-    for s in cal.task_summaries(&report) {
+    for s in &res.tasks {
         rows.push(vec![
-            s.id,
-            s.model,
+            s.id.clone(),
+            s.model.clone(),
             format!("{}/{}", s.data_pieces, s.res_pieces),
             fmt_opt(s.observed),
             fmt_opt(s.predicted),
@@ -203,12 +205,12 @@ fn cmd_calibrate(args: &[String]) -> Result<()> {
     print!("{}", ascii_table(&rows));
     println!(
         "calibrated {} task(s) in {}; predicted makespan {} (observed {})",
-        cal.tasks.len(),
+        res.tasks.len(),
         fmt_duration(dt),
-        fmt_opt(report.predicted_makespan),
-        fmt_opt(report.observed_makespan),
+        fmt_opt(res.predicted_makespan),
+        fmt_opt(res.observed_makespan),
     );
-    match report.max_rel_err {
+    match res.max_rel_err {
         Some(e) => println!("worst per-task completion error: {:.2}%", e * 100.0),
         None => println!("trace logs no completion times; replay error unavailable"),
     }
@@ -222,20 +224,40 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         .and_then(|a| a.parse().ok())
         .unwrap_or(600);
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
-    let sc = VideoScenario::default();
+    let workflow = match args.iter().position(|a| a == "--workflow") {
+        None => WorkflowSel::Video,
+        Some(i) => match args.get(i + 1).map(String::as_str) {
+            Some("video") => WorkflowSel::Video,
+            Some("genomics") => WorkflowSel::Genomics,
+            other => {
+                return Err(Error::msg(format!(
+                    "--workflow needs 'video' or 'genomics', got {other:?}"
+                )))
+            }
+        },
+    };
+    let is_video = workflow == WorkflowSel::Video;
     let fractions = fig7_fractions(n);
     let threads = bottlemod::util::par::num_threads();
 
     let t0 = std::time::Instant::now();
-    let (sweep, report) = exact_sweep_report(&sc, &fractions, threads);
+    let req = Request::Sweep {
+        workflow,
+        perturbations: fractions.iter().map(|&f| Perturbation::Fraction(f)).collect(),
+    };
+    let res = match ApiHandler::new().handle(&req)? {
+        Response::Sweep(r) => r,
+        other => return Err(Error::msg(format!("unexpected response {other:?}"))),
+    };
     let exact_dt = t0.elapsed().as_secs_f64();
     println!(
-        "exact sweep: {n} configs on {threads} threads in {} ({} per analysis, {} events total)",
+        "exact sweep: {n} configs of the '{}' workflow on {threads} threads in {} ({} per analysis, {} events total)",
+        res.workflow,
         fmt_duration(exact_dt),
         fmt_duration(exact_dt / n as f64),
-        sweep.events
+        res.events
     );
-    if let Some(stats) = report.cache {
+    if let Some(stats) = &res.cache {
         println!("analysis cache: {stats}");
     }
 
@@ -243,8 +265,10 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let mut rows = vec![vec!["fraction".to_string(), "predicted total (s)".to_string()]];
     for i in (0..n).step_by((n / 10).max(1)) {
         rows.push(vec![
-            format!("{:.3}", sweep.fractions[i]),
-            format!("{:.2}", sweep.totals[i]),
+            format!("{:.3}", fractions[i]),
+            res.makespans[i]
+                .map(|t| format!("{t:.2}"))
+                .unwrap_or_else(|| "never".into()),
         ]);
     }
     print!("{}", ascii_table(&rows));
@@ -256,25 +280,30 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         "total limited (s)".to_string(),
         "scenarios".to_string(),
     ]];
-    for r in report.ranked.iter().take(8) {
+    for r in res.ranked.iter().take(8) {
         rows.push(vec![
             r.process.clone(),
             r.bottleneck.clone(),
             format!("{:.1}", r.total_seconds),
-            format!("{}/{}", r.scenarios, report.scenarios),
+            format!("{}/{}", r.scenarios, n),
         ]);
     }
     println!("top bottlenecks across the batch:");
     print!("{}", ascii_table(&rows));
 
-    if use_pjrt {
+    if use_pjrt && !is_video {
+        println!("(--pjrt compares against the video artifacts; skipped for this workflow)");
+    }
+    if use_pjrt && is_video {
+        let sc = VideoScenario::default();
         let mut rt = Runtime::new(&Runtime::default_dir())?;
         let t0 = std::time::Instant::now();
         let batched = bottlemod::runtime::fig7_sweep(&mut rt, &sc, &fractions)?;
         let dt = t0.elapsed().as_secs_f64();
-        let max_err = sweep
-            .totals
+        let max_err = res
+            .makespans
             .iter()
+            .map(|m| m.unwrap_or(f64::INFINITY))
             .zip(&batched.totals)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max);

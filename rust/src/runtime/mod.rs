@@ -9,5 +9,8 @@ pub mod xla_sweep;
 
 pub use cache::{AnalysisCache, CacheStats};
 pub use pjrt::{ArtifactInfo, Runtime};
-pub use sweep::{BottleneckReport, RankedBottleneck, ScenarioOutcome, SweepBatch};
+pub use sweep::{
+    BottleneckReport, FixedWorkflow, RankedBottleneck, ScenarioOutcome, SweepBatch, SweepError,
+    SweepModel,
+};
 pub use xla_sweep::{fig7_sweep, SweepResult};

@@ -4,8 +4,10 @@
 //! the exact solver's cost depends on model complexity only, so evaluating
 //! hundreds of scenario variants is hundreds of *independent, cheap*
 //! analyses — an embarrassingly parallel batch. [`SweepBatch`] is that
-//! batch: it holds one immutable base [`VideoScenario`] behind an [`Arc`]
-//! (the task models — every requirement/output `PwPoly` — are shared, never
+//! batch: it holds one immutable base model behind an `Arc<dyn SweepModel>`
+//! (the built-in [`VideoScenario`] / [`GenomicsScenario`] scenarios, or any
+//! [`FixedWorkflow`] from an inline spec or a calibrated trace; the task
+//! models — every requirement/output `PwPoly` — are shared, never
 //! copied per worker), takes N [`Perturbation`]s (input-rate,
 //! resource-allocation and task-model variants), fans the per-scenario
 //! `solver::exact` fixpoint analyses out on the scoped-thread pool
@@ -32,13 +34,16 @@
 //! produce). Cache statistics ride along in [`BottleneckReport::cache`].
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::Arc;
 
 use crate::runtime::cache::{AnalysisCache, CacheStats};
 use crate::solver::{Analysis, SolverOpts};
 use crate::util::par::{num_threads, par_map};
 use crate::workflow::engine::{analyze_fixpoint_cached, WorkflowError};
-use crate::workflow::scenario::{Perturbation, VideoScenario};
+use crate::workflow::graph::NodeSet;
+use crate::workflow::scenario::{GenomicsScenario, Perturbation, VideoScenario};
+use crate::workflow::Workflow;
 
 // The fan-out contract: everything a worker borrows must be Send + Sync.
 // These compile-time assertions keep the solver stack clean — a field that
@@ -57,6 +62,149 @@ const _: () = {
     assert_send_sync::<Perturbation>();
     assert_send_sync::<WorkflowError>();
 };
+
+/// A workload the sweep engine can fan a perturbation batch over. The
+/// engine is generic over this trait: the built-in [`VideoScenario`] and
+/// [`GenomicsScenario`] models, inline-spec workflows and trace-calibrated
+/// models ([`FixedWorkflow`]) all sweep through the same code path.
+///
+/// Contract: `build_perturbed` is pure (same perturbation → bit-identical
+/// workflow), and a knob the model does not expose comes back as `Err`
+/// (the API boundary maps it to a structured `bad_request`) — never a
+/// panic, which would kill a whole batch and, behind the service, the
+/// server.
+pub trait SweepModel: Send + Sync {
+    /// Workload label surfaced in reports and API responses
+    /// (`"video"`, `"genomics"`, `"spec"`, `"trace"`).
+    fn label(&self) -> &str;
+
+    /// The unperturbed workflow (what [`Perturbation::Identity`] analyzes;
+    /// also the planner's reference for dirty-set shapes).
+    fn base_workflow(&self) -> Workflow;
+
+    /// The workflow under perturbation `p`.
+    fn build_perturbed(&self, p: &Perturbation) -> Result<Workflow, String>;
+
+    /// Planner hint: nodes of `wf` (the base workflow) whose analyses `p`
+    /// may change. Ordering-only — supersets are always safe and results
+    /// never depend on it. Default: everything dirty.
+    fn dirty_set(&self, wf: &Workflow, p: &Perturbation) -> NodeSet {
+        let _ = p;
+        NodeSet::all(wf.nodes.len())
+    }
+}
+
+impl SweepModel for VideoScenario {
+    fn label(&self) -> &str {
+        "video"
+    }
+
+    fn base_workflow(&self) -> Workflow {
+        self.build().0
+    }
+
+    fn build_perturbed(&self, p: &Perturbation) -> Result<Workflow, String> {
+        Ok(self.perturbed(p).build().0)
+    }
+
+    fn dirty_set(&self, wf: &Workflow, p: &Perturbation) -> NodeSet {
+        // node ids are deterministic, so a rebuild's ids index `wf` too
+        let (_, nodes) = self.build();
+        p.dirty_set(wf, &nodes)
+    }
+}
+
+impl SweepModel for GenomicsScenario {
+    fn label(&self) -> &str {
+        "genomics"
+    }
+
+    fn base_workflow(&self) -> Workflow {
+        self.build()
+    }
+
+    fn build_perturbed(&self, p: &Perturbation) -> Result<Workflow, String> {
+        Ok(self.perturbed(p)?.build())
+    }
+
+    fn dirty_set(&self, wf: &Workflow, p: &Perturbation) -> NodeSet {
+        self.dirty_nodes(wf, p)
+    }
+}
+
+/// A [`SweepModel`] over one fixed, prebuilt workflow — inline specs and
+/// trace-calibrated models, which expose no scenario knobs. Only
+/// [`Perturbation::Identity`] applies; a batch of identities turns the
+/// sweep engine into a cached analyzer that still produces the ranked
+/// bottleneck report.
+pub struct FixedWorkflow {
+    label: String,
+    wf: Workflow,
+}
+
+impl FixedWorkflow {
+    pub fn new(label: impl Into<String>, wf: Workflow) -> FixedWorkflow {
+        FixedWorkflow {
+            label: label.into(),
+            wf,
+        }
+    }
+}
+
+impl SweepModel for FixedWorkflow {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn base_workflow(&self) -> Workflow {
+        self.wf.clone()
+    }
+
+    fn build_perturbed(&self, p: &Perturbation) -> Result<Workflow, String> {
+        match p {
+            Perturbation::Identity => Ok(self.wf.clone()),
+            other => Err(format!(
+                "workflow '{}' is a fixed model: only the 'identity' perturbation applies (got '{}')",
+                self.label,
+                other.kind()
+            )),
+        }
+    }
+
+    fn dirty_set(&self, wf: &Workflow, p: &Perturbation) -> NodeSet {
+        match p {
+            Perturbation::Identity => NodeSet::empty(wf.nodes.len()),
+            _ => NodeSet::all(wf.nodes.len()),
+        }
+    }
+}
+
+/// Failure of a sweep batch. Distinguishes a *rejected perturbation* (a
+/// wire-level bad request: the model does not expose that knob) from a
+/// *failed analysis* (the model accepted it but the solve blew up, e.g. a
+/// dependency that never finishes).
+#[derive(Debug, Clone)]
+pub enum SweepError {
+    Unsupported(String),
+    Analysis(WorkflowError),
+}
+
+impl fmt::Display for SweepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SweepError::Unsupported(m) => f.write_str(m),
+            SweepError::Analysis(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+impl From<WorkflowError> for SweepError {
+    fn from(e: WorkflowError) -> SweepError {
+        SweepError::Analysis(e)
+    }
+}
 
 /// Full result of one scenario in a sweep batch.
 #[derive(Clone, Debug, PartialEq)]
@@ -154,7 +302,7 @@ impl BottleneckReport {
 /// A batch of scenario analyses over one shared base model.
 #[derive(Clone)]
 pub struct SweepBatch {
-    base: Arc<VideoScenario>,
+    base: Arc<dyn SweepModel>,
     opts: SolverOpts,
     threads: usize,
     fixpoint_passes: usize,
@@ -162,11 +310,18 @@ pub struct SweepBatch {
 }
 
 impl SweepBatch {
-    /// New batch over a shared base scenario; worker count defaults to the
+    /// New batch over the shared Fig 5 video scenario — the historical
+    /// constructor, kept for the advisor/CLI/bench call sites. The generic
+    /// entry point is [`SweepBatch::over`].
+    pub fn new(base: Arc<VideoScenario>) -> SweepBatch {
+        SweepBatch::over(base)
+    }
+
+    /// New batch over any [`SweepModel`]; worker count defaults to the
     /// machine's parallelism (`BOTTLEMOD_THREADS` overrides). Cold (no
     /// cache) by default — attach one with [`SweepBatch::with_cache`] /
     /// [`SweepBatch::with_new_cache`].
-    pub fn new(base: Arc<VideoScenario>) -> SweepBatch {
+    pub fn over(base: Arc<dyn SweepModel>) -> SweepBatch {
         SweepBatch {
             base,
             opts: SolverOpts::default(),
@@ -174,6 +329,11 @@ impl SweepBatch {
             fixpoint_passes: 6,
             cache: None,
         }
+    }
+
+    /// The base model's workload label (`"video"`, `"genomics"`, ...).
+    pub fn label(&self) -> &str {
+        self.base.label()
     }
 
     /// Force a worker count (1 = the sequential reference path).
@@ -228,7 +388,7 @@ impl SweepBatch {
     /// per-scenario computation — and therefore every outcome — is
     /// unchanged.
     pub fn plan(&self, perturbations: &[Perturbation]) -> Vec<usize> {
-        let (wf, nodes) = self.base.build();
+        let wf = self.base.base_workflow();
         // a perturbation's dirty set depends on its *variant*, not its
         // payload, so one dirty_set call per distinct variant suffices
         // (each call rebuilds graph adjacency — don't pay it per element)
@@ -240,7 +400,7 @@ impl SweepBatch {
                 let disc = std::mem::discriminant(p);
                 let found = memo.iter().find(|(d, _)| *d == disc).map(|(_, v)| *v);
                 let (len, fp) = found.unwrap_or_else(|| {
-                    let dirty = p.dirty_set(&wf, &nodes);
+                    let dirty = self.base.dirty_set(&wf, p);
                     let v = (dirty.len() as u32, dirty.fingerprint());
                     memo.push((disc, v));
                     v
@@ -260,8 +420,8 @@ impl SweepBatch {
     pub fn run(
         &self,
         perturbations: &[Perturbation],
-    ) -> Result<Vec<ScenarioOutcome>, WorkflowError> {
-        let base = &self.base;
+    ) -> Result<Vec<ScenarioOutcome>, SweepError> {
+        let base = self.base.as_ref();
         let opts = &self.opts;
         let passes = self.fixpoint_passes;
         let cache = self.cache.as_deref();
@@ -301,7 +461,7 @@ impl SweepBatch {
     pub fn run_report(
         &self,
         perturbations: &[Perturbation],
-    ) -> Result<(Vec<ScenarioOutcome>, BottleneckReport), WorkflowError> {
+    ) -> Result<(Vec<ScenarioOutcome>, BottleneckReport), SweepError> {
         let before = self.cache_stats();
         let outcomes = self.run(perturbations)?;
         let mut report = BottleneckReport::aggregate(&outcomes);
@@ -316,15 +476,14 @@ impl SweepBatch {
 /// Analyze one perturbed scenario (pure: same inputs → same outputs; the
 /// cache only changes *where* an identical analysis comes from).
 fn solve_one(
-    base: &VideoScenario,
+    base: &dyn SweepModel,
     opts: &SolverOpts,
     passes: usize,
     index: usize,
     p: &Perturbation,
     cache: Option<&AnalysisCache>,
-) -> Result<ScenarioOutcome, WorkflowError> {
-    let sc = base.perturbed(p);
-    let (wf, _) = sc.build();
+) -> Result<ScenarioOutcome, SweepError> {
+    let wf = base.build_perturbed(p).map_err(SweepError::Unsupported)?;
     let wa = analyze_fixpoint_cached(&wf, opts, passes, cache)?;
 
     let node_names: Vec<String> = wf.nodes.iter().map(|n| n.process.name.clone()).collect();
@@ -490,6 +649,54 @@ mod tests {
         let out = sweep.run(&batch).unwrap();
         let idx: Vec<usize> = out.iter().map(|o| o.index).collect();
         assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// The generic engine: a genomics batch with non-fraction knobs runs
+    /// through the same incremental path as the video sweeps.
+    #[test]
+    fn generic_model_sweep_genomics() {
+        let base: Arc<dyn SweepModel> = Arc::new(GenomicsScenario::default());
+        let batch = vec![P::LinkRateScale(2.0), P::Identity, P::Fraction(0.7)];
+        let engine = SweepBatch::over(base).with_threads(2).with_new_cache();
+        assert_eq!(engine.label(), "genomics");
+        let (out, report) = engine.run_report(&batch).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.makespan.is_some()));
+        assert!(!report.ranked.is_empty());
+        assert!(report.cache.is_some());
+        // a faster ingest link cannot slow the pipeline
+        assert!(out[0].makespan.unwrap() <= out[1].makespan.unwrap() + 1e-9);
+    }
+
+    /// A knob the model does not expose is a typed `Unsupported` error —
+    /// a wire-level bad request, not a panic and not an analysis failure.
+    #[test]
+    fn unsupported_knob_is_a_typed_error() {
+        let base: Arc<dyn SweepModel> = Arc::new(GenomicsScenario::default());
+        let err = SweepBatch::over(base)
+            .with_threads(1)
+            .run(&[P::Task2Burst])
+            .unwrap_err();
+        match err {
+            SweepError::Unsupported(m) => assert!(m.contains("task2_burst"), "{m}"),
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+
+    /// Fixed (spec / trace-calibrated) workflows sweep under identity only,
+    /// and a batch of identities is answered almost entirely by the cache.
+    #[test]
+    fn fixed_workflow_identity_only() {
+        let (wf, _) = VideoScenario::default().build();
+        let base: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("spec", wf));
+        let engine = SweepBatch::over(base).with_threads(1).with_new_cache();
+        let (out, report) = engine.run_report(&[P::Identity, P::Identity]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].makespan, out[1].makespan);
+        let stats = report.cache.unwrap();
+        assert!(stats.hits > 0, "second identity must hit: {stats}");
+        let err = engine.run(&[P::Fraction(0.5)]).unwrap_err();
+        assert!(matches!(err, SweepError::Unsupported(_)), "{err:?}");
     }
 
     /// Attribution durations of one scenario sum to (roughly) the busy

@@ -52,6 +52,24 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer. `None` for non-numbers,
+    /// negatives, fractional values, and anything ≥ 2^53 (where f64 stops
+    /// representing integers exactly) — the strict accessor behind the
+    /// wire protocol's `id`/`v` fields.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x)
+                if x.is_finite()
+                    && *x >= 0.0
+                    && *x == x.trunc()
+                    && *x < 9_007_199_254_740_992.0 =>
+            {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -457,6 +475,41 @@ mod tests {
         ]);
         let v2 = Json::parse(&v.to_string_pretty()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    /// Whole numbers serialize without a trailing `.0` (`"events": 42`,
+    /// not `42.0`) — responses are smaller and the golden-file protocol
+    /// tests (`tests/service_protocol.rs`, the docs-conformance CI step)
+    /// are byte-stable. Pinned here so a formatting change can't slip in.
+    #[test]
+    fn integers_format_without_fraction() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(-7.0).to_string(), "-7");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+        assert_eq!(Json::Num(-0.0).to_string(), "0");
+        assert_eq!(Json::Num(2.5).to_string(), "2.5");
+        assert_eq!(
+            Json::obj(vec![("events", Json::Num(42.0))]).to_string(),
+            r#"{"events":42}"#
+        );
+        // still parses back to the same value
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        // non-finite values stay encoded as null (documented subset)
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn as_u64_accepts_exact_integers_only() {
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(7.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_u64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_991.0).as_u64(), Some(9007199254740991));
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+        assert_eq!(Json::Null.as_u64(), None);
     }
 
     #[test]

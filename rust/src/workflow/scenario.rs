@@ -19,6 +19,7 @@
 
 use crate::model::{Process, ProcessBuilder};
 use crate::pwfn::PwPoly;
+use crate::util::Json;
 use crate::workflow::graph::{DataSource, NodeSet, ResourceSource, StartRule, Workflow};
 
 /// Paper's measured constants (all sizes in bytes, times in seconds).
@@ -73,6 +74,10 @@ impl Default for VideoScenario {
 /// [`crate::runtime::cache::AnalysisCache`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Perturbation {
+    /// Leave the base model untouched — the baseline scenario of a batch.
+    /// The only knob every workflow supports (fixed spec/trace models
+    /// accept nothing else); its dirty set is empty.
+    Identity,
     /// Set the link fraction assigned to task 1's download (Fig 7 x-axis).
     Fraction(f64),
     /// Scale the shared link's data rate (input-rate variant).
@@ -108,6 +113,77 @@ pub struct VideoNodes {
 }
 
 impl Perturbation {
+    /// The wire tag of this variant — the `"kind"` field of the JSON
+    /// encoding, and the vocabulary of `docs/SERVICE.md`'s sweep op.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Perturbation::Identity => "identity",
+            Perturbation::Fraction(_) => "fraction",
+            Perturbation::LinkRateScale(_) => "link_rate_scale",
+            Perturbation::InputScale(_) => "input_scale",
+            Perturbation::CpuScale(_) => "cpu_scale",
+            Perturbation::Task1CpuScale(_) => "task1_cpu_scale",
+            Perturbation::Task2TimeScale(_) => "task2_time_scale",
+            Perturbation::Task3TimeScale(_) => "task3_time_scale",
+            Perturbation::Task2Burst => "task2_burst",
+        }
+    }
+
+    /// The numeric payload (`None` for the valueless `identity` /
+    /// `task2_burst` kinds).
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            Perturbation::Identity | Perturbation::Task2Burst => None,
+            Perturbation::Fraction(v)
+            | Perturbation::LinkRateScale(v)
+            | Perturbation::InputScale(v)
+            | Perturbation::CpuScale(v)
+            | Perturbation::Task1CpuScale(v)
+            | Perturbation::Task2TimeScale(v)
+            | Perturbation::Task3TimeScale(v) => Some(*v),
+        }
+    }
+
+    /// The wire encoding: `{"kind": "...", "value": x}` (`value` omitted
+    /// for valueless kinds). [`Perturbation::from_json`] inverts it
+    /// bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        match self.value() {
+            Some(v) => Json::obj(vec![
+                ("kind", Json::Str(self.kind().to_string())),
+                ("value", Json::Num(v)),
+            ]),
+            None => Json::obj(vec![("kind", Json::Str(self.kind().to_string()))]),
+        }
+    }
+
+    /// Decode the wire encoding. Unknown kinds and missing/non-numeric
+    /// values are `Err` (the API boundary maps them to a structured
+    /// `bad_request`) — never a panic.
+    pub fn from_json(j: &Json) -> Result<Perturbation, String> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| "perturbation needs a string 'kind' field".to_string())?;
+        let value = || {
+            j.get("value")
+                .as_f64()
+                .ok_or_else(|| format!("perturbation kind '{kind}' needs a numeric 'value' field"))
+        };
+        Ok(match kind {
+            "identity" => Perturbation::Identity,
+            "fraction" => Perturbation::Fraction(value()?),
+            "link_rate_scale" => Perturbation::LinkRateScale(value()?),
+            "input_scale" => Perturbation::InputScale(value()?),
+            "cpu_scale" => Perturbation::CpuScale(value()?),
+            "task1_cpu_scale" => Perturbation::Task1CpuScale(value()?),
+            "task2_time_scale" => Perturbation::Task2TimeScale(value()?),
+            "task3_time_scale" => Perturbation::Task3TimeScale(value()?),
+            "task2_burst" => Perturbation::Task2Burst,
+            other => return Err(format!("unknown perturbation kind '{other}'")),
+        })
+    }
+
     /// The set of nodes whose analyses this perturbation can change — the
     /// perturbation's *seed* nodes plus their downstream dependency cone
     /// ([`Workflow::downstream_closure`]). Pool-level knobs (fraction, link
@@ -120,6 +196,7 @@ impl Perturbation {
     /// sweep planner can count on the cache serving them.
     pub fn dirty_set(&self, wf: &Workflow, nodes: &VideoNodes) -> NodeSet {
         let seeds: Vec<usize> = match self {
+            Perturbation::Identity => vec![],
             // pool knobs couple every consumer of the link pool
             Perturbation::Fraction(_) | Perturbation::LinkRateScale(_) => {
                 wf.pool_consumers()[nodes.link_pool].clone()
@@ -163,6 +240,7 @@ impl VideoScenario {
     pub fn perturbed(&self, p: &Perturbation) -> VideoScenario {
         let mut sc = self.clone();
         match *p {
+            Perturbation::Identity => {}
             Perturbation::Fraction(f) => sc.frac_task1 = f,
             Perturbation::LinkRateScale(s) => sc.link_rate *= s,
             Perturbation::InputScale(s) => {
@@ -321,6 +399,9 @@ pub struct GenomicsScenario {
     pub cores: f64,
     /// Ingest-link fraction initially assigned to sample 0.
     pub frac_sample1: f64,
+    /// Multiplier on every task's CPU-seconds cost (the
+    /// [`Perturbation::CpuScale`] knob).
+    pub cpu_scale: f64,
 }
 
 impl Default for GenomicsScenario {
@@ -333,6 +414,7 @@ impl Default for GenomicsScenario {
             link_rate: 100e6,
             cores: 8.0,
             frac_sample1: 0.5,
+            cpu_scale: 1.0,
         }
     }
 }
@@ -341,6 +423,52 @@ impl GenomicsScenario {
     pub fn with_fraction(mut self, f: f64) -> Self {
         self.frac_sample1 = f;
         self
+    }
+
+    /// Apply one sweep perturbation. The genomics model exposes the
+    /// *generic* knobs — `identity`, `fraction` (ingest-link split),
+    /// `link_rate_scale` (ingest pool capacity), `input_scale` (sample
+    /// volume) and `cpu_scale` (CPU-seconds cost) — and rejects the
+    /// video-specific per-task knobs with a descriptive `Err` the API
+    /// boundary turns into a structured `bad_request`.
+    pub fn perturbed(&self, p: &Perturbation) -> Result<GenomicsScenario, String> {
+        let mut sc = self.clone();
+        match *p {
+            Perturbation::Identity => {}
+            Perturbation::Fraction(f) => sc.frac_sample1 = f,
+            Perturbation::LinkRateScale(s) => sc.link_rate *= s,
+            Perturbation::InputScale(s) => {
+                sc.sample_bytes *= s;
+                sc.filtered_bytes *= s;
+                sc.bam_bytes *= s;
+                sc.vcf_bytes *= s;
+            }
+            Perturbation::CpuScale(s) => sc.cpu_scale *= s,
+            other => {
+                return Err(format!(
+                    "perturbation '{}' applies to the video workflow only",
+                    other.kind()
+                ))
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Planner hint (ordering only — supersets are always safe, results
+    /// never depend on it): nodes whose analyses `p` can change in the
+    /// built workflow. Pool knobs dirty that pool's consumers plus their
+    /// cones; the global scale knobs dirty everything.
+    pub fn dirty_nodes(&self, wf: &Workflow, p: &Perturbation) -> NodeSet {
+        // pool ids by construction order in `build`: 0 = ingest-link, 1 = cpu
+        let seeds: Vec<usize> = match p {
+            Perturbation::Identity => vec![],
+            Perturbation::Fraction(_) | Perturbation::LinkRateScale(_) => {
+                wf.pool_consumers()[0].clone()
+            }
+            Perturbation::CpuScale(_) => wf.pool_consumers()[1].clone(),
+            _ => (0..wf.nodes.len()).collect(),
+        };
+        wf.downstream_closure(&seeds)
     }
 
     /// Build the 8-process workflow (2 × ingest/qc/align + call + report).
@@ -372,7 +500,7 @@ impl GenomicsScenario {
 
             let qc = ProcessBuilder::new(&format!("qc-s{s}"), self.filtered_bytes)
                 .stream_data("raw", self.sample_bytes)
-                .stream_resource("cpu", 120.0)
+                .stream_resource("cpu", 120.0 * self.cpu_scale)
                 .identity_output("filtered")
                 .build();
             let qc_n = wf.add_node(
@@ -390,7 +518,7 @@ impl GenomicsScenario {
 
             let align = ProcessBuilder::new(&format!("align-s{s}"), self.bam_bytes)
                 .burst_data("filtered", self.filtered_bytes)
-                .stream_resource("cpu", 600.0)
+                .stream_resource("cpu", 600.0 * self.cpu_scale)
                 .identity_output("bam")
                 .build();
             let align_n = wf.add_node(
@@ -411,7 +539,7 @@ impl GenomicsScenario {
         let call = ProcessBuilder::new("call-variants", self.vcf_bytes)
             .burst_data("bam0", self.bam_bytes)
             .burst_data("bam1", self.bam_bytes)
-            .stream_resource("cpu", 300.0)
+            .stream_resource("cpu", 300.0 * self.cpu_scale)
             .identity_output("vcf")
             .build();
         let call_n = wf.add_node(
@@ -438,7 +566,7 @@ impl GenomicsScenario {
 
         let report = ProcessBuilder::new("report", 1e6)
             .stream_data("vcf", self.vcf_bytes)
-            .stream_resource("cpu", 5.0)
+            .stream_resource("cpu", 5.0 * self.cpu_scale)
             .identity_output("html")
             .build();
         wf.add_node(
@@ -584,8 +712,83 @@ mod tests {
         let t3 = base.perturbed(&Perturbation::Task3TimeScale(2.0));
         assert!((t3.t3_time - 6.0).abs() < 1e-9);
 
+        // identity is a pure no-op
+        let id = base.perturbed(&Perturbation::Identity);
+        assert_eq!(id.frac_task1, base.frac_task1);
+        assert_eq!(id.t1_cpu, base.t1_cpu);
+
         // base untouched throughout
         assert_eq!(base.frac_task1, 0.5);
+    }
+
+    /// Every variant survives `to_json` → `from_json` bit-for-bit
+    /// (including non-representable-in-short-decimal payloads — the f64
+    /// `Display` impl round-trips exactly).
+    #[test]
+    fn perturbation_json_roundtrip_all_variants() {
+        let all = [
+            Perturbation::Identity,
+            Perturbation::Fraction(0.9300000000000001),
+            Perturbation::LinkRateScale(1.5),
+            Perturbation::InputScale(10.0),
+            Perturbation::CpuScale(0.123456789012345),
+            Perturbation::Task1CpuScale(2.0),
+            Perturbation::Task2TimeScale(0.5),
+            Perturbation::Task3TimeScale(1.0 / 3.0),
+            Perturbation::Task2Burst,
+        ];
+        for p in all {
+            let text = p.to_json().to_string();
+            let back = Perturbation::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(p, back, "{text}");
+            // the wire tag matches the documented vocabulary
+            assert_eq!(p.to_json().get("kind").as_str(), Some(p.kind()));
+        }
+    }
+
+    /// Malformed encodings are descriptive `Err`s, never panics.
+    #[test]
+    fn perturbation_from_json_rejects_unknowns() {
+        let cases = [
+            (r#"{"kind": "warp_speed"}"#, "unknown perturbation kind"),
+            (r#"{"value": 1}"#, "string 'kind'"),
+            (r#"{"kind": "fraction"}"#, "numeric 'value'"),
+            (r#"{"kind": "fraction", "value": "x"}"#, "numeric 'value'"),
+            ("3", "string 'kind'"),
+        ];
+        for (text, want) in cases {
+            let err = Perturbation::from_json(&Json::parse(text).unwrap()).unwrap_err();
+            assert!(err.contains(want), "{text}: {err}");
+        }
+    }
+
+    /// The genomics model exposes the generic knobs and rejects the
+    /// video-specific ones.
+    #[test]
+    fn genomics_perturbations() {
+        let base = GenomicsScenario::default();
+        let l = base.perturbed(&Perturbation::LinkRateScale(2.0)).unwrap();
+        assert!((l.link_rate - 2.0 * base.link_rate).abs() < 1e-6);
+        let f = base.perturbed(&Perturbation::Fraction(0.8)).unwrap();
+        assert_eq!(f.frac_sample1, 0.8);
+        let c = base.perturbed(&Perturbation::CpuScale(0.5)).unwrap();
+        assert!((c.cpu_scale - 0.5).abs() < 1e-12);
+        let i = base.perturbed(&Perturbation::InputScale(2.0)).unwrap();
+        assert!((i.sample_bytes - 2.0 * base.sample_bytes).abs() < 1.0);
+        let id = base.perturbed(&Perturbation::Identity).unwrap();
+        assert_eq!(id.link_rate, base.link_rate);
+        let err = base.perturbed(&Perturbation::Task1CpuScale(2.0)).unwrap_err();
+        assert!(err.contains("task1_cpu_scale"), "{err}");
+
+        // the CPU knob actually moves the genomics makespan
+        let mk = |sc: &GenomicsScenario| {
+            analyze_fixpoint(&sc.build(), &SolverOpts::default(), 6)
+                .unwrap()
+                .makespan
+                .unwrap()
+        };
+        let slow = base.perturbed(&Perturbation::CpuScale(2.0)).unwrap();
+        assert!(mk(&slow) > mk(&base), "cpu_scale must slow the pipeline");
     }
 
     /// Dirty-set coverage, one assertion per perturbation variant. The
@@ -637,6 +840,8 @@ mod tests {
             members(&Perturbation::Task2Burst),
             vec![nodes.task2, nodes.task3]
         );
+        // identity dirties nothing — every node is served from the cache
+        assert!(members(&Perturbation::Identity).is_empty());
     }
 
     /// Single-task perturbations actually move the makespan the way their

@@ -1,6 +1,7 @@
 //! Cross-module integration tests: spec → engine → testbed → DES → service,
 //! all on the same workloads.
 
+use bottlemod::api::{Request, Response};
 use bottlemod::coordinator::service::{run_job, Job};
 use bottlemod::des;
 use bottlemod::solver::SolverOpts;
@@ -21,16 +22,20 @@ fn example_spec_through_service() {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/specs/video.json"),
     )
     .expect("examples/specs/video.json");
-    let r = run_job(&Job::Analyze { id: 1, spec });
-    let mk = r.payload.get("makespan").as_f64().expect("makespan");
+    let r = run_job(&Job {
+        id: 1,
+        request: Request::Analyze { spec },
+    });
+    let res = match r.outcome.expect("analysis succeeds") {
+        Response::Analyze(a) => a,
+        other => panic!("unexpected response {other:?}"),
+    };
+    let mk = res.makespan.expect("makespan");
     assert!(close(mk, 263.0, 2.0), "{mk}");
     // the schedule includes all five processes
-    assert_eq!(r.payload.get("schedule").as_arr().unwrap().len(), 5);
+    assert_eq!(res.schedule.len(), 5);
     // at 50:50 the dominant early bottleneck is the shared link
-    let bt = r.payload.get("bottlenecks").as_arr().unwrap();
-    assert!(bt
-        .iter()
-        .any(|b| b.get("bottleneck").as_str() == Some("res:link")));
+    assert!(res.bottlenecks.iter().any(|b| b.bottleneck == "res:link"));
 }
 
 /// Prediction, fluid execution and concrete testbed agree across fractions.

@@ -1,0 +1,358 @@
+//! Golden tests for the wire protocol (`docs/SERVICE.md`).
+//!
+//! The table-driven half pins *exact* response bytes for the
+//! protocol-shape cases — valid v1, legacy v0, malformed JSON, unknown
+//! ops, wrong-typed fields — relying on the serializer's determinism
+//! (sorted keys via `Json::obj`, integer-clean number formatting). The
+//! structural half exercises the solver-dependent ops (analyze / generic
+//! sweep / calibrate / batch), asserting shapes and values rather than
+//! bytes.
+//!
+//! The same protocol-shape corpus is embedded in `docs/SERVICE.md` as
+//! `>>` / `<<` lines; the `protocol-conformance` CI step pipes those
+//! through a live `bottlemod serve` so the docs cannot drift either.
+
+use bottlemod::coordinator::service::serve_stdio;
+use bottlemod::util::Json;
+
+// Mirrors `api::test_fixtures::TINY_SPEC` (cfg(test) lib items are not
+// visible to integration tests): a one-process spec solving to makespan 5.
+const TINY_SPEC: &str = r#"{
+  "processes": [
+    {"name": "a", "max_progress": 10.0,
+     "data": [{"req": {"type": "stream", "total": 10.0},
+               "source": {"external_constant": 10.0}}],
+     "resources": [{"req": {"type": "stream", "total": 5.0},
+                    "source": {"constant": 1.0}}],
+     "outputs": [{"name": "out", "type": "identity"}]}
+  ]
+}"#;
+
+// Mirrors `api::test_fixtures::CHAIN_TSV`.
+const CHAIN_TSV: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+    dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+    enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+
+/// Drive `serve_stdio` with one request per line; parsed responses back.
+fn serve(lines: &[String]) -> Vec<Json> {
+    let input: String = lines.iter().map(|l| format!("{l}\n")).collect();
+    let mut out = Vec::new();
+    serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let responses: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(responses.len(), lines.len(), "one response per request");
+    responses
+}
+
+fn serve_one(line: &str) -> Json {
+    serve(&[line.to_string()]).remove(0)
+}
+
+/// Exact response bytes for every protocol-shape case. This is the same
+/// corpus `docs/SERVICE.md` embeds for the conformance CI step.
+#[test]
+fn protocol_golden_table() {
+    let cases: &[(&str, &str)] = &[
+        // valid v1
+        (
+            r#"{"v": 1, "id": 1, "op": "ping"}"#,
+            r#"{"id":1,"ok":true,"result":{"pong":true},"v":1}"#,
+        ),
+        // legacy v0: flat shape, tagged deprecated
+        (
+            r#"{"op": "ping", "id": 8}"#,
+            r#"{"deprecated":true,"id":8,"pong":true}"#,
+        ),
+        // malformed JSON: structured error, id echoed as null
+        (
+            "nope",
+            r#"{"error":{"code":"bad_request","message":"bad request: json error at byte 0: expected 'null'"},"id":null,"ok":false,"v":1}"#,
+        ),
+        // unknown v1 op
+        (
+            r#"{"v": 1, "id": 2, "op": "frobnicate"}"#,
+            r#"{"error":{"code":"unknown_op","message":"unknown op \"frobnicate\""},"id":2,"ok":false,"v":1}"#,
+        ),
+        // missing id (v1)
+        (
+            r#"{"v": 1, "op": "ping"}"#,
+            r#"{"error":{"code":"bad_request","message":"request 'id' must be a non-negative integer"},"id":null,"ok":false,"v":1}"#,
+        ),
+        // missing id (legacy shim enforces it too, in the v0 dialect)
+        (
+            r#"{"op": "ping"}"#,
+            r#"{"deprecated":true,"error":"request 'id' must be a non-negative integer","id":null}"#,
+        ),
+        // protocol version from the future
+        (
+            r#"{"v": 9, "id": 3, "op": "ping"}"#,
+            r#"{"error":{"code":"unsupported_version","message":"unsupported protocol version 9 (supported: 1)"},"id":3,"ok":false,"v":1}"#,
+        ),
+        // unknown legacy op keeps the historical message text
+        (
+            r#"{"id": 9, "op": "nope"}"#,
+            r#"{"deprecated":true,"error":"unknown op Some(\"nope\")","id":9}"#,
+        ),
+        // batch of pings through the worker pool
+        (
+            r#"{"v": 1, "id": 4, "op": "batch", "requests": [{"op": "ping"}, {"op": "ping"}]}"#,
+            r#"{"id":4,"ok":true,"result":{"results":[{"ok":true,"result":{"pong":true}},{"ok":true,"result":{"pong":true}}]},"v":1}"#,
+        ),
+        // wrong-typed field
+        (
+            r#"{"v": 1, "id": 5, "op": "sweep", "perturbations": "nope"}"#,
+            r#"{"error":{"code":"bad_request","message":"'perturbations' must be an array"},"id":5,"ok":false,"v":1}"#,
+        ),
+        // unknown perturbation kind: bad_request with the offending index
+        (
+            r#"{"v": 1, "id": 6, "op": "sweep", "workflow": "genomics", "perturbations": [{"kind": "warp"}]}"#,
+            r#"{"error":{"code":"bad_request","detail":{"index":0},"message":"unknown perturbation kind 'warp'"},"id":6,"ok":false,"v":1}"#,
+        ),
+        // a knob the selected workflow does not expose
+        (
+            r#"{"v": 1, "id": 7, "op": "sweep", "workflow": "genomics", "perturbations": [{"kind": "task1_cpu_scale", "value": 2}]}"#,
+            r#"{"error":{"code":"bad_request","message":"perturbation 'task1_cpu_scale' applies to the video workflow only"},"id":7,"ok":false,"v":1}"#,
+        ),
+        // legacy empty sweep keeps its historical error text
+        (
+            r#"{"id": 10, "op": "sweep", "fractions": []}"#,
+            r#"{"deprecated":true,"error":"sweep needs at least one fraction","id":10}"#,
+        ),
+    ];
+    let lines: Vec<String> = cases.iter().map(|c| c.0.to_string()).collect();
+    let input: String = lines.iter().map(|l| format!("{l}\n")).collect();
+    let mut out = Vec::new();
+    serve_stdio(std::io::Cursor::new(input), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let got: Vec<&str> = text.lines().collect();
+    assert_eq!(got.len(), cases.len());
+    for ((req, want), got) in cases.iter().zip(got) {
+        assert_eq!(got, *want, "request: {req}");
+    }
+}
+
+/// A v1 analyze round-trip: envelope, id echo, result payload.
+#[test]
+fn v1_analyze() {
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(42.0)),
+        ("op", Json::Str("analyze".into())),
+        ("spec", Json::parse(TINY_SPEC).unwrap()),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("v").as_f64(), Some(1.0));
+    assert_eq!(resp.get("id").as_f64(), Some(42.0));
+    assert_eq!(resp.get("ok").as_bool(), Some(true));
+    assert_eq!(resp.get("deprecated"), &Json::Null, "v1 is not deprecated");
+    let r = resp.get("result");
+    assert!((r.get("makespan").as_f64().unwrap() - 5.0).abs() < 1e-6);
+    assert_eq!(r.get("schedule").as_arr().unwrap().len(), 1);
+}
+
+/// The acceptance scenario on the wire: a generic sweep over the genomics
+/// workflow with a non-fraction (pool-capacity) perturbation returns the
+/// ranked bottleneck report with cache stats.
+#[test]
+fn v1_generic_sweep_genomics_pool_knob() {
+    let line = r#"{"v": 1, "id": 11, "op": "sweep", "workflow": "genomics", "perturbations": [{"kind": "link_rate_scale", "value": 2}, {"kind": "identity"}]}"#;
+    let resp = serve_one(line);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let r = resp.get("result");
+    assert_eq!(r.get("workflow").as_str(), Some("genomics"));
+    let makespans = r.get("makespans").as_arr().unwrap();
+    assert_eq!(makespans.len(), 2);
+    assert!(makespans.iter().all(|m| m.as_f64().is_some()));
+    // perturbations echoed in order
+    let ps = r.get("perturbations").as_arr().unwrap();
+    assert_eq!(ps[0].get("kind").as_str(), Some("link_rate_scale"));
+    assert_eq!(ps[1].get("kind").as_str(), Some("identity"));
+    // ranked report + per-request cache stats
+    assert!(!r.get("ranked_bottlenecks").as_arr().unwrap().is_empty());
+    assert!(r.get("cache").get("misses").as_f64().is_some());
+    // best points into the batch
+    let best = r.get("best");
+    assert!(best.get("index").as_f64().is_some());
+    assert!(best.get("makespan").as_f64().is_some());
+}
+
+/// Sweeping an inline spec under identity: the generic engine as a cached
+/// analyzer for arbitrary workflows.
+#[test]
+fn v1_sweep_inline_spec() {
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(12.0)),
+        ("op", Json::Str("sweep".into())),
+        (
+            "workflow",
+            Json::obj(vec![("spec", Json::parse(TINY_SPEC).unwrap())]),
+        ),
+        (
+            "perturbations",
+            Json::Arr(vec![Json::obj(vec![("kind", Json::Str("identity".into()))])]),
+        ),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let r = resp.get("result");
+    assert_eq!(r.get("workflow").as_str(), Some("spec"));
+    let mk = r.get("makespans").as_arr().unwrap()[0].as_f64().unwrap();
+    assert!((mk - 5.0).abs() < 1e-6, "{mk}");
+    // a video-only knob on a fixed workflow is a bad request
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(13.0)),
+        ("op", Json::Str("sweep".into())),
+        (
+            "workflow",
+            Json::obj(vec![("spec", Json::parse(TINY_SPEC).unwrap())]),
+        ),
+        (
+            "perturbations",
+            Json::Arr(vec![Json::obj(vec![
+                ("kind", Json::Str("fraction".into())),
+                ("value", Json::Num(0.5)),
+            ])]),
+        ),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert_eq!(resp.get("error").get("code").as_str(), Some("bad_request"));
+}
+
+/// v1 calibrate, including the new `tol` override; wrong-typed `tol` is a
+/// structured bad request.
+#[test]
+fn v1_calibrate_with_tol() {
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(14.0)),
+        ("op", Json::Str("calibrate".into())),
+        ("tsv", Json::Str(CHAIN_TSV.into())),
+        ("tol", Json::Num(0.05)),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let r = resp.get("result");
+    assert_eq!(r.get("tasks").as_arr().unwrap().len(), 2);
+    assert!(r.get("max_rel_err").as_f64().unwrap() < 0.01);
+
+    let bad = serve_one(
+        r#"{"v": 1, "id": 15, "op": "calibrate", "tsv": "x", "tol": "tight"}"#,
+    );
+    assert_eq!(bad.get("ok").as_bool(), Some(false));
+    assert!(bad
+        .get("error")
+        .get("message")
+        .as_str()
+        .unwrap()
+        .contains("tol"));
+}
+
+/// A heterogeneous batch through the pool: per-item outcomes in
+/// submission order, failures isolated per item.
+#[test]
+fn v1_batch_heterogeneous() {
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(16.0)),
+        ("op", Json::Str("batch".into())),
+        (
+            "requests",
+            Json::Arr(vec![
+                Json::obj(vec![("op", Json::Str("ping".into()))]),
+                Json::obj(vec![
+                    ("op", Json::Str("analyze".into())),
+                    ("spec", Json::parse(TINY_SPEC).unwrap()),
+                ]),
+                Json::obj(vec![
+                    ("op", Json::Str("analyze".into())),
+                    ("spec", Json::obj(vec![])),
+                ]),
+                Json::obj(vec![
+                    ("op", Json::Str("sweep".into())),
+                    ("fractions", Json::arr_f64(&[0.5, 0.93])),
+                ]),
+            ]),
+        ),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let results = resp.get("result").get("results").as_arr().unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(results[0].get("ok").as_bool(), Some(true));
+    assert_eq!(results[0].get("result").get("pong").as_bool(), Some(true));
+    let mk = results[1].get("result").get("makespan").as_f64().unwrap();
+    assert!((mk - 5.0).abs() < 1e-6);
+    assert_eq!(results[2].get("ok").as_bool(), Some(false));
+    assert_eq!(
+        results[2].get("error").get("code").as_str(),
+        Some("invalid_spec")
+    );
+    // the sweep item uses the generic v1 result shape
+    let sweep = results[3].get("result");
+    assert_eq!(sweep.get("workflow").as_str(), Some("video"));
+    assert_eq!(sweep.get("makespans").as_arr().unwrap().len(), 2);
+    assert_eq!(sweep.get("best").get("index").as_f64(), Some(1.0));
+}
+
+/// The legacy requests documented in the pre-v1 `docs/SERVICE.md` still
+/// round-trip, with their historical response fields, tagged deprecated.
+#[test]
+fn legacy_docs_requests_roundtrip() {
+    // old docs: analyze with a spec object
+    let analyze = Json::obj(vec![
+        ("id", Json::Num(1.0)),
+        ("op", Json::Str("analyze".into())),
+        ("spec", Json::parse(TINY_SPEC).unwrap()),
+    ]);
+    // old docs: sweep with explicit fractions
+    let sweep = r#"{"id": 2, "op": "sweep", "fractions": [0.25, 0.5, 0.75, 0.93]}"#;
+    // old docs: calibrate with tsv text
+    let calibrate = Json::obj(vec![
+        ("id", Json::Num(3.0)),
+        ("op", Json::Str("calibrate".into())),
+        ("tsv", Json::Str(CHAIN_TSV.into())),
+    ]);
+    let resp = serve(&[
+        analyze.to_string(),
+        sweep.to_string(),
+        calibrate.to_string(),
+    ]);
+
+    let a = &resp[0];
+    assert_eq!(a.get("id").as_f64(), Some(1.0));
+    assert_eq!(a.get("deprecated").as_bool(), Some(true));
+    assert!((a.get("makespan").as_f64().unwrap() - 5.0).abs() < 1e-6);
+    assert_eq!(a.get("schedule").as_arr().unwrap().len(), 1);
+
+    let s = &resp[1];
+    assert_eq!(s.get("id").as_f64(), Some(2.0));
+    assert_eq!(s.get("deprecated").as_bool(), Some(true));
+    assert_eq!(s.get("fractions").as_arr().unwrap().len(), 4);
+    assert_eq!(s.get("totals").as_arr().unwrap().len(), 4);
+    assert!((s.get("best_fraction").as_f64().unwrap() - 0.93).abs() < 1e-9);
+    assert!(s.get("best_total").as_f64().unwrap() > 0.0);
+    assert!(!s.get("ranked_bottlenecks").as_arr().unwrap().is_empty());
+    assert!(s.get("cache").get("hit_rate").as_f64().is_some());
+
+    let c = &resp[2];
+    assert_eq!(c.get("id").as_f64(), Some(3.0));
+    assert_eq!(c.get("deprecated").as_bool(), Some(true));
+    assert_eq!(c.get("tasks").as_arr().unwrap().len(), 2);
+    assert!(c.get("max_rel_err").as_f64().unwrap() < 0.01);
+}
+
+/// Error responses echo the request id whenever it was decodable.
+#[test]
+fn errors_echo_the_id() {
+    // a v1 analyze with a missing spec
+    let resp = serve_one(r#"{"v": 1, "id": 77, "op": "analyze"}"#);
+    assert_eq!(resp.get("id").as_f64(), Some(77.0));
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    // fractional ids are rejected and echoed as null
+    let resp = serve_one(r#"{"v": 1, "id": 7.5, "op": "ping"}"#);
+    assert_eq!(resp.get("id"), &Json::Null);
+    assert_eq!(resp.get("error").get("code").as_str(), Some("bad_request"));
+}

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Protocol conformance: every `>> request` / `<< response` pair embedded in
+# docs/SERVICE.md is piped through a live `bottlemod serve` and the output
+# diffed byte-for-byte, so the documented wire format cannot drift from the
+# implementation.
+#
+# Usage (from the repo root, after `cargo build --release`):
+#   bash scripts/protocol_conformance.sh [path/to/SERVICE.md]
+# BOTTLEMOD_BIN overrides the binary under test.
+set -euo pipefail
+
+doc=${1:-docs/SERVICE.md}
+bin=${BOTTLEMOD_BIN:-target/release/bottlemod}
+
+if [ ! -x "$bin" ]; then
+    echo "error: '$bin' is not built (run: cargo build --release)" >&2
+    exit 1
+fi
+
+tmp=$(mktemp -d)
+trap 'rm -rf "$tmp"' EXIT
+
+sed -n 's/^>> //p' "$doc" > "$tmp/requests.jsonl"
+sed -n 's/^<< //p' "$doc" > "$tmp/expected.jsonl"
+
+req_n=$(wc -l < "$tmp/requests.jsonl")
+exp_n=$(wc -l < "$tmp/expected.jsonl")
+if [ "$req_n" -eq 0 ]; then
+    echo "error: no '>>' conformance examples found in $doc" >&2
+    exit 1
+fi
+if [ "$req_n" -ne "$exp_n" ]; then
+    echo "error: $doc has $req_n '>>' requests but $exp_n '<<' responses" >&2
+    exit 1
+fi
+
+# single-threaded for fully deterministic cache counters (not that the
+# corpus includes any — belt and braces)
+BOTTLEMOD_THREADS=1 "$bin" serve < "$tmp/requests.jsonl" > "$tmp/got.jsonl"
+
+if ! diff -u "$tmp/expected.jsonl" "$tmp/got.jsonl"; then
+    echo "protocol conformance FAILED: $doc drifted from the live wire format" >&2
+    exit 1
+fi
+echo "protocol conformance OK: $req_n documented exchanges match the live server"
