@@ -1,0 +1,303 @@
+//! Multi-session service load: 8 concurrent TCP sessions drive ≥ 1 000
+//! mixed requests (ping / analyze / sweep / calibrate) through one shared
+//! worker pool, recording client-observed p50/p99 latency; a second phase
+//! points 8 simultaneous sweeps at a 1-worker / 1-deep queue and checks
+//! that admission control answers with structured `overloaded` errors
+//! instead of hanging. Session caches run under a small entry quota so
+//! eviction is exercised under load.
+//!
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines).
+//!
+//! Run: `cargo bench --bench service_load`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use bottlemod::coordinator::{ServeOpts, Server};
+use bottlemod::util::harness::write_bench_artifact;
+use bottlemod::util::json::Json;
+use bottlemod::util::stats::fmt_duration;
+
+const SESSIONS: usize = 8;
+const REQUESTS_PER_SESSION: usize = 150; // 1 200 total across the fleet
+const CACHE_QUOTA_ENTRIES: usize = 128;
+const OVERLOAD_ROUNDS: usize = 5;
+
+// Mirrors `api::test_fixtures::TINY_SPEC`: one process, makespan 5.
+const TINY_SPEC: &str = r#"{
+  "processes": [
+    {"name": "a", "max_progress": 10.0,
+     "data": [{"req": {"type": "stream", "total": 10.0},
+               "source": {"external_constant": 10.0}}],
+     "resources": [{"req": {"type": "stream", "total": 5.0},
+                    "source": {"constant": 1.0}}],
+     "outputs": [{"name": "out", "type": "identity"}]}
+  ]
+}"#;
+
+// Mirrors `api::test_fixtures::CHAIN_TSV`: dl (10 s) → enc (20 s).
+const CHAIN_TSV: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+    dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+    enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).expect("connect");
+        writer
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .expect("read timeout");
+        let reader = BufReader::new(writer.try_clone().expect("clone"));
+        Client { reader, writer }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("recv");
+        Json::parse(resp.trim()).expect("response parses")
+    }
+}
+
+fn v1(id: u64, op: &str, extra: Vec<(&str, Json)>) -> String {
+    let mut fields = vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(id as f64)),
+        ("op", Json::Str(op.into())),
+    ];
+    fields.extend(extra);
+    Json::obj(fields).to_string()
+}
+
+fn sweep_req(id: u64, fractions: &[f64]) -> String {
+    let ps = fractions
+        .iter()
+        .map(|&f| {
+            Json::obj(vec![
+                ("kind", Json::Str("fraction".into())),
+                ("value", Json::Num(f)),
+            ])
+        })
+        .collect();
+    v1(
+        id,
+        "sweep",
+        vec![
+            ("workflow", Json::Str("video".into())),
+            ("perturbations", Json::Arr(ps)),
+        ],
+    )
+}
+
+/// The mixed request stream of one session: 2/4 cheap ops, 1/4 analyze,
+/// 1/4 sweep over per-request-distinct fractions (distinctness is what
+/// pushes the quota'd session cache into eviction).
+fn mixed_request(session: usize, i: usize) -> String {
+    let id = (session * REQUESTS_PER_SESSION + i) as u64;
+    match i % 4 {
+        0 => v1(id, "ping", vec![]),
+        1 => v1(
+            id,
+            "analyze",
+            vec![("spec", Json::parse(TINY_SPEC).expect("spec parses"))],
+        ),
+        2 => {
+            let base = 0.05 + (id % 115) as f64 * 0.008;
+            sweep_req(id, &[base, base + 0.001, base + 0.002])
+        }
+        _ => v1(id, "calibrate", vec![("tsv", Json::Str(CHAIN_TSV.into()))]),
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+struct SessionOutcome {
+    latencies: Vec<f64>,
+    evictions: f64,
+    max_entries: f64,
+}
+
+fn load_phase(addr: SocketAddr) -> (Vec<f64>, f64, f64, f64) {
+    let barrier = Arc::new(Barrier::new(SESSIONS));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                barrier.wait();
+                let mut out = SessionOutcome {
+                    latencies: Vec::with_capacity(REQUESTS_PER_SESSION),
+                    evictions: 0.0,
+                    max_entries: 0.0,
+                };
+                for i in 0..REQUESTS_PER_SESSION {
+                    let line = mixed_request(s, i);
+                    let t = Instant::now();
+                    let resp = c.request(&line);
+                    out.latencies.push(t.elapsed().as_secs_f64());
+                    assert_eq!(
+                        resp.get("ok").as_bool(),
+                        Some(true),
+                        "request must succeed under nominal load: {resp:?}"
+                    );
+                    let cache = resp.get("result").get("cache");
+                    if let Some(e) = cache.get("evictions").as_f64() {
+                        out.evictions += e;
+                        let entries = cache.get("entries").as_f64().unwrap_or(0.0);
+                        out.max_entries = out.max_entries.max(entries);
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    let mut latencies = Vec::new();
+    let mut evictions = 0.0;
+    let mut max_entries = 0.0f64;
+    for h in handles {
+        let o = h.join().expect("no session panics");
+        latencies.extend(o.latencies);
+        evictions += o.evictions;
+        max_entries = max_entries.max(o.max_entries);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(f64::total_cmp);
+    (latencies, wall, evictions, max_entries)
+}
+
+fn overload_phase(addr: SocketAddr) -> (u32, u32) {
+    let barrier = Arc::new(Barrier::new(SESSIONS));
+    let handles: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                barrier.wait();
+                let (mut ok, mut overloaded) = (0u32, 0u32);
+                for r in 0..OVERLOAD_ROUNDS {
+                    let id = (s * OVERLOAD_ROUNDS + r) as u64;
+                    let resp = c.request(&sweep_req(id, &[0.25, 0.5, 0.75, 0.93]));
+                    if resp.get("ok").as_bool() == Some(true) {
+                        ok += 1;
+                    } else {
+                        assert_eq!(
+                            resp.get("error").get("code").as_str(),
+                            Some("overloaded"),
+                            "the only expected failure is admission control: {resp:?}"
+                        );
+                        overloaded += 1;
+                    }
+                }
+                (ok, overloaded)
+            })
+        })
+        .collect();
+    let (mut ok, mut overloaded) = (0, 0);
+    for h in handles {
+        let (o, v) = h.join().expect("no session panics");
+        ok += o;
+        overloaded += v;
+    }
+    (ok, overloaded)
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+    let total = SESSIONS * REQUESTS_PER_SESSION;
+
+    // phase A: nominal load — deep queue, quota'd session caches
+    let mut server = Server::new(ServeOpts {
+        session_cache_entries: CACHE_QUOTA_ENTRIES,
+        ..ServeOpts::default()
+    });
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind");
+    let (latencies, wall, evictions, max_entries) = load_phase(addr);
+    server.shutdown();
+
+    let p50 = percentile(&latencies, 0.50);
+    let p99 = percentile(&latencies, 0.99);
+    let rps = total as f64 / wall;
+    println!(
+        "load: {total} mixed requests over {SESSIONS} sessions in {} ({rps:.0} req/s)",
+        fmt_duration(wall)
+    );
+    println!(
+        "latency: p50 {}, p99 {}, max {}",
+        fmt_duration(p50),
+        fmt_duration(p99),
+        fmt_duration(percentile(&latencies, 1.0))
+    );
+    println!(
+        "session caches: quota {CACHE_QUOTA_ENTRIES} entries, max resident {max_entries}, \
+         {evictions} evictions across the fleet"
+    );
+
+    // phase B: overload — 1 worker, 1-deep queue, 8 simultaneous sweeps
+    let mut server = Server::new(ServeOpts {
+        threads: 1,
+        queue_bound: 1,
+        ..ServeOpts::default()
+    });
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind");
+    let (ok, overloaded) = overload_phase(addr);
+    server.shutdown();
+    println!(
+        "overload: {} requests at queue bound 1 -> {ok} ok, {overloaded} overloaded, 0 hung",
+        ok + overloaded
+    );
+
+    let answered = latencies.len() == total;
+    let bounded = max_entries <= CACHE_QUOTA_ENTRIES as f64 && evictions > 0.0;
+    let sheds = overloaded >= 1 && ok >= 1;
+    if !no_assert {
+        assert!(answered, "every request must get exactly one response");
+        assert!(
+            bounded,
+            "session caches must stay within quota and actually evict \
+             (max {max_entries}, {evictions} evictions)"
+        );
+        assert!(
+            sheds,
+            "a saturated queue must shed load with `overloaded` ({ok} ok, {overloaded} shed)"
+        );
+    }
+    println!(
+        "acceptance: answered={answered} cache_bounded={bounded} load_shed={sheds}{}",
+        if no_assert { " (reported only)" } else { "" }
+    );
+
+    match write_bench_artifact(
+        "service",
+        vec![
+            ("sessions", Json::Num(SESSIONS as f64)),
+            ("requests", Json::Num(total as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("requests_per_s", Json::Num(rps)),
+            ("latency_p50_s", Json::Num(p50)),
+            ("latency_p99_s", Json::Num(p99)),
+            ("cache_quota_entries", Json::Num(CACHE_QUOTA_ENTRIES as f64)),
+            ("cache_max_entries", Json::Num(max_entries)),
+            ("cache_evictions", Json::Num(evictions)),
+            ("overload_ok", Json::Num(ok as f64)),
+            ("overload_shed", Json::Num(overloaded as f64)),
+        ],
+    ) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

@@ -30,6 +30,10 @@ pub enum ErrorCode {
     /// The model was well-formed but the analysis failed (e.g. a barrier
     /// dependency that never finishes).
     AnalysisFailed,
+    /// The server's bounded submission queue is full (admission control).
+    /// The request was *not* executed; retry after a backoff. Unlike
+    /// `internal` this is an expected, load-dependent outcome.
+    Overloaded,
     /// A server-side invariant broke. Never expected; file a bug.
     Internal,
 }
@@ -44,6 +48,7 @@ impl ErrorCode {
             ErrorCode::InvalidSpec => "invalid_spec",
             ErrorCode::InvalidTrace => "invalid_trace",
             ErrorCode::AnalysisFailed => "analysis_failed",
+            ErrorCode::Overloaded => "overloaded",
             ErrorCode::Internal => "internal",
         }
     }
@@ -118,6 +123,7 @@ mod tests {
         assert_eq!(ErrorCode::InvalidSpec.as_str(), "invalid_spec");
         assert_eq!(ErrorCode::InvalidTrace.as_str(), "invalid_trace");
         assert_eq!(ErrorCode::AnalysisFailed.as_str(), "analysis_failed");
+        assert_eq!(ErrorCode::Overloaded.as_str(), "overloaded");
         assert_eq!(ErrorCode::Internal.as_str(), "internal");
     }
 

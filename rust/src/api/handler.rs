@@ -7,9 +7,9 @@
 //! (`coordinator::service::serve_stdio`) and the worker pool all delegate
 //! here; none of them parses or assembles wire JSON of their own.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
-use crate::coordinator::service::{Coordinator, Job};
+use crate::coordinator::service::{Coordinator, Job, JobResult};
 use crate::model::spec::parse_workflow;
 use crate::runtime::cache::AnalysisCache;
 use crate::runtime::sweep::{FixedWorkflow, SweepBatch, SweepError, SweepModel};
@@ -28,14 +28,26 @@ use super::response::{
     encode, AnalyzeResult, CalibrateResult, Response, ScheduleRow, SegmentRow, SweepResult,
 };
 
+/// Where a handler's requests run.
+enum PoolMode {
+    /// CLI / single-session stdio: non-batch ops execute inline with the
+    /// machine's full solver fan-out; a private pool is created on the
+    /// first `batch` and kept for the handler's lifetime.
+    Lazy(Mutex<Option<Arc<Coordinator>>>),
+    /// One session of the multi-session server: every op is admitted
+    /// through the shared pool's bounded queue (a full queue returns
+    /// `overloaded` instead of blocking), so tenants compete for workers
+    /// instead of oversubscribing the machine.
+    Shared(Arc<Coordinator>),
+}
+
 /// Session-stateful API front end: one analysis cache (so repeat requests
 /// are answered incrementally, per the paper's §7 "repeatedly executed
-/// online" deployment) and one worker pool for `batch` requests, created
-/// on first use and kept for the handler's lifetime.
+/// online" deployment) and a [`PoolMode`] saying where requests run.
 pub struct ApiHandler {
     cache: Arc<AnalysisCache>,
     threads: usize,
-    pool: Mutex<Option<Coordinator>>,
+    pool: PoolMode,
 }
 
 impl Default for ApiHandler {
@@ -54,7 +66,18 @@ impl ApiHandler {
         ApiHandler {
             cache: Arc::new(AnalysisCache::new()),
             threads: threads.max(1),
-            pool: Mutex::new(None),
+            pool: PoolMode::Lazy(Mutex::new(None)),
+        }
+    }
+
+    /// A handler for one session of a multi-tenant server: `cache` is the
+    /// session's own (typically quota-bounded) cache, and every op runs
+    /// on the shared `pool` under its admission control.
+    pub fn for_session(pool: Arc<Coordinator>, cache: Arc<AnalysisCache>) -> ApiHandler {
+        ApiHandler {
+            cache,
+            threads: 1,
+            pool: PoolMode::Shared(pool),
         }
     }
 
@@ -63,12 +86,39 @@ impl ApiHandler {
         &self.cache
     }
 
-    /// Handle one typed request. `batch` fans out over the owned worker
-    /// pool; every other op executes inline on the caller's thread.
+    /// Handle one typed request. `batch` fans out over the worker pool;
+    /// other ops execute inline ([`PoolMode::Lazy`]) or as one pool job
+    /// ([`PoolMode::Shared`]).
     pub fn handle(&self, req: &Request) -> Result<Response, ApiError> {
         match req {
             Request::Batch { requests } => self.handle_batch(requests),
-            other => execute(other, &self.cache),
+            other => match &self.pool {
+                PoolMode::Shared(pool) => self.dispatch_one(pool, other),
+                PoolMode::Lazy(_) => execute(other, &self.cache),
+            },
+        }
+    }
+
+    /// Run one request as a pool job with a dedicated reply channel —
+    /// concurrent sessions sharing the pool cannot interleave results.
+    /// Admission-control rejections (`overloaded`) surface as the
+    /// request's outcome without ever blocking.
+    fn dispatch_one(&self, pool: &Coordinator, req: &Request) -> Result<Response, ApiError> {
+        let (rtx, rrx) = mpsc::channel::<JobResult>();
+        pool.submit_to(
+            Job {
+                id: 0,
+                request: req.clone(),
+            },
+            Some(Arc::clone(&self.cache)),
+            &rtx,
+        )?;
+        match rrx.recv() {
+            Ok(r) => r.outcome,
+            Err(_) => Err(ApiError::new(
+                ErrorCode::Internal,
+                "worker pool died before replying",
+            )),
         }
     }
 
@@ -82,26 +132,60 @@ impl ApiHandler {
         encode(wire.v, wire.id, &outcome)
     }
 
+    /// The pool `batch` fans out over: the shared server pool in session
+    /// mode, else a lazily-created private pool kept for the handler's
+    /// lifetime (recovering the slot's mutex if a prior caller panicked).
+    fn batch_pool(&self) -> Arc<Coordinator> {
+        match &self.pool {
+            PoolMode::Shared(pool) => Arc::clone(pool),
+            PoolMode::Lazy(slot) => {
+                let mut slot = slot.lock().unwrap_or_else(|e| e.into_inner());
+                Arc::clone(slot.get_or_insert_with(|| {
+                    Arc::new(Coordinator::with_cache(self.threads, Arc::clone(&self.cache)))
+                }))
+            }
+        }
+    }
+
     fn handle_batch(&self, requests: &[Request]) -> Result<Response, ApiError> {
         if requests.is_empty() {
             return Err(ApiError::bad_request("batch needs at least one request"));
         }
-        let mut pool = self
-            .pool
-            .lock()
-            .map_err(|_| ApiError::new(ErrorCode::Internal, "worker pool poisoned"))?;
-        let pool = pool
-            .get_or_insert_with(|| Coordinator::with_cache(self.threads, Arc::clone(&self.cache)));
+        let pool = self.batch_pool();
+        let (rtx, rrx) = mpsc::channel::<JobResult>();
+        let mut outcomes: Vec<Option<Result<Response, ApiError>>> = vec![None; requests.len()];
+        let mut pending = 0usize;
         for (i, req) in requests.iter().enumerate() {
-            pool.submit(Job {
+            let job = Job {
                 id: i as u64,
                 request: req.clone(),
-            });
+            };
+            // admission is per item: a full queue rejects this item with
+            // `overloaded` while already-admitted items still run
+            match pool.submit_to(job, Some(Arc::clone(&self.cache)), &rtx) {
+                Ok(()) => pending += 1,
+                Err(e) => outcomes[i] = Some(Err(e)),
+            }
         }
-        let mut results = pool.collect(requests.len());
-        results.sort_by_key(|r| r.id);
+        drop(rtx); // workers hold the only remaining senders
+        for _ in 0..pending {
+            match rrx.recv() {
+                Ok(r) => outcomes[r.id as usize] = Some(r.outcome),
+                Err(_) => break, // pool died; surviving slots stay None
+            }
+        }
         Ok(Response::Batch(
-            results.into_iter().map(|r| r.outcome).collect(),
+            outcomes
+                .into_iter()
+                .map(|slot| {
+                    slot.unwrap_or_else(|| {
+                        Err(ApiError::new(
+                            ErrorCode::Internal,
+                            "worker pool dropped a batch item",
+                        ))
+                    })
+                })
+                .collect(),
         ))
     }
 }

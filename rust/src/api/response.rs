@@ -105,6 +105,7 @@ fn cache_json(s: &CacheStats) -> Json {
         ("misses", Json::Num(s.misses as f64)),
         ("hit_rate", Json::Num(s.hit_rate())),
         ("entries", Json::Num(s.entries as f64)),
+        ("bytes", Json::Num(s.bytes as f64)),
         ("evictions", Json::Num(s.evictions as f64)),
     ])
 }

@@ -1,10 +1,13 @@
-//! L3 coordination: the batched scenario sweeps, the analysis service, and
-//! the figure/table exporters that regenerate the paper's evaluation.
+//! L3 coordination: the batched scenario sweeps, the analysis service
+//! (worker pool, stdio pump, multi-session socket server), and the
+//! figure/table exporters that regenerate the paper's evaluation.
 
 pub mod exporter;
+pub mod server;
 pub mod service;
 pub mod sweeper;
 
+pub use server::{ServeOpts, Server};
 pub use service::{Coordinator, Job, JobResult};
 pub use sweeper::{
     best_fraction, exact_sweep, exact_sweep_report, fig7_fractions, ExactSweep,

@@ -1,0 +1,319 @@
+//! Multi-session socket serving: line-delimited v1 protocol over TCP or a
+//! Unix socket, multiplexed onto one shared worker pool.
+//!
+//! `bottlemod serve` historically spoke to exactly one client over stdio.
+//! A [`Server`] keeps that protocol byte-for-byte identical but accepts
+//! many concurrent connections (`std::net` only — no new dependencies):
+//!
+//! * every connection is a **session**: its own thread, its own
+//!   [`ApiHandler`] and its own quota-bounded [`AnalysisCache`], so one
+//!   tenant's working set can neither read nor evict another's;
+//! * all sessions submit to one shared [`Coordinator`] pool through its
+//!   bounded queue — when the queue is full the session answers with a
+//!   structured `overloaded` error immediately (admission control: the
+//!   client gets a retryable signal, never a hang, and the server never
+//!   buffers without bound);
+//! * responses are written and flushed in request order per session —
+//!   each session pairs every submission with a dedicated reply channel,
+//!   so concurrent sessions cannot interleave each other's results;
+//! * [`Server::shutdown`] drains gracefully: stop accepting, let every
+//!   session finish its in-flight request and flush the response, then
+//!   join the pool's workers.
+//!
+//! Wire reference: `docs/SERVICE.md` ("Transports" section).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::ApiHandler;
+use crate::runtime::cache::AnalysisCache;
+use crate::util::par::num_threads;
+
+use super::service::{Coordinator, DEFAULT_QUEUE_BOUND};
+
+/// How often a blocked accept/read loop wakes to check the stop flag —
+/// the upper bound on how long a drain waits for an *idle* connection.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Configuration of a multi-session server.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Worker threads in the shared pool.
+    pub threads: usize,
+    /// Bound of the pool's submission queue (admission control).
+    pub queue_bound: usize,
+    /// Per-session cache quota: maximum resident entries.
+    pub session_cache_entries: usize,
+    /// Per-session cache quota: approximate maximum resident bytes.
+    pub session_cache_bytes: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            threads: num_threads(),
+            queue_bound: DEFAULT_QUEUE_BOUND,
+            session_cache_entries: 1 << 14,
+            session_cache_bytes: 256 << 20, // 256 MiB
+        }
+    }
+}
+
+impl ServeOpts {
+    fn session_cache(&self) -> Arc<AnalysisCache> {
+        Arc::new(AnalysisCache::with_quota(
+            self.session_cache_entries.max(1),
+            self.session_cache_bytes.max(1),
+        ))
+    }
+}
+
+/// A multi-session analysis server: shared worker pool, one listener
+/// thread per bound transport, one thread + quota'd cache per connection.
+pub struct Server {
+    pool: Arc<Coordinator>,
+    opts: ServeOpts,
+    stop: Arc<AtomicBool>,
+    listeners: Vec<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// A server with its worker pool already running; bind transports
+    /// with [`Server::listen_tcp`] / [`Server::listen_unix`].
+    pub fn new(opts: ServeOpts) -> Server {
+        // the pool's fallback cache (used only by handler-less submits)
+        // gets the same quota as a session
+        let pool = Arc::new(Coordinator::with_queue_bound(
+            opts.threads.max(1),
+            opts.session_cache(),
+            opts.queue_bound.max(1),
+        ));
+        Server {
+            pool,
+            opts,
+            stop: Arc::new(AtomicBool::new(false)),
+            listeners: Vec::new(),
+            sessions: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// A handler for one additional session (its own quota-bounded cache)
+    /// multiplexed onto the shared pool — how the CLI runs its stdio
+    /// session next to the socket listeners.
+    pub fn session_handler(&self) -> ApiHandler {
+        ApiHandler::for_session(Arc::clone(&self.pool), self.opts.session_cache())
+    }
+
+    /// Bind a TCP listener (e.g. `"127.0.0.1:4700"`, or port `0` to let
+    /// the OS pick) and start accepting sessions on a background thread.
+    /// Returns the bound address.
+    pub fn listen_tcp(&mut self, addr: &str) -> std::io::Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::clone(&self.stop);
+        let sessions = Arc::clone(&self.sessions);
+        let pool = Arc::clone(&self.pool);
+        let opts = self.opts.clone();
+        self.listeners.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let handler =
+                            ApiHandler::for_session(Arc::clone(&pool), opts.session_cache());
+                        let stop = Arc::clone(&stop);
+                        let h =
+                            std::thread::spawn(move || serve_tcp_session(handler, stream, stop));
+                        register_session(&sessions, h);
+                    }
+                    // WouldBlock (nothing to accept yet) and transient
+                    // accept errors both just wait for the next poll
+                    Err(_) => std::thread::sleep(POLL_INTERVAL),
+                }
+            }
+        }));
+        Ok(bound)
+    }
+
+    /// Bind a Unix-domain socket listener at `path` (removing a stale
+    /// socket file first) and start accepting sessions.
+    #[cfg(unix)]
+    pub fn listen_unix(&mut self, path: &str) -> std::io::Result<()> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::clone(&self.stop);
+        let sessions = Arc::clone(&self.sessions);
+        let pool = Arc::clone(&self.pool);
+        let opts = self.opts.clone();
+        self.listeners.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let handler =
+                            ApiHandler::for_session(Arc::clone(&pool), opts.session_cache());
+                        let stop = Arc::clone(&stop);
+                        let h =
+                            std::thread::spawn(move || serve_unix_session(handler, stream, stop));
+                        register_session(&sessions, h);
+                    }
+                    Err(_) => std::thread::sleep(POLL_INTERVAL),
+                }
+            }
+        }));
+        Ok(())
+    }
+
+    /// Serve until the process dies: block on the listener threads (they
+    /// only return after [`Server::shutdown`] flips the stop flag, which
+    /// this method never does).
+    pub fn join(mut self) {
+        for h in self.listeners.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful drain: stop accepting new connections and new requests,
+    /// let every session finish its in-flight request and flush the
+    /// response, then join the sessions and (via the last pool reference)
+    /// the workers.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.listeners.drain(..) {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut s = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
+            s.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // dropping `self.pool` here closes the queue and joins the
+        // workers if this was the last reference
+    }
+}
+
+/// Track a session thread for the drain join, reaping finished sessions
+/// so a long-lived server does not accumulate handles (finished threads
+/// detach harmlessly).
+fn register_session(sessions: &Mutex<Vec<JoinHandle<()>>>, handle: JoinHandle<()>) {
+    let mut s = sessions.lock().unwrap_or_else(|e| e.into_inner());
+    s.retain(|h| !h.is_finished());
+    s.push(handle);
+}
+
+fn serve_tcp_session(handler: ApiHandler, stream: TcpStream, stop: Arc<AtomicBool>) {
+    // accepted sockets may inherit the listener's non-blocking mode;
+    // normalize to blocking-with-timeout so the pump wakes for drains
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    pump_session(&handler, reader, &mut writer, &stop);
+}
+
+#[cfg(unix)]
+fn serve_unix_session(handler: ApiHandler, stream: UnixStream, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    pump_session(&handler, reader, &mut writer, &stop);
+}
+
+/// Per-connection request/response loop: one JSON request per line in,
+/// one response per line out — written and flushed before the next read,
+/// which both guarantees per-session response ordering and keeps
+/// block-buffered clients from deadlocking. Returns on EOF, a write
+/// failure, or a drain (the in-flight request still completes and its
+/// response is flushed).
+fn pump_session(
+    handler: &ApiHandler,
+    mut input: impl BufRead,
+    output: &mut impl Write,
+    stop: &AtomicBool,
+) {
+    let mut raw: Vec<u8> = Vec::new();
+    'serve: loop {
+        raw.clear();
+        // accumulate one full line, waking on the read timeout to honor
+        // the stop flag; partial bytes stay in `raw` across wakeups
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break 'serve;
+            }
+            match input.read_until(b'\n', &mut raw) {
+                Ok(0) => {
+                    if raw.is_empty() {
+                        break 'serve; // clean EOF
+                    }
+                    break; // final unterminated line
+                }
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(_) => break 'serve,
+            }
+        }
+        let text = String::from_utf8_lossy(&raw);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let resp = handler.handle_wire(line);
+        let sent = writeln!(output, "{resp}").and_then(|_| output.flush());
+        if sent.is_err() {
+            break;
+        }
+    }
+    let _ = output.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_opts_defaults_are_sane() {
+        let o = ServeOpts::default();
+        assert!(o.threads >= 1);
+        assert_eq!(o.queue_bound, DEFAULT_QUEUE_BOUND);
+        assert!(o.session_cache_entries >= 1);
+        assert!(o.session_cache_bytes >= 1 << 20);
+    }
+
+    /// The session pump honors the drain flag even while a client holds
+    /// the connection open without sending anything.
+    #[test]
+    fn tcp_session_drains_while_idle() {
+        let mut server = Server::new(ServeOpts {
+            threads: 1,
+            ..ServeOpts::default()
+        });
+        let addr = server.listen_tcp("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        // give the accept loop a moment to spawn the session
+        std::thread::sleep(Duration::from_millis(100));
+        server.shutdown(); // must not hang on the idle connection
+        drop(client);
+    }
+}

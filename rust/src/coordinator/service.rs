@@ -11,13 +11,21 @@
 //! encoding and error construction lives in [`crate::api`]; the wire
 //! reference (v1 envelope, legacy v0 shim, error codes) is
 //! `docs/SERVICE.md`.
+//!
+//! The pool practices *admission control*: its submission queue is bounded
+//! ([`DEFAULT_QUEUE_BOUND`] unless configured), and a submit against a
+//! full queue returns a structured `overloaded` [`ApiError`] instead of
+//! blocking or buffering without bound. Multi-session socket serving on
+//! top of this pool lives in [`super::server`].
 
 use std::io::{BufRead, Write};
-use std::sync::mpsc;
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::api::{execute, execute_with_threads, ApiError, ApiHandler, ErrorCode, Request, Response};
+use crate::api::{
+    execute, execute_with_threads, ApiError, ApiHandler, ErrorCode, Request, Response,
+};
 use crate::runtime::cache::AnalysisCache;
 
 /// A job for the worker pool: any API request plus a caller-chosen
@@ -86,11 +94,51 @@ fn run_job_pooled(job: &Job, cache: &Arc<AnalysisCache>) -> JobResult {
     }
 }
 
-/// A fixed-size worker pool consuming jobs. Dropping the pool closes the
-/// queue and joins the workers.
+/// One queued unit of work: the job plus where its result goes and which
+/// cache it runs against (`None` = the pool's own cache). Routing the
+/// reply channel through the queue lets many sessions share one pool
+/// without interleaving each other's results.
+struct Assignment {
+    job: Job,
+    cache: Option<Arc<AnalysisCache>>,
+    reply: mpsc::Sender<JobResult>,
+}
+
+enum Work {
+    Run(Assignment),
+    /// Test-only: a job body that panics *inside* the worker's
+    /// catch-unwind, for the poison/regression tests below.
+    #[cfg(test)]
+    PanicInJob {
+        id: u64,
+        reply: mpsc::Sender<JobResult>,
+    },
+}
+
+/// Default bound of the submission queue — deep enough that batch fan-out
+/// never notices, shallow enough that a stampede gets `overloaded` errors
+/// instead of an unbounded backlog.
+pub const DEFAULT_QUEUE_BOUND: usize = 1024;
+
+/// Receive the next unit of work off the shared queue, recovering the
+/// mutex if a previous holder panicked while locking it: the receiver
+/// behind the lock is still sound (its state is only mutated by `recv`
+/// itself), and one poisoned lock must not cascade into killing every
+/// remaining worker. Returns `None` when the queue is closed and drained.
+fn recv_work<T>(rx: &Mutex<Receiver<T>>) -> Option<T> {
+    let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+    guard.recv().ok()
+}
+
+/// A fixed-size worker pool consuming jobs through a bounded queue.
+/// Dropping the pool closes the queue, lets the workers drain what was
+/// already admitted, and joins them — that is the pool-level half of
+/// graceful shutdown.
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<Job>>,
-    results: mpsc::Receiver<JobResult>,
+    tx: Option<SyncSender<Work>>,
+    queue_bound: usize,
+    results_tx: mpsc::Sender<JobResult>,
+    results_rx: Mutex<mpsc::Receiver<JobResult>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -106,37 +154,137 @@ impl Coordinator {
     /// the shared cache — exact under sequential use, approximate when
     /// workers run jobs concurrently (outcomes are never affected).
     pub fn with_cache(n_workers: usize, cache: Arc<AnalysisCache>) -> Self {
-        let (tx, rx) = mpsc::channel::<Job>();
+        Self::with_queue_bound(n_workers, cache, DEFAULT_QUEUE_BOUND)
+    }
+
+    /// [`Coordinator::with_cache`] with an explicit submission-queue bound
+    /// (admission control): once `queue_bound` jobs are waiting, further
+    /// submissions fail fast with `overloaded`.
+    pub fn with_queue_bound(
+        n_workers: usize,
+        cache: Arc<AnalysisCache>,
+        queue_bound: usize,
+    ) -> Self {
+        let queue_bound = queue_bound.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Work>(queue_bound);
         let (rtx, rrx) = mpsc::channel::<JobResult>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..n_workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
-                let rtx = rtx.clone();
-                let cache = Arc::clone(&cache);
-                std::thread::spawn(move || loop {
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(j) => j,
-                        Err(_) => break,
-                    };
-                    let _ = rtx.send(run_job_pooled(&job, &cache));
+                let pool_cache = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    while let Some(work) = recv_work(&rx) {
+                        match work {
+                            Work::Run(a) => {
+                                let cache = a.cache.as_ref().unwrap_or(&pool_cache);
+                                let _ = a.reply.send(run_job_pooled(&a.job, cache));
+                            }
+                            #[cfg(test)]
+                            Work::PanicInJob { id, reply } => {
+                                let outcome = std::panic::catch_unwind(
+                                    || -> Result<Response, ApiError> {
+                                        panic!("injected test panic")
+                                    },
+                                )
+                                .unwrap_or_else(|_| {
+                                    Err(ApiError::new(
+                                        ErrorCode::Internal,
+                                        "job panicked mid-execution; see server logs",
+                                    ))
+                                });
+                                let _ = reply.send(JobResult { id, outcome });
+                            }
+                        }
+                    }
                 })
             })
             .collect();
         Coordinator {
             tx: Some(tx),
-            results: rrx,
+            queue_bound,
+            results_tx: rtx,
+            results_rx: Mutex::new(rrx),
             workers,
         }
     }
 
-    pub fn submit(&self, job: Job) {
-        self.tx.as_ref().unwrap().send(job).expect("queue alive");
+    /// Submit a job whose result [`Coordinator::collect`] will pick up.
+    /// Fails fast instead of blocking: `overloaded` when the bounded queue
+    /// is full, `internal` when the pool is gone.
+    pub fn submit(&self, job: Job) -> Result<(), ApiError> {
+        let reply = self.results_tx.clone();
+        self.submit_with(job, None, reply)
     }
 
-    /// Collect exactly `n` results (blocking).
-    pub fn collect(&self, n: usize) -> Vec<JobResult> {
-        (0..n).map(|_| self.results.recv().expect("worker alive")).collect()
+    /// Submit a job with its own reply channel and (optionally) its own
+    /// session cache — how the socket server multiplexes many sessions
+    /// onto one pool without mixing their results or cache quotas.
+    pub fn submit_to(
+        &self,
+        job: Job,
+        cache: Option<Arc<AnalysisCache>>,
+        reply: &mpsc::Sender<JobResult>,
+    ) -> Result<(), ApiError> {
+        self.submit_with(job, cache, reply.clone())
+    }
+
+    fn submit_with(
+        &self,
+        job: Job,
+        cache: Option<Arc<AnalysisCache>>,
+        reply: mpsc::Sender<JobResult>,
+    ) -> Result<(), ApiError> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(ApiError::new(
+                ErrorCode::Internal,
+                "worker pool is shut down",
+            ));
+        };
+        match tx.try_send(Work::Run(Assignment { job, cache, reply })) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(ApiError::new(
+                ErrorCode::Overloaded,
+                format!(
+                    "submission queue is full ({} jobs waiting); retry later",
+                    self.queue_bound
+                ),
+            )),
+            Err(TrySendError::Disconnected(_)) => Err(ApiError::new(
+                ErrorCode::Internal,
+                "worker pool is gone (every worker exited)",
+            )),
+        }
+    }
+
+    /// Collect exactly `n` results of [`Coordinator::submit`]-ed jobs
+    /// (blocking). Errors with `internal` — instead of panicking — if the
+    /// result channel dies before delivering them all.
+    pub fn collect(&self, n: usize) -> Result<Vec<JobResult>, ApiError> {
+        let rx = self.results_rx.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(rx.recv().map_err(|_| {
+                ApiError::new(
+                    ErrorCode::Internal,
+                    "worker pool died before delivering every result",
+                )
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Queue a job that panics inside the worker's catch-unwind — the
+    /// regression harness for "a panicking job must leave the pool
+    /// serving".
+    #[cfg(test)]
+    fn submit_panic_for_test(&self, id: u64) -> Result<(), ApiError> {
+        let tx = self.tx.as_ref().expect("pool alive");
+        tx.try_send(Work::PanicInJob {
+            id,
+            reply: self.results_tx.clone(),
+        })
+        .map_err(|_| ApiError::new(ErrorCode::Overloaded, "queue full"))
     }
 
     /// Explicit shutdown; equivalent to dropping the pool.
@@ -145,7 +293,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take(); // close the queue
+        self.tx.take(); // close the queue; workers drain what was admitted
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -159,13 +307,28 @@ impl Drop for Coordinator {
 /// answered incrementally.
 pub fn serve_stdio(input: impl BufRead, mut output: impl Write) -> crate::util::Result<()> {
     let handler = ApiHandler::new();
+    pump_lines(&handler, input, &mut output)
+}
+
+/// The line pump shared by [`serve_stdio`] and the CLI's socket-serving
+/// stdio session: one request line in, one response line out. The output
+/// is flushed after **every** response — behind a block-buffered pipe a
+/// request/response client would otherwise deadlock waiting for a reply
+/// sitting in this process's buffer — and once more on shutdown.
+pub fn pump_lines(
+    handler: &ApiHandler,
+    input: impl BufRead,
+    output: &mut impl Write,
+) -> crate::util::Result<()> {
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
         writeln!(output, "{}", handler.handle_wire(&line))?;
+        output.flush()?;
     }
+    output.flush()?;
     Ok(())
 }
 
@@ -206,9 +369,9 @@ mod tests {
     fn pool_processes_jobs() {
         let c = Coordinator::new(3);
         for id in 0..6 {
-            c.submit(analyze_job(id, TINY_SPEC));
+            c.submit(analyze_job(id, TINY_SPEC)).unwrap();
         }
-        let mut results = c.collect(6);
+        let mut results = c.collect(6).unwrap();
         c.shutdown();
         results.sort_by_key(|r| r.id);
         assert_eq!(results.len(), 6);
@@ -216,6 +379,77 @@ mod tests {
             let mk = makespan(r);
             assert!((mk - 5.0).abs() < 1e-6, "{mk}");
         }
+    }
+
+    /// A job that panics inside a worker must come back as an `internal`
+    /// error while the pool keeps serving every other job — the poisoned
+    /// state a panic leaves behind (caught unwind, possibly a poisoned
+    /// shard or queue mutex) must never cascade.
+    #[test]
+    fn panicking_job_leaves_pool_serving() {
+        let c = Coordinator::new(2);
+        c.submit_panic_for_test(99).unwrap();
+        for id in 0..4 {
+            c.submit(analyze_job(id, TINY_SPEC)).unwrap();
+        }
+        let mut results = c.collect(5).unwrap();
+        results.sort_by_key(|r| r.id);
+        let panicked = results.iter().find(|r| r.id == 99).unwrap();
+        assert_eq!(
+            panicked.outcome.as_ref().unwrap_err().code,
+            ErrorCode::Internal
+        );
+        for r in results.iter().filter(|r| r.id != 99) {
+            let mk = makespan(r);
+            assert!((mk - 5.0).abs() < 1e-6, "job {} after panic: {mk}", r.id);
+        }
+    }
+
+    /// The worker queue survives a mutex poisoned by a panicking holder.
+    #[test]
+    fn recv_work_recovers_from_poisoned_mutex() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let rx = Arc::new(Mutex::new(rx));
+        let poisoner = Arc::clone(&rx);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison the queue mutex");
+        })
+        .join();
+        assert!(rx.lock().is_err(), "mutex must actually be poisoned");
+        tx.send(7).unwrap();
+        assert_eq!(recv_work(&rx), Some(7));
+        drop(tx);
+        assert_eq!(recv_work(&rx), None);
+    }
+
+    /// With one busy worker and a queue bound of 1, further submissions
+    /// must fail fast with `overloaded` — never block or panic.
+    #[test]
+    fn full_queue_reports_overloaded() {
+        let c = Coordinator::with_queue_bound(1, Arc::new(AnalysisCache::new()), 1);
+        // occupy the worker with a non-trivial job, then flood: the queue
+        // admits at most one waiter, so the flood must trip admission
+        // control long before the worker can drain 50 analyses
+        c.submit(sweep_job(0, &[0.25, 0.5, 0.75])).unwrap();
+        let mut accepted = 1;
+        let mut overloaded = None;
+        for id in 1..=50 {
+            match c.submit(analyze_job(id, TINY_SPEC)) {
+                Ok(()) => accepted += 1,
+                Err(e) => {
+                    overloaded = Some(e);
+                    break;
+                }
+            }
+        }
+        let e = overloaded.expect("a 50-deep flood must overload a 1-deep queue");
+        assert_eq!(e.code, ErrorCode::Overloaded);
+        assert!(e.message.contains("retry"), "{}", e.message);
+        // everything that was admitted still completes
+        let results = c.collect(accepted).unwrap();
+        assert_eq!(results.len(), accepted);
+        assert!(results.iter().all(|r| r.outcome.is_ok()));
     }
 
     /// Legacy v0 requests still round-trip through the stdio server with
@@ -241,6 +475,41 @@ mod tests {
         let r2 = Json::parse(lines[1]).unwrap();
         assert_eq!(r2.get("pong").as_bool(), Some(true));
         assert_eq!(r2.get("deprecated").as_bool(), Some(true));
+    }
+
+    /// A block-buffered client would deadlock if responses sat in the
+    /// server's write buffer: every response line must be followed by a
+    /// flush.
+    #[test]
+    fn stdio_flushes_after_every_response() {
+        #[derive(Default)]
+        struct FlushCounter {
+            buf: Vec<u8>,
+            flushes: usize,
+            flushed_bytes: usize,
+        }
+        impl Write for FlushCounter {
+            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+                self.buf.extend_from_slice(data);
+                Ok(data.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                self.flushes += 1;
+                self.flushed_bytes = self.buf.len();
+                Ok(())
+            }
+        }
+        let input = "{\"v\":1,\"id\":1,\"op\":\"ping\"}\n{\"v\":1,\"id\":2,\"op\":\"ping\"}\n";
+        let mut w = FlushCounter::default();
+        serve_stdio(std::io::Cursor::new(input), &mut w).unwrap();
+        assert!(w.flushes >= 2, "one flush per response, got {}", w.flushes);
+        assert_eq!(
+            w.flushed_bytes,
+            w.buf.len(),
+            "the final flush must cover every written byte"
+        );
+        let text = String::from_utf8(w.buf).unwrap();
+        assert_eq!(text.lines().count(), 2);
     }
 
     #[test]

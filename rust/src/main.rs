@@ -14,7 +14,11 @@
 //!   export-figures <dir>          regenerate every figure's data as JSON
 //!   advisor                       recommend the link split (paper headline)
 //!   online-demo                   online re-analysis controller demo
-//!   serve                         JSON-lines analysis service on stdio
+//!   serve [--tcp <host:port>]     JSON-lines analysis service; stdio by
+//!     [--unix <path>] [--no-stdio] default, optionally a multi-session
+//!     [--threads <n>] [--queue <n>] socket server with bounded admission
+//!     [--session-cache-entries <n>] and per-session cache quotas
+//!     [--session-cache-mb <n>]    (wire protocol: docs/SERVICE.md)
 //!   artifacts                     list loadable PJRT artifacts
 //!
 //! (argument parsing is hand-rolled: the offline vendor set has no clap)
@@ -23,7 +27,9 @@ use std::process::ExitCode;
 
 use bottlemod::api::{ApiHandler, Request, Response, WorkflowSel};
 use bottlemod::coordinator::exporter;
+use bottlemod::coordinator::service::{pump_lines, serve_stdio};
 use bottlemod::coordinator::sweeper::fig7_fractions;
+use bottlemod::coordinator::{ServeOpts, Server};
 use bottlemod::runtime::Runtime;
 use bottlemod::sched;
 use bottlemod::solver::SolverOpts;
@@ -46,10 +52,7 @@ fn main() -> ExitCode {
         "export-figures" => cmd_export(rest),
         "advisor" => cmd_advisor(),
         "online-demo" => cmd_online(),
-        "serve" => {
-            let stdin = std::io::stdin();
-            bottlemod::coordinator::service::serve_stdio(stdin.lock(), std::io::stdout())
-        }
+        "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -76,7 +79,10 @@ fn print_help() {
          usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|\
          export-figures|advisor|online-demo|serve|artifacts> [args]\n\
          calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]\n\
-         sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]"
+         sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]\n\
+         serve: bottlemod serve [--tcp <host:port>] [--unix <path>] [--no-stdio]\n\
+         \x20      [--threads <n>] [--queue <n>] [--session-cache-entries <n>]\n\
+         \x20      [--session-cache-mb <n>]"
     );
 }
 
@@ -314,6 +320,104 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             max_err
         );
     }
+    Ok(())
+}
+
+/// `bottlemod serve` with no flags is the legacy single-session stdio
+/// service, byte-for-byte unchanged. Any flag switches to the
+/// multi-session server: sockets via `--tcp`/`--unix`, a shared worker
+/// pool with bounded admission (`--threads`, `--queue`), and per-session
+/// cache quotas (`--session-cache-entries`, `--session-cache-mb`). Stdio
+/// stays served as one more session unless `--no-stdio`; stdin EOF then
+/// drains the whole server gracefully.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    if args.is_empty() {
+        let stdin = std::io::stdin();
+        return serve_stdio(stdin.lock(), std::io::stdout());
+    }
+    let usage = "usage: bottlemod serve [--tcp <host:port>] [--unix <path>] [--no-stdio] \
+                 [--threads <n>] [--queue <n>] [--session-cache-entries <n>] \
+                 [--session-cache-mb <n>]";
+    let num = |i: usize, flag: &str| -> Result<usize> {
+        args.get(i + 1)
+            .and_then(|a| a.parse().ok())
+            .ok_or_else(|| Error::msg(format!("{flag} needs a positive number\n{usage}")))
+    };
+    let mut tcp: Option<&String> = None;
+    let mut unix: Option<&String> = None;
+    let mut no_stdio = false;
+    let mut opts = ServeOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--tcp" => {
+                tcp = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--tcp needs host:port\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--unix" => {
+                unix = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--unix needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--no-stdio" => {
+                no_stdio = true;
+                i += 1;
+            }
+            "--threads" => {
+                opts.threads = num(i, "--threads")?.max(1);
+                i += 2;
+            }
+            "--queue" => {
+                opts.queue_bound = num(i, "--queue")?.max(1);
+                i += 2;
+            }
+            "--session-cache-entries" => {
+                opts.session_cache_entries = num(i, "--session-cache-entries")?.max(1);
+                i += 2;
+            }
+            "--session-cache-mb" => {
+                opts.session_cache_bytes = (num(i, "--session-cache-mb")? as u64) << 20;
+                i += 2;
+            }
+            other => {
+                return Err(Error::msg(format!("unknown flag '{other}'\n{usage}")));
+            }
+        }
+    }
+    if no_stdio && tcp.is_none() && unix.is_none() {
+        return Err(Error::msg(format!(
+            "--no-stdio needs at least one socket transport\n{usage}"
+        )));
+    }
+    #[cfg(not(unix))]
+    if unix.is_some() {
+        return Err(Error::msg("--unix needs a unix platform; use --tcp here"));
+    }
+    let mut server = Server::new(opts);
+    if let Some(addr) = tcp {
+        let bound = server.listen_tcp(addr)?;
+        eprintln!("listening on tcp {bound}");
+    }
+    #[cfg(unix)]
+    if let Some(path) = unix {
+        server.listen_unix(path)?;
+        eprintln!("listening on unix socket {path}");
+    }
+    if no_stdio {
+        server.join();
+        return Ok(());
+    }
+    let handler = server.session_handler();
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    pump_lines(&handler, stdin.lock(), &mut stdout)?;
+    drop(handler);
+    server.shutdown(); // stdin EOF: drain sockets and the pool too
     Ok(())
 }
 

@@ -30,9 +30,9 @@
 //! A 128-bit key makes an accidental collision astronomically unlikely
 //! (~2^-64 at a billion entries); there is no second-chance verification.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::model::process::{Process, ProcessInputs};
 use crate::pwfn::{Poly, PwPoly};
@@ -243,6 +243,37 @@ impl NodeSolve {
             demands,
         }
     }
+
+    /// Approximate resident heap size of this value in bytes — what the
+    /// cache's byte quota charges. Counts the piecewise payloads (break
+    /// vectors, coefficient vectors, per-`Vec` overhead); the fixed-size
+    /// scalar fields are a constant. An approximation is fine here: the
+    /// quota bounds memory to within a small constant factor, and a too-low
+    /// estimate only ever costs extra misses, never wrong results.
+    pub fn cost_bytes(&self) -> u64 {
+        let a = &self.analysis;
+        let mut b = 160; // scalars, Vec headers, Arc control blocks
+        b += pw_bytes(&a.progress);
+        for f in &a.data_progress {
+            b += pw_bytes(f);
+        }
+        b += pw_bytes(&a.pd.func) + 8 * a.pd.winners.len() as u64;
+        b += 32 * a.segments.len() as u64;
+        for f in self.outputs.iter().flatten() {
+            b += pw_bytes(f);
+        }
+        for f in self.demands.iter().flatten() {
+            b += pw_bytes(f);
+        }
+        b
+    }
+}
+
+/// Heap bytes of one piecewise polynomial: 8 per break/coefficient plus a
+/// `Vec` header per polynomial and for the two top-level vectors.
+fn pw_bytes(p: &PwPoly) -> u64 {
+    let coeffs: usize = p.polys.iter().map(|q| q.coeffs.len()).sum();
+    (8 * (p.breaks.len() + coeffs) + 24 * p.polys.len() + 48) as u64
 }
 
 // -------------------------------------------------------------------- stats
@@ -256,10 +287,13 @@ pub struct CacheStats {
     pub misses: u64,
     /// Values stored (== misses unless a racing worker inserted first).
     pub inserts: u64,
-    /// Entries dropped by capacity eviction.
+    /// Entries dropped by capacity or byte-quota eviction.
     pub evictions: u64,
     /// Entries currently resident.
     pub entries: u64,
+    /// Approximate resident heap bytes ([`NodeSolve::cost_bytes`]) of the
+    /// current entries.
+    pub bytes: u64,
 }
 
 impl CacheStats {
@@ -273,9 +307,9 @@ impl CacheStats {
         }
     }
 
-    /// The counter deltas between `earlier` and `self` (entries stay the
-    /// current count) — how a shared, long-lived cache reports one batch's
-    /// behaviour in isolation.
+    /// The counter deltas between `earlier` and `self` (entries and bytes
+    /// stay the current values) — how a shared, long-lived cache reports
+    /// one batch's behaviour in isolation.
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits.saturating_sub(earlier.hits),
@@ -283,6 +317,7 @@ impl CacheStats {
             inserts: self.inserts.saturating_sub(earlier.inserts),
             evictions: self.evictions.saturating_sub(earlier.evictions),
             entries: self.entries,
+            bytes: self.bytes,
         }
     }
 }
@@ -291,11 +326,12 @@ impl std::fmt::Display for CacheStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} hits / {} misses ({:.1}% hit rate), {} entries, {} evicted",
+            "{} hits / {} misses ({:.1}% hit rate), {} entries ({} KiB), {} evicted",
             self.hits,
             self.misses,
             self.hit_rate() * 100.0,
             self.entries,
+            self.bytes / 1024,
             self.evictions
         )
     }
@@ -303,20 +339,42 @@ impl std::fmt::Display for CacheStats {
 
 // -------------------------------------------------------------------- cache
 
+/// One resident value plus its accounting metadata.
+struct Entry {
+    value: Arc<NodeSolve>,
+    /// [`NodeSolve::cost_bytes`], computed once at insert.
+    cost: u64,
+    /// Last-touch tick; key into the shard's LRU index.
+    tick: u64,
+}
+
+/// One shard: the map, a recency index (`tick -> key`; ticks are unique,
+/// so a `BTreeMap` is an exact LRU order), and the shard's byte total.
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u128, Entry>,
+    lru: BTreeMap<u64, u128>,
+    bytes: u64,
+}
+
 /// A sharded, thread-safe memo table for node-level analyses.
 ///
 /// Wrap it in an [`Arc`] and hand clones to every sweep worker; lookups
-/// contend only on the shard owning the key. Capacity is enforced per
-/// shard with a wholesale-clear eviction policy: eviction can only cause
-/// extra *misses*, never wrong results, so the cheapest correct policy
-/// wins.
+/// contend only on the shard owning the key. Both quotas — entry count and
+/// approximate resident bytes — are enforced per shard with least-recently
+/// used eviction, so a long-lived multi-tenant session stays within its
+/// configured memory budget. Eviction can only cause extra *misses*, never
+/// wrong results.
 pub struct AnalysisCache {
-    shards: Vec<Mutex<HashMap<u128, Arc<NodeSolve>>>>,
+    shards: Vec<Mutex<Shard>>,
+    /// Global recency clock; unique per touch, so LRU ordering is exact.
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
     evictions: AtomicU64,
     capacity_per_shard: usize,
+    byte_quota_per_shard: u64,
 }
 
 const DEFAULT_SHARDS: usize = 16;
@@ -328,33 +386,72 @@ impl Default for AnalysisCache {
     }
 }
 
+/// A panic in another thread while it held a shard lock poisons the mutex;
+/// the shard data is only ever mutated under short, non-panicking critical
+/// sections, so the state behind a poisoned lock is sound — recover it
+/// rather than cascading the failure into every future lookup (the server
+/// catches job panics and must keep serving).
+fn lock_shard(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl AnalysisCache {
-    /// A cache with the default capacity (65 536 entries).
+    /// A cache with the default capacity (65 536 entries, no byte quota).
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// A cache holding up to `capacity` entries across all shards.
+    /// A cache holding up to `capacity` entries across all shards, with no
+    /// byte quota.
     pub fn with_capacity(capacity: usize) -> Self {
-        let per_shard = (capacity / DEFAULT_SHARDS).max(1);
+        Self::with_quota(capacity, u64::MAX)
+    }
+
+    /// A cache bounded by both an entry count and an approximate byte
+    /// budget ([`NodeSolve::cost_bytes`]) across all shards. Whichever
+    /// quota is hit first evicts least-recently-used entries. One caveat:
+    /// a single entry larger than a whole shard's byte quota stays
+    /// resident until something displaces it (evicting the value being
+    /// inserted would livelock the solver).
+    pub fn with_quota(capacity: usize, max_bytes: u64) -> Self {
         AnalysisCache {
-            shards: (0..DEFAULT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..DEFAULT_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
-            capacity_per_shard: per_shard,
+            capacity_per_shard: (capacity / DEFAULT_SHARDS).max(1),
+            byte_quota_per_shard: if max_bytes == u64::MAX {
+                u64::MAX
+            } else {
+                (max_bytes / DEFAULT_SHARDS as u64).max(1)
+            },
         }
     }
 
-    fn shard(&self, key: u128) -> &Mutex<HashMap<u128, Arc<NodeSolve>>> {
+    fn shard(&self, key: u128) -> &Mutex<Shard> {
         // low bits of an FNV state are well mixed
         &self.shards[(key as usize) % self.shards.len()]
     }
 
-    /// Look up a node analysis, counting the hit or miss.
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up a node analysis, counting the hit or miss. A hit refreshes
+    /// the entry's LRU position.
     pub fn get(&self, key: u128) -> Option<Arc<NodeSolve>> {
-        let found = self.shard(key).lock().unwrap().get(&key).cloned();
+        let mut guard = lock_shard(self.shard(key));
+        let Shard { map, lru, .. } = &mut *guard;
+        let found = map.get_mut(&key).map(|e| {
+            let t = self.next_tick();
+            lru.remove(&e.tick);
+            e.tick = t;
+            lru.insert(t, key);
+            Arc::clone(&e.value)
+        });
+        drop(guard);
         match &found {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -362,36 +459,69 @@ impl AnalysisCache {
         found
     }
 
-    /// Store a freshly solved analysis. If the shard is at capacity it is
-    /// cleared first (counted as evictions).
+    /// Store a freshly solved analysis, then evict least-recently-used
+    /// entries (never the one just stored) while the shard exceeds either
+    /// its entry capacity or its byte quota.
     pub fn insert(&self, key: u128, value: Arc<NodeSolve>) {
-        let mut shard = self.shard(key).lock().unwrap();
-        if shard.len() >= self.capacity_per_shard && !shard.contains_key(&key) {
-            self.evictions
-                .fetch_add(shard.len() as u64, Ordering::Relaxed);
-            shard.clear();
+        let cost = value.cost_bytes();
+        let t = self.next_tick();
+        let mut guard = lock_shard(self.shard(key));
+        let shard = &mut *guard;
+        let mut fresh = false;
+        if let Some(old) = shard.map.insert(key, Entry { value, cost, tick: t }) {
+            shard.lru.remove(&old.tick);
+            shard.bytes = shard.bytes + cost - old.cost;
+        } else {
+            fresh = true;
+            shard.bytes += cost;
         }
-        if shard.insert(key, value).is_none() {
+        shard.lru.insert(t, key);
+        // `t` is the largest tick in this shard (the clock is monotone and
+        // the shard is locked), so `pop_first` can only reach the entry
+        // just inserted when it is the shard's sole entry — which the
+        // `len() > 1` guard excludes.
+        let mut evicted = 0u64;
+        while shard.map.len() > 1
+            && (shard.map.len() > self.capacity_per_shard
+                || shard.bytes > self.byte_quota_per_shard)
+        {
+            let (_, victim) = shard.lru.pop_first().expect("lru indexes every entry");
+            let gone = shard.map.remove(&victim).expect("lru and map agree");
+            shard.bytes -= gone.cost;
+            evicted += 1;
+        }
+        drop(guard);
+        if fresh {
             self.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
     }
 
     /// Entries currently resident across all shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_shard(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Approximate resident heap bytes across all shards.
+    pub fn bytes(&self) -> u64 {
+        self.shards.iter().map(|s| lock_shard(s).bytes).sum()
+    }
+
     /// Drop every entry (counters keep running).
     pub fn clear(&self) {
         for s in &self.shards {
-            let mut shard = s.lock().unwrap();
+            let mut shard = lock_shard(s);
             self.evictions
-                .fetch_add(shard.len() as u64, Ordering::Relaxed);
-            shard.clear();
+                .fetch_add(shard.map.len() as u64, Ordering::Relaxed);
+            shard.map.clear();
+            shard.lru.clear();
+            shard.bytes = 0;
         }
     }
 
@@ -406,12 +536,19 @@ impl AnalysisCache {
 
     /// Snapshot the counters.
     pub fn stats(&self) -> CacheStats {
+        let (mut entries, mut bytes) = (0u64, 0u64);
+        for s in &self.shards {
+            let shard = lock_shard(s);
+            entries += shard.map.len() as u64;
+            bytes += shard.bytes;
+        }
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.len() as u64,
+            entries,
+            bytes,
         }
     }
 }
@@ -478,21 +615,101 @@ mod tests {
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
 
-    #[test]
-    fn eviction_clears_full_shard() {
-        let cache = AnalysisCache::with_capacity(16); // 1 entry per shard
+    fn sample_value() -> Arc<NodeSolve> {
         let p = sample_process(50.0);
         let i = sample_inputs(1.0);
         let solved = Arc::new(crate::solver::solve(&p, &i, &SolverOpts::default()).unwrap());
-        let a = Arc::new(NodeSolve::derive(&p, solved, &[true], &[true]));
-        // two keys landing in the same shard force an eviction
-        let k1 = 0u128;
-        let k2 = DEFAULT_SHARDS as u128; // same shard index
-        cache.insert(k1, a.clone());
-        cache.insert(k2, a.clone());
-        assert!(cache.get(k1).is_none(), "k1 evicted when shard was full");
-        assert!(cache.get(k2).is_some());
+        Arc::new(NodeSolve::derive(&p, solved, &[true], &[true]))
+    }
+
+    /// Keys `n * DEFAULT_SHARDS` for small `n` all land in shard 0.
+    fn shard0_key(n: usize) -> u128 {
+        (n * DEFAULT_SHARDS) as u128
+    }
+
+    #[test]
+    fn eviction_drops_oldest_when_shard_full() {
+        let cache = AnalysisCache::with_capacity(16); // 1 entry per shard
+        let a = sample_value();
+        cache.insert(shard0_key(0), a.clone());
+        cache.insert(shard0_key(1), a.clone());
+        assert!(cache.get(shard0_key(0)).is_none(), "oldest entry evicted");
+        assert!(cache.get(shard0_key(1)).is_some());
         assert!(cache.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn lru_keeps_recently_touched_entries() {
+        let cache = AnalysisCache::with_capacity(32); // 2 entries per shard
+        let a = sample_value();
+        cache.insert(shard0_key(0), a.clone());
+        cache.insert(shard0_key(1), a.clone());
+        // touching k0 makes k1 the LRU victim of the next insert
+        assert!(cache.get(shard0_key(0)).is_some());
+        cache.insert(shard0_key(2), a.clone());
+        let s = cache.stats();
+        assert!(cache.get(shard0_key(0)).is_some(), "recently used survives");
+        assert!(cache.get(shard0_key(1)).is_none(), "LRU entry evicted");
+        assert!(cache.get(shard0_key(2)).is_some());
+        assert_eq!(s.evictions, 1, "{s}");
+    }
+
+    #[test]
+    fn byte_quota_bounds_resident_bytes() {
+        let a = sample_value();
+        let cost = a.cost_bytes();
+        assert!(cost > 0);
+        // room for ~2 entries' bytes in shard 0, far more entry slots
+        let quota = (2 * cost + cost / 2) * DEFAULT_SHARDS as u64;
+        let cache = AnalysisCache::with_quota(1 << 16, quota);
+        for n in 0..6 {
+            cache.insert(shard0_key(n), a.clone());
+        }
+        let s = cache.stats();
+        assert!(s.bytes <= quota / DEFAULT_SHARDS as u64, "{s}");
+        assert_eq!(s.entries, 2, "{s}");
+        assert_eq!(s.evictions, 4, "{s}");
+        assert_eq!(cache.bytes(), s.bytes);
+        // the newest entries are the survivors
+        assert!(cache.get(shard0_key(4)).is_some());
+        assert!(cache.get(shard0_key(5)).is_some());
+    }
+
+    #[test]
+    fn oversized_single_entry_stays_resident() {
+        let a = sample_value();
+        // quota below one entry's cost: the lone entry must not be evicted
+        let cache = AnalysisCache::with_quota(1 << 16, DEFAULT_SHARDS as u64);
+        cache.insert(shard0_key(0), a.clone());
+        assert!(cache.get(shard0_key(0)).is_some());
+        // a second insert displaces it (the newer entry survives)
+        cache.insert(shard0_key(1), a.clone());
+        assert!(cache.get(shard0_key(0)).is_none());
+        assert!(cache.get(shard0_key(1)).is_some());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn reinsert_updates_bytes_not_entries() {
+        let cache = AnalysisCache::new();
+        let a = sample_value();
+        cache.insert(7, a.clone());
+        let before = cache.stats();
+        cache.insert(7, a.clone());
+        let after = cache.stats();
+        assert_eq!(after.entries, before.entries);
+        assert_eq!(after.bytes, before.bytes);
+        assert_eq!(after.inserts, before.inserts, "re-insert is not fresh");
+    }
+
+    #[test]
+    fn clear_zeroes_bytes() {
+        let cache = AnalysisCache::new();
+        cache.insert(1, sample_value());
+        assert!(cache.bytes() > 0);
+        cache.clear();
+        assert_eq!(cache.bytes(), 0);
+        assert!(cache.is_empty());
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Multi-session socket-server integration tests: N concurrent clients
+//! against one [`Server`], interleaved v1 ops, per-session response
+//! ordering, structured `overloaded` under a tiny queue bound, and
+//! session caches bounded by their quota.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use bottlemod::coordinator::{ServeOpts, Server};
+use bottlemod::util::Json;
+
+// Mirrors `api::test_fixtures::TINY_SPEC` (cfg(test) lib items are not
+// visible to integration tests): a one-process spec solving to makespan 5.
+const TINY_SPEC: &str = r#"{
+  "processes": [
+    {"name": "a", "max_progress": 10.0,
+     "data": [{"req": {"type": "stream", "total": 10.0},
+               "source": {"external_constant": 10.0}}],
+     "resources": [{"req": {"type": "stream", "total": 5.0},
+                    "source": {"constant": 1.0}}],
+     "outputs": [{"name": "out", "type": "identity"}]}
+  ]
+}"#;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let writer = TcpStream::connect(addr).unwrap();
+        // a hung server must fail the test, not wedge the harness
+        writer
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        let reader = BufReader::new(writer.try_clone().unwrap());
+        Client { reader, writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn ping(id: u64) -> String {
+    format!("{{\"v\":1,\"id\":{id},\"op\":\"ping\"}}")
+}
+
+fn analyze(id: u64) -> String {
+    let spec = Json::parse(TINY_SPEC).unwrap();
+    format!("{{\"v\":1,\"id\":{id},\"op\":\"analyze\",\"spec\":{spec}}}")
+}
+
+fn sweep(id: u64, fractions: &[f64]) -> String {
+    let ps: Vec<String> = fractions
+        .iter()
+        .map(|f| format!("{{\"kind\":\"fraction\",\"value\":{f}}}"))
+        .collect();
+    format!(
+        "{{\"v\":1,\"id\":{id},\"op\":\"sweep\",\"workflow\":\"video\",\"perturbations\":[{}]}}",
+        ps.join(",")
+    )
+}
+
+/// N client threads each pipeline a mixed request stream; every session
+/// must get exactly its own responses, in its own submission order.
+#[test]
+fn concurrent_sessions_keep_per_session_order() {
+    let mut server = Server::new(ServeOpts {
+        threads: 4,
+        ..ServeOpts::default()
+    });
+    let addr = server.listen_tcp("127.0.0.1:0").unwrap();
+
+    const SESSIONS: u64 = 4;
+    const REQUESTS: u64 = 12;
+    let clients: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                // pipeline the whole stream before reading anything: the
+                // server must still answer strictly in submission order
+                for i in 0..REQUESTS {
+                    let id = s * 100 + i;
+                    let line = if i % 2 == 0 { ping(id) } else { analyze(id) };
+                    c.send(&line);
+                }
+                for i in 0..REQUESTS {
+                    let resp = c.recv();
+                    let id = s * 100 + i;
+                    assert_eq!(resp.get("id").as_f64(), Some(id as f64), "{resp:?}");
+                    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+                    if i % 2 == 1 {
+                        let mk = resp.get("result").get("makespan").as_f64().unwrap();
+                        assert!((mk - 5.0).abs() < 1e-6, "{mk}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.shutdown();
+}
+
+/// Eight sessions firing sweeps simultaneously at a 1-worker / 1-deep
+/// queue: admission control must answer with structured `overloaded`
+/// errors — never a hang — while the admitted jobs still complete.
+#[test]
+fn tiny_queue_reports_overloaded_never_hangs() {
+    let mut server = Server::new(ServeOpts {
+        threads: 1,
+        queue_bound: 1,
+        ..ServeOpts::default()
+    });
+    let addr = server.listen_tcp("127.0.0.1:0").unwrap();
+
+    const SESSIONS: usize = 8;
+    const ROUNDS: u64 = 3;
+    let barrier = Arc::new(Barrier::new(SESSIONS));
+    let clients: Vec<_> = (0..SESSIONS)
+        .map(|s| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                // connect first, then fire in lockstep so the volleys
+                // actually overlap on the 1-deep queue
+                barrier.wait();
+                let mut ok = 0u32;
+                let mut overloaded = 0u32;
+                for r in 0..ROUNDS {
+                    let id = s as u64 * 10 + r;
+                    let resp = c.request(&sweep(id, &[0.25, 0.5, 0.75, 0.93]));
+                    assert_eq!(resp.get("id").as_f64(), Some(id as f64), "{resp:?}");
+                    if resp.get("ok").as_bool() == Some(true) {
+                        ok += 1;
+                    } else {
+                        let code = resp.get("error").get("code");
+                        assert_eq!(code.as_str(), Some("overloaded"), "{resp:?}");
+                        overloaded += 1;
+                    }
+                }
+                (ok, overloaded)
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    let mut overloaded = 0;
+    for c in clients {
+        let (o, v) = c.join().unwrap();
+        ok += o;
+        overloaded += v;
+    }
+    assert_eq!(ok + overloaded, (SESSIONS as u32) * ROUNDS as u32);
+    assert!(ok >= 1, "the admitted jobs must complete");
+    assert!(
+        overloaded >= 1,
+        "8 simultaneous sweeps must trip a 1-deep queue"
+    );
+    server.shutdown();
+}
+
+/// A session's cache honors its entry quota: sweeping many distinct
+/// configurations evicts instead of growing without bound, and the
+/// response's cache stats show it.
+#[test]
+fn session_cache_is_bounded_by_quota() {
+    // quotas are enforced per shard (16 shards), so 16 is the smallest
+    // exactly-enforceable entry quota: one resident entry per shard
+    let mut server = Server::new(ServeOpts {
+        threads: 2,
+        session_cache_entries: 16,
+        ..ServeOpts::default()
+    });
+    let addr = server.listen_tcp("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(addr);
+
+    let mut evictions = 0.0;
+    for round in 0..4u64 {
+        let fractions: Vec<f64> = (0..12)
+            .map(|i| 0.05 + (round * 12 + i) as f64 * 0.007)
+            .collect();
+        let resp = c.request(&sweep(round, &fractions));
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        let cache = resp.get("result").get("cache");
+        let entries = cache.get("entries").as_f64().unwrap();
+        assert!(entries <= 16.0, "quota of 16 exceeded: {entries}");
+        assert!(cache.get("bytes").as_f64().unwrap() > 0.0);
+        evictions += cache.get("evictions").as_f64().unwrap();
+    }
+    assert!(evictions > 0.0, "distinct sweeps must evict under the quota");
+    server.shutdown();
+}
