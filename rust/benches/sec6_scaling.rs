@@ -1,19 +1,46 @@
-//! §6 performance comparison: BottleMod analysis vs the WRENCH-like DES,
-//! as a function of simulated input size. The paper's numbers: BottleMod
-//! 20.0 ms (flat: 22.8 ms at 100 GB); WRENCH 32.8 ms at 1.1 GB, 1.137 s at
-//! 100 GB. Absolute values differ on this substrate — the *shape* (flat vs
-//! data-scaling) is the claim under test.
+//! §6 scaling, two axes:
+//!
+//! 1. **Data volume** (the paper's headline): BottleMod analysis vs the
+//!    WRENCH-like DES on the Fig 5 workflow as input size grows. The
+//!    paper's numbers: BottleMod 20.0 ms (flat: 22.8 ms at 100 GB); WRENCH
+//!    32.8 ms at 1.1 GB, 1.137 s at 100 GB. Absolute values differ on this
+//!    substrate — the *shape* (flat vs data-scaling) is the claim.
+//! 2. **Topology size** (docs/SCALING.md): generated DAGs from 10² to 10⁴
+//!    nodes (layered, deep chain, pool-heavy scatter/gather), solved with
+//!    the worklist fixpoint under a piece budget. Reports nodes vs solve
+//!    time vs peak piece count; hard-asserts (always — deterministic) that
+//!    the worklist is bit-for-bit the full fixpoint at 100 nodes and that
+//!    every budgeted materialized input respects the cap.
+//!
+//! Results are persisted as `BENCH_scaling.json` at the repo root (perf
+//! trajectory across PRs); a previous artifact, if present, is compared
+//! against. Perf-ratio asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1`.
 //!
 //! Run: `cargo bench --bench sec6_scaling`
 
 use bottlemod::des;
 use bottlemod::solver::SolverOpts;
-use bottlemod::util::harness::bench_once;
+use bottlemod::util::harness::{bench_once, read_bench_artifact, write_bench_artifact};
+use bottlemod::util::json::Json;
 use bottlemod::util::stats::ascii_table;
-use bottlemod::workflow::engine::analyze_fixpoint;
+use bottlemod::util::Rng;
+use bottlemod::workflow::engine::{analyze_fixpoint, analyze_fixpoint_full};
+use bottlemod::workflow::generator::{generate, GeneratorOpts, Topology};
 use bottlemod::workflow::scenario::VideoScenario;
+use bottlemod::workflow::{Workflow, WorkflowAnalysis};
+
+const PIECE_BUDGET: usize = 128;
 
 fn main() {
+    let assert_ok = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_err();
+    data_volume_section();
+    let results = topology_section(assert_ok);
+    persist(&results);
+}
+
+/// Axis 1: fixed workflow, growing data volume (flat for BottleMod).
+fn data_volume_section() {
     let opts = SolverOpts::default();
     let sizes_gb = [1.1, 5.0, 10.0, 50.0, 100.0];
 
@@ -69,4 +96,220 @@ fn main() {
         last_bm / first_bm,
         last_des / first_des
     );
+}
+
+struct ScalePoint {
+    shape: Topology,
+    nodes: usize,
+    solve_s: f64,
+    peak_pieces: usize,
+    events: usize,
+    passes: usize,
+    budget_err: f64,
+}
+
+fn gen_opts(shape: Topology, nodes: usize) -> GeneratorOpts {
+    let base = match shape {
+        // wide shared pool: residual capacity growth is what the piece
+        // budget exists for
+        Topology::ScatterGather => GeneratorOpts {
+            topology: shape,
+            width: 40,
+            pool_residual_prob: 0.5,
+            ..GeneratorOpts::default()
+        },
+        _ => GeneratorOpts {
+            topology: shape,
+            width_jitter: 0.15,
+            pool_residual_prob: 0.25,
+            ..GeneratorOpts::default()
+        },
+    };
+    base.target_nodes(nodes)
+}
+
+fn build(shape: Topology, nodes: usize) -> Workflow {
+    let mut rng = Rng::new(0x5CA1E + nodes as u64);
+    generate(&mut rng, &gen_opts(shape, nodes))
+}
+
+fn peak_pieces(wa: &WorkflowAnalysis) -> usize {
+    let inp = wa
+        .inputs
+        .iter()
+        .flat_map(|i| i.data.iter().chain(i.resources.iter()))
+        .map(|f| f.n_pieces())
+        .max()
+        .unwrap_or(0);
+    let prog = wa
+        .analyses
+        .iter()
+        .map(|a| a.progress.n_pieces())
+        .max()
+        .unwrap_or(0);
+    inp.max(prog)
+}
+
+/// Axis 2: generated topologies from 10² to 10⁴ nodes under the worklist
+/// fixpoint + piece budget.
+fn topology_section(assert_ok: bool) -> Vec<ScalePoint> {
+    let opts = SolverOpts {
+        piece_budget: PIECE_BUDGET,
+        piece_budget_err: 1e-6,
+        ..SolverOpts::default()
+    };
+
+    // (shape, node axis): the 10⁴ point rides the cheap-per-node shapes;
+    // the pool-heavy shape stops at 400 (its residual algebra is the
+    // worst case the budget is for, quadratic in pool population)
+    let axes: [(Topology, &[usize]); 3] = [
+        (Topology::Layered, &[100, 1000, 10_000]),
+        (Topology::ChainedStages, &[100, 1000, 10_000]),
+        (Topology::ScatterGather, &[100, 400]),
+    ];
+
+    // bit-for-bit: worklist vs full reference fixpoint at the small size.
+    // Deterministic, so this asserts even under BOTTLEMOD_BENCH_NO_ASSERT.
+    for (shape, _) in &axes {
+        let wf = build(*shape, 100);
+        let fast = analyze_fixpoint(&wf, &opts, 6).unwrap();
+        let full = analyze_fixpoint_full(&wf, &opts, 6).unwrap();
+        assert_eq!(
+            fast.analyses,
+            full.analyses,
+            "{}: worklist deviates from the reference fixpoint",
+            shape.name()
+        );
+        assert_eq!(fast.events, full.events, "{}: event accounting", shape.name());
+        assert_eq!(fast.passes, full.passes, "{}: pass count", shape.name());
+    }
+    println!("\n== generated-topology scaling (worklist fixpoint, budget {PIECE_BUDGET}) ==");
+    println!("bit-for-bit: worklist == full fixpoint on all shapes at 100 nodes ✓");
+
+    let mut rows = vec![vec![
+        "shape".to_string(),
+        "nodes".to_string(),
+        "solve".to_string(),
+        "peak pieces".to_string(),
+        "events".to_string(),
+        "passes".to_string(),
+        "budget err".to_string(),
+    ]];
+    let mut out = vec![];
+    for (shape, sizes) in axes {
+        for &n in sizes {
+            let wf = build(shape, n);
+            let nodes = wf.nodes.len();
+            let samples = if nodes >= 10_000 { 1 } else { 3 };
+            let b = bench_once(&format!("{} {nodes} nodes", shape.name()), samples, || {
+                analyze_fixpoint(&wf, &opts, 6).unwrap()
+            });
+            let wa = analyze_fixpoint(&wf, &opts, 6).unwrap();
+            assert!(wa.makespan.is_some(), "{}/{nodes}: never finishes", shape.name());
+            // the budget is a hard cap on every materialized input —
+            // deterministic, always asserted
+            for (i, inp) in wa.inputs.iter().enumerate() {
+                for f in inp.data.iter().chain(inp.resources.iter()) {
+                    assert!(
+                        f.n_pieces() <= PIECE_BUDGET,
+                        "{}/{nodes}: node {i} input has {} pieces (cap {PIECE_BUDGET})",
+                        shape.name(),
+                        f.n_pieces()
+                    );
+                }
+            }
+            let point = ScalePoint {
+                shape,
+                nodes,
+                solve_s: b.per_iter.mean,
+                peak_pieces: peak_pieces(&wa),
+                events: wa.events,
+                passes: wa.passes,
+                budget_err: wa.budget_err,
+            };
+            rows.push(vec![
+                shape.name().to_string(),
+                format!("{nodes}"),
+                format!("{:.2} ms", point.solve_s * 1e3),
+                format!("{}", point.peak_pieces),
+                format!("{}", point.events),
+                format!("{}", point.passes),
+                format!("{:.2e}", point.budget_err),
+            ]);
+            out.push(point);
+        }
+    }
+    print!("{}", ascii_table(&rows));
+
+    // the pool-heavy shape must actually trigger the budget (otherwise
+    // this bench stops guarding the mechanism it exists for)
+    let triggered = out
+        .iter()
+        .any(|p| p.shape == Topology::ScatterGather && p.budget_err > 0.0);
+    assert!(
+        triggered,
+        "piece budget never triggered on the pool-heavy shape — axis misconfigured"
+    );
+
+    // per-node cost must stay roughly flat from 10² to 10⁴ (the §6 claim
+    // applied to topology size); generous factor to absorb machine noise
+    for shape in [Topology::Layered, Topology::ChainedStages] {
+        let pts: Vec<&ScalePoint> = out.iter().filter(|p| p.shape == shape).collect();
+        let small = pts.first().unwrap();
+        let big = pts.last().unwrap();
+        let per_node_ratio =
+            (big.solve_s / big.nodes as f64) / (small.solve_s / small.nodes as f64);
+        println!(
+            "{}: per-node cost ratio {}→{} nodes: {per_node_ratio:.2}x",
+            shape.name(),
+            small.nodes,
+            big.nodes
+        );
+        if assert_ok {
+            assert!(
+                per_node_ratio < 50.0,
+                "{}: per-node cost blew up {per_node_ratio:.1}x from {} to {} nodes",
+                shape.name(),
+                small.nodes,
+                big.nodes
+            );
+        }
+    }
+    out
+}
+
+fn persist(points: &[ScalePoint]) {
+    if let Some(prev) = read_bench_artifact("scaling") {
+        for p in points {
+            let key = format!("{}_{}_s", p.shape.name(), p.nodes);
+            if let Some(prev_s) = prev.get(&key).as_f64() {
+                if prev_s > 0.0 {
+                    println!(
+                        "perf trajectory {key}: {:.2} ms (previous run) -> {:.2} ms ({:.2}x)",
+                        prev_s * 1e3,
+                        p.solve_s * 1e3,
+                        prev_s / p.solve_s
+                    );
+                }
+            }
+        }
+    }
+    let mut fields: Vec<(String, Json)> = vec![
+        ("piece_budget".to_string(), Json::Num(PIECE_BUDGET as f64)),
+    ];
+    for p in points {
+        let base = format!("{}_{}", p.shape.name(), p.nodes);
+        fields.push((format!("{base}_s"), Json::Num(p.solve_s)));
+        fields.push((format!("{base}_peak_pieces"), Json::Num(p.peak_pieces as f64)));
+        fields.push((format!("{base}_events"), Json::Num(p.events as f64)));
+        fields.push((format!("{base}_passes"), Json::Num(p.passes as f64)));
+    }
+    let borrowed: Vec<(&str, Json)> = fields
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect();
+    match write_bench_artifact("scaling", borrowed) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
 }

@@ -11,6 +11,10 @@
 //!                                 --workflow picks the swept model)
 //!   measure [points] [runs]       virtual-testbed measurements (Fig 7 bars)
 //!   compare-des [gb ...]          §6 performance comparison table
+//!   generate [--shape <s>]        seeded random topology (layered|
+//!     [--seed <n>] [--nodes <n>]  scatter-gather|fan-in|chain|genomics):
+//!     [--budget <p>]              generate, analyze, print schedule summary
+//!                                 + content fingerprint (docs/SCALING.md)
 //!   export-figures <dir>          regenerate every figure's data as JSON
 //!   advisor                       recommend the link split (paper headline)
 //!   online-demo                   online re-analysis controller demo
@@ -49,6 +53,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(rest),
         "measure" => cmd_measure(rest),
         "compare-des" => cmd_compare_des(rest),
+        "generate" => cmd_generate(rest),
         "export-figures" => cmd_export(rest),
         "advisor" => cmd_advisor(),
         "online-demo" => cmd_online(),
@@ -76,9 +81,11 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "bottlemod — fast bottleneck analysis for scientific workflows\n\
-         usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|\
+         usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|generate|\
          export-figures|advisor|online-demo|serve|artifacts> [args]\n\
          calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]\n\
+         generate: bottlemod generate [--shape layered|scatter-gather|fan-in|chain|\
+         genomics] [--seed <n>] [--nodes <n>] [--budget <pieces>]\n\
          sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]\n\
          serve: bottlemod serve [--tcp <host:port>] [--unix <path>] [--no-stdio]\n\
          \x20      [--threads <n>] [--queue <n>] [--session-cache-entries <n>]\n\
@@ -464,6 +471,99 @@ fn cmd_compare_des(args: &[String]) -> Result<()> {
     let rows = exporter::sec6(&dir, &sizes, 3)?;
     print!("{}", ascii_table(&rows));
     println!("(BottleMod cost is flat in input size; the DES scales — §6)");
+    Ok(())
+}
+
+/// Generate a seeded random topology (docs/SCALING.md), analyze it with
+/// the worklist fixpoint, and print a compact summary plus the content
+/// fingerprint (same seed + shape + nodes → same fingerprint, anywhere).
+fn cmd_generate(args: &[String]) -> Result<()> {
+    use bottlemod::workflow::generator::{fingerprint, generate, GeneratorOpts, Topology};
+
+    let usage = "usage: bottlemod generate [--shape layered|scatter-gather|fan-in|chain|\
+                 genomics] [--seed <n>] [--nodes <n>] [--budget <pieces>]";
+    let mut shape = Topology::Layered;
+    let mut seed: u64 = 0;
+    let mut nodes: usize = 50;
+    let mut budget: usize = 0;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--shape" => {
+                let s = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::msg(format!("--shape needs a value\n{usage}")))?;
+                shape = Topology::parse(s)
+                    .ok_or_else(|| Error::msg(format!("unknown shape '{s}'\n{usage}")))?;
+                i += 2;
+            }
+            "--seed" => {
+                seed = args
+                    .get(i + 1)
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::msg(format!("--seed needs a number\n{usage}")))?;
+                i += 2;
+            }
+            "--nodes" => {
+                nodes = args
+                    .get(i + 1)
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::msg(format!("--nodes needs a number\n{usage}")))?;
+                i += 2;
+            }
+            "--budget" => {
+                budget = args
+                    .get(i + 1)
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::msg(format!("--budget needs a number\n{usage}")))?;
+                i += 2;
+            }
+            other => return Err(Error::msg(format!("unknown flag '{other}'\n{usage}"))),
+        }
+    }
+
+    let gopts = GeneratorOpts {
+        topology: shape,
+        width_jitter: 0.2,
+        pool_residual_prob: 0.3,
+        ..GeneratorOpts::default()
+    }
+    .target_nodes(nodes);
+    let mut rng = bottlemod::util::Rng::new(seed);
+    let wf = generate(&mut rng, &gopts);
+    wf.validate().map_err(|e| Error::msg(e.to_string()))?;
+    let fp = fingerprint(&wf);
+
+    let opts = SolverOpts {
+        piece_budget: budget,
+        piece_budget_err: if budget > 0 { 1e-6 } else { 0.0 },
+        ..SolverOpts::default()
+    };
+    let t0 = std::time::Instant::now();
+    let wa = analyze_fixpoint(&wf, &opts, 8).map_err(|e| Error::msg(e.to_string()))?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "shape {} seed {seed}: {} nodes, {} pool(s)  fingerprint {fp:032x}",
+        shape.name(),
+        wf.nodes.len(),
+        wf.pools.len()
+    );
+    match wa.makespan {
+        Some(m) => println!("makespan: {m:.2} s"),
+        None => println!("makespan: never finishes"),
+    }
+    println!(
+        "analysis: {} ({} events, {} passes{})",
+        fmt_duration(dt),
+        wa.events,
+        wa.passes,
+        if budget > 0 {
+            format!(", piece budget {budget}, error bound {:.2e}", wa.budget_err)
+        } else {
+            String::new()
+        }
+    );
     Ok(())
 }
 

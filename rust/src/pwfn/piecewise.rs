@@ -351,6 +351,121 @@ impl PwPoly {
         PwPoly::new(breaks, polys)
     }
 
+    /// Lossy piece reduction under a hard piece budget (deep-graph
+    /// scaling, ROADMAP item 3). Coarsens the function to at most
+    /// `max(2, max_pieces)` pieces by replacing runs of adjacent
+    /// finite-span pieces with their secant (endpoint-interpolating)
+    /// line, greedily left-to-right under an error threshold that starts
+    /// at `max_err` and is raised (×4) until the budget is met. Returns
+    /// the coarsened function and a sound upper bound on
+    /// `sup_x |coarse(x) − self(x)|` (`0.0` when the function already
+    /// fits the budget and is returned unchanged).
+    ///
+    /// Guarantees the engine and the generative test layer rely on:
+    ///
+    /// * the result has at most `max(2, max_pieces)` pieces;
+    /// * values at every *kept* break are preserved exactly (the secant
+    ///   interpolates run endpoints), so nondecreasing functions stay
+    ///   nondecreasing and jumps at kept breaks survive;
+    /// * a final infinite-span piece is never merged (no secant over an
+    ///   unbounded interval), so constant-extension semantics survive;
+    /// * pure `f64` computation of the input only — deterministic, and
+    ///   safe to key content-hash caches on ([`crate::runtime::cache`]).
+    pub fn simplify_budget(&self, max_pieces: usize, max_err: f64) -> (PwPoly, f64) {
+        let cap = max_pieces.max(2);
+        if self.n_pieces() <= cap {
+            return (self.clone(), 0.0);
+        }
+        // value scale at the (finite) breaks, for a sane starting
+        // threshold when the caller passes max_err <= 0
+        let scale = self
+            .breaks
+            .iter()
+            .filter(|b| b.is_finite())
+            .map(|&b| self.eval(b).abs())
+            .fold(0.0f64, f64::max);
+        let mut eps = if max_err > 0.0 {
+            max_err
+        } else {
+            1e-9 * (1.0 + scale)
+        };
+        for _ in 0..64 {
+            let (out, err) = self.coarsen(eps);
+            if out.n_pieces() <= cap {
+                return (out, err);
+            }
+            eps *= 4.0;
+        }
+        // unreachable for finite inputs (eps eventually exceeds the total
+        // variation and everything merges); collapse outright as a backstop
+        self.coarsen(f64::INFINITY)
+    }
+
+    /// One greedy left-to-right coarsening sweep: grow each run of
+    /// adjacent finite-span pieces while its secant's error bound stays
+    /// within `eps`. Returns the coarsened function and the worst
+    /// accepted run bound.
+    fn coarsen(&self, eps: f64) -> (PwPoly, f64) {
+        let n = self.polys.len();
+        let last_inf = !self.x_max().is_finite();
+        let merge_n = if last_inf { n - 1 } else { n };
+        let mut b = PwBuilder::with_capacity(16);
+        let mut worst = 0.0f64;
+        let mut i = 0;
+        while i < merge_n {
+            // run starts as the single exact piece i
+            let mut run = (self.polys[i].clone(), 0.0f64);
+            let mut j = i + 1;
+            while j < merge_n {
+                let (sec, err) = self.secant_over(i, j + 1);
+                if err <= eps {
+                    run = (sec, err);
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            b.push(self.breaks[i], run.0);
+            worst = worst.max(run.1);
+            i = j;
+        }
+        if last_inf {
+            b.push(self.breaks[n - 1], self.polys[n - 1].clone());
+        }
+        (b.finish(self.x_max()), worst)
+    }
+
+    /// Secant line through `(breaks[i], f(breaks[i]))` and
+    /// `(breaks[jexcl], f(breaks[jexcl]⁻))` in the local coordinates of
+    /// `breaks[i]`, plus a sound sup bound of `|f − secant|` over pieces
+    /// `i..jexcl` via per-piece coefficient norms `Σ |d_k| len^k`.
+    fn secant_over(&self, i: usize, jexcl: usize) -> (Poly, f64) {
+        let a = self.breaks[i];
+        let bx = self.breaks[jexcl];
+        let ya = self.eval(a);
+        let yb = self.eval_left(bx);
+        let slope = (yb - ya) / (bx - a);
+        let sec = Poly::new(vec![ya, slope]);
+        let mut err = 0.0f64;
+        for k in i..jexcl {
+            let s = self.breaks[k];
+            let len = self.breaks[k + 1] - s;
+            let p = &self.polys[k];
+            // difference in the piece's local coordinates u = x − s:
+            // d(u) = p(u) − ya − slope·(u + (s − a))
+            let d0 = p.coeffs[0] - ya - slope * (s - a);
+            let d1 = p.coeffs.get(1).copied().unwrap_or(0.0) - slope;
+            let mut bound = d0.abs() + d1.abs() * len;
+            let mut lp = len;
+            for c in p.coeffs.iter().skip(2) {
+                lp *= len;
+                bound += c.abs() * lp;
+            }
+            err = err.max(bound);
+        }
+        (sec, err)
+    }
+
     /// True when `clip(a, b)` would return the function unchanged (the
     /// whole-domain clip).
     fn is_clip_noop(&self, a: f64, b: f64) -> bool {
@@ -1349,6 +1464,58 @@ mod tests {
         assert_close(f.eval_left(2.0), 0.0);
         assert_close(f.jump_at(2.0), 10.0);
         assert_close(f.jump_at(1.0), 0.0);
+    }
+
+    /// A jagged many-piece ramp coarsens to the budget, with values at the
+    /// kept breaks preserved and the reported bound honored everywhere.
+    #[test]
+    fn simplify_budget_caps_pieces_and_bounds_error() {
+        // 64-piece piecewise-linear staircase over [0, 64]
+        let mut pts = vec![(0.0, 0.0)];
+        let mut y = 0.0;
+        for i in 0..64 {
+            y += if i % 2 == 0 { 2.0 } else { 0.5 };
+            pts.push(((i + 1) as f64, y));
+        }
+        let f = PwPoly::from_points(&pts);
+        assert!(f.n_pieces() > 8);
+        let (g, err) = f.simplify_budget(8, 0.1);
+        assert!(g.n_pieces() <= 8, "got {} pieces", g.n_pieces());
+        assert!(err.is_finite() && err > 0.0);
+        // endpoints of the whole domain are interpolated exactly
+        assert_close(g.eval(0.0), f.eval(0.0));
+        assert!((g.eval_left(64.0) - f.eval_left(64.0)).abs() < 1e-9);
+        // reported bound respected at dense sample points
+        for k in 0..=1000 {
+            let x = 64.0 * k as f64 / 1000.0;
+            let d = (g.eval(x) - f.eval(x)).abs();
+            assert!(d <= err + 1e-9 * (1.0 + y.abs()), "x={x}: |Δ|={d} > {err}");
+        }
+        // monotone input stays monotone
+        assert!(f.is_nondecreasing());
+        assert!(g.is_nondecreasing());
+    }
+
+    /// Under-budget functions are returned unchanged with a zero bound,
+    /// and the infinite tail piece is never merged away.
+    #[test]
+    fn simplify_budget_noop_and_infinite_tail() {
+        let f = PwPoly::from_points(&[(0.0, 0.0), (1.0, 1.0), (2.0, 3.0)]);
+        let (g, err) = f.simplify_budget(8, 0.0);
+        assert_eq!(g, f);
+        assert_eq!(err, 0.0);
+
+        // many pieces with a constant-extension tail: the tail survives
+        let mut pts = vec![(0.0, 0.0)];
+        for i in 0..32 {
+            pts.push(((i + 1) as f64, ((i + 1) as f64).sqrt() * 3.0));
+        }
+        let h = PwPoly::from_points(&pts);
+        let (hb, herr) = h.simplify_budget(4, 0.0);
+        assert!(hb.n_pieces() <= 4);
+        assert!(herr.is_finite());
+        assert!(!hb.x_max().is_finite(), "constant extension must survive");
+        assert_close(hb.eval(1e9), h.eval(1e9));
     }
 
     #[test]

@@ -163,6 +163,11 @@ impl ContentHash for SolverOpts {
         h.write_f64(self.horizon);
         h.write_usize(self.max_events);
         h.write_f64(self.tol);
+        // budgeted solves key differently from exact ones: the engine
+        // coarsens materialized inputs under these knobs, so a cache
+        // entry is only reusable under the same budget configuration
+        h.write_usize(self.piece_budget);
+        h.write_f64(self.piece_budget_err);
     }
 }
 
@@ -591,6 +596,13 @@ mod tests {
             ..SolverOpts::default()
         };
         assert_ne!(k1, node_key(&p, &i, &o2));
+        // budgeted solves must never alias exact ones
+        let o3 = SolverOpts {
+            piece_budget: 64,
+            piece_budget_err: 1e-6,
+            ..SolverOpts::default()
+        };
+        assert_ne!(k1, node_key(&p, &i, &o3));
         let mut i2 = sample_inputs(1.0);
         i2.start_time = 5.0;
         assert_ne!(k1, node_key(&p, &i2, &o));

@@ -66,6 +66,16 @@ pub struct SolverOpts {
     pub max_events: usize,
     /// Relative progress tolerance for "reached" comparisons.
     pub tol: f64,
+    /// Opt-in piece budget for materialized workflow input/demand
+    /// functions (`0` = off, the default). When a function the engine
+    /// materializes exceeds this many pieces it is lossily coarsened via
+    /// [`crate::pwfn::PwPoly::simplify_budget`]; the worst reported error
+    /// bound surfaces as `WorkflowAnalysis::budget_err`. Keeps per-node
+    /// function sizes bounded on deep generated DAGs (docs/SCALING.md).
+    pub piece_budget: usize,
+    /// Error threshold seeding the budgeted coarsening (merges cheaper
+    /// than this are taken first; the budget itself is a hard cap).
+    pub piece_budget_err: f64,
 }
 
 impl Default for SolverOpts {
@@ -74,6 +84,8 @@ impl Default for SolverOpts {
             horizon: 1e9,
             max_events: 200_000,
             tol: 1e-9,
+            piece_budget: 0,
+            piece_budget_err: 0.0,
         }
     }
 }

@@ -19,6 +19,15 @@
 //! paper's §5.2 procedure, sufficient when prioritized consumers are
 //! analyzed first.
 //!
+//! Fixpoint passes after the first run on a **worklist**: only nodes whose
+//! materialized inputs can have changed since the previous pass (the dirty
+//! closure over graph successors and shared-pool co-membership, seeded by
+//! bitwise finish-hint changes) are re-solved; every other node replays its
+//! `Arc`'d previous result bit-identically. On a pool-free DAG the second
+//! pass re-solves nothing — the stability confirmation is free. See
+//! `docs/SCALING.md` for the correctness argument, and
+//! [`analyze_fixpoint_full`] for the retained re-solve-everything oracle.
+//!
 //! # Invariants
 //!
 //! * Nodes are analyzed in Kahn topological order with node-id tie-breaks
@@ -50,7 +59,7 @@ use crate::pwfn::PwPoly;
 use crate::runtime::cache::{node_key, AnalysisCache, NodeSolve};
 use crate::solver::{solve, Analysis, SolveError, SolverOpts};
 
-use super::graph::{DataSource, GraphError, ResourceSource, Workflow};
+use super::graph::{DataSource, GraphError, NodeSet, ResourceSource, Workflow};
 
 /// Result of analyzing a whole workflow.
 #[derive(Clone, Debug)]
@@ -66,10 +75,17 @@ pub struct WorkflowAnalysis {
     pub makespan: Option<f64>,
     /// Per-pool remaining capacity after all consumers were charged.
     pub pool_residuals: Vec<PwPoly>,
-    /// Total solver events across all nodes (§6 cost accounting).
+    /// Total solver events across all nodes (§6 cost accounting). The
+    /// worklist fixpoint charges a reused (clean) node the same event
+    /// count a re-solve would have produced, so this field is identical
+    /// between the worklist and the full reference fixpoint.
     pub events: usize,
     /// Fixpoint passes used (1 for plain [`analyze`]).
     pub passes: usize,
+    /// Worst error bound reported by piece budgeting
+    /// ([`SolverOpts::piece_budget`]) across every coarsened input/demand
+    /// function; `0.0` when budgeting is off or never triggered.
+    pub budget_err: f64,
 }
 
 /// Workflow-level failure.
@@ -106,19 +122,41 @@ impl From<GraphError> for WorkflowError {
     }
 }
 
+/// Everything one pass produces, `Arc`-shared so the worklist scheduler
+/// can carry clean nodes into the next pass without deep copies.
+struct PassState {
+    analyses: Vec<Arc<Analysis>>,
+    inputs: Vec<Arc<ProcessInputs>>,
+    solves: Vec<Option<Arc<NodeSolve>>>,
+    /// Per-node pool charges: `(pool id, simplified demand)`, in resource-
+    /// slot order. Clean nodes replay these bit-identically next pass.
+    claims: Vec<Vec<(usize, Arc<PwPoly>)>>,
+    /// Per-node worst piece-budget error bound (0.0 when off).
+    budget_err: Vec<f64>,
+}
+
 /// One analysis pass. `finish_hints[i]` carries node `i`'s finish time from
 /// a previous pass (used for pool release when `i` hasn't been analyzed yet
 /// in this pass). With `cache`, each node's solve is memoized on a content
-/// hash of its materialized inputs ([`node_key`]).
+/// hash of its materialized inputs ([`node_key`]). With `reuse`, a node
+/// *not* in the dirty set skips materialization and solving entirely and
+/// replays the previous pass's `Arc`'d result — sound because a clean
+/// node's materialized inputs are provably bit-identical to the previous
+/// pass (see [`analyze_fixpoint`] and docs/SCALING.md).
+///
+/// Returns the pass state plus the solver events accounted to this pass
+/// (reused nodes charge their stored event count, keeping the §6 cost
+/// accounting identical to a full re-solve).
 fn analyze_pass(
     wf: &Workflow,
+    order: &[usize],
+    consumers: &[Vec<usize>],
     opts: &SolverOpts,
     finish_hints: &[Option<f64>],
     cache: Option<&AnalysisCache>,
-) -> Result<WorkflowAnalysis, WorkflowError> {
-    let order = wf.topo_order()?;
+    reuse: Option<(&PassState, &NodeSet)>,
+) -> Result<(PassState, usize), WorkflowError> {
     let n = wf.nodes.len();
-    let consumers = wf.pool_consumers();
 
     let mut analyses: Vec<Option<Arc<Analysis>>> = vec![None; n];
     // cached mode: the full NodeSolve per node, so downstream consumers and
@@ -157,13 +195,31 @@ fn analyze_pass(
     } else {
         vec![]
     };
-    let mut inputs_used: Vec<Option<ProcessInputs>> = vec![None; n];
+    let mut inputs_used: Vec<Option<Arc<ProcessInputs>>> = vec![None; n];
+    let mut claims: Vec<Vec<(usize, Arc<PwPoly>)>> = vec![vec![]; n];
+    let mut budget_errs: Vec<f64> = vec![0.0; n];
     // per-pool charged demand functions of already-analyzed consumers
-    let mut pool_claims: Vec<Vec<(usize, PwPoly)>> = vec![vec![]; wf.pools.len()];
+    let mut pool_claims: Vec<Vec<Arc<PwPoly>>> = vec![vec![]; wf.pools.len()];
     let mut events = 0usize;
 
-    for &i in &order {
+    for &i in order {
         let node = &wf.nodes[i];
+
+        // ---- clean node: replay the previous pass bit-identically -------
+        if let Some((prev, dirty)) = reuse {
+            if !dirty.contains(i) {
+                events += prev.analyses[i].events;
+                analyses[i] = Some(prev.analyses[i].clone());
+                solves[i] = prev.solves[i].clone();
+                inputs_used[i] = Some(prev.inputs[i].clone());
+                budget_errs[i] = prev.budget_err[i];
+                for (pid, d) in &prev.claims[i] {
+                    pool_claims[*pid].push(d.clone());
+                }
+                claims[i] = prev.claims[i].clone();
+                continue;
+            }
+        }
 
         // ---- start time: barrier predecessors must have finished --------
         let mut start = node.start.at;
@@ -175,7 +231,7 @@ fn analyze_pass(
         }
 
         // ---- data inputs -------------------------------------------------
-        let data: Vec<PwPoly> = node
+        let mut data: Vec<PwPoly> = node
             .data_sources
             .iter()
             .map(|s| match s {
@@ -218,7 +274,7 @@ fn analyze_pass(
         };
 
         // ---- resource inputs ----------------------------------------------
-        let resources: Vec<PwPoly> = node
+        let mut resources: Vec<PwPoly> = node
             .resource_sources
             .iter()
             .map(|s| match s {
@@ -244,11 +300,25 @@ fn analyze_pass(
             })
             .collect();
 
-        let inputs = ProcessInputs {
+        // ---- opt-in piece budget (SolverOpts::piece_budget) -------------
+        // Coarsen any materialized function over the cap *before* the key
+        // is hashed, so cached and cold budgeted runs stay bit-identical.
+        let mut node_err = 0.0f64;
+        if opts.piece_budget > 0 {
+            for f in data.iter_mut().chain(resources.iter_mut()) {
+                if f.n_pieces() > opts.piece_budget {
+                    let (g, e) = f.simplify_budget(opts.piece_budget, opts.piece_budget_err);
+                    *f = g;
+                    node_err = node_err.max(e);
+                }
+            }
+        }
+
+        let inputs = Arc::new(ProcessInputs {
             data,
             resources,
             start_time: start,
-        };
+        });
         // `solve` is pure in (process, inputs, opts); a cache hit returns
         // the bit-identical Arc'd analysis of an earlier solve, so cached
         // and cold runs are indistinguishable in every output field
@@ -262,13 +332,13 @@ fn analyze_pass(
         };
         let analysis: Arc<Analysis> = match cache {
             Some(c) => {
-                let key = node_key(&node.process, &inputs, opts);
+                let key = node_key(&node.process, &*inputs, opts);
                 let ns = match c.get(key) {
                     Some(hit) => hit,
                     None => {
                         let fresh = Arc::new(NodeSolve::derive(
                             &node.process,
-                            Arc::new(solve_fresh(&inputs)?),
+                            Arc::new(solve_fresh(&*inputs)?),
                             &consumed_outputs[i],
                             &pool_backed[i],
                         ));
@@ -280,7 +350,7 @@ fn analyze_pass(
                 solves[i] = Some(ns);
                 analysis
             }
-            None => Arc::new(solve_fresh(&inputs)?),
+            None => Arc::new(solve_fresh(&*inputs)?),
         };
         events += analysis.events;
 
@@ -295,50 +365,98 @@ fn analyze_pass(
                 // cached mode: the simplified demand was derived with the
                 // solve (empty slot = entry from different wiring: fall
                 // back to the same expression)
-                let demand = solves[i]
+                let mut demand = solves[i]
                     .as_ref()
                     .and_then(|ns| ns.demands[l].clone())
                     .unwrap_or_else(|| {
                         analysis.resource_demand(&node.process, l).simplify()
                     });
-                pool_claims[pid].push((i, demand));
+                if opts.piece_budget > 0 && demand.n_pieces() > opts.piece_budget {
+                    let (g, e) = demand.simplify_budget(opts.piece_budget, opts.piece_budget_err);
+                    demand = g;
+                    node_err = node_err.max(e);
+                }
+                let demand = Arc::new(demand);
+                pool_claims[pid].push(demand.clone());
+                claims[i].push((pid, demand));
             }
         }
 
+        budget_errs[i] = node_err;
         inputs_used[i] = Some(inputs);
         analyses[i] = Some(analysis);
     }
 
+    Ok((
+        PassState {
+            analyses: analyses.into_iter().map(Option::unwrap).collect(),
+            inputs: inputs_used.into_iter().map(Option::unwrap).collect(),
+            solves,
+            claims,
+            budget_err: budget_errs,
+        },
+        events,
+    ))
+}
+
+/// Build the public [`WorkflowAnalysis`] from the final pass state.
+/// Pool residuals are recomputed from the stored per-node claims in
+/// analysis (topological) order — the same order the pass charged them,
+/// so the k-way demand sum is bit-identical.
+fn finalize(
+    wf: &Workflow,
+    order: &[usize],
+    state: PassState,
+    events: usize,
+    passes: usize,
+) -> WorkflowAnalysis {
     let mut makespan = Some(0.0f64);
-    for a in analyses.iter().flatten() {
+    for a in &state.analyses {
         makespan = match (makespan, a.finish_time) {
             (Some(m), Some(f)) => Some(m.max(f)),
             _ => None,
         };
     }
 
+    let mut per_pool: Vec<Vec<Arc<PwPoly>>> = vec![vec![]; wf.pools.len()];
+    for &i in order {
+        for (pid, d) in &state.claims[i] {
+            per_pool[*pid].push(d.clone());
+        }
+    }
     let pool_residuals = wf
         .pools
         .iter()
         .enumerate()
-        .map(|(pid, pool)| residual_capacity(&pool.capacity, &pool_claims[pid]))
+        .map(|(pid, pool)| residual_capacity(&pool.capacity, &per_pool[pid]))
         .collect();
 
-    Ok(WorkflowAnalysis {
-        analyses: analyses.into_iter().map(Option::unwrap).collect(),
-        inputs: inputs_used.into_iter().map(Option::unwrap).collect(),
+    let budget_err = state.budget_err.iter().fold(0.0f64, |m, e| m.max(*e));
+    WorkflowAnalysis {
+        analyses: state.analyses,
+        // the final pass holds the only reference in the common case, so
+        // this is a move, not a deep copy
+        inputs: state
+            .inputs
+            .into_iter()
+            .map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()))
+            .collect(),
         makespan,
         pool_residuals,
         events,
-        passes: 1,
-    })
+        passes,
+        budget_err,
+    }
 }
 
 /// Single-pass analysis (the paper's §5.2 procedure).
 pub fn analyze(wf: &Workflow, opts: &SolverOpts) -> Result<WorkflowAnalysis, WorkflowError> {
     wf.validate()?;
+    let order = wf.topo_order()?;
+    let consumers = wf.pool_consumers();
     let hints = vec![None; wf.nodes.len()];
-    analyze_pass(wf, opts, &hints, None)
+    let (state, events) = analyze_pass(wf, &order, &consumers, opts, &hints, None, None)?;
+    Ok(finalize(wf, &order, state, events, 1))
 }
 
 /// Fixpoint analysis: iterate passes, feeding each pass the previous pass's
@@ -347,6 +465,19 @@ pub fn analyze(wf: &Workflow, opts: &SolverOpts) -> Result<WorkflowAnalysis, Wor
 /// released by one analyzed *later* (e.g. Fig 7 with small fractions, where
 /// task 2's download finishes first and task 1's download inherits the full
 /// link).
+///
+/// Passes after the first run on a **worklist**: only nodes whose
+/// materialized inputs can have changed since the previous pass are
+/// re-solved; every other node replays its `Arc`'d previous result. The
+/// dirty set is the closure, over graph successors and shared-pool
+/// co-membership, of the nodes observing a bitwise-changed finish hint —
+/// finish hints being the only cross-pass input channel
+/// ([`analyze_pass`]'s `others_end`). Clean nodes therefore provably
+/// materialize bit-identical inputs, and `solve` is a pure function of
+/// them, so the result is **bit-for-bit identical** to the full
+/// re-solve-everything fixpoint ([`analyze_fixpoint_full`], kept as the
+/// differential-testing oracle; `tests/generated_graphs.rs` pins the
+/// equivalence across generated topologies).
 pub fn analyze_fixpoint(
     wf: &Workflow,
     opts: &SolverOpts,
@@ -366,16 +497,61 @@ pub fn analyze_fixpoint_cached(
     max_passes: usize,
     cache: Option<&AnalysisCache>,
 ) -> Result<WorkflowAnalysis, WorkflowError> {
+    run_fixpoint(wf, opts, max_passes, cache, true)
+}
+
+/// The reference fixpoint: re-solves **every** node in **every** pass (the
+/// pre-worklist behavior). Kept as the oracle for the worklist scheduler's
+/// bit-for-bit differential tests; prefer [`analyze_fixpoint`] everywhere
+/// else.
+pub fn analyze_fixpoint_full(
+    wf: &Workflow,
+    opts: &SolverOpts,
+    max_passes: usize,
+) -> Result<WorkflowAnalysis, WorkflowError> {
+    run_fixpoint(wf, opts, max_passes, None, false)
+}
+
+fn run_fixpoint(
+    wf: &Workflow,
+    opts: &SolverOpts,
+    max_passes: usize,
+    cache: Option<&AnalysisCache>,
+    worklist: bool,
+) -> Result<WorkflowAnalysis, WorkflowError> {
     wf.validate()?;
     let n = wf.nodes.len();
+    let order = wf.topo_order()?;
+    let consumers = wf.pool_consumers();
+    let succ = wf.successors();
+    let pools_of = wf.consumed_pools();
+
     let mut hints: Vec<Option<f64>> = vec![None; n];
-    let mut last: Option<WorkflowAnalysis> = None;
+    // bitwise hint changes from the previous pass — the dirty-set seeds
+    let mut changed: Vec<bool> = vec![true; n];
+    let mut state: Option<PassState> = None;
     let mut total_events = 0usize;
+    let mut passes = 0usize;
     for pass in 0..max_passes.max(1) {
-        let wa = analyze_pass(wf, opts, &hints, cache)?;
-        total_events += wa.events;
-        let new_hints: Vec<Option<f64>> =
-            wa.analyses.iter().map(|a| a.finish_time).collect();
+        let dirty = if worklist && pass > 0 {
+            Some(dirty_from_changed(&changed, &pools_of, &consumers, &succ))
+        } else {
+            None
+        };
+        let reuse = match (&state, &dirty) {
+            (Some(prev), Some(d)) => Some((prev, d)),
+            _ => None,
+        };
+        let (st, ev) = analyze_pass(wf, &order, &consumers, opts, &hints, cache, reuse)?;
+        total_events += ev;
+        passes = pass + 1;
+        let new_hints: Vec<Option<f64>> = st.analyses.iter().map(|a| a.finish_time).collect();
+        // exact comparison drives the next dirty set (bit-for-bit
+        // soundness); the tolerance comparison below only decides when to
+        // stop iterating, exactly as the reference fixpoint does
+        for ((c, a), b) in changed.iter_mut().zip(&new_hints).zip(&hints) {
+            *c = a != b;
+        }
         let stable = new_hints
             .iter()
             .zip(hints.iter())
@@ -385,15 +561,48 @@ pub fn analyze_fixpoint_cached(
                 _ => false,
             });
         hints = new_hints;
-        let mut done = wa;
-        done.passes = pass + 1;
-        done.events = total_events;
-        last = Some(done);
+        state = Some(st);
         if stable {
             break;
         }
     }
-    Ok(last.unwrap())
+    Ok(finalize(wf, &order, state.unwrap(), total_events, passes))
+}
+
+/// The worklist: nodes whose pass-`k` inputs can differ from pass `k−1`.
+/// A changed finish hint is only readable through pool release
+/// (`others_end`), so the seeds are the pool co-consumers of every changed
+/// node; dirtiness then propagates to graph successors (data/barrier
+/// inputs) and to pool co-members (release times and retrospective
+/// charges), transitively.
+fn dirty_from_changed(
+    changed: &[bool],
+    pools_of: &[Vec<usize>],
+    consumers: &[Vec<usize>],
+    succ: &[Vec<usize>],
+) -> NodeSet {
+    let n = changed.len();
+    let mut set = NodeSet::empty(n);
+    let mut stack: Vec<usize> = vec![];
+    for (c, &ch) in changed.iter().enumerate() {
+        if !ch {
+            continue;
+        }
+        for &p in &pools_of[c] {
+            stack.extend(consumers[p].iter().copied());
+        }
+    }
+    while let Some(i) = stack.pop() {
+        if set.contains(i) {
+            continue;
+        }
+        set.insert(i);
+        stack.extend(succ[i].iter().copied());
+        for &p in &pools_of[i] {
+            stack.extend(consumers[p].iter().copied());
+        }
+    }
+    set
 }
 
 /// Remaining pool capacity after charging `claims`: one k-way demand sum
@@ -401,11 +610,11 @@ pub fn analyze_fixpoint_cached(
 /// clamp chain that rebuilds the growing refinement per claim. Value-
 /// identical for the nonnegative demand functions the engine charges
 /// (`max(0, max(0, c − d₁) − d₂) = max(0, c − d₁ − d₂)` for `dᵢ ≥ 0`).
-fn residual_capacity(capacity: &PwPoly, claims: &[(usize, PwPoly)]) -> PwPoly {
+fn residual_capacity(capacity: &PwPoly, claims: &[Arc<PwPoly>]) -> PwPoly {
     if claims.is_empty() {
         return capacity.simplify();
     }
-    let demands: Vec<&PwPoly> = claims.iter().map(|(_, d)| d).collect();
+    let demands: Vec<&PwPoly> = claims.iter().map(|d| &**d).collect();
     capacity
         .sub(&PwPoly::sum_all(&demands))
         .max_with_zero()
@@ -436,9 +645,9 @@ impl WorkflowAnalysis {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::process::Process;
     use crate::model::ProcessBuilder;
     use crate::workflow::graph::StartRule;
-    use crate::model::process::Process;
 
     fn close(a: f64, b: f64) -> bool {
         (a - b).abs() < 1e-6 * (1.0 + a.abs().max(b.abs()))
@@ -709,5 +918,134 @@ mod tests {
         // cpu: 2 cpu-s at 1/s -> 22
         assert!(close(wa.analyses[j].start_time, 20.0));
         assert!(close(wa.analyses[j].finish_time.unwrap(), 22.0));
+    }
+
+    /// A pooled workflow needing the fixpoint: the worklist scheduler's
+    /// result must be bit-for-bit the full re-solve-everything oracle's.
+    #[test]
+    fn worklist_matches_full_fixpoint() {
+        let mut wf = Workflow::new();
+        let pool = wf.add_pool("link", PwPoly::constant(10.0));
+        let d1 = wf.add_node(
+            dl_proc("dl1", 200.0),
+            vec![DataSource::External(PwPoly::constant(200.0))],
+            vec![ResourceSource::PoolFraction {
+                pool,
+                fraction: 0.2,
+            }],
+            StartRule::default(),
+        );
+        let d2 = wf.add_node(
+            dl_proc("dl2", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::PoolResidual { pool }],
+            StartRule::default(),
+        );
+        // downstream consumer off the pool: clean in later passes only if
+        // its upstream chain is — exercises successor propagation
+        let crunch = ProcessBuilder::new("crunch", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", 50.0)
+            .build();
+        let c = wf.add_node(
+            crunch,
+            vec![DataSource::ProcessOutput { node: d2, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let opts = SolverOpts::default();
+        let fast = analyze_fixpoint(&wf, &opts, 6).unwrap();
+        let full = analyze_fixpoint_full(&wf, &opts, 6).unwrap();
+        assert_eq!(fast.analyses, full.analyses);
+        assert_eq!(fast.makespan, full.makespan);
+        assert_eq!(fast.pool_residuals, full.pool_residuals);
+        assert_eq!(fast.events, full.events);
+        assert_eq!(fast.passes, full.passes);
+        assert!(fast.passes > 1, "test must exercise multi-pass reuse");
+        for i in [d1, d2, c] {
+            assert_eq!(fast.inputs[i].data, full.inputs[i].data);
+            assert_eq!(fast.inputs[i].resources, full.inputs[i].resources);
+            assert_eq!(fast.inputs[i].start_time, full.inputs[i].start_time);
+        }
+    }
+
+    /// Piece budgeting: a long staircase input gets coarsened, the error
+    /// bound surfaces in `budget_err`, and the default (budget off) is
+    /// bitwise unaffected.
+    #[test]
+    fn piece_budget_coarsens_and_reports() {
+        // staircase arrival: 64 steps of 1 B each
+        let mut pts = vec![(0.0, 0.0)];
+        for k in 0..64 {
+            let t = k as f64;
+            pts.push((t + 0.5, k as f64));
+            pts.push((t + 1.0, (k + 1) as f64));
+        }
+        let arrival = PwPoly::from_points(&pts);
+        assert!(arrival.n_pieces() > 16);
+        let mut wf = Workflow::new();
+        wf.add_node(
+            dl_proc("dl", 64.0),
+            vec![DataSource::External(arrival)],
+            vec![ResourceSource::Fixed(PwPoly::constant(1000.0))],
+            StartRule::default(),
+        );
+        let exact = analyze_fixpoint(&wf, &SolverOpts::default(), 4).unwrap();
+        assert_eq!(exact.budget_err, 0.0);
+        let opts = SolverOpts {
+            piece_budget: 8,
+            piece_budget_err: 1e-9,
+            ..SolverOpts::default()
+        };
+        let coarse = analyze_fixpoint(&wf, &opts, 4).unwrap();
+        assert!(coarse.budget_err > 0.0 && coarse.budget_err.is_finite());
+        for inp in &coarse.inputs {
+            for f in inp.data.iter().chain(inp.resources.iter()) {
+                assert!(f.n_pieces() <= 8, "budget violated: {}", f.n_pieces());
+            }
+        }
+        // the link is fast: both finish at ~64 s (data-limited)
+        let fe = exact.makespan.unwrap();
+        let fc = coarse.makespan.unwrap();
+        assert!((fe - fc).abs() <= 2.0, "exact {fe} vs budgeted {fc}");
+    }
+
+    /// Pool-free DAG: pass 2 is a free confirmation pass — the worklist
+    /// re-solves nothing. Observable through the cache: pass 1 misses once
+    /// per node, pass 2 replays without a single lookup. Event accounting
+    /// still matches the full fixpoint (which re-solves everything twice).
+    #[test]
+    fn pool_free_confirmation_pass_is_free() {
+        let mut wf = Workflow::new();
+        let d = wf.add_node(
+            dl_proc("dl", 100.0),
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let task = ProcessBuilder::new("rot", 100.0)
+            .stream_data("in", 100.0)
+            .stream_resource("cpu", 1.0)
+            .build();
+        wf.add_node(
+            task,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let opts = SolverOpts::default();
+        let one = analyze(&wf, &opts).unwrap();
+        let cache = AnalysisCache::new();
+        let fx = analyze_fixpoint_cached(&wf, &opts, 6, Some(&cache)).unwrap();
+        assert_eq!(fx.passes, 2);
+        let s = cache.stats();
+        assert_eq!(s.misses, 2, "pass 1 solves each node once: {s:?}");
+        assert_eq!(s.hits, 0, "confirmation pass must not even hash: {s:?}");
+        // clean replays charge their stored event counts, so accounting
+        // matches the full fixpoint exactly
+        let full = analyze_fixpoint_full(&wf, &opts, 6).unwrap();
+        assert_eq!(fx.events, full.events);
+        assert_eq!(fx.events, 2 * one.events);
+        assert_eq!(fx.analyses, full.analyses);
     }
 }

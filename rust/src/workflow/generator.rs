@@ -1,101 +1,427 @@
-//! Random workflow generation: layered DAGs of stream/burst processes with
-//! realistic wiring. Used by scalability tests/benches and as a workload
-//! generator for users evaluating the analyzer on their own topology sizes.
+//! Seeded random workflow generation: a family of realistic DAG topologies
+//! (layered, scatter/gather, fan-in reduction, deep chains, a genomics-style
+//! pipeline) with stream/burst mixes and shared-link pool wiring. Used by
+//! the scalability tests/benches (`tests/generated_graphs.rs`,
+//! `benches/sec6_scaling.rs`, docs/SCALING.md) and as a workload generator
+//! for users evaluating the analyzer on their own topology sizes.
+//!
+//! Generation is a pure function of `(Rng seed, GeneratorOpts)`: every draw
+//! happens in a fixed order, so the same seed reproduces the same workflow
+//! byte-for-byte — [`fingerprint`] pins that in tests.
 
 use crate::model::ProcessBuilder;
 use crate::pwfn::PwPoly;
+use crate::runtime::cache::{ContentHash, Fnv128};
 use crate::util::Rng;
 
 use super::graph::{DataSource, ResourceSource, StartRule, Workflow};
 
+/// The topology family a generated workflow is drawn from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// `layers × width` grid; each interior node consumes one random node
+    /// of the previous layer (the original generator's shape).
+    Layered,
+    /// Repeated scatter/gather blocks: a row of downloads sharing the link
+    /// pool, joined by one gather node, chained `layers` times.
+    ScatterGather,
+    /// A wide source row reduced to a single sink by random-arity joins
+    /// (a reduction tree, e.g. map-reduce aggregation).
+    FanInJoin,
+    /// One long chain of `layers × width` stages — the deep-pipeline shape
+    /// that stresses piece growth ([`crate::solver::SolverOpts::piece_budget`]).
+    ChainedStages,
+    /// A genomics-style pipeline: per-sample download → align → sort lanes,
+    /// a barrier merge over all samples, then a calling chain.
+    Genomics,
+}
+
+impl Topology {
+    /// Every shape, for exhaustive test sweeps.
+    pub const ALL: [Topology; 5] = [
+        Topology::Layered,
+        Topology::ScatterGather,
+        Topology::FanInJoin,
+        Topology::ChainedStages,
+        Topology::Genomics,
+    ];
+
+    /// Stable name (CLI `--shape` values, bench artifact keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Layered => "layered",
+            Topology::ScatterGather => "scatter-gather",
+            Topology::FanInJoin => "fan-in",
+            Topology::ChainedStages => "chain",
+            Topology::Genomics => "genomics",
+        }
+    }
+
+    /// Parse a CLI `--shape` value.
+    pub fn parse(s: &str) -> Option<Topology> {
+        Topology::ALL.iter().copied().find(|t| t.name() == s)
+    }
+}
+
 /// Shape parameters for the generator.
 #[derive(Clone, Debug)]
 pub struct GeneratorOpts {
+    /// Which topology family to draw from.
+    pub topology: Topology,
     pub layers: usize,
-    /// Processes per layer.
+    /// Processes per layer (scatter row width / sample count / chain factor,
+    /// depending on the topology).
     pub width: usize,
     /// Probability that a consumer is burst-type (vs stream).
     pub burst_prob: f64,
     /// Bytes produced by each source process.
     pub source_bytes: f64,
-    /// Shared-link capacity feeding the source layer.
+    /// Shared-link capacity feeding the download nodes.
     pub link_rate: f64,
+    /// Maximum join arity for [`Topology::FanInJoin`] (draws 2..=fan_in).
+    pub fan_in: usize,
+    /// ± relative jitter applied to each layer's width (0.0 = exact).
+    pub width_jitter: f64,
+    /// Probability a download draws [`ResourceSource::PoolResidual`]
+    /// instead of its fair [`ResourceSource::PoolFraction`] share. Residual
+    /// users make the fixpoint multi-pass (release ordering), so tests that
+    /// want to exercise the worklist scheduler set this > 0.
+    pub pool_residual_prob: f64,
 }
 
 impl Default for GeneratorOpts {
     fn default() -> Self {
         GeneratorOpts {
+            topology: Topology::Layered,
             layers: 3,
             width: 2,
             burst_prob: 0.3,
             source_bytes: 1e8,
             link_rate: 1e7,
+            fan_in: 3,
+            width_jitter: 0.0,
+            pool_residual_prob: 0.0,
         }
     }
 }
 
-/// Generate a layered workflow: layer 0 downloads from a shared link; each
-/// later process consumes one output of the previous layer (stream or
-/// burst) with its own CPU requirement.
+impl GeneratorOpts {
+    /// Scale `layers`/`width` so the generated workflow has roughly `n`
+    /// nodes under this topology (the bench's 10²–10⁴ node axis).
+    pub fn target_nodes(mut self, n: usize) -> Self {
+        let n = n.max(2);
+        match self.topology {
+            Topology::Layered => {
+                self.width = self.width.max(1);
+                self.layers = (n / self.width).max(1);
+            }
+            Topology::ScatterGather => {
+                let per_block = self.width.max(1) + 1;
+                self.layers = (n / per_block).max(1);
+            }
+            Topology::FanInJoin => {
+                // width·f/(f−1) total nodes for arity f
+                let f = self.fan_in.max(2) as f64;
+                self.width = ((n as f64 * (f - 1.0) / f).round() as usize).max(2);
+            }
+            Topology::ChainedStages => {
+                self.layers = n;
+                self.width = 1;
+            }
+            Topology::Genomics => {
+                // 3·width lanes + merge + layers tail
+                self.layers = (n / 4).max(1);
+                self.width = (n.saturating_sub(1 + self.layers) / 3).max(1);
+            }
+        }
+        self
+    }
+}
+
+/// Content fingerprint of a workflow: every function, wiring edge, and
+/// start rule folded through the deterministic [`Fnv128`] hash. Same seed
+/// and opts → same fingerprint, across runs and platforms.
+pub fn fingerprint(wf: &Workflow) -> u128 {
+    let mut h = Fnv128::new();
+    h.write_usize(wf.pools.len());
+    for p in &wf.pools {
+        h.write_str(&p.name);
+        p.capacity.content_hash(&mut h);
+    }
+    h.write_usize(wf.nodes.len());
+    for nd in &wf.nodes {
+        nd.process.content_hash(&mut h);
+        h.write_usize(nd.data_sources.len());
+        for s in &nd.data_sources {
+            match s {
+                DataSource::External(f) => {
+                    h.write_usize(0);
+                    f.content_hash(&mut h);
+                }
+                DataSource::ProcessOutput { node, output } => {
+                    h.write_usize(1);
+                    h.write_usize(*node);
+                    h.write_usize(*output);
+                }
+            }
+        }
+        h.write_usize(nd.resource_sources.len());
+        for s in &nd.resource_sources {
+            match s {
+                ResourceSource::Fixed(f) => {
+                    h.write_usize(0);
+                    f.content_hash(&mut h);
+                }
+                ResourceSource::PoolFraction { pool, fraction } => {
+                    h.write_usize(1);
+                    h.write_usize(*pool);
+                    h.write_f64(*fraction);
+                }
+                ResourceSource::PoolResidual { pool } => {
+                    h.write_usize(2);
+                    h.write_usize(*pool);
+                }
+            }
+        }
+        h.write_f64(nd.start.at);
+        h.write_usize(nd.start.after.len());
+        for &a in &nd.start.after {
+            h.write_usize(a);
+        }
+    }
+    h.finish()
+}
+
+/// Generate a workflow of the configured [`Topology`]. Pure in
+/// `(rng state, opts)` — see the module docs.
 pub fn generate(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
+    match opts.topology {
+        Topology::Layered => gen_layered(rng, opts),
+        Topology::ScatterGather => gen_scatter_gather(rng, opts),
+        Topology::FanInJoin => gen_fan_in(rng, opts),
+        Topology::ChainedStages => gen_chain(rng, opts),
+        Topology::Genomics => gen_genomics(rng, opts),
+    }
+}
+
+/// A download node on the shared link pool. **Every** download draws from
+/// the pool — its fair `1/n_downloads` fraction by default, or the residual
+/// with probability `pool_residual_prob` — so link contention is always
+/// visible in the bottleneck report (regression: an earlier version pooled
+/// only the first source per layer). `extra_src` chains a staged download
+/// onto an upstream node's output (scatter/gather blocks).
+fn source(
+    wf: &mut Workflow,
+    rng: &mut Rng,
+    opts: &GeneratorOpts,
+    pool: usize,
+    name: &str,
+    share: f64,
+    extra_src: Option<usize>,
+) -> usize {
+    let bytes = opts.source_bytes * rng.range(0.5, 1.5);
+    let mut b = ProcessBuilder::new(name, bytes).stream_data("remote", bytes);
+    let mut data = vec![DataSource::External(PwPoly::constant(bytes))];
+    if let Some(s) = extra_src {
+        let in_bytes = wf.nodes[s].process.max_progress;
+        b = b.stream_data("in", in_bytes);
+        data.push(DataSource::ProcessOutput { node: s, output: 0 });
+    }
+    let p = b
+        .stream_resource("link", bytes)
+        .identity_output("out")
+        .build();
+    let rs = if rng.f64() < opts.pool_residual_prob {
+        ResourceSource::PoolResidual { pool }
+    } else {
+        ResourceSource::PoolFraction {
+            pool,
+            fraction: share,
+        }
+    };
+    wf.add_node(p, data, vec![rs], StartRule::default())
+}
+
+/// A compute stage consuming the outputs of `srcs` (stream or burst), with
+/// a random CPU requirement and optional barrier predecessors.
+fn consumer(
+    wf: &mut Workflow,
+    rng: &mut Rng,
+    name: &str,
+    srcs: &[usize],
+    burst: bool,
+    after: Vec<usize>,
+) -> usize {
+    let total_in: f64 = srcs
+        .iter()
+        .map(|&s| wf.nodes[s].process.max_progress)
+        .sum();
+    let out_bytes = total_in * rng.range(0.3, 1.1);
+    let cpu = rng.range(1.0, 30.0);
+    let mut b = ProcessBuilder::new(name, out_bytes);
+    for (k, &s) in srcs.iter().enumerate() {
+        let in_bytes = wf.nodes[s].process.max_progress;
+        let dname = format!("in{k}");
+        b = if burst {
+            b.burst_data(&dname, in_bytes)
+        } else {
+            b.stream_data(&dname, in_bytes)
+        };
+    }
+    let p = b
+        .stream_resource("cpu", cpu)
+        .identity_output("out")
+        .build();
+    wf.add_node(
+        p,
+        srcs.iter()
+            .map(|&s| DataSource::ProcessOutput { node: s, output: 0 })
+            .collect(),
+        vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+        StartRule { at: 0.0, after },
+    )
+}
+
+/// One jittered layer width (always ≥ 1; consumes exactly one draw).
+fn jittered_width(rng: &mut Rng, opts: &GeneratorOpts) -> usize {
+    let f = 1.0 + rng.range(-opts.width_jitter, opts.width_jitter);
+    ((opts.width.max(1) as f64 * f).round().max(1.0)) as usize
+}
+
+fn gen_layered(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
     let mut wf = Workflow::new();
     let pool = wf.add_pool("link", PwPoly::constant(opts.link_rate));
-    let mut prev_layer: Vec<usize> = vec![];
-
-    for layer in 0..opts.layers {
-        let mut this_layer = vec![];
-        for w in 0..opts.width {
+    let widths: Vec<usize> = (0..opts.layers.max(1))
+        .map(|_| jittered_width(rng, opts))
+        .collect();
+    let n_src = widths[0];
+    let mut prev: Vec<usize> = vec![];
+    for (layer, &wl) in widths.iter().enumerate() {
+        let mut this = vec![];
+        for w in 0..wl {
             let name = format!("p{layer}_{w}");
             let node = if layer == 0 {
-                let bytes = opts.source_bytes * rng.range(0.5, 1.5);
-                let p = ProcessBuilder::new(&name, bytes)
-                    .stream_data("remote", bytes)
-                    .stream_resource("link", bytes)
-                    .identity_output("out")
-                    .build();
-                wf.add_node(
-                    p,
-                    vec![DataSource::External(PwPoly::constant(bytes))],
-                    vec![if w == 0 {
-                        ResourceSource::PoolFraction {
-                            pool,
-                            fraction: 1.0 / opts.width as f64,
-                        }
-                    } else {
-                        ResourceSource::PoolResidual { pool }
-                    }],
-                    StartRule::default(),
-                )
+                source(&mut wf, rng, opts, pool, &name, 1.0 / n_src as f64, None)
             } else {
-                let src = prev_layer[rng.below(prev_layer.len())];
-                let in_bytes = wf.nodes[src].process.max_progress;
-                let out_bytes = in_bytes * rng.range(0.3, 1.1);
-                let cpu = rng.range(1.0, 30.0);
+                let s = prev[rng.below(prev.len())];
                 let burst = rng.f64() < opts.burst_prob;
-                let b = ProcessBuilder::new(&name, out_bytes);
-                let b = if burst {
-                    b.burst_data("in", in_bytes)
-                } else {
-                    b.stream_data("in", in_bytes)
-                };
-                let p = b
-                    .stream_resource("cpu", cpu)
-                    .identity_output("out")
-                    .build();
-                wf.add_node(
-                    p,
-                    vec![DataSource::ProcessOutput {
-                        node: src,
-                        output: 0,
-                    }],
-                    vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
-                    StartRule::default(),
-                )
+                consumer(&mut wf, rng, &name, &[s], burst, vec![])
             };
-            this_layer.push(node);
+            this.push(node);
         }
-        prev_layer = this_layer;
+        prev = this;
     }
+    wf
+}
+
+fn gen_scatter_gather(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
+    let mut wf = Workflow::new();
+    let pool = wf.add_pool("link", PwPoly::constant(opts.link_rate));
+    let widths: Vec<usize> = (0..opts.layers.max(1))
+        .map(|_| jittered_width(rng, opts))
+        .collect();
+    let total_dl: usize = widths.iter().sum();
+    let mut prev_gather: Option<usize> = None;
+    for (stage, &wl) in widths.iter().enumerate() {
+        let mut dls = vec![];
+        for w in 0..wl {
+            dls.push(source(
+                &mut wf,
+                rng,
+                opts,
+                pool,
+                &format!("dl{stage}_{w}"),
+                1.0 / total_dl as f64,
+                prev_gather,
+            ));
+        }
+        let burst = rng.f64() < opts.burst_prob;
+        prev_gather = Some(consumer(
+            &mut wf,
+            rng,
+            &format!("gather{stage}"),
+            &dls,
+            burst,
+            vec![],
+        ));
+    }
+    wf
+}
+
+fn gen_fan_in(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
+    let mut wf = Workflow::new();
+    let pool = wf.add_pool("link", PwPoly::constant(opts.link_rate));
+    let w0 = jittered_width(rng, opts).max(2);
+    let mut cur: Vec<usize> = (0..w0)
+        .map(|w| {
+            source(
+                &mut wf,
+                rng,
+                opts,
+                pool,
+                &format!("src{w}"),
+                1.0 / w0 as f64,
+                None,
+            )
+        })
+        .collect();
+    let mut depth = 0usize;
+    while cur.len() > 1 {
+        let mut next = vec![];
+        let mut i = 0;
+        while i < cur.len() {
+            let k = (2 + rng.below(opts.fan_in.max(2) - 1)).min(cur.len() - i);
+            let group = &cur[i..i + k];
+            let burst = rng.f64() < opts.burst_prob;
+            let name = format!("join{depth}_{}", next.len());
+            next.push(consumer(&mut wf, rng, &name, group, burst, vec![]));
+            i += k;
+        }
+        cur = next;
+        depth += 1;
+    }
+    wf
+}
+
+fn gen_chain(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
+    let mut wf = Workflow::new();
+    let pool = wf.add_pool("link", PwPoly::constant(opts.link_rate));
+    let len = (opts.layers.max(1) * opts.width.max(1)).max(2);
+    let mut prev = source(&mut wf, rng, opts, pool, "dl0", 1.0, None);
+    for stage in 1..len {
+        let burst = rng.f64() < opts.burst_prob;
+        prev = consumer(&mut wf, rng, &format!("s{stage}"), &[prev], burst, vec![]);
+    }
+    let _ = prev;
+    wf
+}
+
+fn gen_genomics(rng: &mut Rng, opts: &GeneratorOpts) -> Workflow {
+    let mut wf = Workflow::new();
+    let pool = wf.add_pool("link", PwPoly::constant(opts.link_rate));
+    let w = jittered_width(rng, opts);
+    let mut sorts = vec![];
+    for smp in 0..w {
+        let dl = source(
+            &mut wf,
+            rng,
+            opts,
+            pool,
+            &format!("dl{smp}"),
+            1.0 / w as f64,
+            None,
+        );
+        let align = consumer(&mut wf, rng, &format!("align{smp}"), &[dl], false, vec![]);
+        let sort = consumer(&mut wf, rng, &format!("sort{smp}"), &[align], true, vec![]);
+        sorts.push(sort);
+    }
+    let merge = consumer(&mut wf, rng, "merge", &sorts, true, sorts.clone());
+    let mut prev = merge;
+    for stage in 0..opts.layers {
+        let burst = rng.f64() < opts.burst_prob;
+        prev = consumer(&mut wf, rng, &format!("call{stage}"), &[prev], burst, vec![]);
+    }
+    let _ = prev;
     wf
 }
 
@@ -183,5 +509,109 @@ mod tests {
             (predicted - fluid).abs() < 0.02 * predicted + 0.5,
             "predicted {predicted} vs fluid {fluid}"
         );
+    }
+
+    /// Regression for the pool-wiring bug: every source-layer download must
+    /// draw from the shared link pool (an earlier version gave only the
+    /// first per layer a `PoolFraction`), and the resulting contention must
+    /// be visible — both in the wiring and in the bottleneck report.
+    #[test]
+    fn all_sources_share_the_link_pool() {
+        let mut rng = Rng::new(42);
+        let opts = GeneratorOpts {
+            layers: 2,
+            width: 3,
+            ..GeneratorOpts::default()
+        };
+        let wf = generate(&mut rng, &opts);
+        let n_src = 3;
+        for i in 0..n_src {
+            match wf.nodes[i].resource_sources[0] {
+                ResourceSource::PoolFraction { pool, fraction } => {
+                    assert_eq!(pool, 0);
+                    assert!((fraction - 1.0 / n_src as f64).abs() < 1e-12);
+                }
+                ref other => panic!("source {i} not on the pool: {other:?}"),
+            }
+        }
+
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 6).unwrap();
+        for i in 0..n_src {
+            // contention: a fair-share download cannot beat its solo time,
+            // and the first finisher runs at 1/3 capacity throughout
+            let bytes = wf.nodes[i].process.max_progress;
+            let solo = bytes / opts.link_rate;
+            let finish = wa.analyses[i].finish_time.unwrap();
+            assert!(finish >= solo - 1e-9, "source {i} beat the link: {finish}");
+            // the report names the link as a bottleneck for every download
+            let named: Vec<String> = wa.analyses[i]
+                .segments
+                .iter()
+                .map(|s| wa.analyses[i].bottleneck_name(&wf.nodes[i].process, s.bottleneck))
+                .collect();
+            assert!(
+                named.iter().any(|n| n == "res:link"),
+                "source {i} bottlenecks: {named:?}"
+            );
+        }
+        let first = (0..n_src)
+            .map(|i| wa.analyses[i].finish_time.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        let min_solo = (0..n_src)
+            .map(|i| wf.nodes[i].process.max_progress / opts.link_rate)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            first > 1.9 * min_solo,
+            "no contention visible: first finish {first} vs min solo {min_solo}"
+        );
+    }
+
+    /// Same seed → byte-identical workflow; different seed → different one.
+    /// Covers every topology in the family.
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        for topo in Topology::ALL {
+            let opts = GeneratorOpts {
+                topology: topo,
+                layers: 3,
+                width: 3,
+                width_jitter: 0.25,
+                pool_residual_prob: 0.3,
+                ..GeneratorOpts::default()
+            };
+            let a = fingerprint(&generate(&mut Rng::new(9), &opts));
+            let b = fingerprint(&generate(&mut Rng::new(9), &opts));
+            assert_eq!(a, b, "{topo:?} not reproducible");
+            let c = fingerprint(&generate(&mut Rng::new(10), &opts));
+            assert_ne!(a, c, "{topo:?} ignores the seed");
+        }
+    }
+
+    /// Every topology validates, is acyclic, and roughly honors
+    /// `target_nodes`.
+    #[test]
+    fn all_topologies_validate_and_scale() {
+        for topo in Topology::ALL {
+            for &n in &[12usize, 60] {
+                let opts = GeneratorOpts {
+                    topology: topo,
+                    width_jitter: 0.2,
+                    pool_residual_prob: 0.2,
+                    ..GeneratorOpts::default()
+                }
+                .target_nodes(n);
+                let mut rng = Rng::new(n as u64);
+                let wf = generate(&mut rng, &opts);
+                wf.validate()
+                    .unwrap_or_else(|e| panic!("{topo:?}/{n}: {e}"));
+                wf.topo_order()
+                    .unwrap_or_else(|e| panic!("{topo:?}/{n}: {e}"));
+                let got = wf.nodes.len();
+                assert!(
+                    got >= n / 3 && got <= n * 3,
+                    "{topo:?}: asked ~{n} nodes, got {got}"
+                );
+            }
+        }
     }
 }

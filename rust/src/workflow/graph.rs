@@ -268,6 +268,31 @@ impl Workflow {
         out
     }
 
+    /// Pool ids each node consumes (fraction or residual), sorted and
+    /// deduplicated — the transpose of [`Workflow::pool_consumers`]. The
+    /// worklist fixpoint uses it to propagate dirtiness through shared
+    /// pools: a changed finish time is only observable cross-pass via
+    /// `others_end` release hints, i.e. by co-consumers of these pools.
+    pub fn consumed_pools(&self) -> Vec<Vec<usize>> {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let mut ps: Vec<usize> = n
+                    .resource_sources
+                    .iter()
+                    .filter_map(|s| match s {
+                        ResourceSource::PoolFraction { pool, .. } => Some(*pool),
+                        ResourceSource::PoolResidual { pool } => Some(*pool),
+                        ResourceSource::Fixed(_) => None,
+                    })
+                    .collect();
+                ps.sort_unstable();
+                ps.dedup();
+                ps
+            })
+            .collect()
+    }
+
     /// Validate wiring: arities match, references are in range.
     pub fn validate(&self) -> Result<(), GraphError> {
         for (i, n) in self.nodes.iter().enumerate() {

@@ -7,7 +7,8 @@ pub mod graph;
 pub mod scenario;
 
 pub use engine::{
-    analyze, analyze_fixpoint, analyze_fixpoint_cached, WorkflowAnalysis, WorkflowError,
+    analyze, analyze_fixpoint, analyze_fixpoint_cached, analyze_fixpoint_full, WorkflowAnalysis,
+    WorkflowError,
 };
 pub use graph::{
     DataSource, GraphError, Node, NodeSet, Pool, ResourceSource, StartRule, Workflow,

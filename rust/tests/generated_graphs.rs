@@ -1,0 +1,288 @@
+//! Generative property/differential tests over the topology generator
+//! family (docs/SCALING.md):
+//!
+//! * the worklist fixpoint is **bit-for-bit** the full re-solve-everything
+//!   fixpoint on every generated DAG (5 shapes × 15 seeds ≥ 60 graphs);
+//! * analysis invariants hold on every graph (progress monotone, buffered
+//!   data nonnegative, cold == warm cache);
+//! * generation is byte-identical per seed;
+//! * `simplify_budget` respects its reported error bound at 1000 sampled
+//!   points on functions materialized by real solves;
+//! * an engine run under `SolverOpts::piece_budget` keeps every
+//!   materialized input under the cap and reports a finite error bound.
+
+use bottlemod::runtime::cache::AnalysisCache;
+use bottlemod::solver::SolverOpts;
+use bottlemod::util::Rng;
+use bottlemod::workflow::generator::{fingerprint, generate, GeneratorOpts, Topology};
+use bottlemod::workflow::{
+    analyze_fixpoint, analyze_fixpoint_cached, analyze_fixpoint_full, Workflow, WorkflowAnalysis,
+};
+
+const SEEDS_PER_SHAPE: u64 = 15;
+const MAX_PASSES: usize = 8;
+
+fn opts_for(topo: Topology, seed: u64) -> GeneratorOpts {
+    // 20–60 nodes, jittered widths, a burst/stream mix, and enough residual
+    // pool users to force multi-pass fixpoints (the worklist's hard case)
+    GeneratorOpts {
+        topology: topo,
+        width_jitter: 0.2,
+        pool_residual_prob: 0.3,
+        burst_prob: 0.3,
+        ..GeneratorOpts::default()
+    }
+    .target_nodes(20 + (seed as usize % 5) * 10)
+}
+
+fn graph_for(topo: Topology, seed: u64) -> Workflow {
+    let mut rng = Rng::new(0xB07_7E0 + seed);
+    generate(&mut rng, &opts_for(topo, seed))
+}
+
+/// Bitwise equality of two workflow analyses, field by field
+/// (`ProcessInputs` has no `PartialEq`, so inputs compare per component).
+fn assert_identical(a: &WorkflowAnalysis, b: &WorkflowAnalysis, ctx: &str) {
+    assert_eq!(a.analyses, b.analyses, "{ctx}: analyses differ");
+    assert_eq!(a.makespan, b.makespan, "{ctx}: makespan differs");
+    assert_eq!(a.pool_residuals, b.pool_residuals, "{ctx}: residuals differ");
+    assert_eq!(a.events, b.events, "{ctx}: event accounting differs");
+    assert_eq!(a.passes, b.passes, "{ctx}: pass count differs");
+    assert_eq!(
+        a.budget_err.to_bits(),
+        b.budget_err.to_bits(),
+        "{ctx}: budget_err differs"
+    );
+    assert_eq!(a.inputs.len(), b.inputs.len(), "{ctx}");
+    for (i, (x, y)) in a.inputs.iter().zip(b.inputs.iter()).enumerate() {
+        assert_eq!(x.data, y.data, "{ctx}: node {i} data inputs differ");
+        assert_eq!(x.resources, y.resources, "{ctx}: node {i} resources differ");
+        assert_eq!(
+            x.start_time.to_bits(),
+            y.start_time.to_bits(),
+            "{ctx}: node {i} start differs"
+        );
+    }
+}
+
+/// Tentpole differential: across every topology shape and seed, the
+/// worklist scheduler must reproduce the reference fixpoint bit for bit —
+/// analyses, materialized inputs, pool residuals, event accounting, passes.
+#[test]
+fn worklist_fixpoint_is_bit_identical_to_full() {
+    let opts = SolverOpts::default();
+    let mut multi_pass = 0usize;
+    for topo in Topology::ALL {
+        for seed in 0..SEEDS_PER_SHAPE {
+            let wf = graph_for(topo, seed);
+            let ctx = format!("{}/seed {seed} ({} nodes)", topo.name(), wf.nodes.len());
+            let fast = analyze_fixpoint(&wf, &opts, MAX_PASSES)
+                .unwrap_or_else(|e| panic!("{ctx}: worklist failed: {e}"));
+            let full = analyze_fixpoint_full(&wf, &opts, MAX_PASSES)
+                .unwrap_or_else(|e| panic!("{ctx}: full fixpoint failed: {e}"));
+            assert_identical(&fast, &full, &ctx);
+            assert!(fast.makespan.is_some(), "{ctx}: never finishes");
+            if fast.passes > 2 {
+                multi_pass += 1;
+            }
+        }
+    }
+    // the sweep must actually exercise cross-pass reuse, not just confirm
+    // single-pass stability
+    assert!(
+        multi_pass > 0,
+        "no generated graph needed a multi-pass fixpoint — sweep too easy"
+    );
+}
+
+/// Same differential with piece budgeting on: the worklist must replay
+/// budgeted inputs, coarsened demands, and per-node error bounds exactly.
+#[test]
+fn worklist_matches_full_under_piece_budget() {
+    let opts = SolverOpts {
+        piece_budget: 12,
+        piece_budget_err: 1e-6,
+        ..SolverOpts::default()
+    };
+    for topo in [Topology::ScatterGather, Topology::Genomics] {
+        for seed in 0..4 {
+            let wf = graph_for(topo, seed);
+            let ctx = format!("{}/seed {seed} budgeted", topo.name());
+            let fast = analyze_fixpoint(&wf, &opts, MAX_PASSES).unwrap();
+            let full = analyze_fixpoint_full(&wf, &opts, MAX_PASSES).unwrap();
+            assert_identical(&fast, &full, &ctx);
+        }
+    }
+}
+
+/// Analysis invariants on every generated graph: progress functions are
+/// nondecreasing, no consumer ever reads bytes its producer has not yet
+/// provided (buffered data ≥ 0), and a cached run is bit-identical cold
+/// vs warm.
+#[test]
+fn generated_graph_invariants() {
+    let opts = SolverOpts::default();
+    for topo in Topology::ALL {
+        for seed in 0..SEEDS_PER_SHAPE {
+            let wf = graph_for(topo, seed);
+            let ctx = format!("{}/seed {seed}", topo.name());
+            let wa = analyze_fixpoint(&wf, &opts, MAX_PASSES).unwrap();
+            let horizon = wa.makespan.unwrap_or(1e6) * 1.1 + 1.0;
+            for (i, a) in wa.analyses.iter().enumerate() {
+                assert!(
+                    a.progress.is_nondecreasing(),
+                    "{ctx}: node {i} progress decreases"
+                );
+                let scale = 1.0 + a.max_progress.abs();
+                for k in 0..wf.nodes[i].process.data_reqs.len() {
+                    for j in 0..25 {
+                        let t = a.start_time + (horizon - a.start_time) * j as f64 / 24.0;
+                        let provided = wa.inputs[i].data[k].eval(t);
+                        let consumed = a.data_consumed_at(&wf.nodes[i].process, k, t);
+                        assert!(
+                            consumed <= provided + 1e-6 * scale,
+                            "{ctx}: node {i} input {k} at t={t}: \
+                             consumed {consumed} > provided {provided}"
+                        );
+                    }
+                }
+            }
+
+            // cold == warm: a fresh cache changes nothing, and rerunning
+            // against the now-populated cache changes nothing either
+            let cache = AnalysisCache::new();
+            let warm = analyze_fixpoint_cached(&wf, &opts, MAX_PASSES, Some(&cache)).unwrap();
+            assert_identical(&wa, &warm, &format!("{ctx}: cold vs warm"));
+            let warm2 = analyze_fixpoint_cached(&wf, &opts, MAX_PASSES, Some(&cache)).unwrap();
+            assert_identical(&wa, &warm2, &format!("{ctx}: second warm run"));
+        }
+    }
+}
+
+/// Same seed → byte-identical workflow (content fingerprint over every
+/// function, wiring edge, and start rule), for every shape and seed.
+#[test]
+fn same_seed_generation_is_byte_identical() {
+    for topo in Topology::ALL {
+        for seed in 0..SEEDS_PER_SHAPE {
+            let a = fingerprint(&graph_for(topo, seed));
+            let b = fingerprint(&graph_for(topo, seed));
+            assert_eq!(a, b, "{}/seed {seed} not reproducible", topo.name());
+        }
+    }
+}
+
+/// `simplify_budget` differential: on piecewise functions materialized by
+/// real solves, the budgeted approximation stays within the *reported*
+/// error bound at 1000 sampled points, and under the piece cap.
+#[test]
+fn simplify_budget_respects_reported_bound() {
+    let opts = SolverOpts::default();
+    let mut checked = 0usize;
+    for topo in [Topology::ScatterGather, Topology::Genomics, Topology::Layered] {
+        for seed in 0..5 {
+            let wf = graph_for(topo, seed);
+            let wa = analyze_fixpoint(&wf, &opts, MAX_PASSES).unwrap();
+            let mut funcs: Vec<&bottlemod::pwfn::PwPoly> = vec![];
+            for inp in &wa.inputs {
+                funcs.extend(inp.data.iter());
+                funcs.extend(inp.resources.iter());
+            }
+            for a in &wa.analyses {
+                funcs.push(&a.progress);
+            }
+            for f in funcs {
+                if f.n_pieces() <= 4 {
+                    continue;
+                }
+                let budget = (f.n_pieces() / 2).max(2);
+                let (g, err) = f.simplify_budget(budget, 0.0);
+                assert!(g.n_pieces() <= budget, "cap {budget} got {}", g.n_pieces());
+                assert!(err.is_finite() && err >= 0.0);
+                let lo = if f.x_min().is_finite() { f.x_min() } else { 0.0 };
+                let last_finite = f
+                    .breaks
+                    .iter()
+                    .rev()
+                    .find(|b| b.is_finite())
+                    .copied()
+                    .unwrap_or(lo + 1.0);
+                let hi = last_finite + 0.1 * (last_finite - lo).abs().max(1.0);
+                let mut worst = 0.0f64;
+                for j in 0..1000 {
+                    let t = lo + (hi - lo) * j as f64 / 999.0;
+                    worst = worst.max((g.eval(t) - f.eval(t)).abs());
+                }
+                let scale = 1.0 + f.eval(hi).abs();
+                assert!(
+                    worst <= err + 1e-7 * scale,
+                    "{}/seed {seed}: sampled error {worst} exceeds reported bound {err}",
+                    topo.name()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(
+        checked >= 20,
+        "only {checked} functions were complex enough to exercise the budget"
+    );
+}
+
+/// End-to-end piece budgeting on a pool-heavy graph whose residual
+/// capacity functions grow far past the cap: every materialized input
+/// stays under the budget, the error bound is reported, and the budgeted
+/// makespan stays in the same ballpark as the exact one.
+#[test]
+fn piece_budget_bounds_materialized_inputs() {
+    let gopts = GeneratorOpts {
+        topology: Topology::ScatterGather,
+        width: 30,
+        layers: 3,
+        pool_residual_prob: 0.6,
+        width_jitter: 0.0,
+        ..GeneratorOpts::default()
+    };
+    let mut rng = Rng::new(0xC0FFEE);
+    let wf = generate(&mut rng, &gopts);
+    assert!(wf.nodes.len() >= 80, "want a wide pool, got {}", wf.nodes.len());
+
+    let exact = analyze_fixpoint(&wf, &SolverOpts::default(), MAX_PASSES).unwrap();
+    let peak_exact = exact
+        .inputs
+        .iter()
+        .flat_map(|i| i.data.iter().chain(i.resources.iter()))
+        .map(|f| f.n_pieces())
+        .max()
+        .unwrap();
+    assert!(
+        peak_exact > 16,
+        "exact run only reached {peak_exact} pieces — budget never exercised"
+    );
+
+    let bopts = SolverOpts {
+        piece_budget: 16,
+        piece_budget_err: 1e-6,
+        ..SolverOpts::default()
+    };
+    let budgeted = analyze_fixpoint(&wf, &bopts, MAX_PASSES).unwrap();
+    for (i, inp) in budgeted.inputs.iter().enumerate() {
+        for f in inp.data.iter().chain(inp.resources.iter()) {
+            assert!(
+                f.n_pieces() <= 16,
+                "node {i}: {} pieces exceed the budget",
+                f.n_pieces()
+            );
+        }
+    }
+    assert!(
+        budgeted.budget_err > 0.0 && budgeted.budget_err.is_finite(),
+        "budget never triggered or bound not reported: {}",
+        budgeted.budget_err
+    );
+    let (me, mb) = (exact.makespan.unwrap(), budgeted.makespan.unwrap());
+    assert!(
+        (me - mb).abs() <= 0.5 * me,
+        "budgeted makespan drifted: exact {me} vs budgeted {mb}"
+    );
+}
