@@ -1,0 +1,151 @@
+//! Incremental re-analysis vs cold re-runs: stream a synthetic chain
+//! trace into a [`Monitor`] one task row per event, then replay the same
+//! prefixes through the offline `calibrate_trace` pipeline, and compare
+//!
+//! * wall time (the monitor's fit memo + dirty-cone solve vs a full
+//!   parse → calibrate → solve per prefix),
+//! * work (cache misses = nodes actually re-solved incrementally, which
+//!   must be a strict subset of the cold pipeline's node solves), and
+//! * answers (the live prediction must be bit-for-bit the cold one at
+//!   every prefix — speed must not change the numbers).
+//!
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines).
+//!
+//! Run: `cargo bench --bench live_monitor`
+
+use std::time::Instant;
+
+use bottlemod::live::{Monitor, MonitorOpts};
+use bottlemod::solver::SolverOpts;
+use bottlemod::trace::{calibrate_trace, CalibrateOpts};
+use bottlemod::util::harness::write_bench_artifact;
+use bottlemod::util::json::Json;
+use bottlemod::util::stats::fmt_duration;
+
+const TASKS: usize = 48;
+
+const HEADER: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss";
+
+/// One synthetic pipeline stage: 1e8 bytes streamed through, runtimes
+/// staggered so every fit is distinct.
+fn row(i: usize) -> String {
+    let rt = 8 + (i % 5) as u64;
+    let start: u64 = (0..i).map(|j| 8 + (j % 5) as u64).sum();
+    let deps = if i == 0 {
+        "-".to_string()
+    } else {
+        format!("t{:03}", i - 1)
+    };
+    format!(
+        "t{i:03}\t{deps}\t{start}\t{}\t{rt}\t100\t1e8\t1e8\t8e6",
+        start + rt
+    )
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+    let rows: Vec<String> = (0..TASKS).map(row).collect();
+
+    // phase A: incremental — one monitor, one feed per arriving task row
+    let mut m = Monitor::new("bench-chain", None, MonitorOpts::default());
+    let mut live_bits: Vec<Option<u64>> = Vec::with_capacity(TASKS);
+    let mut misses_total = 0u64;
+    let mut hits_after_first = 0u64;
+    let mut max_event_misses = 0u64;
+    let t0 = Instant::now();
+    for (i, r) in rows.iter().enumerate() {
+        let chunk = if i == 0 {
+            format!("{HEADER}\n{r}\n")
+        } else {
+            format!("{r}\n")
+        };
+        let rep = m.feed(Some(&chunk), None).expect("feed");
+        assert!(rep.stale.is_none(), "event {i}: stale {:?}", rep.stale);
+        live_bits.push(
+            rep.snapshot
+                .as_ref()
+                .and_then(|s| s.makespan)
+                .map(f64::to_bits),
+        );
+        misses_total += rep.cache.misses;
+        if i > 0 {
+            hits_after_first += rep.cache.hits;
+            max_event_misses = max_event_misses.max(rep.cache.misses);
+        }
+    }
+    let incremental_wall = t0.elapsed().as_secs_f64();
+    let hit_rate = m.cache().stats().hit_rate();
+
+    // phase B: cold — the offline pipeline re-run from scratch per prefix
+    let mut cold_bits: Vec<Option<u64>> = Vec::with_capacity(TASKS);
+    let mut cold_node_solves = 0u64;
+    let mut prefix = format!("{HEADER}\n");
+    let t0 = Instant::now();
+    for (i, r) in rows.iter().enumerate() {
+        prefix.push_str(r);
+        prefix.push('\n');
+        let (_, rep) = calibrate_trace(
+            &prefix,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .expect("cold pipeline");
+        cold_bits.push(rep.predicted_makespan.map(f64::to_bits));
+        cold_node_solves += (i + 1) as u64; // a fresh solve visits every node
+    }
+    let cold_wall = t0.elapsed().as_secs_f64();
+
+    let speedup = cold_wall / incremental_wall.max(1e-12);
+    let bit_identical = live_bits == cold_bits;
+    println!(
+        "incremental: {TASKS} events in {} ({misses_total} node solves, \
+         max {max_event_misses}/event after warmup, hit rate {:.0}%)",
+        fmt_duration(incremental_wall),
+        hit_rate * 100.0
+    );
+    println!(
+        "cold: {TASKS} prefix re-runs in {} (>= {cold_node_solves} node solves)",
+        fmt_duration(cold_wall)
+    );
+    println!("speedup: {speedup:.1}x, bit-identical at every prefix: {bit_identical}");
+
+    let subset = misses_total < cold_node_solves;
+    let warm = hits_after_first > 0 && hit_rate > 0.0;
+    if !no_assert {
+        assert!(bit_identical, "live and cold predictions must agree bit-for-bit");
+        assert!(
+            subset,
+            "incremental solve must touch a strict subset of the cold work \
+             ({misses_total} vs {cold_node_solves})"
+        );
+        assert!(
+            warm,
+            "the analysis cache must be warm after the first event \
+             ({hits_after_first} hits, rate {hit_rate})"
+        );
+    }
+    println!(
+        "acceptance: bit_identical={bit_identical} strict_subset={subset} cache_warm={warm}{}",
+        if no_assert { " (reported only)" } else { "" }
+    );
+
+    match write_bench_artifact(
+        "live",
+        vec![
+            ("tasks", Json::Num(TASKS as f64)),
+            ("events", Json::Num(TASKS as f64)),
+            ("incremental_wall_s", Json::Num(incremental_wall)),
+            ("cold_wall_s", Json::Num(cold_wall)),
+            ("speedup", Json::Num(speedup)),
+            ("incremental_node_solves", Json::Num(misses_total as f64)),
+            ("cold_node_solves", Json::Num(cold_node_solves as f64)),
+            ("cache_hit_rate", Json::Num(hit_rate)),
+            ("bit_identical", Json::Bool(bit_identical)),
+        ],
+    ) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

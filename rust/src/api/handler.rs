@@ -10,6 +10,7 @@
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::coordinator::service::{Coordinator, Job, JobResult};
+use crate::live::{Monitor, MonitorOpts};
 use crate::model::spec::parse_workflow;
 use crate::runtime::cache::AnalysisCache;
 use crate::runtime::sweep::{FixedWorkflow, SweepBatch, SweepError, SweepModel};
@@ -25,7 +26,8 @@ use crate::workflow::scenario::{GenomicsScenario, Perturbation, VideoScenario};
 use super::error::{ApiError, ErrorCode};
 use super::request::{decode_line, Request, WorkflowSel};
 use super::response::{
-    encode, AnalyzeResult, CalibrateResult, Response, ScheduleRow, SegmentRow, SweepResult,
+    encode, AnalyzeResult, CalibrateResult, MonitorResult, Response, ScheduleRow, SegmentRow,
+    SweepResult,
 };
 
 /// Where a handler's requests run.
@@ -48,6 +50,11 @@ pub struct ApiHandler {
     cache: Arc<AnalysisCache>,
     threads: usize,
     pool: PoolMode,
+    /// The session's live monitor, if one is open (`docs/LIVE.md`). At
+    /// most one per session; monitor ops always execute inline — the
+    /// worker pool is stateless by design, so session state cannot (and
+    /// must not) travel through it.
+    monitor: Mutex<Option<Monitor>>,
 }
 
 impl Default for ApiHandler {
@@ -67,6 +74,7 @@ impl ApiHandler {
             cache: Arc::new(AnalysisCache::new()),
             threads: threads.max(1),
             pool: PoolMode::Lazy(Mutex::new(None)),
+            monitor: Mutex::new(None),
         }
     }
 
@@ -78,6 +86,7 @@ impl ApiHandler {
             cache,
             threads: 1,
             pool: PoolMode::Shared(pool),
+            monitor: Mutex::new(None),
         }
     }
 
@@ -92,11 +101,83 @@ impl ApiHandler {
     pub fn handle(&self, req: &Request) -> Result<Response, ApiError> {
         match req {
             Request::Batch { requests } => self.handle_batch(requests),
+            // monitor ops mutate session state, so they run inline in
+            // both pool modes — a pool worker only ever sees pure requests
+            Request::MonitorOpen { workflow, tol } => self.monitor_open(workflow, *tol),
+            Request::MonitorFeed { tsv, io } => {
+                self.monitor_feed(tsv.as_deref(), io.as_deref())
+            }
+            Request::MonitorStatus { close } => self.monitor_status(*close),
             other => match &self.pool {
                 PoolMode::Shared(pool) => self.dispatch_one(pool, other),
                 PoolMode::Lazy(_) => execute(other, &self.cache),
             },
         }
+    }
+
+    fn monitor_open(&self, sel: &WorkflowSel, tol: Option<f64>) -> Result<Response, ApiError> {
+        let mut slot = self.monitor.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_some() {
+            return Err(ApiError::bad_request(
+                "a monitor is already open in this session \
+                 (close it with monitor_status {\"close\": true})",
+            ));
+        }
+        let mut opts = MonitorOpts::default();
+        if let Some(t) = tol {
+            opts.calibrate.tol = t;
+        }
+        // the selector picks the allocation model advisories sweep; a
+        // `Trace` selector instead seeds the monitor with an initial feed
+        let mut seed: Option<(&str, Option<&str>)> = None;
+        let (label, advisor): (&str, Option<Arc<dyn SweepModel>>) = match sel {
+            WorkflowSel::Video => ("video", Some(Arc::new(VideoScenario::default()))),
+            WorkflowSel::Genomics => ("genomics", Some(Arc::new(GenomicsScenario::default()))),
+            WorkflowSel::Spec(text) => {
+                // fixed workflows expose no split knob: advisories will be
+                // shift-only; still validate the spec up front
+                let wf = parse_workflow(text)
+                    .map_err(|e| ApiError::new(ErrorCode::InvalidSpec, e.to_string()))?;
+                ("spec", Some(Arc::new(FixedWorkflow::new("spec", wf))))
+            }
+            WorkflowSel::Trace { tsv, io } => {
+                seed = Some((tsv.as_str(), io.as_deref()));
+                ("trace", None)
+            }
+        };
+        let mut mon = Monitor::new(label, advisor, opts);
+        let feed = match seed {
+            Some((tsv, io)) => Some(
+                mon.feed(Some(tsv), io)
+                    .map_err(|e| ApiError::new(ErrorCode::InvalidTrace, e.to_string()))?,
+            ),
+            None => None,
+        };
+        let workflow = mon.label().to_string();
+        *slot = Some(mon);
+        Ok(Response::Monitor(MonitorResult::Opened { workflow, feed }))
+    }
+
+    fn monitor_feed(&self, tsv: Option<&str>, io: Option<&str>) -> Result<Response, ApiError> {
+        let mut slot = self.monitor.lock().unwrap_or_else(|e| e.into_inner());
+        let mon = slot.as_mut().ok_or_else(no_monitor)?;
+        let report = mon
+            .feed(tsv, io)
+            .map_err(|e| ApiError::new(ErrorCode::InvalidTrace, e.to_string()))?;
+        Ok(Response::Monitor(MonitorResult::Feed(report)))
+    }
+
+    fn monitor_status(&self, close: bool) -> Result<Response, ApiError> {
+        let mut slot = self.monitor.lock().unwrap_or_else(|e| e.into_inner());
+        let mon = slot.as_ref().ok_or_else(no_monitor)?;
+        let status = mon.status();
+        if close {
+            *slot = None;
+        }
+        Ok(Response::Monitor(MonitorResult::Status {
+            status,
+            closed: close,
+        }))
     }
 
     /// Run one request as a pool job with a dedicated reply channel —
@@ -216,7 +297,16 @@ pub fn execute_with_threads(
         } => run_sweep(workflow, perturbations, cache, sweep_threads),
         Request::Calibrate { tsv, io, tol } => run_calibrate(tsv, io.as_deref(), *tol),
         Request::Batch { .. } => Err(ApiError::bad_request("batch requests cannot nest")),
+        Request::MonitorOpen { .. } | Request::MonitorFeed { .. } | Request::MonitorStatus { .. } => {
+            Err(ApiError::bad_request(
+                "monitor ops are session-scoped and cannot run inside a batch",
+            ))
+        }
     }
+}
+
+fn no_monitor() -> ApiError {
+    ApiError::bad_request("no monitor open in this session (send monitor_open first)")
 }
 
 fn run_analyze(spec: &str, cache: &Arc<AnalysisCache>) -> Result<Response, ApiError> {
@@ -468,6 +558,131 @@ mod tests {
                     other => panic!("{other:?}"),
                 }
                 assert_eq!(items[2].as_ref().unwrap_err().code, ErrorCode::InvalidSpec);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    const MONITOR_TSV: &str = "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss\n\
+        dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6\n\
+        enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6\n";
+
+    /// The full monitor lifecycle through the typed handler: open, feed,
+    /// status, close, and the errors on either side of the lifecycle.
+    #[test]
+    fn monitor_lifecycle_through_the_handler() {
+        let h = ApiHandler::new();
+        // feed before open
+        let e = h
+            .handle(&Request::MonitorFeed {
+                tsv: Some(MONITOR_TSV.to_string()),
+                io: None,
+            })
+            .unwrap_err();
+        assert!(e.message.contains("monitor_open"), "{}", e.message);
+
+        let r = h
+            .handle(&Request::MonitorOpen {
+                workflow: WorkflowSel::Video,
+                tol: None,
+            })
+            .unwrap();
+        assert!(matches!(
+            r,
+            Response::Monitor(MonitorResult::Opened { feed: None, .. })
+        ));
+        // double open
+        let e = h
+            .handle(&Request::MonitorOpen {
+                workflow: WorkflowSel::Video,
+                tol: None,
+            })
+            .unwrap_err();
+        assert!(e.message.contains("already open"), "{}", e.message);
+
+        let r = h
+            .handle(&Request::MonitorFeed {
+                tsv: Some(MONITOR_TSV.to_string()),
+                io: None,
+            })
+            .unwrap();
+        match r {
+            Response::Monitor(MonitorResult::Feed(f)) => {
+                assert!(f.stale.is_none(), "{f:?}");
+                let snap = f.snapshot.unwrap();
+                assert_eq!(snap.tasks, 2);
+                assert!(snap.makespan.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+        // malformed events are invalid_trace, and the session survives
+        let e = h
+            .handle(&Request::MonitorFeed {
+                tsv: None,
+                io: Some("dl not-a-number 0 0\n".to_string()),
+            })
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidTrace);
+
+        let r = h
+            .handle(&Request::MonitorStatus { close: true })
+            .unwrap();
+        match r {
+            Response::Monitor(MonitorResult::Status { status, closed }) => {
+                assert!(closed);
+                assert_eq!(status.events, 1);
+                assert_eq!(status.tasks, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        // closed: feeds fail again, and a fresh open works
+        assert!(h.handle(&Request::MonitorStatus { close: false }).is_err());
+        assert!(h
+            .handle(&Request::MonitorOpen {
+                workflow: WorkflowSel::Genomics,
+                tol: None,
+            })
+            .is_ok());
+    }
+
+    /// A `Trace` selector seeds the monitor with the trace as its first
+    /// event, so `open` already returns a prediction.
+    #[test]
+    fn monitor_open_with_trace_seeds_a_feed() {
+        let h = ApiHandler::new();
+        let r = h
+            .handle(&Request::MonitorOpen {
+                workflow: WorkflowSel::Trace {
+                    tsv: MONITOR_TSV.to_string(),
+                    io: None,
+                },
+                tol: None,
+            })
+            .unwrap();
+        match r {
+            Response::Monitor(MonitorResult::Opened { workflow, feed }) => {
+                assert_eq!(workflow, "trace");
+                let f = feed.unwrap();
+                assert_eq!(f.refit, 2);
+                assert!(f.snapshot.unwrap().makespan.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Monitor ops inside a batch hit the stateless-pool guard.
+    #[test]
+    fn monitor_ops_cannot_ride_in_a_batch() {
+        let h = ApiHandler::with_threads(2);
+        let r = h
+            .handle(&Request::Batch {
+                requests: vec![Request::MonitorStatus { close: false }],
+            })
+            .unwrap();
+        match r {
+            Response::Batch(items) => {
+                let e = items[0].as_ref().unwrap_err();
+                assert!(e.message.contains("session-scoped"), "{}", e.message);
             }
             other => panic!("{other:?}"),
         }

@@ -6,7 +6,9 @@
 //!
 //! * [`Request`] / [`Response`] — the typed op vocabulary (`ping`,
 //!   `analyze`, generic `sweep` over any [`request::WorkflowSel`],
-//!   `calibrate`, heterogeneous `batch`);
+//!   `calibrate`, heterogeneous `batch`, and the session-scoped
+//!   `monitor_open` / `monitor_feed` / `monitor_status` live-monitor ops,
+//!   `docs/LIVE.md`);
 //! * [`request::decode_line`] / [`response::encode`] — the `{"v": 1, ...}`
 //!   envelope with a legacy-v0 compatibility shim (pre-envelope shapes
 //!   keep working, tagged `"deprecated": true`);
@@ -29,8 +31,8 @@ pub use request::{
     decode_line, decode_value, encode_request, Request, Wire, WorkflowSel, PROTOCOL_VERSION,
 };
 pub use response::{
-    encode, encode_v0, encode_v1, AnalyzeResult, CalibrateResult, Response, ScheduleRow,
-    SegmentRow, SweepResult,
+    encode, encode_v0, encode_v1, AnalyzeResult, CalibrateResult, MonitorResult, Response,
+    ScheduleRow, SegmentRow, SweepResult,
 };
 
 /// Workloads shared by the in-crate protocol test suites (the

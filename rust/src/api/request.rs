@@ -63,6 +63,21 @@ pub enum Request {
     /// Heterogeneous requests executed through the worker pool in one
     /// call; results come back in submission order. Batches cannot nest.
     Batch { requests: Vec<Request> },
+    /// Open this session's live monitor (`docs/LIVE.md`). At most one per
+    /// session; a `Trace` selector seeds it with an initial feed.
+    MonitorOpen {
+        workflow: WorkflowSel,
+        /// Segment-fit tolerance override (`CalibrateOpts::tol`).
+        tol: Option<f64>,
+    },
+    /// Feed trace events (TSV rows and/or I/O samples) to the open
+    /// monitor; the response carries the refreshed prediction.
+    MonitorFeed {
+        tsv: Option<String>,
+        io: Option<String>,
+    },
+    /// Report the open monitor's state; `close: true` also closes it.
+    MonitorStatus { close: bool },
 }
 
 /// One decoded wire line: the response dialect (`v == 0` → legacy), the
@@ -180,6 +195,49 @@ fn decode_v1_op(op: &str, j: &Json, allow_batch: bool) -> Result<Request, ApiErr
                 },
             };
             Ok(Request::Calibrate { tsv, io, tol })
+        }
+        "monitor_open" => {
+            let tol = match j.get("tol") {
+                Json::Null => None,
+                val => match val.as_f64() {
+                    Some(t) if t > 0.0 && t.is_finite() => Some(t),
+                    _ => {
+                        return Err(ApiError::bad_request(
+                            "monitor_open 'tol' must be a positive number",
+                        ))
+                    }
+                },
+            };
+            Ok(Request::MonitorOpen {
+                workflow: decode_workflow_sel(j.get("workflow"))?,
+                tol,
+            })
+        }
+        "monitor_feed" => {
+            let field = |name: &str| match j.get(name) {
+                Json::Null => Ok(None),
+                Json::Str(s) => Ok(Some(s.clone())),
+                _ => Err(ApiError::bad_request(format!(
+                    "monitor_feed '{name}' must be a string when present"
+                ))),
+            };
+            let tsv = field("tsv")?;
+            let io = field("io")?;
+            if tsv.is_none() && io.is_none() {
+                return Err(ApiError::bad_request(
+                    "monitor_feed needs a 'tsv' or 'io' string field",
+                ));
+            }
+            Ok(Request::MonitorFeed { tsv, io })
+        }
+        "monitor_status" => {
+            let close = match j.get("close") {
+                Json::Null => false,
+                val => val.as_bool().ok_or_else(|| {
+                    ApiError::bad_request("monitor_status 'close' must be a boolean")
+                })?,
+            };
+            Ok(Request::MonitorStatus { close })
         }
         "batch" => {
             if !allow_batch {
@@ -421,6 +479,33 @@ impl Request {
                     Json::Arr(requests.iter().map(|r| r.to_json()).collect()),
                 ),
             ]),
+            Request::MonitorOpen { workflow, tol } => {
+                let mut fields = vec![
+                    ("op", Json::Str("monitor_open".to_string())),
+                    ("workflow", workflow.to_json()),
+                ];
+                if let Some(t) = tol {
+                    fields.push(("tol", Json::Num(*t)));
+                }
+                Json::obj(fields)
+            }
+            Request::MonitorFeed { tsv, io } => {
+                let mut fields = vec![("op", Json::Str("monitor_feed".to_string()))];
+                if let Some(t) = tsv {
+                    fields.push(("tsv", Json::Str(t.clone())));
+                }
+                if let Some(i) = io {
+                    fields.push(("io", Json::Str(i.clone())));
+                }
+                Json::obj(fields)
+            }
+            Request::MonitorStatus { close } => {
+                let mut fields = vec![("op", Json::Str("monitor_status".to_string()))];
+                if *close {
+                    fields.push(("close", Json::Bool(true)));
+                }
+                Json::obj(fields)
+            }
         }
     }
 }
@@ -537,6 +622,69 @@ mod tests {
         let e = w.body.unwrap_err();
         assert!(e.message.contains("cannot nest"), "{}", e.message);
         assert_eq!(e.detail.unwrap().get("index").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn monitor_ops_decode_and_roundtrip() {
+        let w = decode_line(r#"{"v": 1, "id": 1, "op": "monitor_open", "workflow": "video"}"#);
+        assert_eq!(
+            w.body.unwrap(),
+            Request::MonitorOpen {
+                workflow: WorkflowSel::Video,
+                tol: None
+            }
+        );
+        // selector defaults to video, like sweep
+        let w = decode_line(r#"{"v": 1, "id": 2, "op": "monitor_open"}"#);
+        assert!(matches!(
+            w.body.unwrap(),
+            Request::MonitorOpen {
+                workflow: WorkflowSel::Video,
+                ..
+            }
+        ));
+        let w = decode_line(r#"{"v": 1, "id": 3, "op": "monitor_feed", "tsv": "x"}"#);
+        assert_eq!(
+            w.body.unwrap(),
+            Request::MonitorFeed {
+                tsv: Some("x".to_string()),
+                io: None
+            }
+        );
+        let w = decode_line(r#"{"v": 1, "id": 4, "op": "monitor_status", "close": true}"#);
+        assert_eq!(w.body.unwrap(), Request::MonitorStatus { close: true });
+
+        for req in [
+            Request::MonitorOpen {
+                workflow: WorkflowSel::Trace {
+                    tsv: "task_id\n".to_string(),
+                    io: None,
+                },
+                tol: Some(0.05),
+            },
+            Request::MonitorFeed {
+                tsv: Some("a\t1\n".to_string()),
+                io: Some("a 0 1 2\n".to_string()),
+            },
+            Request::MonitorStatus { close: false },
+            Request::MonitorStatus { close: true },
+        ] {
+            let w = decode_value(&encode_request(9, &req));
+            assert_eq!(w.body.unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn monitor_op_field_errors_are_bad_request() {
+        for line in [
+            r#"{"v": 1, "id": 1, "op": "monitor_feed"}"#,
+            r#"{"v": 1, "id": 2, "op": "monitor_feed", "tsv": 7}"#,
+            r#"{"v": 1, "id": 3, "op": "monitor_status", "close": "yes"}"#,
+            r#"{"v": 1, "id": 4, "op": "monitor_open", "tol": -1}"#,
+        ] {
+            let e = decode_line(line).body.unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+        }
     }
 
     /// `detail.index` names the failing batch *item*; an inner error's own

@@ -17,6 +17,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::live::{Advisory, FeedReport, MonitorStatus, Snapshot};
 use crate::runtime::cache::CacheStats;
 use crate::runtime::sweep::RankedBottleneck;
 use crate::trace::TaskSummary;
@@ -84,6 +85,24 @@ pub struct CalibrateResult {
     pub passes: usize,
 }
 
+/// Result of one of the session-scoped monitor ops (`docs/LIVE.md`).
+#[derive(Clone, Debug)]
+pub enum MonitorResult {
+    /// `monitor_open` — the workload label plus, for a `Trace` selector,
+    /// the report of the seeding feed.
+    Opened {
+        workflow: String,
+        feed: Option<FeedReport>,
+    },
+    /// `monitor_feed` — what the event changed and the live prediction.
+    Feed(FeedReport),
+    /// `monitor_status` — session summary; `closed` when the op closed it.
+    Status {
+        status: MonitorStatus,
+        closed: bool,
+    },
+}
+
 /// A typed API response, paired with [`super::request::Request`].
 #[derive(Clone, Debug)]
 pub enum Response {
@@ -93,6 +112,7 @@ pub enum Response {
     Calibrate(CalibrateResult),
     /// Per-item outcomes of a `batch`, in submission order.
     Batch(Vec<Result<Response, ApiError>>),
+    Monitor(MonitorResult),
 }
 
 fn opt_num(x: Option<f64>) -> Json {
@@ -185,6 +205,122 @@ fn calibrate_json(r: &CalibrateResult) -> Json {
     ])
 }
 
+fn pair_json(p: &(String, String)) -> Json {
+    Json::obj(vec![
+        ("process", Json::Str(p.0.clone())),
+        ("bottleneck", Json::Str(p.1.clone())),
+    ])
+}
+
+fn snapshot_json(s: &Snapshot) -> Json {
+    let ranked: Vec<Json> = s
+        .ranked
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("process", Json::Str(r.process.clone())),
+                ("bottleneck", Json::Str(r.bottleneck.clone())),
+                ("seconds", Json::Num(r.seconds)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("tasks", Json::Num(s.tasks as f64)),
+        ("makespan", opt_num(s.makespan)),
+        ("now", Json::Num(s.now)),
+        ("remaining", opt_num(s.remaining)),
+        (
+            "bottleneck",
+            s.bottleneck.as_ref().map(pair_json).unwrap_or(Json::Null),
+        ),
+        ("ranked", Json::Arr(ranked)),
+        ("events", Json::Num(s.solver_events as f64)),
+        ("passes", Json::Num(s.passes as f64)),
+    ])
+}
+
+fn advisory_json(a: &Advisory) -> Json {
+    let mut fields = vec![
+        (
+            "from",
+            a.shift.from.as_ref().map(pair_json).unwrap_or(Json::Null),
+        ),
+        ("to", pair_json(&a.shift.to)),
+    ];
+    if let Some(rec) = &a.recommendation {
+        fields.push((
+            "recommendation",
+            Json::obj(vec![
+                ("best_fraction", Json::Num(rec.best_fraction)),
+                ("best_total", Json::Num(rec.best_total)),
+                ("baseline_total", Json::Num(rec.fair_total)),
+                ("gain", Json::Num(rec.gain)),
+            ]),
+        ));
+    }
+    if let Some(note) = &a.note {
+        fields.push(("note", Json::Str(note.clone())));
+    }
+    Json::obj(fields)
+}
+
+fn feed_json(r: &FeedReport) -> Json {
+    let mut fields = vec![
+        ("event", Json::Num(r.event as f64)),
+        ("refit", Json::Num(r.refit as f64)),
+        ("reused", Json::Num(r.reused as f64)),
+        (
+            "dirty",
+            Json::Arr(r.dirty.iter().map(|d| Json::Str(d.clone())).collect()),
+        ),
+        ("cache", cache_json(&r.cache)),
+    ];
+    if let Some(s) = &r.stale {
+        fields.push(("stale", Json::Str(s.clone())));
+    }
+    if let Some(snap) = &r.snapshot {
+        fields.push(("snapshot", snapshot_json(snap)));
+    }
+    if let Some(adv) = &r.advisory {
+        fields.push(("advisory", advisory_json(adv)));
+    }
+    Json::obj(fields)
+}
+
+fn monitor_json(r: &MonitorResult) -> Json {
+    let inner = match r {
+        MonitorResult::Opened { workflow, feed } => {
+            let mut fields = vec![
+                ("opened", Json::Bool(true)),
+                ("workflow", Json::Str(workflow.clone())),
+            ];
+            if let Some(f) = feed {
+                fields.push(("feed", feed_json(f)));
+            }
+            Json::obj(fields)
+        }
+        MonitorResult::Feed(f) => Json::obj(vec![("feed", feed_json(f))]),
+        MonitorResult::Status { status, closed } => {
+            let mut fields = vec![
+                ("label", Json::Str(status.label.clone())),
+                ("events", Json::Num(status.events as f64)),
+                ("advisories", Json::Num(status.advisories as f64)),
+                ("tasks", Json::Num(status.tasks as f64)),
+                ("pending_series", Json::Num(status.pending_series as f64)),
+                ("cache", cache_json(&status.cache)),
+            ];
+            if let Some(snap) = &status.snapshot {
+                fields.push(("snapshot", snapshot_json(snap)));
+            }
+            if *closed {
+                fields.push(("closed", Json::Bool(true)));
+            }
+            Json::obj(fields)
+        }
+    };
+    Json::obj(vec![("monitor", inner)])
+}
+
 fn sweep_json_v1(r: &SweepResult) -> Json {
     let best = match r.best {
         Some((i, t)) => Json::obj(vec![
@@ -274,6 +410,7 @@ impl Response {
                     .collect();
                 Json::obj(vec![("results", Json::Arr(results))])
             }
+            Response::Monitor(r) => monitor_json(r),
         }
     }
 
@@ -362,6 +499,58 @@ mod tests {
         assert_eq!(
             err.to_string(),
             r#"{"deprecated":true,"error":"kaput","id":3}"#
+        );
+    }
+
+    /// The minimal monitor payloads (no analysis yet) are byte-exact —
+    /// these are the shapes the docs conformance corpus pins.
+    #[test]
+    fn monitor_payloads_are_byte_deterministic() {
+        let opened = Response::Monitor(MonitorResult::Opened {
+            workflow: "video".to_string(),
+            feed: None,
+        });
+        assert_eq!(
+            encode_v1(Some(1), &Ok(opened)).to_string(),
+            r#"{"id":1,"ok":true,"result":{"monitor":{"opened":true,"workflow":"video"}},"v":1}"#
+        );
+        let feed = Response::Monitor(MonitorResult::Feed(FeedReport {
+            event: 1,
+            refit: 0,
+            reused: 0,
+            dirty: vec![],
+            cache: CacheStats::default(),
+            stale: None,
+            snapshot: None,
+            advisory: None,
+        }));
+        assert_eq!(
+            encode_v1(Some(2), &Ok(feed)).to_string(),
+            concat!(
+                r#"{"id":2,"ok":true,"result":{"monitor":{"feed":{"cache":"#,
+                r#"{"bytes":0,"entries":0,"evictions":0,"hit_rate":0,"hits":0,"misses":0},"#,
+                r#""dirty":[],"event":1,"refit":0,"reused":0}}},"v":1}"#
+            )
+        );
+        let status = Response::Monitor(MonitorResult::Status {
+            status: MonitorStatus {
+                label: "video".to_string(),
+                events: 1,
+                advisories: 0,
+                tasks: 0,
+                pending_series: 0,
+                cache: CacheStats::default(),
+                snapshot: None,
+            },
+            closed: true,
+        });
+        assert_eq!(
+            encode_v1(Some(3), &Ok(status)).to_string(),
+            concat!(
+                r#"{"id":3,"ok":true,"result":{"monitor":{"advisories":0,"cache":"#,
+                r#"{"bytes":0,"entries":0,"evictions":0,"hit_rate":0,"hits":0,"misses":0},"#,
+                r#""closed":true,"events":1,"label":"video","pending_series":0,"tasks":0}},"v":1}"#
+            )
         );
     }
 

@@ -8,6 +8,7 @@
 pub mod api;
 pub mod coordinator;
 pub mod des;
+pub mod live;
 pub mod model;
 pub mod pwfn;
 pub mod runtime;

@@ -1,0 +1,847 @@
+//! Online bottleneck monitor: streaming trace events in, live incremental
+//! re-analysis and re-allocation advisories out.
+//!
+//! The paper's closing claim is that the analysis is cheap enough to run
+//! "while the tasks or the workflow is still executing to conduct certain
+//! optimizations just in time". This module is that loop. A [`Monitor`] is
+//! a long-lived session that accumulates an *effective trace* from
+//! incremental events — appended (or re-sent, updated) Nextflow-style TSV
+//! rows and BPF-style cumulative I/O samples — and, after every event,
+//! re-derives the full prediction for the workflow as observed so far:
+//! predicted makespan, remaining time from the newest observation,
+//! the currently binding `(process, bottleneck)` pair, and the ranked
+//! bottleneck attribution.
+//!
+//! ## Incrementality, and what it guarantees
+//!
+//! Each feed is analytically **equivalent to a cold start** — parse the
+//! accumulated TSV + I/O log, [`calibrate`](crate::trace::calibrate) every
+//! task, [`assemble`](crate::trace::assemble::assemble), solve — but does
+//! almost none of that work again:
+//!
+//! * **Calibration** is per task and depends only on that task's row and
+//!   its own I/O series (see [`crate::trace::calibrate::calibrate`]); the
+//!   monitor memoizes each fit keyed on the *exact* row text and series
+//!   bits, so a feed re-fits only the tasks whose observations actually
+//!   changed ([`FeedReport::refit`] vs [`FeedReport::reused`]).
+//! * **Solving** goes through the session's content-addressed
+//!   [`AnalysisCache`] and the worklist fixpoint
+//!   ([`analyze_fixpoint_cached`]): a node re-solves only if its process
+//!   or materialized inputs changed bits, which confines re-solves to the
+//!   *dirty cone* — the changed tasks plus their downstream closure
+//!   ([`FeedReport::dirty`]); everything else is a cache hit
+//!   ([`FeedReport::cache`]).
+//!
+//! Because the memo compares exact bytes/bits and the cached fixpoint is
+//! bit-for-bit identical to the uncached one (the engine's pinned
+//! contract), the state after any feed sequence is **bit-for-bit
+//! identical** to [`crate::trace::assemble::calibrate_trace`] on the same
+//! accumulated text — `tests/live_monitor.rs` asserts exactly that.
+//!
+//! ## Advisories
+//!
+//! The snapshot's binding pair is
+//! [`live_bottleneck`](crate::sched::online::live_bottleneck) at the
+//! newest observation — falling back to
+//! [`frontier_bottleneck`](crate::sched::online::frontier_bottleneck)
+//! when nothing is strictly active there, which is the common case:
+//! models fitted from observations alone predict no further than the
+//! observation frontier, and the regime that set that horizon is what is
+//! binding the execution right now.
+//!
+//! A [`LiveTracker`] watches the live bottleneck's identity across feeds.
+//! When it shifts — the binding task or resource changes — the monitor
+//! emits an [`Advisory`] in that event's [`FeedReport`]: the shift itself,
+//! plus (when an allocation model is attached) a candidate split →
+//! predicted gain recommendation from
+//! [`recommend_model`](crate::sched::advisor::recommend_model).
+//!
+//! ## Failure model
+//!
+//! * **Malformed events** (bad TSV/I/O syntax, a row without a task id)
+//!   are rejected atomically: the feed returns an error and the monitor's
+//!   state is exactly as before the call.
+//! * **Analytically incoherent states** (a row whose dependency has not
+//!   arrived yet, a mid-stream cycle) are *kept* — the data is retained,
+//!   the feed succeeds, and the report carries [`FeedReport::stale`] with
+//!   the reason while [`FeedReport::snapshot`] stays the last good
+//!   prediction. The next event may well repair the state.
+//! * **I/O samples for tasks with no TSV row yet** are held pending (real
+//!   monitors deliver per-process samples before the scheduler logs the
+//!   task) and join the analysis when the row arrives.
+//!
+//! Wire surface: the `monitor_open` / `monitor_feed` / `monitor_status`
+//! v1 service ops (`docs/SERVICE.md`) and the `bottlemod watch` CLI
+//! subcommand; semantics are documented in `docs/LIVE.md`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::cache::{AnalysisCache, CacheStats};
+use crate::runtime::sweep::SweepModel;
+use crate::sched::advisor::{recommend_model, Recommendation};
+use crate::sched::online::{frontier_bottleneck, live_bottleneck, BottleneckShift, LiveTracker};
+use crate::solver::SolverOpts;
+use crate::trace::assemble::assemble;
+use crate::trace::calibrate::{calibrate, CalibrateOpts, CalibratedTask};
+use crate::trace::format::{parse_io_log, parse_tsv, parse_tsv_structural, IoSeries, TsvTrace};
+use crate::util::error::{Error, Result};
+use crate::workflow::engine::analyze_fixpoint_cached;
+use crate::ensure;
+
+/// Options for a monitor session.
+#[derive(Clone, Debug)]
+pub struct MonitorOpts {
+    /// Per-task calibration options (defaults match the offline pipeline).
+    pub calibrate: CalibrateOpts,
+    /// Solver options for each re-analysis.
+    pub solver: SolverOpts,
+    /// Fixpoint passes per re-analysis. The default (8) matches the
+    /// offline replay, which is what makes monitor state bit-comparable
+    /// to [`crate::trace::assemble::calibrate_trace`].
+    pub passes: usize,
+    /// Candidate fractions swept per advisory (see
+    /// [`crate::sched::advisor::candidate_fractions`]).
+    pub advisor_points: usize,
+}
+
+impl Default for MonitorOpts {
+    fn default() -> Self {
+        MonitorOpts {
+            calibrate: CalibrateOpts::default(),
+            solver: SolverOpts::default(),
+            passes: 8,
+            advisor_points: 20,
+        }
+    }
+}
+
+/// One `(process, bottleneck)` attribution row: how long that bottleneck
+/// bound that process over the predicted execution, ranked descending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankedSegment {
+    pub process: String,
+    /// `"res:cpu"`, `"data:in"`, `"unconstrained"`, ...
+    pub bottleneck: String,
+    pub seconds: f64,
+}
+
+/// The monitor's current prediction, refreshed by every successful
+/// re-analysis.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Tasks in the effective trace (== workflow nodes).
+    pub tasks: usize,
+    /// Predicted makespan of the workflow as observed so far.
+    pub makespan: Option<f64>,
+    /// Newest observation time on the workflow clock (latest completion,
+    /// in-flight elapsed point, or I/O sample).
+    pub now: f64,
+    /// `max(makespan − now, 0)` — predicted time still to run.
+    pub remaining: Option<f64>,
+    /// The binding `(process, bottleneck)` at `now`, per
+    /// [`live_bottleneck`]; `None` when nothing is predicted running.
+    pub bottleneck: Option<(String, String)>,
+    /// Bottleneck attribution over the whole predicted execution,
+    /// descending by bound duration (ties broken by name).
+    pub ranked: Vec<RankedSegment>,
+    /// Solver events across the analysis (diagnostics).
+    pub solver_events: usize,
+    /// Fixpoint passes the analysis took.
+    pub passes: usize,
+}
+
+/// A re-allocation advisory, emitted when the live bottleneck shifts.
+#[derive(Clone, Debug)]
+pub struct Advisory {
+    /// The identity change that triggered the advisory.
+    pub shift: BottleneckShift,
+    /// Candidate split → predicted gain, when the attached allocation
+    /// model exposes a split knob and the sweep succeeds.
+    pub recommendation: Option<Recommendation>,
+    /// Why there is no recommendation, when there is none.
+    pub note: Option<String>,
+}
+
+/// What one feed did: the incremental-work accounting plus the resulting
+/// prediction (or the reason it is stale).
+#[derive(Clone, Debug)]
+pub struct FeedReport {
+    /// Monotone event counter (this feed's ordinal, 1-based).
+    pub event: u64,
+    /// Tasks whose model was re-fitted this feed (observations changed).
+    pub refit: usize,
+    /// Tasks whose memoized fit was reused untouched.
+    pub reused: usize,
+    /// Names of the tasks in this feed's dirty cone: the re-fitted tasks
+    /// plus their downstream closure — the only nodes the solve may have
+    /// re-solved. Empty when the analysis was skipped or stale.
+    pub dirty: Vec<String>,
+    /// The analysis cache's counter deltas for this feed's solve alone
+    /// (`misses` = nodes actually re-solved, `hits` = reused).
+    pub cache: CacheStats,
+    /// `Some(reason)` when the accumulated state does not analyze yet
+    /// (e.g. a dependency row has not arrived); the data is kept and
+    /// `snapshot` is the last good prediction.
+    pub stale: Option<String>,
+    /// The current prediction: fresh if `stale` is `None`, otherwise the
+    /// last good one. `None` before the first successful analysis.
+    pub snapshot: Option<Snapshot>,
+    /// Present exactly when this feed's analysis moved the live
+    /// bottleneck to a different identity.
+    pub advisory: Option<Advisory>,
+}
+
+/// A point-in-time summary of the session ( the `monitor_status` op).
+#[derive(Clone, Debug)]
+pub struct MonitorStatus {
+    pub label: String,
+    /// Feeds processed so far.
+    pub events: u64,
+    /// Advisories emitted so far.
+    pub advisories: u64,
+    /// Tasks in the effective trace.
+    pub tasks: usize,
+    /// I/O series held pending (no TSV row for their task yet).
+    pub pending_series: usize,
+    /// Lifetime cache counters for the session.
+    pub cache: CacheStats,
+    pub snapshot: Option<Snapshot>,
+}
+
+/// Exact-observation memo key for one task's fit: the raw row text plus
+/// the task's I/O series compared bit-for-bit. Byte/bit equality — not
+/// float equality — is what upholds the monitor's bit-identity guarantee
+/// (`-0.0` vs `0.0`, for instance, must refit).
+#[derive(Clone, Debug)]
+struct FitKey {
+    row: String,
+    series: Vec<IoSeries>,
+}
+
+impl FitKey {
+    fn matches(&self, row: &str, series: &[IoSeries]) -> bool {
+        self.row == row
+            && self.series.len() == series.len()
+            && self.series.iter().zip(series).all(|(a, b)| {
+                a.task == b.task
+                    && bits_eq(&a.ts, &b.ts)
+                    && bits_eq(&a.read, &b.read)
+                    && bits_eq(&a.written, &b.written)
+            })
+    }
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A live monitor session. See the module docs for semantics.
+pub struct Monitor {
+    label: String,
+    /// Allocation model the advisor sweeps on a bottleneck shift, if any.
+    advisor: Option<Arc<dyn SweepModel>>,
+    opts: MonitorOpts,
+    cache: Arc<AnalysisCache>,
+    /// The TSV header, fixed by the first fed line.
+    header: Option<String>,
+    /// `task_id` column index within the header.
+    c_id: usize,
+    /// Task ids in first-seen order (the effective TSV's row order).
+    row_order: Vec<String>,
+    /// Current raw row text per task id (re-sent rows overwrite).
+    rows: HashMap<String, String>,
+    /// Accumulated raw I/O log text (the parser handles reordering).
+    io_text: String,
+    fit_memo: HashMap<String, (FitKey, CalibratedTask)>,
+    tracker: LiveTracker,
+    events: u64,
+    advisories: u64,
+    snapshot: Option<Snapshot>,
+}
+
+impl Monitor {
+    /// Open a session. `advisor` is the allocation model advisories sweep
+    /// (`None` → shift-only advisories).
+    pub fn new(label: &str, advisor: Option<Arc<dyn SweepModel>>, opts: MonitorOpts) -> Monitor {
+        Monitor {
+            label: label.to_string(),
+            advisor,
+            opts,
+            cache: Arc::new(AnalysisCache::new()),
+            header: None,
+            c_id: 0,
+            row_order: Vec::new(),
+            rows: HashMap::new(),
+            io_text: String::new(),
+            fit_memo: HashMap::new(),
+            tracker: LiveTracker::new(),
+            events: 0,
+            advisories: 0,
+            snapshot: None,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn snapshot(&self) -> Option<&Snapshot> {
+        self.snapshot.as_ref()
+    }
+
+    /// The session's analysis cache (shared with advisory sweeps).
+    pub fn cache(&self) -> &Arc<AnalysisCache> {
+        &self.cache
+    }
+
+    /// The accumulated effective TSV text — feeding this (plus
+    /// [`Monitor::io_log`]) to `calibrate_trace` reproduces the monitor's
+    /// current prediction bit-for-bit.
+    pub fn effective_tsv(&self) -> String {
+        let mut text = String::new();
+        if let Some(h) = &self.header {
+            text.push_str(h);
+            text.push('\n');
+            for id in &self.row_order {
+                text.push_str(&self.rows[id]);
+                text.push('\n');
+            }
+        }
+        text
+    }
+
+    /// The accumulated raw I/O log text.
+    pub fn io_log(&self) -> &str {
+        &self.io_text
+    }
+
+    /// Ingest one event — any mix of TSV lines (header first, rows upsert
+    /// by task id) and I/O log lines — and re-analyze incrementally.
+    ///
+    /// Malformed input is rejected atomically (state unchanged); see the
+    /// module docs for the full failure model.
+    pub fn feed(&mut self, tsv: Option<&str>, io: Option<&str>) -> Result<FeedReport> {
+        // ---- structural ingest, all-or-nothing --------------------------
+        let saved_header = self.header.clone();
+        let saved_c_id = self.c_id;
+        let saved_rows = self.row_order.len();
+        let saved_io = self.io_text.len();
+        let mut touched: Vec<(String, Option<String>)> = Vec::new();
+        let ingest = self.ingest(tsv, io, &mut touched);
+        if let Err(e) = ingest {
+            self.header = saved_header;
+            self.c_id = saved_c_id;
+            self.io_text.truncate(saved_io);
+            self.row_order.truncate(saved_rows);
+            // reverse order restores the oldest previous value last
+            for (id, prev) in touched.into_iter().rev() {
+                match prev {
+                    Some(p) => {
+                        self.rows.insert(id, p);
+                    }
+                    None => {
+                        self.rows.remove(&id);
+                    }
+                }
+            }
+            return Err(e);
+        }
+        self.events += 1;
+        let event = self.events;
+
+        let zero = {
+            let s = self.cache.stats();
+            s.since(&s)
+        };
+        if self.row_order.is_empty() {
+            return Ok(FeedReport {
+                event,
+                refit: 0,
+                reused: 0,
+                dirty: vec![],
+                cache: zero,
+                stale: None,
+                snapshot: self.snapshot.clone(),
+                advisory: None,
+            });
+        }
+
+        // structurally validated at ingest; the full parse adds the
+        // referential check, which can legitimately fail mid-stream (a dep
+        // row in flight) — analytically incoherent, so stale, not an error
+        let trace = match parse_tsv(&self.effective_tsv()) {
+            Ok(t) => t,
+            Err(e) => {
+                return Ok(FeedReport {
+                    event,
+                    refit: 0,
+                    reused: 0,
+                    dirty: vec![],
+                    cache: zero,
+                    stale: Some(e.to_string()),
+                    snapshot: self.snapshot.clone(),
+                    advisory: None,
+                });
+            }
+        };
+        let all_series = parse_io_log(&self.io_text).expect("validated at ingest");
+        let (series, pending): (Vec<IoSeries>, Vec<IoSeries>) = all_series
+            .into_iter()
+            .partition(|s| trace.task(&s.task).is_some());
+        drop(pending); // held in io_text until their rows arrive
+
+        // ---- incremental per-task calibration (exact-observation memo) --
+        let mut refit_idx: Vec<usize> = Vec::new();
+        let mut reused = 0usize;
+        let mut tasks: Vec<CalibratedTask> = Vec::with_capacity(trace.tasks.len());
+        let mut stale: Option<String> = None;
+        for (i, t) in trace.tasks.iter().enumerate() {
+            let own: Vec<IoSeries> =
+                series.iter().filter(|s| s.task == t.id).cloned().collect();
+            let row = &self.rows[&t.id];
+            if let Some((key, cached)) = self.fit_memo.get(&t.id) {
+                if key.matches(row, &own) {
+                    tasks.push(cached.clone());
+                    reused += 1;
+                    continue;
+                }
+            }
+            let single = TsvTrace {
+                tasks: vec![t.clone()],
+            };
+            match calibrate(&single, &own, &self.opts.calibrate) {
+                Ok(mut v) => {
+                    let ct = v.pop().expect("one task in, one task out");
+                    let key = FitKey {
+                        row: row.clone(),
+                        series: own,
+                    };
+                    self.fit_memo.insert(t.id.clone(), (key, ct.clone()));
+                    tasks.push(ct);
+                    refit_idx.push(i);
+                }
+                Err(e) => {
+                    stale = Some(format!("calibration: {e}"));
+                    break;
+                }
+            }
+        }
+
+        // ---- assemble + cached worklist solve on the dirty cone ---------
+        let mut dirty: Vec<String> = Vec::new();
+        let mut delta = zero;
+        let mut advisory = None;
+        if stale.is_none() {
+            let before = self.cache.stats();
+            let analyzed = assemble(tasks).and_then(|cal| {
+                let wa = analyze_fixpoint_cached(
+                    &cal.workflow,
+                    &self.opts.solver,
+                    self.opts.passes,
+                    Some(&self.cache),
+                )
+                .map_err(|e| Error::msg(format!("analysis: {e}")))?;
+                Ok((cal, wa))
+            });
+            delta = self.cache.stats().since(&before);
+            match analyzed {
+                Ok((cal, wa)) => {
+                    let cone = cal.workflow.downstream_closure(&refit_idx);
+                    dirty = (0..cal.workflow.nodes.len())
+                        .filter(|&i| cone.contains(i))
+                        .map(|i| cal.tasks[i].id.clone())
+                        .collect();
+                    let snap = self.build_snapshot(&trace, &series, &cal, &wa);
+                    let shifted = self.tracker.observe(snap.bottleneck.clone());
+                    self.snapshot = Some(snap);
+                    if let Some(shift) = shifted {
+                        self.advisories += 1;
+                        advisory = Some(self.advise(shift));
+                    }
+                }
+                Err(e) => stale = Some(e.to_string()),
+            }
+        }
+
+        Ok(FeedReport {
+            event,
+            refit: refit_idx.len(),
+            reused,
+            dirty,
+            cache: delta,
+            stale,
+            snapshot: self.snapshot.clone(),
+            advisory,
+        })
+    }
+
+    /// Current session summary (the `monitor_status` op).
+    pub fn status(&self) -> MonitorStatus {
+        let pending = parse_io_log(&self.io_text)
+            .map(|series| {
+                series
+                    .iter()
+                    .filter(|s| !self.rows.contains_key(&s.task))
+                    .count()
+            })
+            .unwrap_or(0);
+        MonitorStatus {
+            label: self.label.clone(),
+            events: self.events,
+            advisories: self.advisories,
+            tasks: self.row_order.len(),
+            pending_series: pending,
+            cache: self.cache.stats(),
+            snapshot: self.snapshot.clone(),
+        }
+    }
+
+    fn ingest(
+        &mut self,
+        tsv: Option<&str>,
+        io: Option<&str>,
+        touched: &mut Vec<(String, Option<String>)>,
+    ) -> Result<()> {
+        if let Some(text) = tsv {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                match &self.header {
+                    None => {
+                        let cols: Vec<&str> = line.split('\t').map(str::trim).collect();
+                        let c_id = cols.iter().position(|c| *c == "task_id").ok_or_else(|| {
+                            Error::msg(
+                                "monitor feed: first TSV line must be a header with a 'task_id' column",
+                            )
+                        })?;
+                        self.header = Some(line.to_string());
+                        self.c_id = c_id;
+                    }
+                    // a replayed header (tailing a file from the top) is a no-op
+                    Some(h) if h == line => {}
+                    Some(_) => {
+                        let fields: Vec<&str> = line.split('\t').map(str::trim).collect();
+                        let id = fields.get(self.c_id).copied().unwrap_or("");
+                        ensure!(!id.is_empty(), "monitor feed: row without a task_id: '{line}'");
+                        let prev = self.rows.insert(id.to_string(), line.to_string());
+                        if prev.is_none() {
+                            self.row_order.push(id.to_string());
+                        }
+                        touched.push((id.to_string(), prev));
+                    }
+                }
+            }
+        }
+        if let Some(text) = io {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                self.io_text.push_str(line);
+                self.io_text.push('\n');
+            }
+        }
+        // validate the *accumulated* state now, so a malformed line is
+        // rejected before it poisons the session for every later feed.
+        // Structural check only: a bare header (stream sends it before the
+        // first row) and a dep whose row has not arrived yet are both fine
+        // here — the latter surfaces as `stale` at analysis time instead.
+        if self.header.is_some() && !self.row_order.is_empty() {
+            parse_tsv_structural(&self.effective_tsv())?;
+        }
+        parse_io_log(&self.io_text)?;
+        Ok(())
+    }
+
+    fn build_snapshot(
+        &self,
+        trace: &TsvTrace,
+        series: &[IoSeries],
+        cal: &crate::trace::assemble::CalibratedWorkflow,
+        wa: &crate::workflow::engine::WorkflowAnalysis,
+    ) -> Snapshot {
+        // newest observation: latest completion, in-flight elapsed point
+        // (start + realtime), or I/O sample on the workflow clock
+        let mut now = 0.0f64;
+        for t in &trace.tasks {
+            let obs = t
+                .complete
+                .unwrap_or_else(|| t.start.unwrap_or(0.0) + t.realtime);
+            now = now.max(obs);
+        }
+        for s in series {
+            if let Some(&last) = s.ts.last() {
+                now = now.max(last);
+            }
+        }
+
+        // whole-execution bottleneck attribution, as the sweep engine does
+        let mut acc: HashMap<(String, String), f64> = HashMap::new();
+        for (i, a) in wa.analyses.iter().enumerate() {
+            let proc = &cal.workflow.nodes[i].process;
+            for s in &a.segments {
+                let end = s.end.min(a.finish_time.unwrap_or(self.opts.solver.horizon));
+                let dur = end - s.start;
+                if dur > 1e-9 {
+                    *acc.entry((proc.name.clone(), a.bottleneck_name(proc, s.bottleneck)))
+                        .or_insert(0.0) += dur;
+                }
+            }
+        }
+        let mut ranked: Vec<RankedSegment> = acc
+            .into_iter()
+            .map(|((process, bottleneck), seconds)| RankedSegment {
+                process,
+                bottleneck,
+                seconds,
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.seconds
+                .partial_cmp(&a.seconds)
+                .unwrap()
+                .then_with(|| a.process.cmp(&b.process))
+                .then_with(|| a.bottleneck.cmp(&b.bottleneck))
+        });
+
+        Snapshot {
+            tasks: trace.tasks.len(),
+            makespan: wa.makespan,
+            now,
+            remaining: wa.makespan.map(|m| (m - now).max(0.0)),
+            / models fitted from observations predict no further than the
+            // observation frontier, so at `now` itself nothing is strictly
+            // active — the regime that set the horizon is what binds then
+            bottleneck: live_bottleneck(&cal.workflow, wa, now)
+                .or_else(|| frontier_bottleneck(&cal.workflow, wa)),
+            ranked,
+            solver_events: wa.events,
+            passes: wa.passes,
+        }
+    }
+
+    fn advise(&self, shift: BottleneckShift) -> Advisory {
+        let (recommendation, note) = match &self.advisor {
+            Some(model) => match recommend_model(
+                model,
+                self.opts.advisor_points,
+                1,
+                Some(Arc::clone(&self.cache)),
+            ) {
+                Ok(Some(rec)) => (Some(rec), None),
+                Ok(None) => (
+                    None,
+                    Some("no actionable split for this workload".to_string()),
+                ),
+                Err(e) => (None, Some(format!("advisor sweep failed: {e}"))),
+            },
+            None => (None, Some("no allocation model attached".to_string())),
+        };
+        Advisory {
+            shift,
+            recommendation,
+            note,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::assemble::calibrate_trace;
+
+    const HEADER: &str =
+        "task_id\tdeps\tstart\tcomplete\trealtime\tpcpu\trchar\twchar\tpeak_rss";
+    const DL: &str = "dl\t-\t0\t10\t10\t1e9\t1e8\t1e8\t2e6";
+    const ENC: &str = "enc\tdl\t0\t20\t20\t100\t1e8\t5e7\t8e6";
+    const MUX: &str = "mux\tdl,enc\t20\t23\t3\t100\t1.5e8\t1.5e8\t1.4e8";
+
+    /// Feeding row by row matches a one-shot cold calibrate+solve on the
+    /// same accumulated text — bit for bit, at every prefix.
+    #[test]
+    fn feed_matches_cold_calibrate_at_every_prefix() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        let mut fed = format!("{HEADER}\n");
+        for (i, row) in [DL, ENC, MUX].iter().enumerate() {
+            let chunk = if i == 0 {
+                format!("{HEADER}\n{row}\n")
+            } else {
+                format!("{row}\n")
+            };
+            let rep = m.feed(Some(&chunk), None).unwrap();
+            assert!(rep.stale.is_none(), "{rep:?}");
+            fed.push_str(row);
+            fed.push('\n');
+            assert_eq!(m.effective_tsv(), fed);
+            let (_, cold) = calibrate_trace(
+                &fed,
+                None,
+                &CalibrateOpts::default(),
+                &SolverOpts::default(),
+            )
+            .unwrap();
+            let snap = rep.snapshot.unwrap();
+            assert_eq!(
+                snap.makespan.unwrap().to_bits(),
+                cold.predicted_makespan.unwrap().to_bits(),
+                "prefix {i}"
+            );
+        }
+        assert_eq!(m.events(), 3);
+    }
+
+    /// A re-sent (updated) row re-fits only itself; the solve re-solves
+    /// only its dirty cone and hits the cache for the rest.
+    #[test]
+    fn updated_row_refits_only_the_cone() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        let all = format!("{HEADER}\n{DL}\n{ENC}\n{MUX}\n");
+        let first = m.feed(Some(&all), None).unwrap();
+        assert_eq!(first.refit, 3);
+        assert_eq!(first.dirty.len(), 3);
+
+        // re-send enc with a longer runtime: dl's fit and solve are reused
+        let upd = "enc\tdl\t0\t30\t30\t100\t1e8\t5e7\t8e6";
+        let rep = m.feed(Some(&format!("{upd}\n")), None).unwrap();
+        assert!(rep.stale.is_none(), "{rep:?}");
+        assert_eq!(rep.refit, 1, "{rep:?}");
+        assert_eq!(rep.reused, 2, "{rep:?}");
+        assert_eq!(rep.dirty, vec!["enc".to_string(), "mux".to_string()]);
+        assert!(rep.cache.hits >= 1, "{:?}", rep.cache);
+        assert!(
+            (rep.cache.misses as usize) <= rep.dirty.len(),
+            "{:?} vs {:?}",
+            rep.cache,
+            rep.dirty
+        );
+
+        // and the result still matches a cold run of the updated text
+        let cold_text = format!("{HEADER}\n{DL}\n{upd}\n{MUX}\n");
+        let (_, cold) = calibrate_trace(
+            &cold_text,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            rep.snapshot.unwrap().makespan.unwrap().to_bits(),
+            cold.predicted_makespan.unwrap().to_bits()
+        );
+    }
+
+    /// An identical re-send is a full reuse: zero refits, zero misses.
+    #[test]
+    fn identical_resend_reuses_everything() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        let all = format!("{HEADER}\n{DL}\n{ENC}\n{MUX}\n");
+        m.feed(Some(&all), None).unwrap();
+        let rep = m.feed(Some(&all), None).unwrap();
+        assert_eq!(rep.refit, 0, "{rep:?}");
+        assert_eq!(rep.reused, 3);
+        assert_eq!(rep.cache.misses, 0, "{:?}", rep.cache);
+        assert!(rep.cache.hit_rate() > 0.99, "{:?}", rep.cache);
+        assert!(rep.dirty.is_empty(), "{rep:?}");
+    }
+
+    /// Malformed events are rejected atomically: the failed feed leaves
+    /// no trace in the session.
+    #[test]
+    fn malformed_feed_rolls_back() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        m.feed(Some(&format!("{HEADER}\n{DL}\n")), None).unwrap();
+        let before_tsv = m.effective_tsv();
+
+        // malformed row (wrong field count) alongside a valid row: neither lands
+        let bad = "enc\tdl\t0\t20\nshort\trow";
+        assert!(m.feed(Some(bad), None).is_err());
+        assert_eq!(m.effective_tsv(), before_tsv);
+        // malformed io line is rejected and not retained
+        assert!(m.feed(None, Some("dl not-a-number 0 0\n")).is_err());
+        assert_eq!(m.io_log(), "");
+        assert_eq!(m.events(), 1);
+
+        // the session still works afterwards
+        let rep = m.feed(Some(&format!("{ENC}\n")), None).unwrap();
+        assert!(rep.stale.is_none());
+    }
+
+    /// A row whose dependency has not arrived yet marks the state stale
+    /// (last good snapshot retained) and heals when the dep arrives.
+    #[test]
+    fn dangling_dep_is_stale_then_heals() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        let rep = m
+            .feed(Some(&format!("{HEADER}\n{ENC}\n")), None)
+            .unwrap();
+        let msg = rep.stale.unwrap();
+        assert!(msg.contains("unknown task"), "{msg}");
+        assert!(rep.snapshot.is_none());
+
+        let rep = m.feed(Some(&format!("{DL}\n")), None).unwrap();
+        assert!(rep.stale.is_none(), "{rep:?}");
+        assert!(rep.snapshot.is_some());
+        assert_eq!(m.status().tasks, 2);
+    }
+
+    /// I/O samples may arrive before their task's row: they are held
+    /// pending, visible in the status, and join the fit once the row lands.
+    #[test]
+    fn early_io_samples_wait_for_their_row() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        m.feed(Some(&format!("{HEADER}\n{DL}\n")), None).unwrap();
+        let io = "enc 0 2.5e7 0\nenc 10 5e7 0\nenc 15 7.5e7 2.5e7\nenc 20 1e8 5e7\n";
+        let rep = m.feed(None, Some(io)).unwrap();
+        assert!(rep.stale.is_none());
+        assert_eq!(m.status().pending_series, 1);
+
+        let rep = m.feed(Some(&format!("{ENC}\n")), None).unwrap();
+        assert!(rep.stale.is_none());
+        assert_eq!(m.status().pending_series, 0);
+        // the series now backs enc's model, same as a cold run would see
+        let (cold_cal, cold) = calibrate_trace(
+            &m.effective_tsv(),
+            Some(m.io_log()),
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            cold_cal.tasks[1].source,
+            crate::trace::calibrate::ModelSource::Series
+        );
+        assert_eq!(
+            rep.snapshot.unwrap().makespan.unwrap().to_bits(),
+            cold.predicted_makespan.unwrap().to_bits()
+        );
+    }
+
+    /// The snapshot carries the live surface: now, remaining, the binding
+    /// bottleneck and the ranked attribution.
+    #[test]
+    fn snapshot_surfaces_the_live_state() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        let rep = m
+            .feed(Some(&format!("{HEADER}\n{DL}\n{ENC}\n{MUX}\n")), None)
+            .unwrap();
+        let snap = rep.snapshot.unwrap();
+        assert_eq!(snap.tasks, 3);
+        assert!((snap.now - 23.0).abs() < 1e-9, "{snap:?}");
+        assert!((snap.makespan.unwrap() - 23.0).abs() < 0.1);
+        // trace fully observed: nothing remains
+        assert!(snap.remaining.unwrap() < 0.2, "{snap:?}");
+        assert!(!snap.ranked.is_empty());
+        assert!(snap.ranked.windows(2).all(|w| w[0].seconds >= w[1].seconds));
+        let st = m.status();
+        assert_eq!(st.events, 1);
+        assert_eq!(st.tasks, 3);
+    }
+}

@@ -18,6 +18,10 @@
 //!   export-figures <dir>          regenerate every figure's data as JSON
 //!   advisor                       recommend the link split (paper headline)
 //!   online-demo                   online re-analysis controller demo
+//!   watch <trace.tsv>             live monitor: stream the trace row by row
+//!     [--io <series.log>]         through a monitor session, one JSON line
+//!     [--follow] [--interval <s>] per event; --follow tails file growth
+//!     [--tol <t>]                 (docs/LIVE.md)
 //!   serve [--tcp <host:port>]     JSON-lines analysis service; stdio by
 //!     [--unix <path>] [--no-stdio] default, optionally a multi-session
 //!     [--threads <n>] [--queue <n>] socket server with bounded admission
@@ -29,7 +33,7 @@
 
 use std::process::ExitCode;
 
-use bottlemod::api::{ApiHandler, Request, Response, WorkflowSel};
+use bottlemod::api::{encode_v1, ApiHandler, Request, Response, WorkflowSel};
 use bottlemod::coordinator::exporter;
 use bottlemod::coordinator::service::{pump_lines, serve_stdio};
 use bottlemod::coordinator::sweeper::fig7_fractions;
@@ -57,6 +61,7 @@ fn main() -> ExitCode {
         "export-figures" => cmd_export(rest),
         "advisor" => cmd_advisor(),
         "online-demo" => cmd_online(),
+        "watch" => cmd_watch(rest),
         "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
@@ -82,8 +87,10 @@ fn print_help() {
     println!(
         "bottlemod — fast bottleneck analysis for scientific workflows\n\
          usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|generate|\
-         export-figures|advisor|online-demo|serve|artifacts> [args]\n\
+         export-figures|advisor|online-demo|watch|serve|artifacts> [args]\n\
          calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]\n\
+         watch: bottlemod watch <trace.tsv> [--io <series.log>] [--follow]\n\
+         \x20      [--interval <secs>] [--tol <t>]\n\
          generate: bottlemod generate [--shape layered|scatter-gather|fan-in|chain|\
          genomics] [--seed <n>] [--nodes <n>] [--budget <pieces>]\n\
          sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]\n\
@@ -607,6 +614,161 @@ fn cmd_online() -> Result<()> {
             d.t, d.fraction, d.predicted_remaining
         );
     }
+    Ok(())
+}
+
+/// `bottlemod watch` replays a trace file through a live monitor session
+/// (docs/LIVE.md): the header opens the session, then one `monitor_feed`
+/// per TSV row, printing one v1 JSON-lines envelope per event — exactly
+/// what a `serve` client would see. `--follow` keeps tailing both files
+/// for complete new lines until interrupted; without it the session is
+/// closed with a final `monitor_status` once the files are drained.
+fn cmd_watch(args: &[String]) -> Result<()> {
+    let usage = "usage: bottlemod watch <trace.tsv> [--io <series.log>] [--follow] \
+                 [--interval <secs>] [--tol <t>]";
+    let mut tsv_path: Option<&String> = None;
+    let mut io_path: Option<&String> = None;
+    let mut follow = false;
+    let mut interval = 1.0f64;
+    let mut tol: Option<f64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--io" => {
+                io_path = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--io needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--follow" => {
+                follow = true;
+                i += 1;
+            }
+            "--interval" => {
+                interval = args
+                    .get(i + 1)
+                    .and_then(|a| a.parse::<f64>().ok())
+                    .filter(|s| s.is_finite() && *s > 0.0)
+                    .ok_or_else(|| {
+                        Error::msg(format!("--interval needs a positive number\n{usage}"))
+                    })?;
+                i += 2;
+            }
+            "--tol" => {
+                tol = Some(
+                    args.get(i + 1)
+                        .and_then(|a| a.parse().ok())
+                        .ok_or_else(|| Error::msg(format!("--tol needs a number\n{usage}")))?,
+                );
+                i += 2;
+            }
+            a if !a.starts_with("--") => {
+                if tsv_path.is_none() {
+                    tsv_path = Some(&args[i]);
+                } else {
+                    return Err(Error::msg(format!("unexpected argument '{a}'\n{usage}")));
+                }
+                i += 1;
+            }
+            other => return Err(Error::msg(format!("unknown flag '{other}'\n{usage}"))),
+        }
+    }
+    let tsv_path = tsv_path.ok_or_else(|| Error::msg(usage))?;
+    let pause = std::time::Duration::from_secs_f64(interval);
+
+    / in follow mode a line is only real once its newline lands; a
+    // half-written row must not be fed as an event
+    let complete_lines = |text: &str| -> Vec<String> {
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        if follow && !text.is_empty() && !text.ends_with('\n') {
+            lines.pop();
+        }
+        lines
+    };
+    let is_content = |l: &str| {
+        let t = l.trim();
+        !t.is_empty() && !t.starts_with('#')
+    };
+
+    // the header line opens the session; with --follow, wait for it
+    let (header, mut tsv_consumed) = loop {
+        let lines = complete_lines(&std::fs::read_to_string(tsv_path)?);
+        match lines.iter().position(|l| is_content(l)) {
+            Some(at) => break (lines[at].clone(), at + 1),
+            None if follow => std::thread::sleep(pause),
+            None => return Err(Error::msg("trace has no header line to open a monitor with")),
+        }
+    };
+
+    let handler = ApiHandler::new();
+    let mut next_id: u64 = 0;
+    / every envelope a serve client would see, one line each; feed errors
+    // are printed too (the monitor rejects bad input atomically, so the
+    // session survives them)
+    let mut send = |req: Request| -> bool {
+        next_id += 1;
+        let outcome = handler.handle(&req);
+        let ok = outcome.is_ok();
+        println!("{}", encode_v1(Some(next_id), &outcome));
+        ok
+    };
+
+    let opened = send(Request::MonitorOpen {
+        workflow: WorkflowSel::Trace {
+            tsv: format!("{header}\n"),
+            io: None,
+        },
+        tol,
+    });
+    if !opened {
+        return Err(Error::msg("monitor_open failed"));
+    }
+
+    let mut io_consumed = 0usize;
+    loop {
+        let lines = complete_lines(&std::fs::read_to_string(tsv_path)?);
+        for line in lines.iter().skip(tsv_consumed) {
+            if is_content(line) {
+                send(Request::MonitorFeed {
+                    tsv: Some(format!("{line}\n")),
+                    io: None,
+                });
+            }
+        }
+        tsv_consumed = tsv_consumed.max(lines.len());
+
+        if let Some(p) = io_path {
+            / the I/O log may lag the trace (or not exist yet) in follow
+            // mode; new samples land as one event per poll
+            let text = match std::fs::read_to_string(p) {
+                Ok(t) => t,
+                Err(_) if follow => String::new(),
+                Err(e) => return Err(e.into()),
+            };
+            let lines = complete_lines(&text);
+            let fresh: Vec<String> = lines
+                .iter()
+                .skip(io_consumed)
+                .filter(|l| is_content(l))
+                .cloned()
+                .collect();
+            if !fresh.is_empty() {
+                send(Request::MonitorFeed {
+                    tsv: None,
+                    io: Some(format!("{}\n", fresh.join("\n"))),
+                });
+            }
+            io_consumed = io_consumed.max(lines.len());
+        }
+
+        if !follow {
+            break;
+        }
+        std::thread::sleep(pause);
+    }
+
+    send(Request::MonitorStatus { close: true });
     Ok(())
 }
 

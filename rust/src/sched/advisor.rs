@@ -1,7 +1,18 @@
 //! Allocation advisor: pick the resource split that minimizes the predicted
 //! makespan (the paper's "comparison of different scheduling options").
+//!
+//! Two entry points: [`recommend`] is the historical video-scenario path
+//! (exact sweep over the Fig 7 fraction grid), and [`recommend_model`] is
+//! its generalization over any [`SweepModel`] — the live monitor calls it
+//! whenever the observed bottleneck shifts, turning the shift into a
+//! candidate-split → predicted-gain advisory for whatever workload is
+//! being monitored.
 
-use crate::workflow::scenario::VideoScenario;
+use std::sync::Arc;
+
+use crate::runtime::cache::AnalysisCache;
+use crate::runtime::sweep::{SweepBatch, SweepError, SweepModel};
+use crate::workflow::scenario::{Perturbation, VideoScenario};
 
 use crate::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
 
@@ -10,9 +21,10 @@ use crate::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
 pub struct Recommendation {
     pub best_fraction: f64,
     pub best_total: f64,
-    /// Predicted total under the fair 50:50 default.
+    /// Predicted total under the baseline split — 50:50 for [`recommend`],
+    /// the model's current (identity) allocation for [`recommend_model`].
     pub fair_total: f64,
-    /// Relative improvement over fair sharing.
+    /// Relative improvement over the baseline.
     pub gain: f64,
 }
 
@@ -56,9 +68,60 @@ pub fn recommend(sc: &VideoScenario, points: usize, threads: usize) -> Recommend
     }
 }
 
+/// [`recommend`] generalized over any [`SweepModel`]: sweep the
+/// [`Perturbation::Fraction`] candidates of [`candidate_fractions`] against
+/// the model's identity baseline and recommend the best split.
+///
+/// Returns `Ok(None)` when the model has no actionable split — it rejects
+/// the fraction knob (fixed spec/trace workflows), or neither the baseline
+/// nor any candidate finishes. A failed analysis is a real `Err`. With a
+/// cache attached, repeated calls (the monitor re-advising on every
+/// bottleneck shift) re-solve only what changed.
+pub fn recommend_model(
+    model: &Arc<dyn SweepModel>,
+    points: usize,
+    threads: usize,
+    cache: Option<Arc<AnalysisCache>>,
+) -> Result<Option<Recommendation>, SweepError> {
+    let fractions = candidate_fractions(points);
+    let mut perts: Vec<Perturbation> = Vec::with_capacity(fractions.len() + 1);
+    perts.push(Perturbation::Identity);
+    perts.extend(fractions.iter().map(|&f| Perturbation::Fraction(f)));
+    let mut batch = SweepBatch::over(Arc::clone(model)).with_threads(threads);
+    if let Some(c) = cache {
+        batch = batch.with_cache(c);
+    }
+    let outcomes = match batch.run(&perts) {
+        Ok(o) => o,
+        Err(SweepError::Unsupported(_)) => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let baseline = outcomes[0].makespan.unwrap_or(f64::INFINITY);
+    let best = outcomes[1..]
+        .iter()
+        .zip(&fractions)
+        .map(|(o, &f)| (f, o.makespan.unwrap_or(f64::INFINITY)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.partial_cmp(&b.0).unwrap()));
+    let (best_f, best_t) = match best {
+        Some(b) => b,
+        None => return Ok(None),
+    };
+    if !best_t.is_finite() || !baseline.is_finite() {
+        return Ok(None);
+    }
+    Ok(Some(Recommendation {
+        best_fraction: best_f,
+        best_total: best_t,
+        fair_total: baseline,
+        gain: 1.0 - best_t / baseline,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::sweep::FixedWorkflow;
+    use crate::workflow::scenario::GenomicsScenario;
 
     #[test]
     fn candidates_sorted_unique_and_contain_fair_share() {
@@ -85,5 +148,44 @@ mod tests {
         assert!(rec.best_fraction >= 0.85, "{rec:?}");
         assert!((0.25..0.40).contains(&rec.gain), "{rec:?}");
         assert!(rec.best_total < rec.fair_total);
+    }
+
+    /// The generic path reproduces the video headline: the default
+    /// scenario's identity baseline *is* the 50:50 split, so the gain
+    /// matches [`recommend`]'s.
+    #[test]
+    fn recommend_model_matches_video_headline() {
+        let model: Arc<dyn SweepModel> = Arc::new(VideoScenario::default());
+        let rec = recommend_model(&model, 50, 2, None).unwrap().unwrap();
+        assert!(rec.best_fraction >= 0.85, "{rec:?}");
+        assert!((0.25..0.40).contains(&rec.gain), "{rec:?}");
+    }
+
+    /// Models without a fraction knob yield no recommendation — not an
+    /// error (the monitor then emits a shift-only advisory).
+    #[test]
+    fn recommend_model_none_for_fixed_workflows() {
+        let (wf, _) = VideoScenario::default().build();
+        let model: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("trace", wf));
+        assert!(recommend_model(&model, 10, 1, None).unwrap().is_none());
+    }
+
+    /// Any model exposing the fraction knob works — genomics included —
+    /// and an attached cache does not change the recommendation.
+    #[test]
+    fn recommend_model_generalizes_and_caches() {
+        let model: Arc<dyn SweepModel> = Arc::new(GenomicsScenario::default());
+        let cold = recommend_model(&model, 20, 1, None).unwrap().unwrap();
+        let cache = Arc::new(AnalysisCache::new());
+        let warm1 = recommend_model(&model, 20, 1, Some(Arc::clone(&cache)))
+            .unwrap()
+            .unwrap();
+        let warm2 = recommend_model(&model, 20, 1, Some(Arc::clone(&cache)))
+            .unwrap()
+            .unwrap();
+        assert_eq!(cold.best_fraction, warm1.best_fraction);
+        assert_eq!(cold.best_total, warm1.best_total);
+        assert_eq!(warm1.best_total, warm2.best_total);
+        assert!(cache.stats().hits > 0, "repeat advisory must hit the cache");
     }
 }

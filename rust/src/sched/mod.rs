@@ -4,5 +4,8 @@
 pub mod advisor;
 pub mod online;
 
-pub use advisor::{candidate_fractions, recommend, Recommendation};
-pub use online::{predict_remaining, run_online, Decision, LiveState, OnlineResult};
+pub use advisor::{candidate_fractions, recommend, recommend_model, Recommendation};
+pub use online::{
+    frontier_bottleneck, live_bottleneck, predict_remaining, run_online, BottleneckShift,
+    Decision, LiveState, LiveTracker, OnlineResult,
+};

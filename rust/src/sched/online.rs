@@ -1,19 +1,148 @@
-//! Online re-analysis: periodically re-run BottleMod on the *remaining*
-//! work with live measurements and re-allocate the shared link.
+//! Online re-analysis: re-run BottleMod on live state and react when the
+//! bottleneck moves.
 //!
 //! This demonstrates the paper's closing claim: because the analysis is
 //! almost instant, it "may even be used while the tasks or the workflow is
-//! still executing to conduct certain optimizations just in time". The
-//! executor here is the virtual testbed's physics (byte-accurate stepping);
-//! the controller only sees the observable state (bytes moved, tasks done)
-//! and the BottleMod model.
+//! still executing to conduct certain optimizations just in time". Two
+//! layers live here:
+//!
+//! * The **workload-agnostic primitives** — [`live_bottleneck`] (which
+//!   (process, bottleneck) pair is binding at an observation time, read
+//!   off any [`WorkflowAnalysis`]) and [`LiveTracker`] (edge-detection on
+//!   that identity: a [`BottleneckShift`] fires exactly when it changes).
+//!   These drive [`crate::live`]'s monitor sessions for *any* workflow —
+//!   the generalization of the controller below.
+//! * The **self-contained video demo** ([`run_online`]) — the historical
+//!   closed loop against the Fig 5 scenario's physics, kept as the
+//!   reference experiment (`bottlemod online-demo`).
 
 use crate::solver::SolverOpts;
-use crate::workflow::engine::analyze_fixpoint;
+use crate::workflow::engine::{analyze_fixpoint, WorkflowAnalysis};
 use crate::workflow::graph::{DataSource, ResourceSource, StartRule, Workflow};
 use crate::model::ProcessBuilder;
 use crate::pwfn::PwPoly;
 use crate::workflow::scenario::VideoScenario;
+
+/// The live bottleneck of an analyzed workflow at observation time `now`:
+/// among all nodes whose analysis has a segment covering `now` (and which
+/// have not finished by `now`), the `(process name, bottleneck label)` of
+/// the segment with the most remaining duration — the constraint that will
+/// bind longest from here, i.e. the one worth re-allocating around.
+/// `None` when nothing is running at `now` (before the first start or
+/// after the predicted finish).
+///
+/// Deterministic: ties break toward the lowest node id, and the inputs are
+/// the bit-exact analyses, so the identity — and therefore every
+/// [`BottleneckShift`] a [`LiveTracker`] derives from it — is reproducible
+/// run to run.
+pub fn live_bottleneck(
+    wf: &Workflow,
+    wa: &WorkflowAnalysis,
+    now: f64,
+) -> Option<(String, String)> {
+    let mut best: Option<(f64, String, String)> = None;
+    for (i, a) in wa.analyses.iter().enumerate() {
+        if a.finish_time.map(|f| f <= now).unwrap_or(false) {
+            continue;
+        }
+        for s in &a.segments {
+            if !(s.start <= now && now < s.end) {
+                continue;
+            }
+            let end = s.end.min(a.finish_time.unwrap_or(f64::INFINITY));
+            let remaining = end - now;
+            if remaining <= 1e-9 {
+                continue;
+            }
+            if best.as_ref().map(|b| remaining > b.0).unwrap_or(true) {
+                let proc = &wf.nodes[i].process;
+                best = Some((
+                    remaining,
+                    proc.name.clone(),
+                    a.bottleneck_name(proc, s.bottleneck),
+                ));
+            }
+        }
+    }
+    best.map(|(_, p, b)| (p, b))
+}
+
+/// The regime that set the predicted horizon: the latest-finishing node's
+/// final (positive-length) bottleneck segment.
+///
+/// This is the live monitor's fallback when [`live_bottleneck`] finds
+/// nothing strictly active at `now`: models calibrated from observations
+/// alone predict no further than the observation frontier, so at the
+/// frontier itself nothing is "running" — but the constraint that bound
+/// the last-finishing task up to that point is exactly what is binding the
+/// execution right now. `None` when no node has a predicted finish.
+///
+/// Deterministic for the same reasons as [`live_bottleneck`]: ties on the
+/// finish time break toward the lowest node id.
+pub fn frontier_bottleneck(wf: &Workflow, wa: &WorkflowAnalysis) -> Option<(String, String)> {
+    let mut latest: Option<(f64, usize)> = None;
+    for (i, a) in wa.analyses.iter().enumerate() {
+        if let Some(f) = a.finish_time {
+            if latest.map(|(bf, _)| f > bf).unwrap_or(true) {
+                latest = Some((f, i));
+            }
+        }
+    }
+    let (finish, i) = latest?;
+    let a = &wa.analyses[i];
+    let proc = &wf.nodes[i].process;
+    a.segments
+        .iter()
+        .rev()
+        .find(|s| s.start < finish && s.end.min(finish) - s.start > 1e-9)
+        .map(|s| (proc.name.clone(), a.bottleneck_name(proc, s.bottleneck)))
+}
+
+/// A change in the live bottleneck's identity between two observations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BottleneckShift {
+    /// The previously binding `(process, bottleneck)`, if one was ever
+    /// established.
+    pub from: Option<(String, String)>,
+    /// The newly binding pair.
+    pub to: (String, String),
+}
+
+/// Edge detector over [`live_bottleneck`] observations: remembers the last
+/// established identity and reports a [`BottleneckShift`] exactly when a
+/// *different* one is observed. The first establishment does not fire
+/// (there is nothing to re-allocate away from yet), and `None`
+/// observations (nothing running) neither fire nor forget.
+#[derive(Clone, Debug, Default)]
+pub struct LiveTracker {
+    last: Option<(String, String)>,
+    established: bool,
+}
+
+impl LiveTracker {
+    pub fn new() -> LiveTracker {
+        LiveTracker::default()
+    }
+
+    /// The last established bottleneck identity, if any.
+    pub fn current(&self) -> Option<&(String, String)> {
+        self.last.as_ref()
+    }
+
+    /// Feed one observation; returns the shift it completes, if any.
+    pub fn observe(&mut self, current: Option<(String, String)>) -> Option<BottleneckShift> {
+        let cur = current?;
+        if self.last.as_ref() == Some(&cur) {
+            return None;
+        }
+        let from = self.last.replace(cur.clone());
+        if !self.established {
+            self.established = true;
+            return None;
+        }
+        Some(BottleneckShift { from, to: cur })
+    }
+}
 
 /// Observable mid-flight state of the Fig 5 workflow.
 #[derive(Clone, Copy, Debug)]
@@ -240,6 +369,62 @@ pub fn run_online(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// In the Fig 5 video workflow at 50:50, the shared link binds both
+    /// downloads until ~178 s, then task1's encode cpu (~82 s), then the
+    /// 3 s mux tail on io; [`live_bottleneck`] must read exactly that off
+    /// the analysis, and a [`LiveTracker`] over a time sweep must fire
+    /// exactly those two handoffs (link -> cpu -> io).
+    #[test]
+    fn live_bottleneck_tracks_the_video_handoffs() {
+        let (wf, _) = VideoScenario::default().build();
+        let wa = analyze_fixpoint(&wf, &SolverOpts::default(), 8).unwrap();
+        let total = wa.makespan.unwrap();
+
+        let early = live_bottleneck(&wf, &wa, 10.0).unwrap();
+        assert_eq!(early.1, "res:link", "{early:?}");
+        let late = live_bottleneck(&wf, &wa, 200.0).unwrap();
+        assert_eq!(late, ("task1-reverse".to_string(), "res:cpu".to_string()));
+        // after the predicted finish nothing is running
+        assert!(live_bottleneck(&wf, &wa, total + 1.0).is_none());
+
+        let mut tracker = LiveTracker::new();
+        let mut shifts = Vec::new();
+        let mut t = 0.0;
+        while t < total {
+            if let Some(s) = tracker.observe(live_bottleneck(&wf, &wa, t)) {
+                shifts.push(s);
+            }
+            t += 1.0;
+        }
+        assert_eq!(shifts.len(), 2, "{shifts:?}");
+        assert_eq!(shifts[0].from.as_ref().unwrap().1, "res:link");
+        assert_eq!(shifts[0].to.1, "res:cpu");
+        assert_eq!(shifts[1].to, ("task3-mux".to_string(), "res:io".to_string()));
+
+        // the horizon-setting regime is the mux tail — and it is still
+        // reported at (and past) the frontier, where live_bottleneck sees
+        // nothing strictly active anymore
+        assert_eq!(
+            frontier_bottleneck(&wf, &wa).unwrap(),
+            ("task3-mux".to_string(), "res:io".to_string())
+        );
+    }
+
+    #[test]
+    fn tracker_ignores_gaps_and_repeats() {
+        let mut tr = LiveTracker::new();
+        let link = ("dl".to_string(), "res:link".to_string());
+        let cpu = ("t1".to_string(), "res:cpu".to_string());
+        assert!(tr.observe(None).is_none());
+        assert!(tr.observe(Some(link.clone())).is_none()); // establishment
+        assert!(tr.observe(Some(link.clone())).is_none()); // repeat
+        assert!(tr.observe(None).is_none()); // gap neither fires nor forgets
+        let s = tr.observe(Some(cpu.clone())).unwrap();
+        assert_eq!(s.from, Some(link));
+        assert_eq!(s.to, cpu);
+        assert_eq!(tr.current(), Some(&cpu));
+    }
 
     #[test]
     fn online_beats_static_fair_share() {

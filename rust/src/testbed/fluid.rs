@@ -378,29 +378,7 @@ pub fn execute(wf: &Workflow, opts: &FluidOpts) -> FluidRun {
 pub fn export_trace(wf: &Workflow, run: &FluidRun) -> crate::util::Result<(TsvTrace, Vec<IoSeries>)> {
     let n = wf.nodes.len();
     ensure!(run.finish.len() == n, "run does not match workflow");
-    let mut names: std::collections::HashSet<&str> = std::collections::HashSet::new();
-    for (i, nd) in wf.nodes.iter().enumerate() {
-        ensure!(
-            nd.process.res_reqs.len() <= 1,
-            "node {i} ('{}') has {} resource requirements; the TSV export models one",
-            nd.process.name,
-            nd.process.res_reqs.len()
-        );
-        ensure!(
-            !nd.process.name.is_empty()
-                && !nd.process.name.starts_with('#')
-                && !nd.process.name.contains(|c: char| c.is_whitespace() || c == ','),
-            "process name '{}' cannot be exported: empty, starts with '#' (a trace \
-             comment), or contains whitespace/comma (it would corrupt the TSV/io-log \
-             columns or the deps list)",
-            nd.process.name
-        );
-        ensure!(
-            names.insert(nd.process.name.as_str()),
-            "duplicate process name '{}'",
-            nd.process.name
-        );
-    }
+    validate_exportable(wf)?;
     let mut tasks = Vec::with_capacity(n);
     for (i, nd) in wf.nodes.iter().enumerate() {
         let finish = match run.finish[i] {
@@ -445,6 +423,158 @@ pub fn export_trace(wf: &Workflow, run: &FluidRun) -> crate::util::Result<(TsvTr
         });
     }
     Ok((TsvTrace { tasks }, run.traces.clone()))
+}
+
+/// Export the *prefix* of a recorded fluid execution as a process monitor
+/// would have seen it at workflow time `t` — an honest mid-flight
+/// snapshot, for driving the live monitor's event stream in tests.
+///
+/// Per node:
+/// * finished by `t` — the same complete row [`export_trace`] emits;
+/// * active but unfinished at `t` — an in-flight row: `complete` absent,
+///   `realtime = t − start`, `rchar`/`wchar` read off the last recorded
+///   I/O sample at or before `t` (a monitor only knows the counters it has
+///   sampled), and `pcpu` absent (average utilization is a
+///   completion-time summary statistic);
+/// * no monitor footprint yet at `t` (not started, or started but stalled
+///   without consuming anything) — omitted, exactly as a live trace file
+///   would not yet contain its row. Dependency lists and I/O series are
+///   filtered to the tasks present in the snapshot.
+///
+/// The recorded I/O series are clipped to samples with `ts ≤ t`. At any
+/// `t` at or past the run's makespan the snapshot equals the full
+/// [`export_trace`] output bit-for-bit.
+pub fn export_trace_until(
+    wf: &Workflow,
+    run: &FluidRun,
+    t: f64,
+) -> crate::util::Result<(TsvTrace, Vec<IoSeries>)> {
+    let n = wf.nodes.len();
+    ensure!(run.finish.len() == n, "run does not match workflow");
+    ensure!(t.is_finite() && t >= 0.0, "snapshot time {t} must be finite and >= 0");
+    let done = run
+        .finish
+        .iter()
+        .all(|f| f.map(|f| f <= t).unwrap_or(false));
+    if done {
+        return export_trace(wf, run);
+    }
+    validate_exportable(wf)?;
+
+    // clip the recorded series first: in-flight counters come from them
+    let mut series: Vec<IoSeries> = Vec::new();
+    for tr in &run.traces {
+        let keep = tr.ts.partition_point(|&x| x <= t);
+        if keep > 0 {
+            series.push(IoSeries {
+                task: tr.task.clone(),
+                ts: tr.ts[..keep].to_vec(),
+                read: tr.read[..keep].to_vec(),
+                written: tr.written[..keep].to_vec(),
+            });
+        }
+    }
+
+    let mut tasks: Vec<TsvTask> = Vec::new();
+    for (i, nd) in wf.nodes.iter().enumerate() {
+        let finished = run.finish[i].filter(|&f| f <= t);
+        // visibility = the task has consumed something by `t` (a stalled
+        // task that has not touched data or resources leaves no monitor
+        // footprint yet), or it already finished (zero-work nodes finish
+        // at their release without ever activating)
+        let start = match (run.active[i], finished) {
+            (Some(s), f) if s <= t => s.min(f.unwrap_or(s)),
+            (_, Some(f)) => run.started[i].unwrap_or(nd.start.at).min(f),
+            _ => continue, // not yet visible at t
+        };
+        let (complete, realtime, rchar, wchar, pcpu) = match finished {
+            Some(f) => {
+                let realtime = (f - start).max(0.0);
+                let rchar: f64 = nd
+                    .data_sources
+                    .iter()
+                    .map(|src| match src {
+                        DataSource::External(fl) => fl.eval(f),
+                        DataSource::ProcessOutput { node, output } => wf.nodes[*node]
+                            .process
+                            .outputs[*output]
+                            .func
+                            .eval(run.progress[*node]),
+                    })
+                    .sum();
+                let wchar = match nd.process.outputs.first() {
+                    Some(o) => o.func.eval(run.progress[i]),
+                    None => run.progress[i],
+                };
+                let pcpu = (!nd.process.res_reqs.is_empty() && realtime > 1e-12)
+                    .then(|| 100.0 * run.resource_used[i] / realtime);
+                (Some(f), realtime, rchar, wchar, pcpu)
+            }
+            None => {
+                let (rchar, wchar) = series
+                    .iter()
+                    .find(|s| s.task == nd.process.name)
+                    .map(|s| (*s.read.last().unwrap(), *s.written.last().unwrap()))
+                    .unwrap_or((0.0, 0.0));
+                (None, (t - start).max(0.0), rchar, wchar, None)
+            }
+        };
+        tasks.push(TsvTask {
+            id: nd.process.name.clone(),
+            name: nd.process.name.clone(),
+            deps: wf
+                .deps(i)
+                .iter()
+                .map(|&d| wf.nodes[d].process.name.clone())
+                .collect(),
+            start: Some(start),
+            complete,
+            realtime,
+            pcpu,
+            rchar,
+            wchar,
+            peak_rss: 0.0,
+        });
+    }
+    // a dep whose row is not in the snapshot yet cannot be referenced,
+    // and the io log must not carry series for tasks the TSV does not
+    // know (the calibrator rejects orphan series)
+    let present: std::collections::HashSet<String> =
+        tasks.iter().map(|tk| tk.id.clone()).collect();
+    for tk in &mut tasks {
+        tk.deps.retain(|d| present.contains(d));
+    }
+    series.retain(|s| present.contains(&s.task));
+    Ok((TsvTrace { tasks }, series))
+}
+
+/// Shared export preconditions: unique, column-safe process names and at
+/// most one resource requirement per node (the TSV has a single `pcpu`).
+fn validate_exportable(wf: &Workflow) -> crate::util::Result<()> {
+    let mut names: std::collections::HashSet<&str> = std::collections::HashSet::new();
+    for (i, nd) in wf.nodes.iter().enumerate() {
+        ensure!(
+            nd.process.res_reqs.len() <= 1,
+            "node {i} ('{}') has {} resource requirements; the TSV export models one",
+            nd.process.name,
+            nd.process.res_reqs.len()
+        );
+        ensure!(
+            !nd.process.name.is_empty()
+                && !nd.process.name.starts_with('#')
+                && !nd.process.name.contains(|c: char| c.is_whitespace() || c == ','),
+            "process name '{}' cannot be exported: empty, starts with '#' (a trace \
+             comment), or contains whitespace/comma (it would corrupt the TSV/io-log \
+             columns or the deps list)",
+            nd.process.name
+        );
+        ensure!(
+            names.insert(nd.process.name.as_str()),
+            "duplicate process name '{}'",
+            nd.process.name
+        );
+    }
+    Ok(())
 }
 
 fn charge_pool(src: &ResourceSource, rate: f64, pool_used: &mut [f64]) {
@@ -611,6 +741,78 @@ mod tests {
         let s_rev = series2.iter().find(|s| s.task == "rev").unwrap();
         assert!(close(*s_rev.written.last().unwrap(), 100.0, 1e-6));
         assert!(close(*s_rev.ts.last().unwrap(), t_rev.complete.unwrap(), 1e-9));
+    }
+
+    /// Mid-flight snapshots: tasks appear as a live trace file would show
+    /// them — finished rows complete, in-flight rows truncated, future
+    /// rows absent — and a snapshot past the makespan is the full export.
+    #[test]
+    fn export_trace_until_prefixes() {
+        let mut wf = Workflow::new();
+        let dl = ProcessBuilder::new("dl", 100.0)
+            .stream_data("remote", 100.0)
+            .stream_resource("link", 100.0)
+            .identity_output("file")
+            .build();
+        let d = wf.add_node(
+            dl,
+            vec![DataSource::External(PwPoly::constant(100.0))],
+            vec![ResourceSource::Fixed(PwPoly::constant(10.0))],
+            StartRule::default(),
+        );
+        let rev = ProcessBuilder::new("rev", 100.0)
+            .burst_data("in", 100.0)
+            .stream_resource("cpu", 20.0)
+            .identity_output("out")
+            .build();
+        wf.add_node(
+            rev,
+            vec![DataSource::ProcessOutput { node: d, output: 0 }],
+            vec![ResourceSource::Fixed(PwPoly::constant(1.0))],
+            StartRule::default(),
+        );
+        let run = execute(
+            &wf,
+            &FluidOpts {
+                dt: 0.01,
+                sample_every: 0.5,
+                ..FluidOpts::default()
+            },
+        );
+        // dl runs [0, 10], rev (burst input) works [10, 30]
+
+        // t = 5: only dl visible, in-flight — no complete, counters from
+        // the last sample at or before 5 s, pcpu withheld
+        let (tsv, series) = export_trace_until(&wf, &run, 5.0).unwrap();
+        assert_eq!(tsv.tasks.len(), 1);
+        let t_dl = &tsv.tasks[0];
+        assert_eq!(t_dl.id, "dl");
+        assert_eq!(t_dl.complete, None);
+        assert_eq!(t_dl.pcpu, None);
+        assert!(close(t_dl.realtime, 5.0, 0.1), "{}", t_dl.realtime);
+        assert!(t_dl.wchar > 30.0 && t_dl.wchar <= 51.0, "{}", t_dl.wchar);
+        assert_eq!(series.len(), 1);
+        assert!(series[0].ts.iter().all(|&x| x <= 5.0));
+        // the snapshot parses through the strict round trip
+        let back = crate::trace::format::parse_tsv(&crate::trace::format::write_tsv(&tsv))
+            .unwrap();
+        assert_eq!(back, tsv);
+
+        // t = 15: dl finished (full row, pcpu restored), rev in-flight
+        let (tsv, _) = export_trace_until(&wf, &run, 15.0).unwrap();
+        assert_eq!(tsv.tasks.len(), 2);
+        let t_dl = tsv.task("dl").unwrap();
+        assert!(close(t_dl.complete.unwrap(), 10.0, 0.1));
+        assert!(t_dl.pcpu.is_some());
+        let t_rev = tsv.task("rev").unwrap();
+        assert_eq!(t_rev.complete, None);
+        assert_eq!(t_rev.deps, vec!["dl".to_string()]);
+
+        // past the makespan the snapshot IS the full export
+        let full = export_trace(&wf, &run).unwrap();
+        let snap = export_trace_until(&wf, &run, run.makespan.unwrap() + 1.0).unwrap();
+        assert_eq!(snap.0, full.0);
+        assert_eq!(snap.1, full.1);
     }
 
     #[test]

@@ -14,8 +14,12 @@
 //!   calibrator fits full requirement curves from it instead of the
 //!   summary fallback.
 //!
-//! Both parsers are strict: malformed rows fail with the line number and
-//! the offending value (via [`crate::util::error`]), never silently skip.
+//! Both parsers are strict on *form*: malformed rows fail with the line
+//! number and the offending value (via [`crate::util::error`]), never
+//! silently skip. Sample *ordering* is tolerant — streaming producers
+//! deliver I/O samples out of order and re-send overlapping windows, so
+//! [`parse_io_log`] sorts per task and resolves duplicate timestamps by
+//! last-write-wins.
 //! Numbers accept scientific notation (`1.2e9` byte counts are common in
 //! real traces). The writers ([`write_tsv`], [`write_io_log`]) emit the
 //! exact same dialect, which is what makes the fluid-testbed round trip
@@ -60,11 +64,13 @@ pub struct TsvTrace {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct IoSeries {
     pub task: String,
-    /// Sample times (workflow clock, strictly increasing).
+    /// Sample times (workflow clock). [`parse_io_log`] keeps these strictly
+    /// increasing by construction: arriving samples are inserted in sorted
+    /// order and a re-sent timestamp overwrites its predecessor.
     pub ts: Vec<f64>,
-    /// Cumulative bytes read at each sample (nondecreasing).
+    /// Cumulative bytes read at each sample.
     pub read: Vec<f64>,
-    /// Cumulative bytes written at each sample (nondecreasing).
+    /// Cumulative bytes written at each sample.
     pub written: Vec<f64>,
 }
 
@@ -104,6 +110,28 @@ fn parse_opt_num(field: &str, value: &str, line: usize) -> Result<Option<f64>> {
 /// comma-separated list of task ids or `-` for none. Unknown columns are
 /// ignored. Lines starting with `#` are comments.
 pub fn parse_tsv(text: &str) -> Result<TsvTrace> {
+    let trace = parse_tsv_structural(text)?;
+    / referential integrity: every dep must name a task in this trace
+    for t in &trace.tasks {
+        for d in &t.deps {
+            ensure!(
+                trace.task(d).is_some(),
+                "task '{}' depends on unknown task '{d}'",
+                t.id
+            );
+        }
+    }
+    Ok(trace)
+}
+
+/// [`parse_tsv`] minus the referential-integrity check on `deps`.
+///
+/// A *streaming* producer (the live monitor's feed path) legitimately
+/// delivers a row before the rows it depends on: each row here must be
+/// well-formed on its own, but a dep may name a task whose row has not
+/// arrived yet. Offline consumers want [`parse_tsv`], which rejects
+/// dangling deps outright.
+pub fn parse_tsv_structural(text: &str) -> Result<TsvTrace> {
     let mut lines = text
         .lines()
         .enumerate()
@@ -229,24 +257,22 @@ pub fn parse_tsv(text: &str) -> Result<TsvTrace> {
         });
     }
     ensure!(!tasks.is_empty(), "trace has a header but no task rows");
-    // referential integrity: every dep must name a task in this trace
-    for t in &tasks {
-        for d in &t.deps {
-            ensure!(
-                seen_ids.contains(d),
-                "task '{}' depends on unknown task '{d}'",
-                t.id
-            );
-        }
-    }
     Ok(TsvTrace { tasks })
 }
 
 /// Parse a BPF-style cumulative I/O log: whitespace-separated
 /// `task_id  t  bytes_read  bytes_written` per line, `#` comments allowed.
-/// Samples are grouped per task in file order; per task, timestamps must be
-/// strictly increasing and both counters nondecreasing (they are
-/// cumulative) — violations are errors, with the line number.
+/// Samples are grouped per task in file order. Per task, samples are kept
+/// sorted by timestamp: a *streaming* producer (shard interleaving, window
+/// re-sends — the live monitor's feed path) legitimately delivers samples
+/// out of order or re-sends a timestamp it already reported, so neither is
+/// an error. An out-of-order sample is inserted at its sorted position; an
+/// exact-duplicate timestamp overwrites the earlier sample (last write
+/// wins). Counter regressions across the *sorted* series are tolerated too
+/// (a re-sent stale window): the calibrator monotonizes cumulative
+/// counters with a running max before fitting. Malformed lines (wrong
+/// field count, non-finite or negative values) are still errors, with the
+/// line number.
 pub fn parse_io_log(text: &str) -> Result<Vec<IoSeries>> {
     let mut out: Vec<IoSeries> = vec![];
     let mut index: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
@@ -284,22 +310,16 @@ pub fn parse_io_log(text: &str) -> Result<Vec<IoSeries>> {
             }
         };
         let series = &mut out[idx];
-        if let Some(&last_t) = series.ts.last() {
-            ensure!(
-                t > last_t,
-                "io log line {ln}: task '{}' timestamp {t} not after {last_t}",
-                series.task
-            );
-            ensure!(
-                read >= *series.read.last().unwrap() - 1e-9
-                    && written >= *series.written.last().unwrap() - 1e-9,
-                "io log line {ln}: task '{}' cumulative counter decreased",
-                series.task
-            );
+        // sorted insert, last write wins on an exact-duplicate timestamp
+        let pos = series.ts.partition_point(|&x| x < t);
+        if pos < series.ts.len() && series.ts[pos] == t {
+            series.read[pos] = read;
+            series.written[pos] = written;
+        } else {
+            series.ts.insert(pos, t);
+            series.read.insert(pos, read);
+            series.written.insert(pos, written);
         }
-        series.ts.push(t);
-        series.read.push(read);
-        series.written.push(written);
     }
     Ok(out)
 }
@@ -401,6 +421,10 @@ mod tests {
         let unknown_dep = "task_id\tdeps\trealtime\trchar\twchar\na\tzz\t5\t1\t1\n";
         let e = parse_tsv(unknown_dep).unwrap_err().to_string();
         assert!(e.contains("unknown task 'zz'"), "{e}");
+        / the structural parser tolerates the dangling dep (a streaming
+        // producer may deliver 'zz' later) but nothing else
+        let t = parse_tsv_structural(unknown_dep).unwrap();
+        assert_eq!(t.tasks[0].deps, vec!["zz".to_string()]);
 
         let dup = "task_id\tdeps\trealtime\trchar\twchar\na\t-\t5\t1\t1\na\t-\t5\t1\t1\n";
         let e = parse_tsv(dup).unwrap_err().to_string();
@@ -438,19 +462,50 @@ mod tests {
         assert_eq!(again, series);
     }
 
+    /// Streaming feeds deliver samples out of order: they are inserted at
+    /// their sorted position, not rejected.
     #[test]
-    fn io_log_rejects_nonmonotone() {
-        let back_in_time = "a 1.0 10 0\na 0.5 20 0\n";
-        let e = parse_io_log(back_in_time).unwrap_err().to_string();
-        assert!(e.contains("line 2") && e.contains("not after"), "{e}");
+    fn io_log_accepts_out_of_order_samples() {
+        let text = "a 1.0 100 50\na 0.5 40 20\na 2.0 200 100\na 1.5 150 75\n";
+        let series = parse_io_log(text).unwrap();
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].ts, vec![0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(series[0].read, vec![40.0, 100.0, 150.0, 200.0]);
+        assert_eq!(series[0].written, vec![20.0, 50.0, 75.0, 100.0]);
+        // equivalent to the in-order delivery of the same samples
+        let in_order = parse_io_log("a 0.5 40 20\na 1.0 100 50\na 1.5 150 75\na 2.0 200 100\n")
+            .unwrap();
+        assert_eq!(series, in_order);
+    }
 
-        let shrinking = "a 0.0 10 0\na 1.0 5 0\n";
-        let e = parse_io_log(shrinking).unwrap_err().to_string();
-        assert!(e.contains("decreased"), "{e}");
+    /// A re-sent timestamp (window overlap in a streaming feed) overwrites
+    /// the earlier sample — last write wins, no duplicate row.
+    #[test]
+    fn io_log_duplicate_timestamp_is_last_write_wins() {
+        let text = "a 0.0 0 0\na 1.0 80 40\na 1.0 100 50\na 2.0 200 100\n";
+        let series = parse_io_log(text).unwrap();
+        assert_eq!(series[0].ts, vec![0.0, 1.0, 2.0]);
+        assert_eq!(series[0].read, vec![0.0, 100.0, 200.0]);
+        assert_eq!(series[0].written, vec![0.0, 50.0, 100.0]);
+        // a stale re-send that *regresses* the counter also wins (the
+        // calibrator's running max absorbs it downstream)
+        let stale = parse_io_log("a 0.0 0 0\na 1.0 100 50\na 1.0 90 45\n").unwrap();
+        assert_eq!(stale[0].read, vec![0.0, 90.0]);
+    }
 
+    #[test]
+    fn io_log_rejects_malformed_lines() {
         let short = "a 1.0 10\n";
         let e = parse_io_log(short).unwrap_err().to_string();
         assert!(e.contains("expected"), "{e}");
+
+        let negative = "a 1.0 -5 0\n";
+        let e = parse_io_log(negative).unwrap_err().to_string();
+        assert!(e.contains("negative"), "{e}");
+
+        let bad = "a x 10 0\n";
+        let e = parse_io_log(bad).unwrap_err().to_string();
+        assert!(e.contains("bad number"), "{e}");
     }
 
     #[test]

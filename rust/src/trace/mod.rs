@@ -42,4 +42,7 @@ pub use assemble::{
     TaskSummary,
 };
 pub use calibrate::{calibrate, fit_series, CalibrateOpts, CalibratedTask, ModelSource};
-pub use format::{parse_io_log, parse_tsv, write_io_log, write_tsv, IoSeries, TsvTask, TsvTrace};
+pub use format::{
+    parse_io_log, parse_tsv, parse_tsv_structural, write_io_log, write_tsv, IoSeries, TsvTask,
+    TsvTrace,
+};

@@ -34,6 +34,15 @@ if [ "$req_n" -ne "$exp_n" ]; then
     exit 1
 fi
 
+# the corpus must keep exercising the session-scoped monitor lifecycle
+# (open -> feed -> close and the out-of-lifecycle errors; docs/LIVE.md)
+for op in monitor_open monitor_feed monitor_status; do
+    if ! grep -q "\"op\": \"$op\"" "$tmp/requests.jsonl"; then
+        echo "error: conformance corpus in $doc lost its '$op' exchange" >&2
+        exit 1
+    fi
+done
+
 # single-threaded for fully deterministic cache counters (not that the
 # corpus includes any — belt and braces)
 BOTTLEMOD_THREADS=1 "$bin" serve < "$tmp/requests.jsonl" > "$tmp/got.jsonl"
