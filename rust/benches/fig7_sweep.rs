@@ -1,16 +1,23 @@
 //! Fig 7 regeneration bench: the 600-prioritization sweep through
 //! (a) the exact engine single-threaded, (b) the exact engine across all
-//! cores, (c) the batched PJRT L2/L1 path, plus the per-point testbed cost
-//! for contrast (measurement is what the model replaces).
+//! cores, (c) a batched grid materialization — the PJRT L2/L1 path when an
+//! execution backend is built in, otherwise the pure-Rust CPU batch
+//! backend (`pwfn::BatchPwPoly::eval_scenarios`, the same B-wide × T-point
+//! grid shape) — plus the per-point testbed cost for contrast (measurement
+//! is what the model replaces).
 //!
 //! Run: `make artifacts && cargo bench --bench fig7_sweep`
 
+use std::sync::Arc;
+
 use bottlemod::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
+use bottlemod::pwfn::{BatchPwPoly, PwPoly};
+use bottlemod::runtime::sweep::SweepBatch;
 use bottlemod::runtime::{fig7_sweep, Runtime};
 use bottlemod::testbed::video::VideoTestbed;
 use bottlemod::util::harness::bench_once;
 use bottlemod::util::stats::fmt_duration;
-use bottlemod::workflow::scenario::VideoScenario;
+use bottlemod::workflow::scenario::{Perturbation, VideoScenario};
 
 fn main() {
     let sc = VideoScenario::default();
@@ -31,7 +38,38 @@ fn main() {
 
     match Runtime::new(&Runtime::default_dir()) {
         _ if !Runtime::backend_available() => {
-            eprintln!("(skipping PJRT bench: no execution backend in this build)")
+            // CPU fallback for the batched path: solve the 600 scenarios
+            // once with the exact engine, then benchmark materializing the
+            // final-node progress of all 600 on the T=2048 shared grid —
+            // the very grid the PJRT artifact stages, realized by the SoA
+            // batch backend with no artifacts at all.
+            let perts: Vec<Perturbation> = fractions
+                .iter()
+                .map(|&f| Perturbation::Fraction(f))
+                .collect();
+            let outcomes = SweepBatch::new(Arc::new(sc.clone()))
+                .with_threads(threads)
+                .run(&perts)
+                .expect("exact sweep for CPU batch fallback");
+            let span = outcomes.iter().filter_map(|o| o.makespan).fold(0.0_f64, f64::max) + 5.0;
+            let ts: Vec<f64> = (0..bottlemod::runtime::xla_sweep::T)
+                .map(|i| span * i as f64 / (bottlemod::runtime::xla_sweep::T - 1) as f64)
+                .collect();
+            let curves: Vec<&PwPoly> = outcomes
+                .iter()
+                .map(|o| &o.analyses.last().expect("nonempty workflow").progress)
+                .collect();
+            let batch = BatchPwPoly::compile(&curves);
+            // the backend's contract: bit-for-bit the scalar evaluator
+            let grid = batch.eval_scenarios(&ts);
+            for (i, c) in curves.iter().enumerate() {
+                for (j, &t) in ts.iter().enumerate() {
+                    assert_eq!(grid[i * ts.len() + j].to_bits(), c.eval(t).to_bits());
+                }
+            }
+            results.push(bench_once("cpu batch grid 600 cfgs x 2048 pts", 5, || {
+                batch.eval_scenarios(&ts)
+            }));
         }
         Ok(mut rt) => {
             // warm the executable cache (compile once)

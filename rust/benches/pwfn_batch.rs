@@ -1,0 +1,146 @@
+//! Batch-evaluation backend bench: 256 scenario curves × a 1 000-point
+//! shared grid, the sweep/sensitivity sampling shape. Compares the scalar
+//! per-point loop (`PwPoly::eval` per function per point — a binary
+//! search plus `Vec<Poly>` pointer chasing each time) against the
+//! structure-of-arrays backend (`pwfn::BatchPwPoly`): one contiguous
+//! compile, then `eval_scenarios` / `eval_grid` with galloping piece
+//! lookup.
+//!
+//! Acceptance (ROADMAP item 5): the batch path is **≥ 5×** the scalar
+//! loop on the 256-scenario grid, and every batch result is bit-for-bit
+//! the scalar value. The speedup assert can be downgraded to reporting
+//! with `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines); the
+//! bit-identity asserts always run — determinism is not load-dependent.
+//! Results are persisted as `BENCH_batch.json` at the repo root (the perf
+//! trajectory, docs/PERF.md).
+//!
+//! Run: `cargo bench --bench pwfn_batch`
+
+use bottlemod::pwfn::{poly::Poly, BatchPwPoly, PwPoly};
+use bottlemod::util::harness::{bench, write_bench_artifact};
+use bottlemod::util::json::Json;
+use bottlemod::util::Rng;
+
+const SCENARIOS: usize = 256;
+const POINTS: usize = 1_000;
+const PIECES: usize = 64;
+const DEGREE: usize = 2;
+
+/// Random piecewise polynomial with `pieces` pieces, jumps between them,
+/// and an infinite constant-extended tail — the sweep-outcome curve shape.
+fn random_pw(rng: &mut Rng, pieces: usize, degree: usize) -> PwPoly {
+    let mut breaks = Vec::with_capacity(pieces + 1);
+    breaks.push(0.0);
+    for i in 0..pieces - 1 {
+        let prev = breaks[i];
+        breaks.push(prev + rng.range(0.5, 3.0));
+    }
+    breaks.push(f64::INFINITY);
+    let polys = (0..pieces)
+        .map(|_| Poly::new((0..=degree).map(|_| rng.range(-2.0, 2.0)).collect()))
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+    let mut rng = Rng::new(0x5EED_B47C);
+
+    let fns: Vec<PwPoly> = (0..SCENARIOS).map(|_| random_pw(&mut rng, PIECES, DEGREE)).collect();
+    let refs: Vec<&PwPoly> = fns.iter().collect();
+    // sorted shared grid spanning past both domain ends (left-clamp and
+    // constant-tail regions included)
+    let span = 3.0 * PIECES as f64;
+    let xs: Vec<f64> = (0..POINTS)
+        .map(|j| -2.0 + (span + 4.0) * j as f64 / (POINTS - 1) as f64)
+        .collect();
+
+    // ---- bit-identity: asserted unconditionally ---------------------------
+    let scalar_ref: Vec<f64> = fns
+        .iter()
+        .flat_map(|f| xs.iter().map(|&x| f.eval(x)))
+        .collect();
+    let batch = BatchPwPoly::compile(&refs);
+    let scen = batch.eval_scenarios(&xs);
+    assert_eq!(scen.len(), scalar_ref.len());
+    for (i, (&a, &b)) in scalar_ref.iter().zip(&scen).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "eval_scenarios diverges from scalar at flat index {i}"
+        );
+    }
+    let grid = batch.eval_grid(&xs);
+    for i in 0..SCENARIOS {
+        for j in 0..POINTS {
+            assert_eq!(
+                grid[j * SCENARIOS + i].to_bits(),
+                scen[i * POINTS + j].to_bits(),
+                "eval_grid is not the transpose at ({i}, {j})"
+            );
+        }
+    }
+    println!("bit-identity: batch == scalar on all {} values", scen.len());
+
+    // ---- timings ----------------------------------------------------------
+    let mut results = vec![];
+    let scalar = bench("scalar eval loop 256 fns x 1k pts", 5, || {
+        fns.iter()
+            .flat_map(|f| xs.iter().map(|&x| f.eval(x)))
+            .collect::<Vec<f64>>()
+    });
+    results.push(scalar.clone());
+    let b_scen = bench("batch eval_scenarios 256 x 1k", 5, || {
+        batch.eval_scenarios(&xs)
+    });
+    results.push(b_scen.clone());
+    let b_grid = bench("batch eval_grid 256 x 1k", 5, || batch.eval_grid(&xs));
+    results.push(b_grid.clone());
+    let b_cold = bench("compile + eval_scenarios (cold)", 5, || {
+        BatchPwPoly::compile(&refs).eval_scenarios(&xs)
+    });
+    results.push(b_cold.clone());
+    let single = bench("eval_many 1 fn x 1k (vs scalar sample)", 5, || {
+        fns[0].eval_many(&xs)
+    });
+    results.push(single);
+
+    println!("\n== pwfn batch benchmarks ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+
+    let speedup = scalar.per_iter.mean / b_scen.per_iter.mean;
+    let speedup_grid = scalar.per_iter.mean / b_grid.per_iter.mean;
+    println!(
+        "speedup over scalar loop: eval_scenarios {speedup:.2}x, eval_grid {speedup_grid:.2}x"
+    );
+    if no_assert {
+        if speedup < 5.0 {
+            println!("WARN: speedup {speedup:.2}x below the 5x target (assert downgraded)");
+        }
+    } else {
+        assert!(
+            speedup >= 5.0,
+            "batch eval_scenarios must be >= 5x the scalar loop, got {speedup:.2}x"
+        );
+    }
+
+    let path = write_bench_artifact(
+        "batch",
+        vec![
+            ("scenarios", Json::Num(SCENARIOS as f64)),
+            ("points", Json::Num(POINTS as f64)),
+            ("pieces_per_fn", Json::Num(PIECES as f64)),
+            ("coeff_width", Json::Num(batch.coeff_width() as f64)),
+            ("scalar_s", Json::Num(scalar.per_iter.mean)),
+            ("batch_scenarios_s", Json::Num(b_scen.per_iter.mean)),
+            ("batch_grid_s", Json::Num(b_grid.per_iter.mean)),
+            ("compile_plus_eval_s", Json::Num(b_cold.per_iter.mean)),
+            ("speedup", Json::Num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ],
+    )
+    .expect("write BENCH_batch.json");
+    println!("wrote {}", path.display());
+}

@@ -10,7 +10,7 @@ use crate::util::error::{Context, Result};
 
 use crate::des;
 use crate::model::{Process, ProcessBuilder, ProcessInputs};
-use crate::pwfn::{Poly, PwPoly};
+use crate::pwfn::{BatchPwPoly, Poly, PwPoly};
 use crate::solver::{solve, Analysis, Bottleneck, SolverOpts};
 use crate::testbed::video::VideoTestbed;
 use crate::util::stats::Summary;
@@ -106,10 +106,17 @@ pub fn fig3(dir: &Path) -> Result<()> {
     let ts = grid(0.0, 60.0, 241);
     let mut obj = vec![("t", Json::arr_f64(&ts))];
     let names = ["data0", "data1", "data2"];
-    for (k, dp) in a.data_progress.iter().enumerate() {
-        obj.push((names[k], Json::arr_f64(&dp.sample(&ts))));
+    // all data-progress curves + the min-envelope share one grid: one SoA
+    // batch compile, one merged pass per curve (bit-for-bit the scalar
+    // per-point sample)
+    let mut curves: Vec<&PwPoly> = a.data_progress.iter().collect();
+    curves.push(&a.pd.func);
+    let flat = BatchPwPoly::compile(&curves).eval_scenarios(&ts);
+    let mut rows = flat.chunks(ts.len());
+    for (&name, _) in names.iter().zip(&a.data_progress) {
+        obj.push((name, Json::arr_f64(rows.next().unwrap())));
     }
-    obj.push(("envelope", Json::arr_f64(&a.pd.func.sample(&ts))));
+    obj.push(("envelope", Json::arr_f64(rows.next().unwrap())));
     let segs: Vec<Json> = a
         .pd
         .segments()
@@ -245,6 +252,11 @@ pub fn fig8(dir: &Path) -> Result<()> {
         let total = wa.makespan.unwrap();
         let ts = grid(0.0, total + 5.0, 301);
 
+        // every node's progress shares the case grid: one SoA batch pass
+        let prog_curves: Vec<&PwPoly> = wa.analyses.iter().map(|a| &a.progress).collect();
+        let prog_flat = BatchPwPoly::compile(&prog_curves).eval_scenarios(&ts);
+        let prog_rows: Vec<&[f64]> = prog_flat.chunks(ts.len()).collect();
+
         let mut node_objs = vec![];
         for (i, a) in wa.analyses.iter().enumerate() {
             let p = &wf.nodes[i].process;
@@ -261,7 +273,7 @@ pub fn fig8(dir: &Path) -> Result<()> {
                 .collect();
             node_objs.push(Json::obj(vec![
                 ("name", Json::Str(p.name.clone())),
-                ("progress", Json::arr_f64(&a.progress.sample(&ts))),
+                ("progress", Json::arr_f64(prog_rows[i])),
                 ("max_progress", Json::Num(a.max_progress)),
                 (
                     "finish",

@@ -77,11 +77,12 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::pwfn::{BatchPwPoly, PwPoly};
 use crate::runtime::cache::{AnalysisCache, CacheStats};
 use crate::runtime::sweep::SweepModel;
 use crate::sched::advisor::{recommend_model, Recommendation};
 use crate::sched::online::{frontier_bottleneck, live_bottleneck, BottleneckShift, LiveTracker};
-use crate::solver::SolverOpts;
+use crate::solver::{Analysis, SolverOpts};
 use crate::trace::assemble::assemble;
 use crate::trace::calibrate::{calibrate, CalibrateOpts, CalibratedTask};
 use crate::trace::format::{parse_io_log, parse_tsv, parse_tsv_structural, IoSeries, TsvTrace};
@@ -258,6 +259,11 @@ pub struct Monitor {
     events: u64,
     advisories: u64,
     snapshot: Option<Snapshot>,
+    /// `(task id, analysis)` per task from the last good analysis —
+    /// `Arc`-shared with the engine/cache, retained so
+    /// [`Monitor::sample_progress`] can materialize curves without
+    /// re-solving.
+    curves: Vec<(String, Arc<Analysis>)>,
 }
 
 impl Monitor {
@@ -279,6 +285,7 @@ impl Monitor {
             events: 0,
             advisories: 0,
             snapshot: None,
+            curves: Vec::new(),
         }
     }
 
@@ -459,6 +466,12 @@ impl Monitor {
                     let snap = self.build_snapshot(&trace, &series, &cal, &wa);
                     let shifted = self.tracker.observe(snap.bottleneck.clone());
                     self.snapshot = Some(snap);
+                    self.curves = cal
+                        .tasks
+                        .iter()
+                        .zip(&wa.analyses)
+                        .map(|(t, a)| (t.id.clone(), Arc::clone(a)))
+                        .collect();
                     if let Some(shift) = shifted {
                         self.advisories += 1;
                         advisory = Some(self.advise(shift));
@@ -478,6 +491,27 @@ impl Monitor {
             snapshot: self.snapshot.clone(),
             advisory,
         })
+    }
+
+    /// Snapshot curve attribution: every task's predicted progress from
+    /// the last good analysis, materialized on a shared time grid through
+    /// the structure-of-arrays batch backend ([`BatchPwPoly`]) — one
+    /// compile over all curves, one galloping merge per curve, no
+    /// re-solve. This is what curve renderers (`watch` sparklines,
+    /// dashboards) sample per refresh. Rows are `(task id, samples)` in
+    /// task order; each value is bit-for-bit `progress.eval(ts[j])`.
+    /// Empty before the first successful analysis.
+    pub fn sample_progress(&self, ts: &[f64]) -> Vec<(String, Vec<f64>)> {
+        if self.curves.is_empty() || ts.is_empty() {
+            return self.curves.iter().map(|(id, _)| (id.clone(), Vec::new())).collect();
+        }
+        let funcs: Vec<&PwPoly> = self.curves.iter().map(|(_, a)| &a.progress).collect();
+        let flat = BatchPwPoly::compile(&funcs).eval_scenarios(ts);
+        self.curves
+            .iter()
+            .zip(flat.chunks(ts.len()))
+            .map(|((id, _), row)| (id.clone(), row.to_vec()))
+            .collect()
     }
 
     /// Current session summary (the `monitor_status` op).
@@ -617,7 +651,7 @@ impl Monitor {
             makespan: wa.makespan,
             now,
             remaining: wa.makespan.map(|m| (m - now).max(0.0)),
-            / models fitted from observations predict no further than the
+            // models fitted from observations predict no further than the
             // observation frontier, so at `now` itself nothing is strictly
             // active — the regime that set the horizon is what binds then
             bottleneck: live_bottleneck(&cal.workflow, wa, now)
@@ -696,6 +730,44 @@ mod tests {
             );
         }
         assert_eq!(m.events(), 3);
+    }
+
+    /// Snapshot curve sampling goes through the SoA batch backend, stays
+    /// bit-for-bit the scalar progress eval, and never re-solves.
+    #[test]
+    fn sample_progress_matches_cold_analysis() {
+        let mut m = Monitor::new("t", None, MonitorOpts::default());
+        assert!(m.sample_progress(&[0.0, 1.0]).is_empty(), "no analysis yet");
+        let all = format!("{HEADER}\n{DL}\n{ENC}\n{MUX}\n");
+        m.feed(Some(&all), None).unwrap();
+        let events_before = m.cache.stats();
+        let ts: Vec<f64> = (0..50).map(|i| i as f64 * 0.5).collect();
+        let rows = m.sample_progress(&ts);
+        assert_eq!(rows.len(), 3);
+        let (cal, _) = calibrate_trace(
+            &all,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        let wa = crate::workflow::engine::analyze_fixpoint(
+            &cal.workflow,
+            &SolverOpts::default(),
+            MonitorOpts::default().passes,
+        )
+        .unwrap();
+        for ((id, row), (t, a)) in rows.iter().zip(cal.tasks.iter().zip(&wa.analyses)) {
+            assert_eq!(id, &t.id);
+            for (&x, &v) in ts.iter().zip(row) {
+                assert_eq!(v.to_bits(), a.progress.eval(x).to_bits(), "{id} t={x}");
+            }
+        }
+        // pure sampling: no cache traffic, no re-solve
+        let after = m.cache.stats();
+        assert_eq!(after.misses, events_before.misses);
+        // empty grid keeps the task rows, empty samples
+        assert!(m.sample_progress(&[]).iter().all(|(_, r)| r.is_empty()));
     }
 
     /// A re-sent (updated) row re-fits only itself; the solve re-solves

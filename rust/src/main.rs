@@ -677,7 +677,7 @@ fn cmd_watch(args: &[String]) -> Result<()> {
     let tsv_path = tsv_path.ok_or_else(|| Error::msg(usage))?;
     let pause = std::time::Duration::from_secs_f64(interval);
 
-    / in follow mode a line is only real once its newline lands; a
+    // in follow mode a line is only real once its newline lands; a
     // half-written row must not be fed as an event
     let complete_lines = |text: &str| -> Vec<String> {
         let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
@@ -703,7 +703,7 @@ fn cmd_watch(args: &[String]) -> Result<()> {
 
     let handler = ApiHandler::new();
     let mut next_id: u64 = 0;
-    / every envelope a serve client would see, one line each; feed errors
+    // every envelope a serve client would see, one line each; feed errors
     // are printed too (the monitor rejects bad input atomically, so the
     // session survives them)
     let mut send = |req: Request| -> bool {
@@ -739,7 +739,7 @@ fn cmd_watch(args: &[String]) -> Result<()> {
         tsv_consumed = tsv_consumed.max(lines.len());
 
         if let Some(p) = io_path {
-            / the I/O log may lag the trace (or not exist yet) in follow
+            // the I/O log may lag the trace (or not exist yet) in follow
             // mode; new samples land as one event per poll
             let text = match std::fs::read_to_string(p) {
                 Ok(t) => t,

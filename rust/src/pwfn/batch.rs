@@ -1,0 +1,354 @@
+//! Structure-of-arrays batch evaluation of piecewise polynomials.
+//!
+//! Grid-style consumers (sweep reports, sensitivity scans, replay
+//! validation, live-monitor curves, figure exporters) evaluate the same
+//! [`PwPoly`]s at hundreds-to-thousands of points. The scalar path pays a
+//! per-point binary search over `Vec<Poly>` pointer soup; this module
+//! compiles one-or-many functions into one contiguous structure-of-arrays
+//! block — the CPU realization of the seed's Pallas kernel layout
+//! (`python/compile/kernels/pwpoly_eval.py`: `[B, S+1]` break rows plus
+//! `[B, S, D]` degree-padded coefficient blocks) — and evaluates with a
+//! galloping merge over pieces instead of independent binary searches.
+//!
+//! # Layout
+//!
+//! [`BatchPwPoly::compile`] flattens `M` functions with `P` total pieces:
+//!
+//! | array     | shape      | contents                                            |
+//! |-----------|------------|-----------------------------------------------------|
+//! | `offsets` | `[M + 1]`  | function `i`'s pieces are flat rows `offsets[i]..offsets[i+1]` |
+//! | `starts`  | `[P]`      | piece start points (`breaks[0..n]`; the final break is never read by eval) |
+//! | `coeffs`  | `[P × D]`  | local-coordinate coefficients, lowest degree first, zero-padded to the compile-wide max width `D` |
+//!
+//! # Bit-for-bit contract
+//!
+//! Every entry point returns exactly `PwPoly::eval` bit patterns:
+//!
+//! * **Piece choice** — the scalar `piece_index(x)` is "the number of inner
+//!   breaks `<= x`, clamped to `n-1`" (and `0` left of the domain, where
+//!   `eval` clamps `x` up to `breaks[0]` anyway). The internal `locate`
+//!   helper computes the
+//!   same count with a hint-seeded gallop, so the chosen piece — and hence
+//!   the local coordinate `u = x - start` — is identical.
+//! * **Horner order** — [`crate::pwfn::Poly::eval`] folds coefficients
+//!   highest-degree-first from `acc = 0.0`. Zero-padding is exact, not
+//!   approximate: after the left clamp, `u >= 0.0` and (for finite `x`)
+//!   finite, so each pad step computes `acc = 0.0 * u + 0.0 = +0.0` —
+//!   bitwise the same starting accumulator the scalar fold uses. The
+//!   remaining steps are the identical operation sequence.
+//!
+//! The contract is pinned by `tests/pwfn_batch_differential.rs` and
+//! asserted (never downgraded) in `benches/pwfn_batch.rs`.
+
+use super::piecewise::PwPoly;
+
+/// One-or-many [`PwPoly`]s compiled to a contiguous structure-of-arrays
+/// form for batch evaluation. See the module docs for the layout and the
+/// bit-for-bit contract.
+#[derive(Clone, Debug)]
+pub struct BatchPwPoly {
+    /// Flat piece start points; function `i` owns `starts[offsets[i]..offsets[i+1]]`.
+    starts: Vec<f64>,
+    /// Degree-padded coefficients: flat piece `p` owns
+    /// `coeffs[p * dwidth..(p + 1) * dwidth]`, lowest degree first.
+    coeffs: Vec<f64>,
+    /// Per-function piece ranges; `len() == n_funcs() + 1`.
+    offsets: Vec<usize>,
+    /// Padded coefficient width (compile-wide max piece degree + 1; `>= 1`).
+    dwidth: usize,
+}
+
+impl BatchPwPoly {
+    /// Compile `M` functions into one shared block. Cheap — one pass over
+    /// the pieces and one allocation per array — so compiling per batch
+    /// call is fine; hoist the compile out of a loop only when the same
+    /// functions are evaluated on many grids.
+    pub fn compile(fns: &[&PwPoly]) -> BatchPwPoly {
+        let mut offsets = Vec::with_capacity(fns.len() + 1);
+        offsets.push(0usize);
+        let mut total = 0usize;
+        let mut dwidth = 1usize;
+        for f in fns {
+            total += f.polys.len();
+            offsets.push(total);
+            for p in &f.polys {
+                dwidth = dwidth.max(p.coeffs.len());
+            }
+        }
+        let mut starts = Vec::with_capacity(total);
+        let mut coeffs = vec![0.0; total * dwidth];
+        let mut row = 0usize;
+        for f in fns {
+            for (start, p) in f.breaks.iter().zip(&f.polys) {
+                starts.push(*start);
+                coeffs[row * dwidth..row * dwidth + p.coeffs.len()].copy_from_slice(&p.coeffs);
+                row += 1;
+            }
+        }
+        BatchPwPoly {
+            starts,
+            coeffs,
+            offsets,
+            dwidth,
+        }
+    }
+
+    /// [`BatchPwPoly::compile`] for a single function (the
+    /// [`PwPoly::eval_many`] delegation path).
+    pub fn compile_one(f: &PwPoly) -> BatchPwPoly {
+        Self::compile(&[f])
+    }
+
+    /// Number of compiled functions.
+    pub fn n_funcs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total piece count across all compiled functions.
+    pub fn n_pieces(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Padded coefficient width `D` (max degree + 1 across the compile).
+    pub fn coeff_width(&self) -> usize {
+        self.dwidth
+    }
+
+    /// Evaluate compiled function `i` at one point — the scalar reference
+    /// entry point (`== fns[i].eval(x)` bit-for-bit).
+    pub fn eval_one(&self, i: usize, x: f64) -> f64 {
+        let lo = self.offsets[i];
+        let row = &self.starts[lo..self.offsets[i + 1]];
+        let x = x.max(row[0]);
+        let idx = locate(row, 0, x);
+        self.horner(lo + idx, x - row[idx])
+    }
+
+    /// Evaluate the single compiled function at `N` sorted-or-unsorted
+    /// points. Piece lookup gallops from the previous point's piece, so a
+    /// sorted (or locally clustered) grid costs amortized `O(1)` per point
+    /// instead of the scalar path's `O(log n)` binary search; arbitrary
+    /// order degrades gracefully to a gallop-bracketed binary search and
+    /// stays exact.
+    ///
+    /// Panics if more than one function was compiled — use
+    /// [`BatchPwPoly::eval_scenarios`] / [`BatchPwPoly::eval_grid`] for
+    /// batches.
+    pub fn eval_many(&self, xs: &[f64]) -> Vec<f64> {
+        assert_eq!(
+            self.n_funcs(),
+            1,
+            "eval_many is the single-function entry point; use eval_scenarios/eval_grid"
+        );
+        self.eval_scenarios(xs)
+    }
+
+    /// [`BatchPwPoly::eval_many`] specialized to nondecreasing grids: the
+    /// piece cursor only ever moves forward, one comparison per point on
+    /// the hot path. Results are only defined for monotone `xs`
+    /// (`debug_assert`ed); pass arbitrary order to [`BatchPwPoly::eval_many`]
+    /// instead.
+    pub fn eval_many_sorted(&self, xs: &[f64]) -> Vec<f64> {
+        assert_eq!(self.n_funcs(), 1, "eval_many_sorted is the single-function entry point");
+        debug_assert!(
+            xs.windows(2).all(|w| w[0] <= w[1]),
+            "eval_many_sorted needs a nondecreasing grid"
+        );
+        let row = &self.starts[..];
+        let x0 = row[0];
+        let last = row.len() - 1;
+        let mut idx = 0usize;
+        let mut out = Vec::with_capacity(xs.len());
+        for &x in xs {
+            let x = x.max(x0);
+            while idx < last && row[idx + 1] <= x {
+                idx += 1;
+            }
+            out.push(self.horner(idx, x - row[idx]));
+        }
+        out
+    }
+
+    /// Evaluate all `M` compiled functions at all `N` points,
+    /// function-major: `out[i * N + j] == fns[i].eval(xs[j])`. One merged
+    /// pass over each function's pieces (per-function forward cursor with
+    /// gallop fallback for unsorted grids).
+    pub fn eval_scenarios(&self, xs: &[f64]) -> Vec<f64> {
+        let m = self.n_funcs();
+        let n = xs.len();
+        let mut out = Vec::with_capacity(m * n);
+        for i in 0..m {
+            let lo = self.offsets[i];
+            let row = &self.starts[lo..self.offsets[i + 1]];
+            let x0 = row[0];
+            let mut idx = 0usize;
+            for &x in xs {
+                let x = x.max(x0);
+                idx = locate(row, idx, x);
+                out.push(self.horner(lo + idx, x - row[idx]));
+            }
+        }
+        out
+    }
+
+    /// Evaluate all `M` compiled functions at all `N` points, point-major
+    /// (the transpose of [`BatchPwPoly::eval_scenarios`]):
+    /// `out[j * M + i] == fns[i].eval(xs[j])`. One outer pass over the
+    /// grid advancing `M` piece cursors in lockstep, with contiguous
+    /// column-major writes — the shape sweep reports and sensitivity scans
+    /// consume (all curves at one time point sit adjacent).
+    pub fn eval_grid(&self, xs: &[f64]) -> Vec<f64> {
+        let m = self.n_funcs();
+        let n = xs.len();
+        let mut out = vec![0.0; n * m];
+        let mut cursors = vec![0usize; m];
+        for (j, &x_raw) in xs.iter().enumerate() {
+            let base = j * m;
+            for i in 0..m {
+                let lo = self.offsets[i];
+                let row = &self.starts[lo..self.offsets[i + 1]];
+                let x = x_raw.max(row[0]);
+                let idx = locate(row, cursors[i], x);
+                cursors[i] = idx;
+                out[base + i] = self.horner(lo + idx, x - row[idx]);
+            }
+        }
+        out
+    }
+
+    /// Horner fold over flat piece `piece` at local coordinate `u`;
+    /// bit-identical to the scalar [`crate::pwfn::Poly::eval`] (zero pads
+    /// contribute an exact `+0.0` accumulator — see the module docs).
+    #[inline]
+    fn horner(&self, piece: usize, u: f64) -> f64 {
+        let c = &self.coeffs[piece * self.dwidth..(piece + 1) * self.dwidth];
+        let mut acc = 0.0;
+        for &k in c.iter().rev() {
+            acc = acc * u + k;
+        }
+        acc
+    }
+}
+
+/// Piece index of `x` within one function's `starts` row (strictly
+/// increasing, `starts[0]` finite): the largest `idx` with
+/// `starts[idx] <= x`, i.e. `min(#{j >= 1 : starts[j] <= x}, n-1)` — the
+/// exact `PwPoly::piece_index` semantics — and `0` when `x < starts[0]`.
+///
+/// `hint` is the previous lookup's result. The hot path (the hint still
+/// governs `x`, or the next piece does) is branch-light; otherwise an
+/// exponential gallop from the hint brackets `x` and a binary search
+/// finishes, so mis-hints cost `O(log distance)` and stay exact — sorted,
+/// reverse-sorted, and arbitrary query orders all produce scalar-identical
+/// piece choices.
+fn locate(starts: &[f64], hint: usize, x: f64) -> usize {
+    let last = starts.len() - 1;
+    let idx = hint.min(last);
+    let (lo, hi);
+    if starts[idx] <= x {
+        if idx == last || x < starts[idx + 1] {
+            return idx; // hot path: hint still governs x
+        }
+        // gallop right to bracket: starts[lo] <= x < starts[hi]
+        let mut l = idx + 1;
+        let mut step = 1usize;
+        while l + step <= last && starts[l + step] <= x {
+            l += step;
+            step <<= 1;
+        }
+        lo = l;
+        hi = (l + step).min(last + 1);
+    } else {
+        if x < starts[0] {
+            return 0; // left of the domain (eval clamps to piece 0)
+        }
+        // gallop left to bracket: starts[lo] <= x < starts[hi]
+        let mut h = idx;
+        let mut step = 1usize;
+        while step <= h && starts[h - step] > x {
+            h -= step;
+            step <<= 1;
+        }
+        lo = h - step.min(h);
+        hi = h;
+    }
+    // binary count of pieces in (lo, hi) whose start is <= x
+    lo + starts[lo + 1..hi].partition_point(|s| *s <= x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pwfn::Poly;
+
+    fn stepper() -> PwPoly {
+        // jump at 10, quadratic middle, constant tail from 20 on
+        PwPoly::new(
+            vec![0.0, 10.0, 20.0, f64::INFINITY],
+            vec![
+                Poly::linear(1.0, 0.5),
+                Poly::new(vec![9.0, 0.0, 0.25]),
+                Poly::constant(34.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn eval_one_matches_scalar_everywhere() {
+        let f = stepper();
+        let b = BatchPwPoly::compile_one(&f);
+        for x in [-5.0, 0.0, 3.7, 10.0 - 1e-12, 10.0, 15.5, 20.0, 1e6] {
+            assert_eq!(b.eval_one(0, x).to_bits(), f.eval(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn locate_matches_piece_index_for_every_hint() {
+        let f = stepper();
+        let starts = &f.breaks[..f.polys.len()];
+        for x in [-1.0, 0.0, 5.0, 10.0, 12.0, 20.0, 25.0] {
+            for hint in 0..=4 {
+                let expect = if x < starts[0] { 0 } else { f.piece_index(x) };
+                assert_eq!(locate(starts, hint, x), expect, "x={x} hint={hint}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_is_transposed_scenarios() {
+        let f = stepper();
+        let g = PwPoly::constant(7.0);
+        let b = BatchPwPoly::compile(&[&f, &g]);
+        let xs = [0.0, 30.0, 2.0, 11.0, 11.0, -4.0];
+        let sc = b.eval_scenarios(&xs);
+        let gr = b.eval_grid(&xs);
+        assert_eq!(sc.len(), 2 * xs.len());
+        for i in 0..2 {
+            for j in 0..xs.len() {
+                assert_eq!(sc[i * xs.len() + j].to_bits(), gr[j * 2 + i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn unsorted_inputs_stay_exact() {
+        let f = stepper();
+        let b = BatchPwPoly::compile_one(&f);
+        let xs = [25.0, 0.0, 19.9, 10.0, -3.0, 50.0, 10.0];
+        let got = b.eval_many(&xs);
+        for (&x, &y) in xs.iter().zip(&got) {
+            assert_eq!(y.to_bits(), f.eval(x).to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn empty_compile_and_empty_grid() {
+        let b = BatchPwPoly::compile(&[]);
+        assert_eq!(b.n_funcs(), 0);
+        assert!(b.eval_grid(&[1.0, 2.0]).is_empty());
+        assert!(b.eval_scenarios(&[1.0, 2.0]).is_empty());
+        let one = BatchPwPoly::compile_one(&PwPoly::constant(3.0));
+        assert!(one.eval_many(&[]).is_empty());
+        assert!(one.eval_many_sorted(&[]).is_empty());
+    }
+}

@@ -16,15 +16,22 @@
 //!   that are immediately overwritten (cost model: `docs/PERF.md`).
 //! * [`rat`] / [`linear`] — the exact rational piecewise-linear fast path
 //!   (the paper's "only rational numbers are needed" observation).
+//! * [`batch`] — [`batch::BatchPwPoly`], the structure-of-arrays batch
+//!   evaluation backend: one-or-many functions compiled to contiguous
+//!   degree-padded blocks, evaluated bit-for-bit against scalar `eval`
+//!   with galloping piece lookup (`eval_many` / `eval_grid` /
+//!   `eval_scenarios` — the sweep/sensitivity/monitor sampling shape).
 //!
 //! All breakpoint dedup/merge decisions derive from one tolerance,
 //! [`piecewise::EPS_BREAK`] / [`piecewise::break_tol`].
 
+pub mod batch;
 pub mod linear;
 pub mod piecewise;
 pub mod poly;
 pub mod rat;
 
+pub use batch::BatchPwPoly;
 pub use linear::{ExactEnvelope, PwLinear};
 pub use piecewise::{break_tol, Envelope, PwPoly, EPS_BREAK};
 pub use poly::Poly;

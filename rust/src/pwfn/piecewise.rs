@@ -219,9 +219,27 @@ impl PwPoly {
         self.polys[i].derivative().eval(x - self.breaks[i])
     }
 
-    /// Evaluate on a grid (convenience for exporters/tests).
+    /// Evaluate on a grid (convenience for exporters/tests). Delegates to
+    /// [`PwPoly::eval_many`].
     pub fn sample(&self, xs: &[f64]) -> Vec<f64> {
-        xs.iter().map(|&x| self.eval(x)).collect()
+        self.eval_many(xs)
+    }
+
+    /// Evaluate at many points through the structure-of-arrays batch
+    /// backend ([`crate::pwfn::BatchPwPoly`]): one cheap compile, then a
+    /// galloping merge over pieces instead of a per-point binary search.
+    /// Bit-for-bit equal to calling [`PwPoly::eval`] per point, for any
+    /// query order (pinned by `tests/pwfn_batch_differential.rs`).
+    pub fn eval_many(&self, xs: &[f64]) -> Vec<f64> {
+        super::batch::BatchPwPoly::compile_one(self).eval_many(xs)
+    }
+
+    /// [`PwPoly::eval_many`] fast path for monotone (nondecreasing) grids —
+    /// the exporter/report shape. The piece cursor only moves forward: one
+    /// comparison per point on the hot path. Results are only defined for
+    /// sorted `xs`; use [`PwPoly::eval_many`] for arbitrary order.
+    pub fn eval_many_sorted(&self, xs: &[f64]) -> Vec<f64> {
+        super::batch::BatchPwPoly::compile_one(self).eval_many_sorted(xs)
     }
 
     // ------------------------------------------------------------- calculus

@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::model::process::{Process, ProcessInputs};
-use crate::pwfn::{Poly, PwPoly};
+use crate::pwfn::{BatchPwPoly, Poly, PwPoly};
 use crate::solver::{Analysis, SolverOpts};
 
 // ------------------------------------------------------------------ hashing
@@ -247,6 +247,43 @@ impl NodeSolve {
             outputs,
             demands,
         }
+    }
+
+    /// Materialize the derived curves on a shared time grid through the
+    /// structure-of-arrays batch backend ([`BatchPwPoly`]): one compile
+    /// over every present output-over-time / pool-demand slot, one
+    /// galloping merge per curve. Returns `(outputs, demands)` sampled at
+    /// `ts`, slot-aligned with [`NodeSolve::outputs`] /
+    /// [`NodeSolve::demands`] (`None` slots stay `None`). Each value is
+    /// bit-for-bit the scalar `PwPoly::eval` at the same point — the
+    /// grid-materialization counterpart of [`NodeSolve::derive`]'s
+    /// symbolic algebra.
+    pub fn sample_derived(&self, ts: &[f64]) -> (Vec<Option<Vec<f64>>>, Vec<Option<Vec<f64>>>) {
+        if ts.is_empty() {
+            let empty = |v: &[Option<PwPoly>]| -> Vec<Option<Vec<f64>>> {
+                v.iter().map(|o| o.as_ref().map(|_| Vec::new())).collect()
+            };
+            return (empty(&self.outputs), empty(&self.demands));
+        }
+        let curves: Vec<&PwPoly> = self
+            .outputs
+            .iter()
+            .chain(self.demands.iter())
+            .flatten()
+            .collect();
+        let flat = BatchPwPoly::compile(&curves).eval_scenarios(ts);
+        let mut rows = flat.chunks(ts.len());
+        let outputs = self
+            .outputs
+            .iter()
+            .map(|o| o.as_ref().map(|_| rows.next().unwrap().to_vec()))
+            .collect();
+        let demands = self
+            .demands
+            .iter()
+            .map(|o| o.as_ref().map(|_| rows.next().unwrap().to_vec()))
+            .collect();
+        (outputs, demands)
     }
 
     /// Approximate resident heap size of this value in bytes — what the
@@ -632,6 +669,30 @@ mod tests {
         let i = sample_inputs(1.0);
         let solved = Arc::new(crate::solver::solve(&p, &i, &SolverOpts::default()).unwrap());
         Arc::new(NodeSolve::derive(&p, solved, &[true], &[true]))
+    }
+
+    /// Grid materialization of the derived curves goes through the SoA
+    /// batch backend and stays bit-for-bit the scalar per-point eval;
+    /// `None` slots stay `None`.
+    #[test]
+    fn sample_derived_matches_scalar_and_keeps_slots() {
+        let p = sample_process(50.0);
+        let i = sample_inputs(1.0);
+        let solved = Arc::new(crate::solver::solve(&p, &i, &SolverOpts::default()).unwrap());
+        let ns = NodeSolve::derive(&p, solved, &[true], &[false]);
+        let ts: Vec<f64> = (0..40).map(|k| k as f64 * 3.5).collect();
+        let (outputs, demands) = ns.sample_derived(&ts);
+        assert_eq!(outputs.len(), ns.outputs.len());
+        assert_eq!(demands.len(), ns.demands.len());
+        assert!(demands.iter().all(|d| d.is_none()), "unneeded slot stays None");
+        let curve = ns.outputs[0].as_ref().unwrap();
+        let row = outputs[0].as_ref().unwrap();
+        for (&t, &v) in ts.iter().zip(row) {
+            assert_eq!(v.to_bits(), curve.eval(t).to_bits());
+        }
+        // empty grid: present slots become empty rows, not None
+        let (o0, _) = ns.sample_derived(&[]);
+        assert_eq!(o0[0].as_deref(), Some(&[][..]));
     }
 
     /// Keys `n * DEFAULT_SHARDS` for small `n` all land in shard 0.

@@ -37,6 +37,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::Arc;
 
+use crate::pwfn::{BatchPwPoly, PwPoly};
 use crate::runtime::cache::{AnalysisCache, CacheStats};
 use crate::solver::{Analysis, SolverOpts};
 use crate::util::par::{num_threads, par_map};
@@ -228,6 +229,24 @@ pub struct ScenarioOutcome {
     /// Bottleneck attribution rows: `(process, bottleneck label, seconds)`,
     /// one per maximal constant-bottleneck segment.
     pub attributed: Vec<(String, String, f64)>,
+}
+
+impl ScenarioOutcome {
+    /// Report sampling: every node's progress function materialized on a
+    /// shared time grid through the structure-of-arrays batch backend
+    /// ([`BatchPwPoly`]) — one compile over all curves, one galloping
+    /// merge per curve instead of `nodes × points` independent binary
+    /// searches. Row `i` is node `i` (aligned with
+    /// [`ScenarioOutcome::node_names`]); each value is bit-for-bit
+    /// `analyses[i].progress.eval(ts[j])`.
+    pub fn sample_progress(&self, ts: &[f64]) -> Vec<Vec<f64>> {
+        let curves: Vec<&PwPoly> = self.analyses.iter().map(|a| &a.progress).collect();
+        if ts.is_empty() {
+            return vec![Vec::new(); curves.len()];
+        }
+        let flat = BatchPwPoly::compile(&curves).eval_scenarios(ts);
+        flat.chunks(ts.len()).map(|row| row.to_vec()).collect()
+    }
 }
 
 /// One aggregated bottleneck across the batch.
@@ -571,6 +590,27 @@ mod tests {
         // outcomes carry the full per-node analyses
         assert_eq!(out[0].analyses.len(), 5);
         assert_eq!(out[0].node_names[0], "dl-task1");
+    }
+
+    /// Report sampling goes through the SoA batch backend and stays
+    /// bit-for-bit the scalar per-point evaluation.
+    #[test]
+    fn sample_progress_matches_scalar_eval() {
+        let base = Arc::new(VideoScenario::default());
+        let out = SweepBatch::new(base)
+            .with_threads(1)
+            .run(&[P::Fraction(0.5)])
+            .unwrap();
+        let total = out[0].makespan.unwrap();
+        let ts: Vec<f64> = (0..64).map(|i| total * i as f64 / 63.0).collect();
+        let rows = out[0].sample_progress(&ts);
+        assert_eq!(rows.len(), out[0].analyses.len());
+        for (a, row) in out[0].analyses.iter().zip(&rows) {
+            for (&t, &v) in ts.iter().zip(row) {
+                assert_eq!(v.to_bits(), a.progress.eval(t).to_bits());
+            }
+        }
+        assert!(out[0].sample_progress(&[]).iter().all(|r| r.is_empty()));
     }
 
     /// The ranked report surfaces the link as the dominant bottleneck of

@@ -9,8 +9,14 @@
 //! This trades the exact solver's precision for one fused, vectorized pass
 //! per stage. In the offline build the PJRT backend is a stub
 //! ([`Runtime::backend_available`] is false), so [`fig7_sweep`] errors at
-//! the first artifact execution; the CPU-parallel equivalent is
-//! [`super::sweep::SweepBatch`], which needs no artifacts at all.
+//! the first artifact execution. The batched path no longer depends on
+//! PJRT, though: its pure-Rust realization is the structure-of-arrays
+//! batch backend [`crate::pwfn::BatchPwPoly`] — exact solves via
+//! [`super::sweep::SweepBatch`] (no artifacts at all), then one
+//! `eval_scenarios` pass materializes the same B-configurations ×
+//! T-points grid this artifact would produce, bit-for-bit equal to the
+//! scalar evaluator. `benches/fig7_sweep.rs` falls back to that backend
+//! when no execution backend is built in.
 
 use crate::bail;
 use crate::util::error::Result;

@@ -33,7 +33,32 @@ pub struct Recommendation {
 /// sizes where `0.5` (or a float within rounding of it) is already a grid
 /// point, a naive push would sweep a duplicate and make the `fair_total`
 /// lookup ambiguous.
-pub fn candidate_fractions(points: usize) -> Vec<f64> {
+///
+/// Memoized per grid size: the grid is pure in `points`, yet it used to
+/// be regenerated (re-sorted, re-deduped) on every advisory sweep and on
+/// every live-monitor bottleneck shift. Repeated calls now return the
+/// identical shared slice ([`Arc::ptr_eq`]-same allocation). Grid sizes
+/// above `MEMO_MAX_POINTS` — only reachable through adversarial service
+/// inputs — are computed fresh so the memo's memory stays bounded.
+pub fn candidate_fractions(points: usize) -> Arc<[f64]> {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    const MEMO_MAX_POINTS: usize = 1 << 14;
+    static MEMO: OnceLock<Mutex<HashMap<usize, Arc<[f64]>>>> = OnceLock::new();
+    if points > MEMO_MAX_POINTS {
+        return compute_candidate_fractions(points).into();
+    }
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = memo.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(hit) = guard.get(&points) {
+        return Arc::clone(hit);
+    }
+    let fresh: Arc<[f64]> = compute_candidate_fractions(points).into();
+    guard.insert(points, Arc::clone(&fresh));
+    fresh
+}
+
+fn compute_candidate_fractions(points: usize) -> Vec<f64> {
     let mut fractions = fig7_fractions(points);
     fractions.push(0.5);
     fractions.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -99,7 +124,7 @@ pub fn recommend_model(
     let baseline = outcomes[0].makespan.unwrap_or(f64::INFINITY);
     let best = outcomes[1..]
         .iter()
-        .zip(&fractions)
+        .zip(fractions.iter())
         .map(|(o, &f)| (f, o.makespan.unwrap_or(f64::INFINITY)))
         .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.partial_cmp(&b.0).unwrap()));
     let (best_f, best_t) = match best {
@@ -140,6 +165,19 @@ mod tests {
         // the exact-grid case keeps exactly n entries (no duplicate sweep)
         assert_eq!(candidate_fractions(49).len(), 49);
         assert_eq!(candidate_fractions(50).len(), 51);
+    }
+
+    /// The per-grid-size memo hands back the identical allocation on
+    /// repeat calls — the advisor and the live monitor stop re-sorting
+    /// the same grid on every sweep/shift.
+    #[test]
+    fn candidate_fractions_memoized_identical_slice() {
+        let a = candidate_fractions(33);
+        let b = candidate_fractions(33);
+        assert!(Arc::ptr_eq(&a, &b), "repeat call must share the memoized slice");
+        let c = candidate_fractions(34);
+        assert!(!Arc::ptr_eq(&a, &c), "distinct sizes are distinct entries");
+        assert_eq!(a.as_ref(), candidate_fractions(33).as_ref());
     }
 
     #[test]

@@ -237,6 +237,28 @@ pub fn replay(cal: &CalibratedWorkflow, opts: &SolverOpts) -> Result<ReplayRepor
     })
 }
 
+/// Replay validation curves: every task's predicted progress function
+/// materialized on a shared time grid — what predicted-vs-observed I/O
+/// plots and curve-level validation consume on top of [`replay`]'s scalar
+/// completion errors. Runs the same fixpoint analysis as [`replay`]
+/// (same options, same pass cap), then one structure-of-arrays batch pass
+/// ([`crate::pwfn::BatchPwPoly`]) over all progress curves. Row `i` is
+/// `cal.tasks[i]`; each value is bit-for-bit `progress.eval(ts[j])`.
+pub fn replay_progress_grid(
+    cal: &CalibratedWorkflow,
+    opts: &SolverOpts,
+    ts: &[f64],
+) -> Result<Vec<Vec<f64>>> {
+    let wa = analyze_fixpoint(&cal.workflow, opts, 8)
+        .map_err(|e| crate::util::error::Error::msg(format!("replay failed: {e}")))?;
+    if ts.is_empty() {
+        return Ok(vec![Vec::new(); wa.analyses.len()]);
+    }
+    let curves: Vec<&PwPoly> = wa.analyses.iter().map(|a| &a.progress).collect();
+    let flat = crate::pwfn::BatchPwPoly::compile(&curves).eval_scenarios(ts);
+    Ok(flat.chunks(ts.len()).map(|row| row.to_vec()).collect())
+}
+
 /// The whole pipeline in one call: parse the TSV (and optional I/O log),
 /// calibrate every task, assemble the workflow and replay it. This is
 /// what the `calibrate` CLI subcommand and the service `calibrate` op
@@ -335,6 +357,44 @@ mod tests {
         );
         let max = report.max_rel_err.unwrap();
         assert!(max < 0.01, "max rel err {max}: {:?}", report.per_task);
+    }
+
+    /// The replay curve surface goes through the SoA batch backend: rows
+    /// align with tasks, values are bit-for-bit the scalar progress eval,
+    /// and every curve is done once its own predicted finish is on the grid.
+    #[test]
+    fn replay_progress_grid_matches_scalar_and_completes() {
+        let (cal, report) = calibrate_trace(
+            CHAIN,
+            None,
+            &CalibrateOpts::default(),
+            &SolverOpts::default(),
+        )
+        .unwrap();
+        let opts = SolverOpts::default();
+        let wa = analyze_fixpoint(&cal.workflow, &opts, 8).unwrap();
+        // a grid stretching past every predicted finish time
+        let span = wa
+            .analyses
+            .iter()
+            .filter_map(|a| a.finish_time)
+            .fold(0.0_f64, f64::max)
+            + 1.0;
+        let ts: Vec<f64> = (0..=64).map(|i| span * i as f64 / 64.0).collect();
+        let rows = replay_progress_grid(&cal, &opts, &ts).unwrap();
+        assert_eq!(rows.len(), cal.tasks.len());
+        for (a, row) in wa.analyses.iter().zip(&rows) {
+            for (&t, &v) in ts.iter().zip(row) {
+                assert_eq!(v.to_bits(), a.progress.eval(t).to_bits());
+            }
+            // the grid's end is past every finish: each curve is done there
+            let end = *row.last().unwrap();
+            assert!((end - a.max_progress).abs() < 1e-6 * a.max_progress.max(1.0));
+        }
+        assert!(report.max_rel_err.unwrap() < 0.005);
+        // empty grid: one empty row per task
+        let empty = replay_progress_grid(&cal, &opts, &[]).unwrap();
+        assert!(empty.len() == 3 && empty.iter().all(|r| r.is_empty()));
     }
 
     #[test]

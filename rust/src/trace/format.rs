@@ -111,7 +111,7 @@ fn parse_opt_num(field: &str, value: &str, line: usize) -> Result<Option<f64>> {
 /// ignored. Lines starting with `#` are comments.
 pub fn parse_tsv(text: &str) -> Result<TsvTrace> {
     let trace = parse_tsv_structural(text)?;
-    / referential integrity: every dep must name a task in this trace
+    // referential integrity: every dep must name a task in this trace
     for t in &trace.tasks {
         for d in &t.deps {
             ensure!(
@@ -421,7 +421,7 @@ mod tests {
         let unknown_dep = "task_id\tdeps\trealtime\trchar\twchar\na\tzz\t5\t1\t1\n";
         let e = parse_tsv(unknown_dep).unwrap_err().to_string();
         assert!(e.contains("unknown task 'zz'"), "{e}");
-        / the structural parser tolerates the dangling dep (a streaming
+        // the structural parser tolerates the dangling dep (a streaming
         // producer may deliver 'zz' later) but nothing else
         let t = parse_tsv_structural(unknown_dep).unwrap();
         assert_eq!(t.tasks[0].deps, vec!["zz".to_string()]);

@@ -1,0 +1,199 @@
+//! Differential suite pinning the structure-of-arrays batch backend
+//! (`pwfn::BatchPwPoly`) to the scalar evaluator, bit for bit.
+//!
+//! Randomized functions cover jump breaks, infinite and finite final
+//! pieces, single-piece constants and mixed degrees (zero-padding in the
+//! compiled block); query grids cover x exactly on breakpoints, x just
+//! around them, x left of the domain, x past a finite domain end, and
+//! both sorted and arbitrary orders. Also pins the structural identity
+//! `eval_grid == transpose(eval_scenarios)` and the `PwPoly::sample` /
+//! `eval_many` delegation.
+
+use bottlemod::pwfn::{poly::Poly, BatchPwPoly, PwPoly};
+use bottlemod::util::harness::check_property;
+use bottlemod::util::Rng;
+
+/// Random piecewise polynomial: 1–6 pieces, jumps between pieces, 20%
+/// plain constants, 25% finite domain end, degree ≤ 3.
+fn random_pw(rng: &mut Rng) -> PwPoly {
+    if rng.f64() < 0.2 {
+        return PwPoly::constant(rng.range(-5.0, 5.0));
+    }
+    let pieces = 1 + rng.below(6) as usize;
+    let mut breaks = Vec::with_capacity(pieces + 1);
+    breaks.push(rng.range(-3.0, 3.0));
+    for i in 0..pieces - 1 {
+        let prev = breaks[i];
+        breaks.push(prev + rng.range(0.25, 2.0));
+    }
+    if rng.f64() < 0.25 {
+        let prev = *breaks.last().unwrap();
+        breaks.push(prev + rng.range(0.25, 2.0));
+    } else {
+        breaks.push(f64::INFINITY);
+    }
+    let degree = rng.below(4) as usize;
+    let polys = (0..pieces)
+        .map(|_| Poly::new((0..=degree).map(|_| rng.range(-2.0, 2.0)).collect()))
+        .collect();
+    PwPoly::new(breaks, polys)
+}
+
+/// Query grid hitting every interesting region: left of the domain,
+/// exactly on each finite breakpoint, just around each, past the domain
+/// end, plus random interior points. Returned in generation order — NOT
+/// sorted.
+fn sample_xs(rng: &mut Rng, f: &PwPoly) -> Vec<f64> {
+    let mut xs = vec![f.x_min() - rng.range(0.5, 3.0)];
+    for &b in &f.breaks {
+        if b.is_finite() {
+            xs.push(b);
+            xs.push(b - 1e-9);
+            xs.push(b + 1e-9);
+        }
+    }
+    let hi = if f.x_max().is_finite() {
+        f.x_max() + 3.0
+    } else {
+        f.x_min() + 15.0
+    };
+    for _ in 0..24 {
+        xs.push(rng.range(f.x_min() - 1.0, hi));
+    }
+    xs
+}
+
+fn assert_bits(got: &[f64], f: &PwPoly, xs: &[f64], what: &str) -> Result<(), String> {
+    for (&x, &v) in xs.iter().zip(got) {
+        let want = f.eval(x);
+        if v.to_bits() != want.to_bits() {
+            return Err(format!("{what}: f({x}) = {v:?}, scalar says {want:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn eval_many_matches_scalar_any_order() {
+    check_property("eval_many == scalar eval", 300, |rng| {
+        let f = random_pw(rng);
+        let xs = sample_xs(rng, &f); // unsorted generation order
+        let b = BatchPwPoly::compile_one(&f);
+        assert_bits(&b.eval_many(&xs), &f, &xs, "eval_many (unsorted)")?;
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_bits(&b.eval_many(&sorted), &f, &sorted, "eval_many (sorted)")?;
+        assert_bits(&b.eval_many_sorted(&sorted), &f, &sorted, "eval_many_sorted")?;
+        // reverse order exercises the backward gallop
+        let mut rev = sorted.clone();
+        rev.reverse();
+        assert_bits(&b.eval_many(&rev), &f, &rev, "eval_many (reversed)")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn pwpoly_methods_delegate_to_batch() {
+    check_property("sample/eval_many delegation", 100, |rng| {
+        let f = random_pw(rng);
+        let xs = sample_xs(rng, &f);
+        assert_bits(&f.eval_many(&xs), &f, &xs, "PwPoly::eval_many")?;
+        assert_bits(&f.sample(&xs), &f, &xs, "PwPoly::sample")?;
+        let mut sorted = xs;
+        sorted.sort_by(f64::total_cmp);
+        assert_bits(&f.eval_many_sorted(&sorted), &f, &sorted, "PwPoly::eval_many_sorted")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn grid_is_transposed_scenarios_and_both_match_scalar() {
+    check_property("eval_grid == transpose(eval_scenarios)", 200, |rng| {
+        let m = 1 + rng.below(5) as usize;
+        let fns: Vec<PwPoly> = (0..m).map(|_| random_pw(rng)).collect();
+        let refs: Vec<&PwPoly> = fns.iter().collect();
+        // one shared grid spanning all domains, sorted half the time
+        let lo = fns.iter().map(|f| f.x_min()).fold(f64::INFINITY, f64::min);
+        let mut xs: Vec<f64> = (0..40).map(|_| rng.range(lo - 2.0, lo + 15.0)).collect();
+        if rng.f64() < 0.5 {
+            xs.sort_by(f64::total_cmp);
+        }
+        let b = BatchPwPoly::compile(&refs);
+        let scen = b.eval_scenarios(&xs);
+        let grid = b.eval_grid(&xs);
+        if scen.len() != m * xs.len() || grid.len() != m * xs.len() {
+            return Err(format!(
+                "bad shapes: scen {} grid {} want {}",
+                scen.len(),
+                grid.len(),
+                m * xs.len()
+            ));
+        }
+        for (i, f) in fns.iter().enumerate() {
+            for (j, &x) in xs.iter().enumerate() {
+                let s = scen[i * xs.len() + j];
+                let g = grid[j * m + i];
+                if s.to_bits() != g.to_bits() {
+                    return Err(format!("transpose mismatch at fn {i}, point {j}"));
+                }
+                let want = f.eval(x);
+                if s.to_bits() != want.to_bits() {
+                    return Err(format!("scenarios vs scalar at fn {i}, x={x}: {s:?} vs {want:?}"));
+                }
+                // eval_one is the per-point reference entry
+                let one = b.eval_one(i, x);
+                if one.to_bits() != want.to_bits() {
+                    return Err(format!("eval_one vs scalar at fn {i}, x={x}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic edge geometry: single pieces, jump steps, finite domain
+/// ends, empty compiles and empty grids.
+#[test]
+fn edge_cases_exact() {
+    // single-piece constant: every x lands on piece 0
+    let c = PwPoly::constant(42.0);
+    let b = BatchPwPoly::compile_one(&c);
+    for x in [-1e9, -1.0, 0.0, 7.5, 1e12] {
+        assert_eq!(b.eval_one(0, x).to_bits(), c.eval(x).to_bits());
+    }
+
+    // jump step: right-continuity exactly at the break
+    let s = PwPoly::step(0.0, 10.0, 1.0, 5.0);
+    let bs = BatchPwPoly::compile_one(&s);
+    let xs = [9.999999999, 10.0, 10.000000001];
+    for (&x, &v) in xs.iter().zip(&bs.eval_many(&xs)) {
+        assert_eq!(v.to_bits(), s.eval(x).to_bits(), "x={x}");
+    }
+
+    // finite domain end: constant extension past x_max
+    let fin = PwPoly::new(
+        vec![0.0, 1.0, 2.0],
+        vec![Poly::linear(0.0, 1.0), Poly::linear(1.0, 2.0)],
+    );
+    let bf = BatchPwPoly::compile_one(&fin);
+    for x in [1.5, 2.0, 3.0, 100.0] {
+        assert_eq!(bf.eval_one(0, x).to_bits(), fin.eval(x).to_bits(), "x={x}");
+    }
+
+    // empty function list and empty grids
+    let none = BatchPwPoly::compile(&[]);
+    assert_eq!(none.n_funcs(), 0);
+    assert!(none.eval_scenarios(&[1.0]).is_empty());
+    assert!(none.eval_grid(&[1.0]).is_empty());
+    assert!(b.eval_many(&[]).is_empty());
+    assert!(b.eval_many_sorted(&[]).is_empty());
+
+    // mixed degrees in one compile: zero-padding must not perturb values
+    let quad = PwPoly::new(vec![0.0, f64::INFINITY], vec![Poly::new(vec![1.0, -2.0, 0.5])]);
+    let both = BatchPwPoly::compile(&[&c, &quad]);
+    assert_eq!(both.coeff_width(), 3);
+    for x in [-1.0, 0.0, 2.25, 50.0] {
+        assert_eq!(both.eval_one(0, x).to_bits(), c.eval(x).to_bits());
+        assert_eq!(both.eval_one(1, x).to_bits(), quad.eval(x).to_bits());
+    }
+}
