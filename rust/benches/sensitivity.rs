@@ -1,0 +1,131 @@
+//! Sensitivity-report throughput: the full ranked-knob + confidence-band
+//! analysis (docs/SENSITIVITY.md) over
+//!
+//! * the paper's Fig 5 video workflow (8 tasks, every scenario knob), and
+//! * a 10³-node generated layered graph (the fixed-model scale knobs),
+//!
+//! each run twice against one shared analysis cache. The repeat must be
+//! answered mostly from memory (hit rate ≥ 50% — in practice ~100%) and
+//! must reproduce the first report byte-for-byte: the cache and the
+//! stencil batch may change the speed, never the numbers.
+//!
+//! Asserts can be downgraded to reporting with
+//! `BOTTLEMOD_BENCH_NO_ASSERT=1` (e.g. on loaded CI machines).
+//!
+//! Run: `cargo bench --bench sensitivity`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bottlemod::runtime::{AnalysisCache, FixedWorkflow, SweepModel};
+use bottlemod::sense::{analyze, SenseOpts};
+use bottlemod::util::harness::write_bench_artifact;
+use bottlemod::util::json::Json;
+use bottlemod::util::stats::fmt_duration;
+use bottlemod::util::Rng;
+use bottlemod::workflow::generator::{generate, GeneratorOpts, Topology};
+use bottlemod::workflow::scenario::VideoScenario;
+
+const LARGE_NODES: usize = 1000;
+
+/// Two timed reports against one shared cache; returns
+/// `(cold_wall, warm_wall, warm_hit_rate, identical, knobs, events)`.
+fn run_pair(
+    label: &str,
+    model: &Arc<dyn SweepModel>,
+    residuals: &[f64],
+) -> (f64, f64, f64, bool, usize, usize) {
+    let cache = Arc::new(AnalysisCache::new());
+    let opts = SenseOpts {
+        cache: Some(Arc::clone(&cache)),
+        ..SenseOpts::default()
+    };
+    let t0 = Instant::now();
+    let first = analyze(model, residuals, &opts).expect("first report");
+    let cold = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let second = analyze(model, residuals, &opts).expect("second report");
+    let warm = t0.elapsed().as_secs_f64();
+
+    let hit_rate = second.cache.as_ref().map(|c| c.hit_rate()).unwrap_or(0.0);
+    let identical = first.to_json().to_string() == second.to_json().to_string();
+    println!(
+        "{label}: cold {} -> warm {} ({:.1}x), warm hit rate {:.0}%, \
+         {} knobs, {} events, byte-identical repeat: {identical}",
+        fmt_duration(cold),
+        fmt_duration(warm),
+        cold / warm.max(1e-12),
+        hit_rate * 100.0,
+        first.knobs.len(),
+        first.events,
+    );
+    (cold, warm, hit_rate, identical, first.knobs.len(), first.events)
+}
+
+fn main() {
+    let no_assert = std::env::var("BOTTLEMOD_BENCH_NO_ASSERT").is_ok();
+
+    // Fig 5: every scenario knob, with synthetic calibration residuals so
+    // the band re-solves are part of the measured work.
+    let video: Arc<dyn SweepModel> = Arc::new(VideoScenario::default());
+    let video_tasks = video.base_workflow().nodes.len();
+    let residuals = vec![0.05; video_tasks];
+    let (video_cold, video_warm, video_hits, video_same, video_knobs, video_events) =
+        run_pair("video (fig 5)", &video, &residuals);
+
+    // 10³-node layered graph wrapped as a fixed model: the scale knobs.
+    let gopts = GeneratorOpts {
+        topology: Topology::Layered,
+        width_jitter: 0.2,
+        pool_residual_prob: 0.3,
+        ..GeneratorOpts::default()
+    }
+    .target_nodes(LARGE_NODES);
+    let wf = generate(&mut Rng::new(42), &gopts);
+    let large_nodes = wf.nodes.len();
+    let large: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("layered-1k", wf));
+    let (large_cold, large_warm, large_hits, large_same, large_knobs, large_events) =
+        run_pair(&format!("layered ({large_nodes} nodes)"), &large, &[]);
+
+    let deterministic = video_same && large_same;
+    let warm_cache = video_hits >= 0.5 && large_hits >= 0.5;
+    if !no_assert {
+        assert!(
+            deterministic,
+            "a repeated report must be byte-identical (video {video_same}, large {large_same})"
+        );
+        assert!(
+            warm_cache,
+            "the repeat must hit the shared cache at >= 50% \
+             (video {video_hits:.2}, large {large_hits:.2})"
+        );
+        assert!(video_knobs >= 8, "video exposes {video_knobs} knobs, expected 8+");
+        assert!(large_knobs >= 2, "fixed models expose the two scale knobs");
+    }
+    println!(
+        "acceptance: deterministic={deterministic} warm_cache={warm_cache}{}",
+        if no_assert { " (reported only)" } else { "" }
+    );
+
+    match write_bench_artifact(
+        "sensitivity",
+        vec![
+            ("video_tasks", Json::Num(video_tasks as f64)),
+            ("video_knobs", Json::Num(video_knobs as f64)),
+            ("video_events", Json::Num(video_events as f64)),
+            ("video_cold_wall_s", Json::Num(video_cold)),
+            ("video_warm_wall_s", Json::Num(video_warm)),
+            ("video_warm_hit_rate", Json::Num(video_hits)),
+            ("large_nodes", Json::Num(large_nodes as f64)),
+            ("large_knobs", Json::Num(large_knobs as f64)),
+            ("large_events", Json::Num(large_events as f64)),
+            ("large_cold_wall_s", Json::Num(large_cold)),
+            ("large_warm_wall_s", Json::Num(large_warm)),
+            ("large_warm_hit_rate", Json::Num(large_hits)),
+            ("deterministic", Json::Bool(deterministic)),
+        ],
+    ) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench artifact: {e}"),
+    }
+}

@@ -7,13 +7,17 @@
 //! (`coordinator::service::serve_stdio`) and the worker pool all delegate
 //! here; none of them parses or assembles wire JSON of their own.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::service::{Coordinator, Job, JobResult};
 use crate::live::{Monitor, MonitorOpts};
 use crate::model::spec::parse_workflow;
 use crate::runtime::cache::AnalysisCache;
 use crate::runtime::sweep::{FixedWorkflow, SweepBatch, SweepError, SweepModel};
+use crate::sense::SenseOpts;
 use crate::solver::SolverOpts;
 use crate::trace::{
     assemble, calibrate, parse_io_log, parse_tsv, replay, CalibrateOpts, CalibratedWorkflow,
@@ -27,8 +31,89 @@ use super::error::{ApiError, ErrorCode};
 use super::request::{decode_line, Request, WorkflowSel};
 use super::response::{
     encode, AnalyzeResult, CalibrateResult, MonitorResult, Response, ScheduleRow, SegmentRow,
-    SweepResult,
+    StatsSnapshot, SweepResult,
 };
+
+/// Global service counters behind the `stats` op. A multi-session server
+/// shares one instance across every session handler
+/// ([`ApiHandler::for_session_with_stats`]); CLI and single-session stdio
+/// handlers own a private one. All counters are atomics — a `stats` read
+/// races live traffic by design and must never block it.
+pub struct ServiceStats {
+    start: Instant,
+    sessions_open: AtomicU64,
+    sessions_total: AtomicU64,
+    inflight: AtomicU64,
+    overloaded: AtomicU64,
+    /// Completed-request totals keyed by wire op name (`stats` itself is
+    /// not counted).
+    ops: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Default for ServiceStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceStats {
+    pub fn new() -> ServiceStats {
+        ServiceStats {
+            start: Instant::now(),
+            sessions_open: AtomicU64::new(0),
+            sessions_total: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+            ops: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A session attached (socket transports call this on accept).
+    pub fn session_opened(&self) {
+        self.sessions_open.fetch_add(1, Ordering::Relaxed);
+        self.sessions_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session detached. Saturating: a stray double-close must not wrap
+    /// the gauge.
+    pub fn session_closed(&self) {
+        let _ = self
+            .sessions_open
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
+    fn begin(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn finish(&self, op: &'static str, outcome: &Result<Response, ApiError>) {
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+        if matches!(outcome, Err(e) if e.code == ErrorCode::Overloaded) {
+            self.overloaded.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut ops = self.ops.lock().unwrap_or_else(|e| e.into_inner());
+        *ops.entry(op.to_string()).or_insert(0) += 1;
+    }
+
+    /// Point-in-time snapshot. `mask` zeroes every time-varying field
+    /// (uptime, counters, per-op totals) so the response bytes are
+    /// reproducible — the conformance corpus relies on it.
+    pub fn snapshot(&self, mask: bool) -> StatsSnapshot {
+        if mask {
+            return StatsSnapshot::default();
+        }
+        StatsSnapshot {
+            uptime_secs: self.start.elapsed().as_secs_f64(),
+            sessions_open: self.sessions_open.load(Ordering::Relaxed),
+            sessions_total: self.sessions_total.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+            ops: self.ops.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        }
+    }
+}
 
 /// Where a handler's requests run.
 enum PoolMode {
@@ -55,6 +140,9 @@ pub struct ApiHandler {
     /// worker pool is stateless by design, so session state cannot (and
     /// must not) travel through it.
     monitor: Mutex<Option<Monitor>>,
+    /// Global counters behind the `stats` op — the server's shared
+    /// instance in session mode, else private to this handler.
+    stats: Arc<ServiceStats>,
 }
 
 impl Default for ApiHandler {
@@ -75,6 +163,7 @@ impl ApiHandler {
             threads: threads.max(1),
             pool: PoolMode::Lazy(Mutex::new(None)),
             monitor: Mutex::new(None),
+            stats: Arc::new(ServiceStats::new()),
         }
     }
 
@@ -82,11 +171,24 @@ impl ApiHandler {
     /// session's own (typically quota-bounded) cache, and every op runs
     /// on the shared `pool` under its admission control.
     pub fn for_session(pool: Arc<Coordinator>, cache: Arc<AnalysisCache>) -> ApiHandler {
+        Self::for_session_with_stats(pool, cache, Arc::new(ServiceStats::new()))
+    }
+
+    /// [`ApiHandler::for_session`] with the server's shared
+    /// [`ServiceStats`], so every session's requests aggregate into the
+    /// same global counters and any session's `stats` op sees the whole
+    /// server.
+    pub fn for_session_with_stats(
+        pool: Arc<Coordinator>,
+        cache: Arc<AnalysisCache>,
+        stats: Arc<ServiceStats>,
+    ) -> ApiHandler {
         ApiHandler {
             cache,
             threads: 1,
             pool: PoolMode::Shared(pool),
             monitor: Mutex::new(None),
+            stats,
         }
     }
 
@@ -99,11 +201,21 @@ impl ApiHandler {
     /// other ops execute inline ([`PoolMode::Lazy`]) or as one pool job
     /// ([`PoolMode::Shared`]).
     pub fn handle(&self, req: &Request) -> Result<Response, ApiError> {
-        match req {
+        // `stats` reads handler/server state, so it answers inline before
+        // any pool dispatch; it does not count itself in the op totals
+        if let Request::Stats { mask } = req {
+            return Ok(Response::Stats(self.stats.snapshot(*mask)));
+        }
+        self.stats.begin();
+        let outcome = match req {
             Request::Batch { requests } => self.handle_batch(requests),
             // monitor ops mutate session state, so they run inline in
             // both pool modes — a pool worker only ever sees pure requests
-            Request::MonitorOpen { workflow, tol } => self.monitor_open(workflow, *tol),
+            Request::MonitorOpen {
+                workflow,
+                tol,
+                bands,
+            } => self.monitor_open(workflow, *tol, *bands),
             Request::MonitorFeed { tsv, io } => {
                 self.monitor_feed(tsv.as_deref(), io.as_deref())
             }
@@ -112,10 +224,17 @@ impl ApiHandler {
                 PoolMode::Shared(pool) => self.dispatch_one(pool, other),
                 PoolMode::Lazy(_) => execute(other, &self.cache),
             },
-        }
+        };
+        self.stats.finish(req.op_name(), &outcome);
+        outcome
     }
 
-    fn monitor_open(&self, sel: &WorkflowSel, tol: Option<f64>) -> Result<Response, ApiError> {
+    fn monitor_open(
+        &self,
+        sel: &WorkflowSel,
+        tol: Option<f64>,
+        bands: bool,
+    ) -> Result<Response, ApiError> {
         let mut slot = self.monitor.lock().unwrap_or_else(|e| e.into_inner());
         if slot.is_some() {
             return Err(ApiError::bad_request(
@@ -127,6 +246,7 @@ impl ApiHandler {
         if let Some(t) = tol {
             opts.calibrate.tol = t;
         }
+        opts.bands = bands;
         // the selector picks the allocation model advisories sweep; a
         // `Trace` selector instead seeds the monitor with an initial feed
         let mut seed: Option<(&str, Option<&str>)> = None;
@@ -295,6 +415,9 @@ pub fn execute_with_threads(
             workflow,
             perturbations,
         } => run_sweep(workflow, perturbations, cache, sweep_threads),
+        Request::Sensitivity { workflow, h } => {
+            run_sensitivity(workflow, *h, cache, sweep_threads)
+        }
         Request::Calibrate { tsv, io, tol } => run_calibrate(tsv, io.as_deref(), *tol),
         Request::Batch { .. } => Err(ApiError::bad_request("batch requests cannot nest")),
         Request::MonitorOpen { .. } | Request::MonitorFeed { .. } | Request::MonitorStatus { .. } => {
@@ -302,6 +425,9 @@ pub fn execute_with_threads(
                 "monitor ops are session-scoped and cannot run inside a batch",
             ))
         }
+        Request::Stats { .. } => Err(ApiError::bad_request(
+            "stats is service-scoped and cannot run inside a batch",
+        )),
     }
 }
 
@@ -344,16 +470,10 @@ fn run_analyze(spec: &str, cache: &Arc<AnalysisCache>) -> Result<Response, ApiEr
     }))
 }
 
-fn run_sweep(
-    sel: &WorkflowSel,
-    perturbations: &[Perturbation],
-    cache: &Arc<AnalysisCache>,
-    threads: usize,
-) -> Result<Response, ApiError> {
-    if perturbations.is_empty() {
-        return Err(ApiError::bad_request("sweep needs at least one perturbation"));
-    }
-    let model: Arc<dyn SweepModel> = match sel {
+/// Resolve a workflow selector to the sweep model every perturbation-based
+/// op (`sweep`, `sensitivity`) runs over.
+fn select_model(sel: &WorkflowSel) -> Result<Arc<dyn SweepModel>, ApiError> {
+    Ok(match sel {
         WorkflowSel::Video => Arc::new(VideoScenario::default()),
         WorkflowSel::Genomics => Arc::new(GenomicsScenario::default()),
         WorkflowSel::Spec(text) => {
@@ -367,13 +487,36 @@ fn run_sweep(
             let cal = calibrated_workflow(tsv, io.as_deref(), &CalibrateOpts::default())?;
             Arc::new(FixedWorkflow::new("trace", cal.workflow))
         }
-    };
+    })
+}
+
+/// A rejected perturbation kind carries the model's applicable vocabulary
+/// in `detail.applicable`, so clients can self-correct.
+fn unsupported_knob_error(message: String, model: &dyn SweepModel) -> ApiError {
+    let applicable: Vec<Json> = Perturbation::applicable_kinds(model)
+        .into_iter()
+        .map(|k| Json::Str(k.to_string()))
+        .collect();
+    ApiError::bad_request(message)
+        .with_detail(Json::obj(vec![("applicable", Json::Arr(applicable))]))
+}
+
+fn run_sweep(
+    sel: &WorkflowSel,
+    perturbations: &[Perturbation],
+    cache: &Arc<AnalysisCache>,
+    threads: usize,
+) -> Result<Response, ApiError> {
+    if perturbations.is_empty() {
+        return Err(ApiError::bad_request("sweep needs at least one perturbation"));
+    }
+    let model = select_model(sel)?;
     let label = model.label().to_string();
-    let engine = SweepBatch::over(model)
+    let engine = SweepBatch::over(Arc::clone(&model))
         .with_threads(threads)
         .with_cache(Arc::clone(cache));
     let (outcomes, report) = engine.run_report(perturbations).map_err(|e| match e {
-        SweepError::Unsupported(m) => ApiError::bad_request(m),
+        SweepError::Unsupported(m) => unsupported_knob_error(m, model.as_ref()),
         SweepError::Analysis(err) => ApiError::new(ErrorCode::AnalysisFailed, err.to_string()),
     })?;
     let makespans: Vec<Option<f64>> = outcomes.iter().map(|o| o.makespan).collect();
@@ -398,6 +541,48 @@ fn run_sweep(
         ranked: report.ranked,
         cache: report.cache,
     }))
+}
+
+/// The `sensitivity` op: per-knob makespan derivatives, the calibration
+/// confidence band and the ranked fix-this-first report
+/// (`docs/SENSITIVITY.md`). A `Trace` selector runs the replay validator
+/// so its per-task relative errors become the band's residuals; the
+/// built-in and inline-spec models carry no observations, so their band
+/// collapses to the point estimate.
+fn run_sensitivity(
+    sel: &WorkflowSel,
+    h: Option<f64>,
+    cache: &Arc<AnalysisCache>,
+    threads: usize,
+) -> Result<Response, ApiError> {
+    let (model, residuals): (Arc<dyn SweepModel>, Vec<f64>) = match sel {
+        WorkflowSel::Trace { tsv, io } => {
+            let cal = calibrated_workflow(tsv, io.as_deref(), &CalibrateOpts::default())?;
+            let rep = replay(&cal, &SolverOpts::default())
+                .map_err(|e| ApiError::new(ErrorCode::AnalysisFailed, e.to_string()))?;
+            let residuals = rep
+                .per_task
+                .iter()
+                .map(|t| t.rel_err.unwrap_or(0.0))
+                .collect();
+            let model: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("trace", cal.workflow));
+            (model, residuals)
+        }
+        other => (select_model(other)?, vec![]),
+    };
+    let mut opts = SenseOpts {
+        threads,
+        cache: Some(Arc::clone(cache)),
+        ..SenseOpts::default()
+    };
+    if let Some(h) = h {
+        opts.h = h;
+    }
+    let report = crate::sense::analyze(&model, &residuals, &opts).map_err(|e| match e {
+        SweepError::Unsupported(m) => ApiError::bad_request(m),
+        SweepError::Analysis(err) => ApiError::new(ErrorCode::AnalysisFailed, err.to_string()),
+    })?;
+    Ok(Response::Sensitivity(report))
 }
 
 /// The trace pipeline up to a solver-ready model (parse → calibrate →
@@ -500,6 +685,9 @@ mod tests {
         }
     }
 
+    /// A rejected knob names the model's applicable vocabulary in
+    /// `detail.applicable` — the genomics list here, the full list for
+    /// video (the satellite contract).
     #[test]
     fn unsupported_knob_maps_to_bad_request() {
         let h = ApiHandler::new();
@@ -511,6 +699,18 @@ mod tests {
             .unwrap_err();
         assert_eq!(e.code, ErrorCode::BadRequest);
         assert!(e.message.contains("task3_time_scale"), "{}", e.message);
+        let applicable = e.detail.unwrap();
+        let kinds: Vec<&str> = applicable
+            .get("applicable")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|k| k.as_str())
+            .collect();
+        assert_eq!(
+            kinds,
+            vec!["identity", "fraction", "link_rate_scale", "input_scale", "cpu_scale"]
+        );
     }
 
     #[test]
@@ -585,6 +785,7 @@ mod tests {
             .handle(&Request::MonitorOpen {
                 workflow: WorkflowSel::Video,
                 tol: None,
+                bands: false,
             })
             .unwrap();
         assert!(matches!(
@@ -596,6 +797,7 @@ mod tests {
             .handle(&Request::MonitorOpen {
                 workflow: WorkflowSel::Video,
                 tol: None,
+                bands: false,
             })
             .unwrap_err();
         assert!(e.message.contains("already open"), "{}", e.message);
@@ -641,6 +843,7 @@ mod tests {
             .handle(&Request::MonitorOpen {
                 workflow: WorkflowSel::Genomics,
                 tol: None,
+                bands: false,
             })
             .is_ok());
     }
@@ -657,6 +860,7 @@ mod tests {
                     io: None,
                 },
                 tol: None,
+                bands: true,
             })
             .unwrap();
         match r {
@@ -664,7 +868,11 @@ mod tests {
                 assert_eq!(workflow, "trace");
                 let f = feed.unwrap();
                 assert_eq!(f.refit, 2);
-                assert!(f.snapshot.unwrap().makespan.is_some());
+                let snap = f.snapshot.unwrap();
+                assert!(snap.makespan.is_some());
+                // opened with bands: the seeded feed already carries one
+                let band = snap.band.expect("bands requested at open");
+                assert!(band.lower <= band.median && band.median <= band.upper);
             }
             other => panic!("{other:?}"),
         }
@@ -683,6 +891,116 @@ mod tests {
             Response::Batch(items) => {
                 let e = items[0].as_ref().unwrap_err();
                 assert!(e.message.contains("session-scoped"), "{}", e.message);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The acceptance scenario: `sensitivity` returns a ranked per-knob
+    /// report for all four selector families. Built-ins and inline specs
+    /// have no observations, so their band is the point estimate; a
+    /// trace-calibrated model gets residual-driven bands.
+    #[test]
+    fn sensitivity_over_every_selector_family() {
+        let h = ApiHandler::new();
+        for (sel, label, knob_count_at_least) in [
+            (WorkflowSel::Video, "video", 8usize),
+            (WorkflowSel::Genomics, "genomics", 4),
+            (WorkflowSel::Spec(TINY_SPEC.to_string()), "spec", 1),
+            (
+                WorkflowSel::Trace {
+                    tsv: MONITOR_TSV.to_string(),
+                    io: None,
+                },
+                "trace",
+                1,
+            ),
+        ] {
+            let is_trace = matches!(sel, WorkflowSel::Trace { .. });
+            let r = h
+                .handle(&Request::Sensitivity {
+                    workflow: sel,
+                    h: None,
+                })
+                .unwrap();
+            let report = match r {
+                Response::Sensitivity(rep) => rep,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(report.workflow, label);
+            assert!(report.makespan > 0.0, "{label}: {}", report.makespan);
+            assert!(
+                report.knobs.len() >= knob_count_at_least,
+                "{label}: {:?}",
+                report.knobs.iter().map(|k| k.kind).collect::<Vec<_>>()
+            );
+            assert!(
+                report
+                    .knobs
+                    .windows(2)
+                    .all(|w| w[0].gain_per_unit >= w[1].gain_per_unit),
+                "{label}: report must rank by gain"
+            );
+            assert!(
+                report.band.lower <= report.band.median
+                    && report.band.median <= report.band.upper,
+                "{label}: {:?}",
+                report.band
+            );
+            if !is_trace {
+                assert!(report.band.is_point(), "{label}: {:?}", report.band);
+            }
+            assert!(report.cache.is_some(), "{label}");
+        }
+    }
+
+    #[test]
+    fn sensitivity_rejects_bad_specs() {
+        let h = ApiHandler::new();
+        let e = h
+            .handle(&Request::Sensitivity {
+                workflow: WorkflowSel::Spec("{}".to_string()),
+                h: None,
+            })
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidSpec);
+    }
+
+    /// `stats` aggregates per-op counters across the handler's lifetime;
+    /// `mask: true` zeroes everything time-varying for reproducible bytes.
+    #[test]
+    fn stats_counts_requests_and_masks() {
+        let h = ApiHandler::new();
+        h.handle(&Request::Ping).unwrap();
+        h.handle(&Request::Ping).unwrap();
+        let _ = h.handle(&Request::Analyze { spec: "{}".into() }); // errors count too
+        let r = h.handle(&Request::Stats { mask: false }).unwrap();
+        let s = match r {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(s.ops.get("ping"), Some(&2));
+        assert_eq!(s.ops.get("analyze"), Some(&1));
+        assert_eq!(s.ops.get("stats"), None, "stats does not count itself");
+        assert_eq!(s.inflight, 0, "nothing in flight between requests");
+        assert_eq!(s.overloaded, 0);
+        assert!(s.uptime_secs >= 0.0);
+
+        let r = h.handle(&Request::Stats { mask: true }).unwrap();
+        match r {
+            Response::Stats(s) => assert_eq!(s, StatsSnapshot::default()),
+            other => panic!("{other:?}"),
+        }
+        // service-scoped: cannot ride in a batch
+        let r = h
+            .handle(&Request::Batch {
+                requests: vec![Request::Stats { mask: true }],
+            })
+            .unwrap();
+        match r {
+            Response::Batch(items) => {
+                let e = items[0].as_ref().unwrap_err();
+                assert!(e.message.contains("service-scoped"), "{}", e.message);
             }
             other => panic!("{other:?}"),
         }

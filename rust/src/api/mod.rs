@@ -6,9 +6,10 @@
 //!
 //! * [`Request`] / [`Response`] — the typed op vocabulary (`ping`,
 //!   `analyze`, generic `sweep` over any [`request::WorkflowSel`],
-//!   `calibrate`, heterogeneous `batch`, and the session-scoped
-//!   `monitor_open` / `monitor_feed` / `monitor_status` live-monitor ops,
-//!   `docs/LIVE.md`);
+//!   `calibrate`, heterogeneous `batch`, the `sensitivity` report op
+//!   (`docs/SENSITIVITY.md`), the service-scoped `stats` counters op, and
+//!   the session-scoped `monitor_open` / `monitor_feed` / `monitor_status`
+//!   live-monitor ops, `docs/LIVE.md`);
 //! * [`request::decode_line`] / [`response::encode`] — the `{"v": 1, ...}`
 //!   envelope with a legacy-v0 compatibility shim (pre-envelope shapes
 //!   keep working, tagged `"deprecated": true`);
@@ -26,13 +27,13 @@ pub mod request;
 pub mod response;
 
 pub use error::{ApiError, ErrorCode};
-pub use handler::{execute, execute_with_threads, ApiHandler};
+pub use handler::{execute, execute_with_threads, ApiHandler, ServiceStats};
 pub use request::{
     decode_line, decode_value, encode_request, Request, Wire, WorkflowSel, PROTOCOL_VERSION,
 };
 pub use response::{
     encode, encode_v0, encode_v1, AnalyzeResult, CalibrateResult, MonitorResult, Response,
-    ScheduleRow, SegmentRow, SweepResult,
+    ScheduleRow, SegmentRow, StatsSnapshot, SweepResult,
 };
 
 /// Workloads shared by the in-crate protocol test suites (the

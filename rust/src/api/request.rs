@@ -54,6 +54,13 @@ pub enum Request {
         workflow: WorkflowSel,
         perturbations: Vec<Perturbation>,
     },
+    /// Per-knob makespan sensitivities, confidence band and ranked
+    /// fix-this-first advice for a workflow (`docs/SENSITIVITY.md`).
+    Sensitivity {
+        workflow: WorkflowSel,
+        /// Relative finite-difference step override (`SenseOpts::h`).
+        h: Option<f64>,
+    },
     Calibrate {
         tsv: String,
         io: Option<String>,
@@ -78,6 +85,10 @@ pub enum Request {
     },
     /// Report the open monitor's state; `close: true` also closes it.
     MonitorStatus { close: bool },
+    /// Global service counters (uptime, sessions, in-flight requests,
+    /// per-op totals). `mask: true` zeroes the time-varying fields so the
+    /// response bytes are reproducible (the conformance corpus uses it).
+    Stats { mask: bool },
 }
 
 /// One decoded wire line: the response dialect (`v == 0` → legacy), the
@@ -168,6 +179,23 @@ fn decode_v1_op(op: &str, j: &Json, allow_batch: bool) -> Result<Request, ApiErr
             workflow: decode_workflow_sel(j.get("workflow"))?,
             perturbations: decode_perturbations(j)?,
         }),
+        "sensitivity" => {
+            let h = match j.get("h") {
+                Json::Null => None,
+                val => match val.as_f64() {
+                    Some(x) if x > 0.0 && x.is_finite() => Some(x),
+                    _ => {
+                        return Err(ApiError::bad_request(
+                            "sensitivity 'h' must be a positive number",
+                        ))
+                    }
+                },
+            };
+            Ok(Request::Sensitivity {
+                workflow: decode_workflow_sel(j.get("workflow"))?,
+                h,
+            })
+        }
         "calibrate" => {
             let tsv = j
                 .get("tsv")
@@ -208,9 +236,16 @@ fn decode_v1_op(op: &str, j: &Json, allow_batch: bool) -> Result<Request, ApiErr
                     }
                 },
             };
+            let bands = match j.get("bands") {
+                Json::Null => false,
+                val => val.as_bool().ok_or_else(|| {
+                    ApiError::bad_request("monitor_open 'bands' must be a boolean")
+                })?,
+            };
             Ok(Request::MonitorOpen {
                 workflow: decode_workflow_sel(j.get("workflow"))?,
                 tol,
+                bands,
             })
         }
         "monitor_feed" => {
@@ -238,6 +273,15 @@ fn decode_v1_op(op: &str, j: &Json, allow_batch: bool) -> Result<Request, ApiErr
                 })?,
             };
             Ok(Request::MonitorStatus { close })
+        }
+        "stats" => {
+            let mask = match j.get("mask") {
+                Json::Null => false,
+                val => val
+                    .as_bool()
+                    .ok_or_else(|| ApiError::bad_request("stats 'mask' must be a boolean"))?,
+            };
+            Ok(Request::Stats { mask })
         }
         "batch" => {
             if !allow_batch {
@@ -459,6 +503,16 @@ impl Request {
                     Json::Arr(perturbations.iter().map(|p| p.to_json()).collect()),
                 ),
             ]),
+            Request::Sensitivity { workflow, h } => {
+                let mut fields = vec![
+                    ("op", Json::Str("sensitivity".to_string())),
+                    ("workflow", workflow.to_json()),
+                ];
+                if let Some(h) = h {
+                    fields.push(("h", Json::Num(*h)));
+                }
+                Json::obj(fields)
+            }
             Request::Calibrate { tsv, io, tol } => {
                 let mut fields = vec![
                     ("op", Json::Str("calibrate".to_string())),
@@ -479,13 +533,20 @@ impl Request {
                     Json::Arr(requests.iter().map(|r| r.to_json()).collect()),
                 ),
             ]),
-            Request::MonitorOpen { workflow, tol } => {
+            Request::MonitorOpen {
+                workflow,
+                tol,
+                bands,
+            } => {
                 let mut fields = vec![
                     ("op", Json::Str("monitor_open".to_string())),
                     ("workflow", workflow.to_json()),
                 ];
                 if let Some(t) = tol {
                     fields.push(("tol", Json::Num(*t)));
+                }
+                if *bands {
+                    fields.push(("bands", Json::Bool(true)));
                 }
                 Json::obj(fields)
             }
@@ -506,6 +567,30 @@ impl Request {
                 }
                 Json::obj(fields)
             }
+            Request::Stats { mask } => {
+                let mut fields = vec![("op", Json::Str("stats".to_string()))];
+                if *mask {
+                    fields.push(("mask", Json::Bool(true)));
+                }
+                Json::obj(fields)
+            }
+        }
+    }
+
+    /// The wire op name — the key the service's per-op request counters
+    /// ([`super::handler::ServiceStats`]) aggregate under.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Analyze { .. } => "analyze",
+            Request::Sweep { .. } => "sweep",
+            Request::Sensitivity { .. } => "sensitivity",
+            Request::Calibrate { .. } => "calibrate",
+            Request::Batch { .. } => "batch",
+            Request::MonitorOpen { .. } => "monitor_open",
+            Request::MonitorFeed { .. } => "monitor_feed",
+            Request::MonitorStatus { .. } => "monitor_status",
+            Request::Stats { .. } => "stats",
         }
     }
 }
@@ -631,7 +716,8 @@ mod tests {
             w.body.unwrap(),
             Request::MonitorOpen {
                 workflow: WorkflowSel::Video,
-                tol: None
+                tol: None,
+                bands: false,
             }
         );
         // selector defaults to video, like sweep
@@ -661,6 +747,7 @@ mod tests {
                     io: None,
                 },
                 tol: Some(0.05),
+                bands: true,
             },
             Request::MonitorFeed {
                 tsv: Some("a\t1\n".to_string()),
@@ -681,9 +768,94 @@ mod tests {
             r#"{"v": 1, "id": 2, "op": "monitor_feed", "tsv": 7}"#,
             r#"{"v": 1, "id": 3, "op": "monitor_status", "close": "yes"}"#,
             r#"{"v": 1, "id": 4, "op": "monitor_open", "tol": -1}"#,
+            r#"{"v": 1, "id": 5, "op": "monitor_open", "bands": "yes"}"#,
         ] {
             let e = decode_line(line).body.unwrap_err();
             assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+        }
+    }
+
+    #[test]
+    fn sensitivity_and_stats_decode_and_roundtrip() {
+        // selector defaults to video, like sweep
+        let w = decode_line(r#"{"v": 1, "id": 1, "op": "sensitivity"}"#);
+        assert_eq!(
+            w.body.unwrap(),
+            Request::Sensitivity {
+                workflow: WorkflowSel::Video,
+                h: None
+            }
+        );
+        let w = decode_line(
+            r#"{"v": 1, "id": 2, "op": "sensitivity", "workflow": "genomics", "h": 0.001}"#,
+        );
+        assert_eq!(
+            w.body.unwrap(),
+            Request::Sensitivity {
+                workflow: WorkflowSel::Genomics,
+                h: Some(0.001)
+            }
+        );
+        let w = decode_line(r#"{"v": 1, "id": 3, "op": "stats"}"#);
+        assert_eq!(w.body.unwrap(), Request::Stats { mask: false });
+        let w = decode_line(r#"{"v": 1, "id": 4, "op": "stats", "mask": true}"#);
+        assert_eq!(w.body.unwrap(), Request::Stats { mask: true });
+
+        for line in [
+            r#"{"v": 1, "id": 5, "op": "sensitivity", "h": 0}"#,
+            r#"{"v": 1, "id": 6, "op": "sensitivity", "h": "small"}"#,
+            r#"{"v": 1, "id": 7, "op": "stats", "mask": 1}"#,
+        ] {
+            let e = decode_line(line).body.unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line}");
+        }
+
+        for req in [
+            Request::Sensitivity {
+                workflow: WorkflowSel::Genomics,
+                h: Some(0.01),
+            },
+            Request::Sensitivity {
+                workflow: WorkflowSel::Video,
+                h: None,
+            },
+            Request::Stats { mask: true },
+            Request::Stats { mask: false },
+            Request::MonitorOpen {
+                workflow: WorkflowSel::Video,
+                tol: None,
+                bands: true,
+            },
+        ] {
+            let w = decode_value(&encode_request(9, &req));
+            assert_eq!(w.body.unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn op_names_cover_every_request() {
+        let cases: Vec<(Request, &str)> = vec![
+            (Request::Ping, "ping"),
+            (Request::Stats { mask: false }, "stats"),
+            (
+                Request::Sensitivity {
+                    workflow: WorkflowSel::Video,
+                    h: None,
+                },
+                "sensitivity",
+            ),
+            (Request::MonitorStatus { close: false }, "monitor_status"),
+            (
+                Request::Batch {
+                    requests: vec![Request::Ping],
+                },
+                "batch",
+            ),
+        ];
+        for (req, name) in cases {
+            assert_eq!(req.op_name(), name);
+            // op_name always matches the wire encoding's 'op' field
+            assert_eq!(req.to_json().get("op").as_str(), Some(name));
         }
     }
 

@@ -74,6 +74,24 @@ pub struct SweepResult {
     pub cache: Option<CacheStats>,
 }
 
+/// Result of a `stats` op: a point-in-time snapshot of the service's
+/// global counters. With `mask: true` on the request every time-varying
+/// field is zeroed and `ops` is empty, so the bytes are reproducible.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub uptime_secs: f64,
+    /// Live sessions right now (socket transports only).
+    pub sessions_open: u64,
+    /// Sessions accepted since the server started.
+    pub sessions_total: u64,
+    /// Requests currently being handled — the queue-depth proxy.
+    pub inflight: u64,
+    /// Requests shed by admission control (`overloaded` responses).
+    pub overloaded: u64,
+    /// Completed-request totals keyed by wire op name.
+    pub ops: BTreeMap<String, u64>,
+}
+
 /// Result of a `calibrate` op.
 #[derive(Clone, Debug)]
 pub struct CalibrateResult {
@@ -109,10 +127,13 @@ pub enum Response {
     Pong,
     Analyze(AnalyzeResult),
     Sweep(SweepResult),
+    /// A ranked per-knob sensitivity report (`docs/SENSITIVITY.md`).
+    Sensitivity(crate::sense::Report),
     Calibrate(CalibrateResult),
     /// Per-item outcomes of a `batch`, in submission order.
     Batch(Vec<Result<Response, ApiError>>),
     Monitor(MonitorResult),
+    Stats(StatsSnapshot),
 }
 
 fn opt_num(x: Option<f64>) -> Json {
@@ -224,7 +245,7 @@ fn snapshot_json(s: &Snapshot) -> Json {
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("tasks", Json::Num(s.tasks as f64)),
         ("makespan", opt_num(s.makespan)),
         ("now", Json::Num(s.now)),
@@ -236,6 +257,35 @@ fn snapshot_json(s: &Snapshot) -> Json {
         ("ranked", Json::Arr(ranked)),
         ("events", Json::Num(s.solver_events as f64)),
         ("passes", Json::Num(s.passes as f64)),
+    ];
+    // only monitors opened with `bands: true` carry a band — absent here,
+    // the pinned snapshot bytes predating the field stay intact
+    if let Some(b) = &s.band {
+        fields.push((
+            "band",
+            Json::obj(vec![
+                ("lower", Json::Num(b.lower)),
+                ("median", Json::Num(b.median)),
+                ("upper", Json::Num(b.upper)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+fn stats_json(s: &StatsSnapshot) -> Json {
+    let ops: BTreeMap<String, Json> = s
+        .ops
+        .iter()
+        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+        .collect();
+    Json::obj(vec![
+        ("uptime_secs", Json::Num(s.uptime_secs)),
+        ("sessions_open", Json::Num(s.sessions_open as f64)),
+        ("sessions_total", Json::Num(s.sessions_total as f64)),
+        ("inflight", Json::Num(s.inflight as f64)),
+        ("overloaded", Json::Num(s.overloaded as f64)),
+        ("ops", Json::Obj(ops)),
     ])
 }
 
@@ -393,6 +443,20 @@ impl Response {
             Response::Pong => Json::obj(vec![("pong", Json::Bool(true))]),
             Response::Analyze(r) => analyze_json(r),
             Response::Sweep(r) => sweep_json_v1(r),
+            Response::Sensitivity(r) => {
+                // the canonical report plus cache bookkeeping as a sibling
+                // key, mirroring sweep_json_v1 (the report's own bytes stay
+                // thread-count-independent)
+                match r.to_json() {
+                    Json::Obj(mut m) => {
+                        if let Some(s) = &r.cache {
+                            m.insert("cache".to_string(), cache_json(s));
+                        }
+                        Json::Obj(m)
+                    }
+                    other => other, // unreachable: reports encode as objects
+                }
+            }
             Response::Calibrate(r) => calibrate_json(r),
             Response::Batch(items) => {
                 let results: Vec<Json> = items
@@ -411,6 +475,7 @@ impl Response {
                 Json::obj(vec![("results", Json::Arr(results))])
             }
             Response::Monitor(r) => monitor_json(r),
+            Response::Stats(s) => stats_json(s),
         }
     }
 
@@ -550,6 +615,58 @@ mod tests {
                 r#"{"id":3,"ok":true,"result":{"monitor":{"advisories":0,"cache":"#,
                 r#"{"bytes":0,"entries":0,"evictions":0,"hit_rate":0,"hits":0,"misses":0},"#,
                 r#""closed":true,"events":1,"label":"video","pending_series":0,"tasks":0}},"v":1}"#
+            )
+        );
+    }
+
+    /// The masked `stats` payload is byte-exact (the conformance corpus
+    /// pins it), and a banded snapshot encodes its band under sorted keys.
+    #[test]
+    fn stats_and_banded_snapshot_are_byte_deterministic() {
+        let masked = encode_v1(Some(9), &Ok(Response::Stats(StatsSnapshot::default())));
+        assert_eq!(
+            masked.to_string(),
+            concat!(
+                r#"{"id":9,"ok":true,"result":{"inflight":0,"ops":{},"overloaded":0,"#,
+                r#""sessions_open":0,"sessions_total":0,"uptime_secs":0},"v":1}"#
+            )
+        );
+        let mut ops = BTreeMap::new();
+        ops.insert("ping".to_string(), 2u64);
+        ops.insert("sweep".to_string(), 1u64);
+        let live = Response::Stats(StatsSnapshot {
+            uptime_secs: 1.5,
+            sessions_open: 1,
+            sessions_total: 3,
+            inflight: 1,
+            overloaded: 0,
+            ops,
+        });
+        let j = encode_v1(Some(10), &Ok(live)).to_string();
+        assert!(j.contains(r#""ops":{"ping":2,"sweep":1}"#), "{j}");
+        assert!(j.contains(r#""uptime_secs":1.5"#), "{j}");
+
+        let snap = Snapshot {
+            tasks: 1,
+            makespan: Some(23.0),
+            now: 23.0,
+            remaining: Some(0.0),
+            bottleneck: None,
+            ranked: vec![],
+            solver_events: 4,
+            passes: 2,
+            band: Some(crate::sense::Band {
+                lower: 21.5,
+                median: 23.0,
+                upper: 25.0,
+            }),
+        };
+        assert_eq!(
+            snapshot_json(&snap).to_string(),
+            concat!(
+                r#"{"band":{"lower":21.5,"median":23,"upper":25},"bottleneck":null,"#,
+                r#""events":4,"makespan":23,"now":23,"passes":2,"ranked":[],"#,
+                r#""remaining":0,"tasks":1}"#
             )
         );
     }

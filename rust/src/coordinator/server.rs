@@ -31,7 +31,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::ApiHandler;
+use crate::api::{ApiHandler, ServiceStats};
 use crate::runtime::cache::AnalysisCache;
 use crate::util::par::num_threads;
 
@@ -82,6 +82,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     listeners: Vec<JoinHandle<()>>,
     sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// One shared counter block for every session — any session's `stats`
+    /// op reports whole-server traffic (`docs/SERVICE.md`, "stats").
+    stats: Arc<ServiceStats>,
 }
 
 impl Server {
@@ -101,14 +104,21 @@ impl Server {
             stop: Arc::new(AtomicBool::new(false)),
             listeners: Vec::new(),
             sessions: Arc::new(Mutex::new(Vec::new())),
+            stats: Arc::new(ServiceStats::new()),
         }
     }
 
     /// A handler for one additional session (its own quota-bounded cache)
     /// multiplexed onto the shared pool — how the CLI runs its stdio
-    /// session next to the socket listeners.
+    /// session next to the socket listeners. Shares the server's global
+    /// [`ServiceStats`], but does not count in the session gauges (those
+    /// track socket connections).
     pub fn session_handler(&self) -> ApiHandler {
-        ApiHandler::for_session(Arc::clone(&self.pool), self.opts.session_cache())
+        ApiHandler::for_session_with_stats(
+            Arc::clone(&self.pool),
+            self.opts.session_cache(),
+            Arc::clone(&self.stats),
+        )
     }
 
     /// Bind a TCP listener (e.g. `"127.0.0.1:4700"`, or port `0` to let
@@ -122,15 +132,23 @@ impl Server {
         let sessions = Arc::clone(&self.sessions);
         let pool = Arc::clone(&self.pool);
         let opts = self.opts.clone();
+        let stats = Arc::clone(&self.stats);
         self.listeners.push(std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let handler =
-                            ApiHandler::for_session(Arc::clone(&pool), opts.session_cache());
+                        let handler = ApiHandler::for_session_with_stats(
+                            Arc::clone(&pool),
+                            opts.session_cache(),
+                            Arc::clone(&stats),
+                        );
                         let stop = Arc::clone(&stop);
-                        let h =
-                            std::thread::spawn(move || serve_tcp_session(handler, stream, stop));
+                        let stats = Arc::clone(&stats);
+                        stats.session_opened();
+                        let h = std::thread::spawn(move || {
+                            serve_tcp_session(handler, stream, stop);
+                            stats.session_closed();
+                        });
                         register_session(&sessions, h);
                     }
                     // WouldBlock (nothing to accept yet) and transient
@@ -153,15 +171,23 @@ impl Server {
         let sessions = Arc::clone(&self.sessions);
         let pool = Arc::clone(&self.pool);
         let opts = self.opts.clone();
+        let stats = Arc::clone(&self.stats);
         self.listeners.push(std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let handler =
-                            ApiHandler::for_session(Arc::clone(&pool), opts.session_cache());
+                        let handler = ApiHandler::for_session_with_stats(
+                            Arc::clone(&pool),
+                            opts.session_cache(),
+                            Arc::clone(&stats),
+                        );
                         let stop = Arc::clone(&stop);
-                        let h =
-                            std::thread::spawn(move || serve_unix_session(handler, stream, stop));
+                        let stats = Arc::clone(&stats);
+                        stats.session_opened();
+                        let h = std::thread::spawn(move || {
+                            serve_unix_session(handler, stream, stop);
+                            stats.session_closed();
+                        });
                         register_session(&sessions, h);
                     }
                     Err(_) => std::thread::sleep(POLL_INTERVAL),
@@ -299,6 +325,51 @@ mod tests {
         assert_eq!(o.queue_bound, DEFAULT_QUEUE_BOUND);
         assert!(o.session_cache_entries >= 1);
         assert!(o.session_cache_bytes >= 1 << 20);
+    }
+
+    /// Every session handler shares one counter block: traffic sent
+    /// through one session is visible to a `stats` query from another.
+    #[test]
+    fn stats_are_shared_across_sessions() {
+        use crate::api::{Request, Response};
+        let server = Server::new(ServeOpts {
+            threads: 1,
+            ..ServeOpts::default()
+        });
+        let first = server.session_handler();
+        first.handle(&Request::Ping).unwrap();
+        first.handle(&Request::Ping).unwrap();
+        let second = server.session_handler();
+        match second.handle(&Request::Stats { mask: false }).unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.ops.get("ping"), Some(&2));
+                // stdio-style handlers do not move the socket gauges
+                assert_eq!(s.sessions_open, 0);
+                assert_eq!(s.sessions_total, 0);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    /// A socket connection counts in the session gauges, and a `stats`
+    /// request over the wire reports it.
+    #[test]
+    fn tcp_sessions_count_in_stats() {
+        let mut server = Server::new(ServeOpts {
+            threads: 1,
+            ..ServeOpts::default()
+        });
+        let addr = server.listen_tcp("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, r#"{{"v": 1, "id": 1, "op": "stats"}}"#).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains(r#""sessions_open":1"#), "line: {line}");
+        assert!(line.contains(r#""sessions_total":1"#), "line: {line}");
+        drop(reader);
+        drop(client);
+        server.shutdown();
     }
 
     /// The session pump honors the drain flag even while a client holds

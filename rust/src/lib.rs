@@ -13,6 +13,7 @@ pub mod model;
 pub mod pwfn;
 pub mod runtime;
 pub mod sched;
+pub mod sense;
 pub mod solver;
 pub mod trace;
 pub mod workflow;

@@ -104,6 +104,11 @@ pub struct MonitorOpts {
     /// Candidate fractions swept per advisory (see
     /// [`crate::sched::advisor::candidate_fractions`]).
     pub advisor_points: usize,
+    /// Attach a calibration-residual confidence band
+    /// ([`crate::sense::confidence_band`]) to every snapshot. Off by
+    /// default: the extra lower/upper solves only run when asked for, so
+    /// band-free monitors keep their exact cold-start cache accounting.
+    pub bands: bool,
 }
 
 impl Default for MonitorOpts {
@@ -113,6 +118,7 @@ impl Default for MonitorOpts {
             solver: SolverOpts::default(),
             passes: 8,
             advisor_points: 20,
+            bands: false,
         }
     }
 }
@@ -150,6 +156,10 @@ pub struct Snapshot {
     pub solver_events: usize,
     /// Fixpoint passes the analysis took.
     pub passes: usize,
+    /// Confidence band on the predicted makespan, from the per-task
+    /// calibration residuals (prediction vs observation). Present only on
+    /// monitors opened with [`MonitorOpts::bands`].
+    pub band: Option<crate::sense::Band>,
 }
 
 /// A re-allocation advisory, emitted when the live bottleneck shifts.
@@ -646,6 +656,36 @@ impl Monitor {
                 .then_with(|| a.bottleneck.cmp(&b.bottleneck))
         });
 
+        // per-task calibration residuals — how far the fitted model's
+        // finish is from the observed completion, relative — propagated
+        // into a lower/median/upper makespan band through the same cache
+        let band = if self.opts.bands {
+            let residuals: Vec<f64> = cal
+                .tasks
+                .iter()
+                .zip(&wa.analyses)
+                .map(|(t, a)| {
+                    match (trace.task(&t.id).and_then(|row| row.complete), a.finish_time) {
+                        (Some(obs), Some(pred)) if obs > 1e-9 => ((pred - obs) / obs).abs(),
+                        _ => 0.0,
+                    }
+                })
+                .collect();
+            crate::sense::confidence_band(
+                &cal.workflow,
+                &residuals,
+                wa.makespan,
+                &self.opts.solver,
+                self.opts.passes,
+                Some(&self.cache),
+                0,
+            )
+            .ok()
+            .map(|r| r.band)
+        } else {
+            None
+        };
+
         Snapshot {
             tasks: trace.tasks.len(),
             makespan: wa.makespan,
@@ -659,6 +699,7 @@ impl Monitor {
             ranked,
             solver_events: wa.events,
             passes: wa.passes,
+            band,
         }
     }
 
@@ -915,5 +956,37 @@ mod tests {
         let st = m.status();
         assert_eq!(st.events, 1);
         assert_eq!(st.tasks, 3);
+    }
+
+    /// With `bands: true` every snapshot carries a confidence band
+    /// bracketing the predicted makespan; the default monitor stays
+    /// band-free (and pays no extra solves).
+    #[test]
+    fn banded_monitor_brackets_the_prediction() {
+        let all = format!("{HEADER}\n{DL}\n{ENC}\n{MUX}\n");
+        let mut plain = Monitor::new("t", None, MonitorOpts::default());
+        let rep = plain.feed(Some(&all), None).unwrap();
+        assert!(rep.snapshot.unwrap().band.is_none());
+
+        let opts = MonitorOpts {
+            bands: true,
+            ..MonitorOpts::default()
+        };
+        let mut m = Monitor::new("t", None, opts);
+        let rep = m.feed(Some(&all), None).unwrap();
+        let snap = rep.snapshot.unwrap();
+        let band = snap.band.expect("bands requested");
+        assert!(
+            band.lower <= band.median && band.median <= band.upper,
+            "{band:?}"
+        );
+        assert_eq!(
+            band.median.to_bits(),
+            snap.makespan.unwrap().to_bits(),
+            "median is the point prediction"
+        );
+        // the banded monitor's prediction itself is untouched
+        let cold = plain.snapshot().unwrap().makespan.unwrap();
+        assert_eq!(snap.makespan.unwrap().to_bits(), cold.to_bits());
     }
 }

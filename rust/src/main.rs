@@ -17,11 +17,17 @@
 //!                                 + content fingerprint (docs/SCALING.md)
 //!   export-figures <dir>          regenerate every figure's data as JSON
 //!   advisor                       recommend the link split (paper headline)
+//!   sensitivity                   ranked per-knob makespan sensitivity
+//!     [--workflow video|genomics] report with a confidence band: which
+//!     [--spec <spec.json>]        parameter to fix first, and how sure the
+//!     [--trace <trace.tsv>]       model is (docs/SENSITIVITY.md)
+//!     [--io <series.log>] [--h <step>]
 //!   online-demo                   online re-analysis controller demo
 //!   watch <trace.tsv>             live monitor: stream the trace row by row
 //!     [--io <series.log>]         through a monitor session, one JSON line
 //!     [--follow] [--interval <s>] per event; --follow tails file growth
-//!     [--tol <t>]                 (docs/LIVE.md)
+//!     [--tol <t>] [--bands]       (docs/LIVE.md); --bands adds confidence
+//!                                 bands to every snapshot
 //!   serve [--tcp <host:port>]     JSON-lines analysis service; stdio by
 //!     [--unix <path>] [--no-stdio] default, optionally a multi-session
 //!     [--threads <n>] [--queue <n>] socket server with bounded admission
@@ -60,6 +66,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(rest),
         "export-figures" => cmd_export(rest),
         "advisor" => cmd_advisor(),
+        "sensitivity" => cmd_sensitivity(rest),
         "online-demo" => cmd_online(),
         "watch" => cmd_watch(rest),
         "serve" => cmd_serve(rest),
@@ -87,10 +94,12 @@ fn print_help() {
     println!(
         "bottlemod — fast bottleneck analysis for scientific workflows\n\
          usage: bottlemod <analyze|calibrate|sweep|measure|compare-des|generate|\
-         export-figures|advisor|online-demo|watch|serve|artifacts> [args]\n\
+         export-figures|advisor|sensitivity|online-demo|watch|serve|artifacts> [args]\n\
          calibrate: bottlemod calibrate <trace.tsv> [--io <series.log>] [--tol <t>]\n\
+         sensitivity: bottlemod sensitivity [--workflow video|genomics] [--spec <spec.json>]\n\
+         \x20      [--trace <trace.tsv>] [--io <series.log>] [--h <step>]\n\
          watch: bottlemod watch <trace.tsv> [--io <series.log>] [--follow]\n\
-         \x20      [--interval <secs>] [--tol <t>]\n\
+         \x20      [--interval <secs>] [--tol <t>] [--bands]\n\
          generate: bottlemod generate [--shape layered|scatter-gather|fan-in|chain|\
          genomics] [--seed <n>] [--nodes <n>] [--budget <pieces>]\n\
          sweep: bottlemod sweep [N] [--workflow video|genomics] [--pjrt]\n\
@@ -596,6 +605,152 @@ fn cmd_advisor() -> Result<()> {
     Ok(())
 }
 
+/// `bottlemod sensitivity` runs the `sensitivity` API op
+/// (docs/SENSITIVITY.md) against a built-in scenario, an inline spec, or a
+/// trace-calibrated model, and prints the ranked fix-this-first table plus
+/// the makespan confidence band.
+fn cmd_sensitivity(args: &[String]) -> Result<()> {
+    let usage = "usage: bottlemod sensitivity [--workflow video|genomics] [--spec <spec.json>] \
+                 [--trace <trace.tsv>] [--io <series.log>] [--h <step>]";
+    let mut workflow: Option<WorkflowSel> = None;
+    let mut spec_path: Option<&String> = None;
+    let mut trace_path: Option<&String> = None;
+    let mut io_path: Option<&String> = None;
+    let mut h: Option<f64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--workflow" => {
+                workflow = match args.get(i + 1).map(String::as_str) {
+                    Some("video") => Some(WorkflowSel::Video),
+                    Some("genomics") => Some(WorkflowSel::Genomics),
+                    other => {
+                        return Err(Error::msg(format!(
+                            "--workflow needs 'video' or 'genomics', got {other:?}\n{usage}"
+                        )))
+                    }
+                };
+                i += 2;
+            }
+            "--spec" => {
+                spec_path = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--spec needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--trace" => {
+                trace_path = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--trace needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--io" => {
+                io_path = Some(
+                    args.get(i + 1)
+                        .ok_or_else(|| Error::msg(format!("--io needs a path\n{usage}")))?,
+                );
+                i += 2;
+            }
+            "--h" => {
+                h = Some(
+                    args.get(i + 1)
+                        .and_then(|a| a.parse::<f64>().ok())
+                        .filter(|v| v.is_finite() && *v > 0.0)
+                        .ok_or_else(|| {
+                            Error::msg(format!("--h needs a positive number\n{usage}"))
+                        })?,
+                );
+                i += 2;
+            }
+            other => return Err(Error::msg(format!("unknown flag '{other}'\n{usage}"))),
+        }
+    }
+    let sel = match (spec_path, trace_path) {
+        (Some(_), Some(_)) => {
+            return Err(Error::msg(format!("--spec and --trace are exclusive\n{usage}")))
+        }
+        (Some(p), None) => WorkflowSel::Spec(std::fs::read_to_string(p)?),
+        (None, Some(p)) => WorkflowSel::Trace {
+            tsv: std::fs::read_to_string(p)?,
+            io: match io_path {
+                Some(q) => Some(std::fs::read_to_string(q)?),
+                None => None,
+            },
+        },
+        (None, None) => workflow.unwrap_or(WorkflowSel::Video),
+    };
+
+    let t0 = std::time::Instant::now();
+    let rep = match ApiHandler::new().handle(&Request::Sensitivity { workflow: sel, h })? {
+        Response::Sensitivity(r) => r,
+        other => return Err(Error::msg(format!("unexpected response {other:?}"))),
+    };
+    let dt = t0.elapsed().as_secs_f64();
+
+    let fmt_opt = |x: Option<f64>| x.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into());
+    let mut rows = vec![vec![
+        "#".to_string(),
+        "knob".to_string(),
+        "d makespan/d knob".to_string(),
+        "closed form".to_string(),
+        "gain/unit (s)".to_string(),
+        "direction".to_string(),
+        "uncertainty".to_string(),
+        "notes".to_string(),
+    ]];
+    for (rank, k) in rep.knobs.iter().enumerate() {
+        let mut notes: Vec<&str> = Vec::new();
+        if k.insensitive {
+            notes.push("insensitive");
+        }
+        if k.non_smooth {
+            notes.push("non-smooth");
+        }
+        let notes = if notes.is_empty() {
+            k.attribution
+                .first()
+                .map(|a| format!("{} <- {}", a.process, a.bottleneck))
+                .unwrap_or_default()
+        } else {
+            notes.join(", ")
+        };
+        rows.push(vec![
+            format!("{}", rank + 1),
+            k.kind.to_string(),
+            fmt_opt(k.derivative),
+            fmt_opt(k.closed_form),
+            format!("{:.4}", k.gain_per_unit),
+            k.direction.to_string(),
+            format!("{:.4}", k.uncertainty),
+            notes,
+        ]);
+    }
+    print!("{}", ascii_table(&rows));
+    println!(
+        "workflow '{}': makespan {:.2} s, band [{:.2}, {:.2}]{}",
+        rep.workflow,
+        rep.makespan,
+        rep.band.lower,
+        rep.band.upper,
+        if rep.band.is_point() {
+            " (point estimate: no calibration residuals)"
+        } else {
+            ""
+        }
+    );
+    println!(
+        "sensitivity analysis: {} ({} solver events)",
+        fmt_duration(dt),
+        rep.events
+    );
+    if let Some(stats) = &rep.cache {
+        println!("analysis cache: {stats}");
+    }
+    Ok(())
+}
+
 fn cmd_online() -> Result<()> {
     let sc = VideoScenario::default();
     let static_fair = sched::run_online(&sc, 1e9, &[0.5]);
@@ -625,10 +780,11 @@ fn cmd_online() -> Result<()> {
 /// closed with a final `monitor_status` once the files are drained.
 fn cmd_watch(args: &[String]) -> Result<()> {
     let usage = "usage: bottlemod watch <trace.tsv> [--io <series.log>] [--follow] \
-                 [--interval <secs>] [--tol <t>]";
+                 [--interval <secs>] [--tol <t>] [--bands]";
     let mut tsv_path: Option<&String> = None;
     let mut io_path: Option<&String> = None;
     let mut follow = false;
+    let mut bands = false;
     let mut interval = 1.0f64;
     let mut tol: Option<f64> = None;
     let mut i = 0;
@@ -643,6 +799,10 @@ fn cmd_watch(args: &[String]) -> Result<()> {
             }
             "--follow" => {
                 follow = true;
+                i += 1;
+            }
+            "--bands" => {
+                bands = true;
                 i += 1;
             }
             "--interval" => {
@@ -720,6 +880,7 @@ fn cmd_watch(args: &[String]) -> Result<()> {
             io: None,
         },
         tol,
+        bands,
     });
     if !opened {
         return Err(Error::msg("monitor_open failed"));

@@ -134,10 +134,15 @@ impl SweepModel for GenomicsScenario {
 }
 
 /// A [`SweepModel`] over one fixed, prebuilt workflow — inline specs and
-/// trace-calibrated models, which expose no scenario knobs. Only
-/// [`Perturbation::Identity`] applies; a batch of identities turns the
-/// sweep engine into a cached analyzer that still produces the ranked
-/// bottleneck report.
+/// trace-calibrated models, which expose no scenario-specific knobs.
+/// [`Perturbation::Identity`] and the two *generic* scale knobs apply:
+/// `link_rate_scale` multiplies every shared pool's capacity and
+/// `cpu_scale` multiplies every node's resource-requirement functions
+/// (cost curves) — both well-defined on any workflow, which makes fixed
+/// models first-class citizens of the sensitivity layer (`crate::sense`).
+/// Everything else (fractions, per-task video knobs) is a typed
+/// `Unsupported` error. A batch of identities turns the sweep engine into
+/// a cached analyzer that still produces the ranked bottleneck report.
 pub struct FixedWorkflow {
     label: String,
     wf: Workflow,
@@ -164,8 +169,25 @@ impl SweepModel for FixedWorkflow {
     fn build_perturbed(&self, p: &Perturbation) -> Result<Workflow, String> {
         match p {
             Perturbation::Identity => Ok(self.wf.clone()),
+            Perturbation::LinkRateScale(s) => {
+                let mut wf = self.wf.clone();
+                for pool in &mut wf.pools {
+                    pool.capacity = pool.capacity.scale(*s);
+                }
+                Ok(wf)
+            }
+            Perturbation::CpuScale(s) => {
+                let mut wf = self.wf.clone();
+                for node in &mut wf.nodes {
+                    for r in &mut node.process.res_reqs {
+                        r.func = r.func.scale(*s);
+                    }
+                }
+                Ok(wf)
+            }
             other => Err(format!(
-                "workflow '{}' is a fixed model: only the 'identity' perturbation applies (got '{}')",
+                "workflow '{}' is a fixed model: only the 'identity', 'link_rate_scale' and \
+                 'cpu_scale' perturbations apply (got '{}')",
                 self.label,
                 other.kind()
             )),
@@ -737,6 +759,30 @@ mod tests {
         assert!(stats.hits > 0, "second identity must hit: {stats}");
         let err = engine.run(&[P::Fraction(0.5)]).unwrap_err();
         assert!(matches!(err, SweepError::Unsupported(_)), "{err:?}");
+    }
+
+    /// Fixed workflows expose the generic scale knobs: pool capacity up
+    /// ⇒ faster, resource cost up ⇒ slower, and the identity point of
+    /// each knob is bit-identical to the identity perturbation.
+    #[test]
+    fn fixed_workflow_generic_scale_knobs() {
+        let (wf, _) = VideoScenario::default().build();
+        let base: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("spec", wf));
+        let engine = SweepBatch::over(base).with_threads(1).with_new_cache();
+        let out = engine
+            .run(&[
+                P::Identity,
+                P::LinkRateScale(2.0),
+                P::CpuScale(2.0),
+                P::LinkRateScale(1.0),
+                P::CpuScale(1.0),
+            ])
+            .unwrap();
+        let mk = |i: usize| out[i].makespan.unwrap();
+        assert!(mk(1) < 0.75 * mk(0), "faster link: {} vs {}", mk(1), mk(0));
+        assert!(mk(2) > mk(0) + 40.0, "doubled cost: {} vs {}", mk(2), mk(0));
+        assert_eq!(mk(3).to_bits(), mk(0).to_bits());
+        assert_eq!(mk(4).to_bits(), mk(0).to_bits());
     }
 
     /// Attribution durations of one scenario sum to (roughly) the busy

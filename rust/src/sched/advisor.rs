@@ -1,17 +1,22 @@
 //! Allocation advisor: pick the resource split that minimizes the predicted
 //! makespan (the paper's "comparison of different scheduling options").
 //!
-//! Two entry points: [`recommend`] is the historical video-scenario path
-//! (exact sweep over the Fig 7 fraction grid), and [`recommend_model`] is
-//! its generalization over any [`SweepModel`] — the live monitor calls it
-//! whenever the observed bottleneck shifts, turning the shift into a
-//! candidate-split → predicted-gain advisory for whatever workload is
-//! being monitored.
+//! Three entry points, oldest to newest: [`recommend`] is the historical
+//! video-scenario path (exact sweep over the Fig 7 fraction grid);
+//! [`recommend_model`] generalizes it over any [`SweepModel`] but still
+//! hard-codes *which* knob to search (the link fraction) — the live
+//! monitor calls it whenever the observed bottleneck shifts; and
+//! [`recommend_from_report`] consumes a ranked sensitivity report
+//! (`crate::sense`) to pick the highest-gain actionable knob *first* and
+//! only then line-search its candidate grid — fraction-less models (fixed
+//! specs, calibrated traces) get real advice through their generic scale
+//! knobs instead of `None`.
 
 use std::sync::Arc;
 
 use crate::runtime::cache::AnalysisCache;
 use crate::runtime::sweep::{SweepBatch, SweepError, SweepModel};
+use crate::sense::{Report, SenseOpts};
 use crate::workflow::scenario::{Perturbation, VideoScenario};
 
 use crate::coordinator::sweeper::{best_fraction, exact_sweep, fig7_fractions};
@@ -142,10 +147,123 @@ pub fn recommend_model(
     }))
 }
 
+/// A recommendation on an arbitrary knob — the ranking-driven
+/// generalization of [`Recommendation`].
+#[derive(Clone, Debug)]
+pub struct KnobRecommendation {
+    /// The perturbation kind the advisor searched (`"fraction"`,
+    /// `"link_rate_scale"`, ...).
+    pub kind: &'static str,
+    /// The best candidate value of that knob.
+    pub best_value: f64,
+    pub best_total: f64,
+    /// Predicted total under the model's identity configuration.
+    pub baseline_total: f64,
+    /// Relative improvement over the baseline.
+    pub gain: f64,
+}
+
+/// Candidate grid for the generic scale knobs: log-spaced over
+/// `[1/4, 4]`, odd-sized so the identity point `1.0` is always a
+/// candidate (the baseline anchor the gain is measured against).
+fn scale_candidates(points: usize) -> Vec<f64> {
+    let n = points.max(3) | 1;
+    (0..n)
+        .map(|i| 0.25 * 16f64.powf(i as f64 / (n - 1) as f64))
+        .collect()
+}
+
+/// Pick the first actionable knob of a ranked sensitivity report and
+/// line-search its candidate grid: fractions sweep the Fig 7 grid
+/// ([`candidate_fractions`]), scale knobs a log-spaced `[1/4, 4]` grid.
+/// Knobs marked `insensitive` (or without a stencil derivative) are
+/// skipped; a knob whose grid yields no improvement falls through to the
+/// next-ranked one. `Ok(None)` means the report has no knob that moves
+/// the makespan — an honest "nothing to fix here".
+pub fn recommend_from_report(
+    model: &Arc<dyn SweepModel>,
+    report: &Report,
+    points: usize,
+    threads: usize,
+    cache: Option<Arc<AnalysisCache>>,
+) -> Result<Option<KnobRecommendation>, SweepError> {
+    for knob in &report.knobs {
+        if knob.insensitive || knob.derivative.is_none() {
+            continue;
+        }
+        let values: Vec<f64> = if knob.kind == "fraction" {
+            candidate_fractions(points).to_vec()
+        } else {
+            scale_candidates(points)
+        };
+        let mut perts: Vec<Perturbation> = Vec::with_capacity(values.len() + 1);
+        perts.push(Perturbation::Identity);
+        for &v in &values {
+            match Perturbation::with_value(knob.kind, v) {
+                Some(p) => perts.push(p),
+                None => break,
+            }
+        }
+        if perts.len() != values.len() + 1 {
+            continue; // unknown kind in a foreign report: skip it
+        }
+        let mut batch = SweepBatch::over(Arc::clone(model)).with_threads(threads);
+        if let Some(c) = cache.as_ref() {
+            batch = batch.with_cache(Arc::clone(c));
+        }
+        let outcomes = match batch.run(&perts) {
+            Ok(o) => o,
+            // the report was built against a different vocabulary
+            Err(SweepError::Unsupported(_)) => continue,
+            Err(e) => return Err(e),
+        };
+        let baseline = outcomes[0].makespan.unwrap_or(f64::INFINITY);
+        let best = outcomes[1..]
+            .iter()
+            .zip(values.iter())
+            .map(|(o, &v)| (v, o.makespan.unwrap_or(f64::INFINITY)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.total_cmp(&b.0)));
+        let Some((best_v, best_t)) = best else { continue };
+        if !best_t.is_finite() || !baseline.is_finite() {
+            continue;
+        }
+        let gain = 1.0 - best_t / baseline;
+        if gain <= 1e-6 {
+            continue; // ranked high but flat across the grid: next knob
+        }
+        return Ok(Some(KnobRecommendation {
+            kind: knob.kind,
+            best_value: best_v,
+            best_total: best_t,
+            baseline_total: baseline,
+            gain,
+        }));
+    }
+    Ok(None)
+}
+
+/// Convenience wrapper: build the sensitivity report for `model` (no
+/// residuals) and feed it to [`recommend_from_report`].
+pub fn recommend_ranked(
+    model: &Arc<dyn SweepModel>,
+    points: usize,
+    threads: usize,
+    cache: Option<Arc<AnalysisCache>>,
+) -> Result<Option<KnobRecommendation>, SweepError> {
+    let opts = SenseOpts {
+        threads,
+        cache: cache.clone(),
+        ..SenseOpts::default()
+    };
+    let report = crate::sense::analyze(model, &[], &opts)?;
+    recommend_from_report(model, &report, points, threads, cache)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::sweep::FixedWorkflow;
+    use crate::sense::{Band, KnobReport};
     use crate::workflow::scenario::GenomicsScenario;
 
     #[test]
@@ -225,5 +343,129 @@ mod tests {
         assert_eq!(cold.best_total, warm1.best_total);
         assert_eq!(warm1.best_total, warm2.best_total);
         assert!(cache.stats().hits > 0, "repeat advisory must hit the cache");
+    }
+
+    /// The scale grid always contains the identity anchor and stays
+    /// inside the documented `[1/4, 4]` envelope.
+    #[test]
+    fn scale_candidates_contain_identity() {
+        for n in [1, 3, 4, 10, 33] {
+            let c = scale_candidates(n);
+            assert!(c.len() % 2 == 1, "n={n}: grid must be odd-sized");
+            assert!(c.len() >= n, "n={n}");
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "n={n}: not sorted");
+            assert!((c[0] - 0.25).abs() < 1e-12 && (c[c.len() - 1] - 4.0).abs() < 1e-12);
+            assert!(
+                c.iter().any(|&v| (v - 1.0).abs() < 1e-12),
+                "n={n}: identity missing from {c:?}"
+            );
+        }
+    }
+
+    /// The ranking-driven advisor on the video scenario follows the
+    /// report's top knob (input size dominates the makespan gradient) and
+    /// finds the large win of shrinking the input.
+    #[test]
+    fn recommend_ranked_video_follows_top_knob() {
+        let model: Arc<dyn SweepModel> = Arc::new(VideoScenario::default());
+        let rec = recommend_ranked(&model, 9, 2, None).unwrap().unwrap();
+        assert_eq!(rec.kind, "input_scale", "{rec:?}");
+        assert!(rec.best_value < 1.0, "{rec:?}");
+        assert!(rec.gain > 0.5, "{rec:?}");
+        assert!(rec.best_total < rec.baseline_total);
+    }
+
+    /// Fraction-less models get real advice through their generic scale
+    /// knobs — exactly where [`recommend_model`] gives up with `None`.
+    #[test]
+    fn recommend_ranked_advises_fixed_workflows() {
+        let (wf, _) = VideoScenario::default().build();
+        let model: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("trace", wf));
+        assert!(recommend_model(&model, 9, 1, None).unwrap().is_none());
+        let rec = recommend_ranked(&model, 9, 1, None).unwrap().unwrap();
+        assert!(
+            rec.kind == "link_rate_scale" || rec.kind == "cpu_scale",
+            "{rec:?}"
+        );
+        assert!(rec.gain > 0.2, "{rec:?}");
+        assert!(rec.best_value > 1.0, "scaling a resource up must be the win: {rec:?}");
+    }
+
+    /// A report whose only actionable knob is the fraction routes through
+    /// the Fig 7 fraction grid and reproduces the headline recommendation.
+    #[test]
+    fn report_fraction_knob_uses_fraction_grid() {
+        let report = Report {
+            workflow: "video".into(),
+            makespan: 263.0,
+            band: Band {
+                lower: 263.0,
+                median: 263.0,
+                upper: 263.0,
+            },
+            knobs: vec![KnobReport {
+                kind: "fraction",
+                base: Some(0.5),
+                derivative: Some(-95.0),
+                closed_form: None,
+                delta: None,
+                gain_per_unit: 95.0,
+                uncertainty: 0.0,
+                direction: "decrease",
+                insensitive: false,
+                non_smooth: true,
+                attribution: Vec::new(),
+            }],
+            events: 0,
+            band_samples: Vec::new(),
+            cache: None,
+        };
+        let model: Arc<dyn SweepModel> = Arc::new(VideoScenario::default());
+        let rec = recommend_from_report(&model, &report, 50, 2, None)
+            .unwrap()
+            .unwrap();
+        assert_eq!(rec.kind, "fraction");
+        assert!(rec.best_value >= 0.85, "{rec:?}");
+        assert!((0.25..0.40).contains(&rec.gain), "{rec:?}");
+    }
+
+    /// Insensitive and unknown knobs are skipped; a report with nothing
+    /// actionable yields an honest `None`.
+    #[test]
+    fn report_without_actionable_knobs_yields_none() {
+        let dud = |kind: &'static str, insensitive: bool, derivative: Option<f64>| KnobReport {
+            kind,
+            base: Some(1.0),
+            derivative,
+            closed_form: None,
+            delta: None,
+            gain_per_unit: 0.0,
+            uncertainty: 0.0,
+            direction: "none",
+            insensitive,
+            non_smooth: false,
+            attribution: Vec::new(),
+        };
+        let report = Report {
+            workflow: "video".into(),
+            makespan: 263.0,
+            band: Band {
+                lower: 263.0,
+                median: 263.0,
+                upper: 263.0,
+            },
+            knobs: vec![
+                dud("task2_time_scale", true, Some(0.0)),
+                dud("warp_speed", false, Some(1.0)),
+                dud("cpu_scale", false, None),
+            ],
+            events: 0,
+            band_samples: Vec::new(),
+            cache: None,
+        };
+        let model: Arc<dyn SweepModel> = Arc::new(VideoScenario::default());
+        assert!(recommend_from_report(&model, &report, 9, 1, None)
+            .unwrap()
+            .is_none());
     }
 }

@@ -4,7 +4,10 @@
 pub mod advisor;
 pub mod online;
 
-pub use advisor::{candidate_fractions, recommend, recommend_model, Recommendation};
+pub use advisor::{
+    candidate_fractions, recommend, recommend_from_report, recommend_model, recommend_ranked,
+    KnobRecommendation, Recommendation,
+};
 pub use online::{
     frontier_bottleneck, live_bottleneck, predict_remaining, run_online, BottleneckShift,
     Decision, LiveState, LiveTracker, OnlineResult,

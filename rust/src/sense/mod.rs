@@ -1,0 +1,878 @@
+//! Sensitivity & uncertainty over the sweep engine (docs/SENSITIVITY.md).
+//!
+//! The paper's payoff is that the piecewise bottleneck function "can be
+//! used as a basis for optimized resource allocation" — but a point
+//! prediction alone does not tell an allocator *which* knob to turn, by
+//! how much, or how far to trust the number. This module turns the
+//! perturbation/sweep machinery into that missing layer. Three pillars:
+//!
+//! 1. **Per-knob sensitivities** ([`analyze`]): for every applicable
+//!    [`Perturbation`] kind of a [`SweepModel`], the makespan gradient
+//!    `∂T/∂knob` from a central finite-difference stencil at the model's
+//!    base point, routed through one [`SweepBatch`] so the shared
+//!    [`AnalysisCache`] serves every stencil point's clean cone. Where the
+//!    piecewise algebra allows it, a **closed-form** derivative rides
+//!    along: within one segment of the piecewise solution the makespan is
+//!    an analytic function of the knob (affine `T = α + β·s` for
+//!    work-scale knobs, hyperbolic `T = α + W/(r·s)` for rate/capacity
+//!    knobs), so the active segment's local model is recovered from the
+//!    stencil solves and differentiated analytically. The two estimates
+//!    cross-check each other; their midpoint residual flags "non-smooth
+//!    here (segment boundary)" honestly instead of averaging over a kink.
+//! 2. **Confidence bands** ([`confidence_band`]): per-task calibration
+//!    residuals (the replay validator's relative errors, or the live
+//!    monitor's refit deltas) are propagated into lower/median/upper
+//!    completion-time bands by re-solving at residual-shifted task models
+//!    (every task's resource requirement scaled by `1 ∓ ε_task`), with
+//!    the three progress surfaces batch-evaluated through
+//!    [`BatchPwPoly::eval_scenarios`]. Zero residuals collapse the band
+//!    to the point estimate — an honest "nothing to widen" marker.
+//! 3. **Ranked advice** ([`Report`]): knobs ordered by expected makespan
+//!    gain per unit of favorable change, each ± an uncertainty derived
+//!    from the band halfwidth, with explicit `insensitive` and
+//!    `non_smooth` markers. `sched/advisor.rs` consumes this ranking to
+//!    pick *which* knob to line-search instead of hard-coding the link
+//!    fraction, and the `sensitivity` API op / CLI subcommand serialize
+//!    it via the canonical, byte-deterministic [`Report::to_json`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::pwfn::{BatchPwPoly, PwPoly};
+use crate::runtime::cache::{AnalysisCache, CacheStats};
+use crate::runtime::sweep::{ScenarioOutcome, SweepBatch, SweepError, SweepModel};
+use crate::solver::SolverOpts;
+use crate::util::par::num_threads;
+use crate::util::Json;
+use crate::workflow::engine::{analyze_fixpoint_cached, WorkflowAnalysis, WorkflowError};
+use crate::workflow::scenario::Perturbation;
+use crate::workflow::Workflow;
+
+/// Configuration for a sensitivity analysis.
+#[derive(Clone, Debug)]
+pub struct SenseOpts {
+    /// Relative stencil half-step: each continuous knob is solved at
+    /// `v0 ± h·max(|v0|, 1e-3)`. The default `1e-4` keeps the structural
+    /// closed-form/finite-difference disagreement at `O(h²) ≈ 1e-8`,
+    /// well inside the 1e-6 agreement contract on smooth knobs.
+    pub h: f64,
+    /// Worker threads for the stencil batch (1 = sequential reference).
+    pub threads: usize,
+    /// Fixpoint passes per solve (the sweep engine's default, 6).
+    pub fixpoint_passes: usize,
+    pub solver: SolverOpts,
+    /// Shared analysis cache; `None` attaches a fresh one (the stencil
+    /// still shares clean cones *within* the report).
+    pub cache: Option<Arc<AnalysisCache>>,
+    /// Keep at most this many attribution-shift rows per knob.
+    pub max_attribution: usize,
+    /// Sample the band's completion-fraction curves on this many grid
+    /// points (`0` = no samples; they never enter the canonical JSON).
+    pub band_grid: usize,
+}
+
+impl Default for SenseOpts {
+    fn default() -> Self {
+        SenseOpts {
+            h: 1e-4,
+            threads: num_threads(),
+            fixpoint_passes: 6,
+            solver: SolverOpts::default(),
+            cache: None,
+            max_attribution: 8,
+            band_grid: 0,
+        }
+    }
+}
+
+/// How a knob enters the local piecewise algebra — which analytic family
+/// the active segment's makespan-vs-knob model belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KnobClass {
+    /// Capacity/share knobs: time ≈ work / (rate·s), locally hyperbolic.
+    Rate,
+    /// Cost/volume knobs: time is locally affine in the scale.
+    Work,
+    /// Model variants with no derivative — reported as a finite delta.
+    Discrete,
+}
+
+fn classify(kind: &str) -> Option<KnobClass> {
+    match kind {
+        "fraction" | "link_rate_scale" => Some(KnobClass::Rate),
+        "input_scale" | "cpu_scale" | "task1_cpu_scale" | "task2_time_scale"
+        | "task3_time_scale" => Some(KnobClass::Work),
+        "task2_burst" => Some(KnobClass::Discrete),
+        _ => None, // identity (not a knob) and future kinds
+    }
+}
+
+/// The stencil midpoint of a continuous knob: scale knobs sit at the
+/// identity point `1.0`, the link fraction at the scenarios' base split.
+fn base_value(kind: &str) -> f64 {
+    if kind == "fraction" {
+        0.5
+    } else {
+        1.0
+    }
+}
+
+/// One `(process, bottleneck)` attribution row's response to the knob:
+/// `d seconds / d knob` of the time that pair limits progress.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttributionShift {
+    pub process: String,
+    pub bottleneck: String,
+    pub shift: f64,
+}
+
+/// Sensitivity of the makespan to one knob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KnobReport {
+    /// The perturbation wire tag (`"fraction"`, `"cpu_scale"`, ...).
+    pub kind: &'static str,
+    /// Stencil midpoint (`None` for discrete variants).
+    pub base: Option<f64>,
+    /// Central finite difference `∂makespan/∂knob` at `base`.
+    pub derivative: Option<f64>,
+    /// Analytic derivative of the fitted active-segment model
+    /// (`None` for discrete variants).
+    pub closed_form: Option<f64>,
+    /// Discrete variants only: `makespan(variant) − makespan(base)`.
+    pub delta: Option<f64>,
+    /// Expected makespan seconds saved per unit move in the favorable
+    /// direction (`|derivative|`; for discrete knobs `max(−delta, 0)`).
+    pub gain_per_unit: f64,
+    /// ± on `gain_per_unit`: the gain scaled by the confidence band's
+    /// halfwidth ratio (zero when the band is a point estimate).
+    pub uncertainty: f64,
+    /// The favorable move: `"increase"`, `"decrease"`, `"apply"`
+    /// (discrete variant that helps) or `"none"`.
+    pub direction: &'static str,
+    /// The makespan does not respond to this knob at the base point.
+    pub insensitive: bool,
+    /// The stencil straddles a segment boundary of the piecewise solution
+    /// (the fitted local model misses the midpoint): the derivative is a
+    /// one-sided average across a kink — trust the sign, not the digits.
+    pub non_smooth: bool,
+    /// Largest `d seconds / d knob` responses among the per-bottleneck
+    /// attribution rows (descending by magnitude).
+    pub attribution: Vec<AttributionShift>,
+}
+
+/// Lower/median/upper completion-time band.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    pub lower: f64,
+    pub median: f64,
+    pub upper: f64,
+}
+
+impl Band {
+    /// `true` when the band carries no width beyond float noise — zero
+    /// residuals collapse to the point estimate.
+    pub fn is_point(&self) -> bool {
+        (self.upper - self.lower).abs() <= 1e-9 * self.median.abs().max(1.0)
+    }
+
+    /// Halfwidth as a fraction of the median — the multiplier that turns
+    /// a gain into its uncertainty.
+    pub fn halfwidth_ratio(&self) -> f64 {
+        let m = self.median.abs().max(1e-12);
+        ((self.upper - self.lower) / (2.0 * m)).max(0.0)
+    }
+}
+
+/// One sampled point of the band's completion-fraction curves.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BandSample {
+    pub t: f64,
+    /// Completion fraction of the optimistic (residual-shrunk) model.
+    pub optimistic: f64,
+    pub median: f64,
+    /// Completion fraction of the pessimistic (residual-grown) model.
+    pub pessimistic: f64,
+}
+
+/// Result of [`confidence_band`].
+#[derive(Clone, Debug)]
+pub struct BandResult {
+    pub band: Band,
+    /// Solver events spent on the band's re-solves.
+    pub events: usize,
+    /// Completion-fraction samples (empty when `grid == 0` or the band
+    /// is a point estimate).
+    pub samples: Vec<BandSample>,
+}
+
+/// The ranked sensitivity report — the "fix this first" list.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// The model's workload label (`"video"`, `"genomics"`, ...).
+    pub workflow: String,
+    /// Baseline (identity) makespan.
+    pub makespan: f64,
+    /// Confidence band around the baseline from the supplied residuals.
+    pub band: Band,
+    /// Knobs, descending by `gain_per_unit` (ties broken by kind).
+    pub knobs: Vec<KnobReport>,
+    /// Total solver events across the stencil and the band.
+    pub events: usize,
+    /// Band samples at [`SenseOpts::band_grid`] resolution (display-only;
+    /// excluded from the canonical JSON).
+    pub band_samples: Vec<BandSample>,
+    /// Cache behaviour of this report's solves (`None` when the counter
+    /// window is unavailable). Excluded from the canonical JSON — like
+    /// sweep reports, determinism comparisons must not see bookkeeping.
+    pub cache: Option<CacheStats>,
+}
+
+impl Report {
+    /// The canonical, byte-deterministic JSON encoding (sorted keys, no
+    /// volatile bookkeeping): same model + same residuals + same opts ⇒
+    /// byte-identical output, regardless of thread count.
+    pub fn to_json(&self) -> Json {
+        let knobs = self.knobs.iter().map(knob_json).collect();
+        Json::obj(vec![
+            ("workflow", Json::Str(self.workflow.clone())),
+            ("makespan", Json::Num(self.makespan)),
+            (
+                "band",
+                Json::obj(vec![
+                    ("lower", Json::Num(self.band.lower)),
+                    ("median", Json::Num(self.band.median)),
+                    ("upper", Json::Num(self.band.upper)),
+                    ("point_estimate", Json::Bool(self.band.is_point())),
+                ]),
+            ),
+            ("knobs", Json::Arr(knobs)),
+            ("events", Json::Num(self.events as f64)),
+        ])
+    }
+}
+
+fn knob_json(k: &KnobReport) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("kind", Json::Str(k.kind.to_string())),
+        ("direction", Json::Str(k.direction.to_string())),
+        ("gain_per_unit", Json::Num(k.gain_per_unit)),
+        ("uncertainty", Json::Num(k.uncertainty)),
+        ("insensitive", Json::Bool(k.insensitive)),
+        ("non_smooth", Json::Bool(k.non_smooth)),
+    ];
+    if let Some(v) = k.base {
+        fields.push(("base", Json::Num(v)));
+    }
+    if let Some(v) = k.derivative {
+        fields.push(("derivative", Json::Num(v)));
+    }
+    if let Some(v) = k.closed_form {
+        fields.push(("closed_form", Json::Num(v)));
+    }
+    if let Some(v) = k.delta {
+        fields.push(("delta", Json::Num(v)));
+    }
+    if !k.attribution.is_empty() {
+        let rows = k
+            .attribution
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("process", Json::Str(a.process.clone())),
+                    ("bottleneck", Json::Str(a.bottleneck.clone())),
+                    ("shift", Json::Num(a.shift)),
+                ])
+            })
+            .collect();
+        fields.push(("attribution", Json::Arr(rows)));
+    }
+    Json::obj(fields)
+}
+
+/// One knob's stencil bookkeeping: which batch indices hold its solves.
+struct Stencil {
+    kind: &'static str,
+    class: KnobClass,
+    v0: f64,
+    delta: f64,
+    /// `v0 − δ` outcome index (equals `plus` for discrete kinds).
+    minus: usize,
+    /// `v0 + δ` outcome index (the variant itself for discrete kinds).
+    plus: usize,
+}
+
+/// Full sensitivity analysis of `model` at its base point.
+///
+/// `residuals` are per-node relative calibration errors of the base
+/// workflow (index-aligned with `Workflow::nodes`; missing entries are
+/// zero) — pass an empty slice for uncalibrated models to get an honest
+/// point-estimate band. Errors: a model whose baseline never finishes is
+/// reported as [`SweepError::Unsupported`]; solver failures propagate as
+/// [`SweepError::Analysis`].
+pub fn analyze(
+    model: &Arc<dyn SweepModel>,
+    residuals: &[f64],
+    opts: &SenseOpts,
+) -> Result<Report, SweepError> {
+    let kinds: Vec<&'static str> = Perturbation::applicable_kinds(model.as_ref())
+        .into_iter()
+        .filter(|k| *k != "identity")
+        .collect();
+    let cache = opts
+        .cache
+        .clone()
+        .unwrap_or_else(|| Arc::new(AnalysisCache::new()));
+    let before = cache.stats();
+
+    // One batch holds the whole stencil: the planner groups the points by
+    // dirty-set shape and the shared cache serves every clean cone.
+    let mut perts: Vec<Perturbation> = vec![Perturbation::Identity];
+    let mut stencils: Vec<Stencil> = Vec::new();
+    for kind in kinds {
+        let Some(class) = classify(kind) else { continue };
+        if class == KnobClass::Discrete {
+            let at = perts.len();
+            // the value is ignored by valueless kinds
+            perts.push(Perturbation::with_value(kind, 0.0).expect("known kind"));
+            stencils.push(Stencil {
+                kind,
+                class,
+                v0: 0.0,
+                delta: 1.0,
+                minus: at,
+                plus: at,
+            });
+            continue;
+        }
+        let v0 = base_value(kind);
+        let delta = opts.h * v0.abs().max(1e-3);
+        let minus = perts.len();
+        perts.push(Perturbation::with_value(kind, v0 - delta).expect("known kind"));
+        let plus = perts.len();
+        perts.push(Perturbation::with_value(kind, v0 + delta).expect("known kind"));
+        stencils.push(Stencil {
+            kind,
+            class,
+            v0,
+            delta,
+            minus,
+            plus,
+        });
+    }
+
+    let batch = SweepBatch::over(model.clone())
+        .with_threads(opts.threads)
+        .with_opts(opts.solver.clone())
+        .with_fixpoint_passes(opts.fixpoint_passes)
+        .with_cache(cache.clone());
+    let outcomes = batch.run(&perts)?;
+    let baseline = &outcomes[0];
+    let t0 = baseline.makespan.ok_or_else(|| {
+        SweepError::Unsupported(format!(
+            "workflow '{}' does not finish within the solver horizon; \
+             sensitivity needs a finite baseline makespan",
+            model.label()
+        ))
+    })?;
+
+    let base_wf = model.base_workflow();
+    let band_result = confidence_band(
+        &base_wf,
+        residuals,
+        Some(t0),
+        &opts.solver,
+        opts.fixpoint_passes,
+        Some(&cache),
+        opts.band_grid,
+    )?;
+    let rho = band_result.band.halfwidth_ratio();
+
+    let mut knobs: Vec<KnobReport> = stencils
+        .iter()
+        .map(|s| knob_report(s, &outcomes, baseline, t0, rho, opts.max_attribution))
+        .collect();
+    // ranked: biggest expected gain first, kind as the deterministic tie-break
+    knobs.sort_by(|a, b| {
+        b.gain_per_unit
+            .total_cmp(&a.gain_per_unit)
+            .then_with(|| a.kind.cmp(b.kind))
+    });
+
+    let events: usize =
+        outcomes.iter().map(|o| o.events).sum::<usize>() + band_result.events;
+    Ok(Report {
+        workflow: model.label().to_string(),
+        makespan: t0,
+        band: band_result.band,
+        knobs,
+        events,
+        band_samples: band_result.samples,
+        cache: Some(cache.stats().since(&before)),
+    })
+}
+
+/// Evaluate one knob's stencil: central difference, active-segment
+/// closed form, smoothness check, markers, attribution shifts.
+fn knob_report(
+    s: &Stencil,
+    outcomes: &[ScenarioOutcome],
+    baseline: &ScenarioOutcome,
+    t0: f64,
+    rho: f64,
+    max_attribution: usize,
+) -> KnobReport {
+    if s.class == KnobClass::Discrete {
+        let var = &outcomes[s.plus];
+        let delta = var.makespan.map(|t| t - t0);
+        let gain = delta.map(|d| (-d).max(0.0)).unwrap_or(0.0);
+        let direction = match delta {
+            Some(d) if d < -1e-9 * t0.abs().max(1.0) => "apply",
+            Some(_) => "none",
+            None => "none",
+        };
+        return KnobReport {
+            kind: s.kind,
+            base: None,
+            derivative: None,
+            closed_form: None,
+            delta,
+            gain_per_unit: gain,
+            uncertainty: gain * rho,
+            direction,
+            insensitive: gain <= 1e-9 * t0.abs().max(1.0),
+            non_smooth: delta.is_none(),
+            attribution: attribution_shifts(var, baseline, 1.0, max_attribution),
+        };
+    }
+
+    let (t_minus, t_plus) = (outcomes[s.minus].makespan, outcomes[s.plus].makespan);
+    let (Some(tm), Some(tp)) = (t_minus, t_plus) else {
+        // a stencil point fell off the horizon: no derivative, flag it
+        return KnobReport {
+            kind: s.kind,
+            base: Some(s.v0),
+            derivative: None,
+            closed_form: None,
+            delta: None,
+            gain_per_unit: 0.0,
+            uncertainty: 0.0,
+            direction: "none",
+            insensitive: false,
+            non_smooth: true,
+            attribution: vec![],
+        };
+    };
+
+    let derivative = (tp - tm) / (2.0 * s.delta);
+    // Fit the active segment's analytic family through the two stencil
+    // points and differentiate it; check the fit against the midpoint.
+    let (closed_form, fit_mid) = match s.class {
+        KnobClass::Work => {
+            // affine T(v) = a + b·v: b is the secant slope, the fit's
+            // midpoint is the average of the two stencil values
+            let b = (tp - tm) / (2.0 * s.delta);
+            (b, (tp + tm) / 2.0)
+        }
+        KnobClass::Rate => {
+            // hyperbolic T(v) = a + b/v through v0 ± δ
+            let (vm, vp) = (s.v0 - s.delta, s.v0 + s.delta);
+            let b = (tm - tp) * vm * vp / (2.0 * s.delta);
+            let a = tp - b / vp;
+            (-b / (s.v0 * s.v0), a + b / s.v0)
+        }
+        KnobClass::Discrete => unreachable!("handled above"),
+    };
+    let scale = t0.abs().max(1.0);
+    let non_smooth = (fit_mid - t0).abs() > 1e-7 * scale;
+    let insensitive = derivative.abs() <= 1e-9 * scale;
+    let gain = if insensitive { 0.0 } else { derivative.abs() };
+    let direction = if insensitive {
+        "none"
+    } else if derivative < 0.0 {
+        "increase"
+    } else {
+        "decrease"
+    };
+    KnobReport {
+        kind: s.kind,
+        base: Some(s.v0),
+        derivative: Some(derivative),
+        closed_form: Some(closed_form),
+        delta: None,
+        gain_per_unit: gain,
+        uncertainty: gain * rho,
+        direction,
+        insensitive,
+        non_smooth,
+        attribution: attribution_shifts(
+            &outcomes[s.plus],
+            &outcomes[s.minus],
+            2.0 * s.delta,
+            max_attribution,
+        ),
+    }
+}
+
+/// Per-`(process, bottleneck)` attribution response: how many seconds the
+/// pair gains/loses per unit of knob, from the difference of the two
+/// stencil points' attribution rows.
+fn attribution_shifts(
+    plus: &ScenarioOutcome,
+    minus: &ScenarioOutcome,
+    denom: f64,
+    max_rows: usize,
+) -> Vec<AttributionShift> {
+    let mut acc: HashMap<(String, String), f64> = HashMap::new();
+    for (p, b, d) in &plus.attributed {
+        *acc.entry((p.clone(), b.clone())).or_insert(0.0) += d;
+    }
+    for (p, b, d) in &minus.attributed {
+        *acc.entry((p.clone(), b.clone())).or_insert(0.0) -= d;
+    }
+    let mut rows: Vec<AttributionShift> = acc
+        .into_iter()
+        .filter(|(_, d)| d.abs() / denom > 1e-6)
+        .map(|((process, bottleneck), d)| AttributionShift {
+            process,
+            bottleneck,
+            shift: d / denom,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.shift
+            .abs()
+            .total_cmp(&a.shift.abs())
+            .then_with(|| a.process.cmp(&b.process))
+            .then_with(|| a.bottleneck.cmp(&b.bottleneck))
+    });
+    rows.truncate(max_rows);
+    rows
+}
+
+/// The base workflow with every node's resource requirements scaled by
+/// `1 + sign·ε_node` — the residual-shifted model family behind the band
+/// (`sign = −1` optimistic, `+1` pessimistic). Residuals are clamped to
+/// `[0, 0.9]`; nodes beyond the slice (or with ~zero residual) are
+/// untouched, so their solves stay cache-clean.
+pub fn residual_shifted(wf: &Workflow, residuals: &[f64], sign: f64) -> Workflow {
+    let mut out = wf.clone();
+    for (i, node) in out.nodes.iter_mut().enumerate() {
+        let eps = residuals.get(i).copied().unwrap_or(0.0).clamp(0.0, 0.9);
+        if eps <= 1e-12 {
+            continue;
+        }
+        let k = 1.0 + sign * eps;
+        for r in &mut node.process.res_reqs {
+            r.func = r.func.scale(k);
+        }
+    }
+    out
+}
+
+/// Propagate per-node calibration residuals into a completion-time band:
+/// re-solve the optimistic (`1−ε`) and pessimistic (`1+ε`) models and
+/// bracket the median. `baseline` short-circuits the median makespan if
+/// the caller already solved it (the solve still runs for the sample
+/// curves, but a shared `cache` answers it from memory). With all-zero
+/// residuals no extra solves run and the band is the point estimate.
+pub fn confidence_band(
+    wf: &Workflow,
+    residuals: &[f64],
+    baseline: Option<f64>,
+    solver: &SolverOpts,
+    passes: usize,
+    cache: Option<&AnalysisCache>,
+    grid: usize,
+) -> Result<BandResult, WorkflowError> {
+    let active = residuals
+        .iter()
+        .take(wf.nodes.len())
+        .any(|&e| e.clamp(0.0, 0.9) > 1e-12);
+    if !active {
+        let (t_mid, events) = match baseline {
+            Some(t) => (t, 0),
+            None => {
+                let mid = analyze_fixpoint_cached(wf, solver, passes, cache)?;
+                (mid.makespan.unwrap_or(solver.horizon), mid.events)
+            }
+        };
+        return Ok(BandResult {
+            band: Band {
+                lower: t_mid,
+                median: t_mid,
+                upper: t_mid,
+            },
+            events,
+            samples: vec![],
+        });
+    }
+
+    let mid = analyze_fixpoint_cached(wf, solver, passes, cache)?;
+    let t_mid = baseline
+        .or(mid.makespan)
+        .unwrap_or(solver.horizon);
+    let lo_wf = residual_shifted(wf, residuals, -1.0);
+    let hi_wf = residual_shifted(wf, residuals, 1.0);
+    let lo = analyze_fixpoint_cached(&lo_wf, solver, passes, cache)?;
+    let hi = analyze_fixpoint_cached(&hi_wf, solver, passes, cache)?;
+    // a monotone solver keeps lo ≤ mid ≤ hi; the min/max makes the
+    // ordering a structural guarantee, not a numerical hope
+    let t_lo = lo.makespan.unwrap_or(solver.horizon).min(t_mid);
+    let t_hi = hi.makespan.unwrap_or(solver.horizon).max(t_mid);
+    let band = Band {
+        lower: t_lo,
+        median: t_mid,
+        upper: t_hi,
+    };
+    let events = mid.events + lo.events + hi.events;
+    let samples = if grid >= 2 {
+        band_samples(&[&lo, &mid, &hi], grid, t_hi)
+    } else {
+        vec![]
+    };
+    Ok(BandResult {
+        band,
+        events,
+        samples,
+    })
+}
+
+/// Whole-workflow completion fraction of the three band scenarios on a
+/// shared time grid, through one SoA compile + [`BatchPwPoly::eval_scenarios`]
+/// over all `3·N` progress curves.
+fn band_samples(was: &[&WorkflowAnalysis; 3], grid: usize, t_end: f64) -> Vec<BandSample> {
+    let ts: Vec<f64> = (0..grid)
+        .map(|i| t_end * i as f64 / (grid - 1) as f64)
+        .collect();
+    let mut curves: Vec<&PwPoly> = Vec::new();
+    for wa in was {
+        for a in &wa.analyses {
+            curves.push(&a.progress);
+        }
+    }
+    if curves.is_empty() {
+        return vec![];
+    }
+    let flat = BatchPwPoly::compile(&curves).eval_scenarios(&ts);
+    let n = ts.len();
+    let mut fracs = [vec![0.0f64; n], vec![0.0f64; n], vec![0.0f64; n]];
+    let mut row = 0usize;
+    for (si, wa) in was.iter().enumerate() {
+        let total: f64 = wa
+            .analyses
+            .iter()
+            .map(|a| a.max_progress)
+            .sum::<f64>()
+            .max(1e-12);
+        for _ in &wa.analyses {
+            for (j, v) in flat[row * n..(row + 1) * n].iter().enumerate() {
+                fracs[si][j] += v;
+            }
+            row += 1;
+        }
+        for v in &mut fracs[si] {
+            *v /= total;
+        }
+    }
+    ts.iter()
+        .enumerate()
+        .map(|(j, &t)| BandSample {
+            t,
+            optimistic: fracs[0][j],
+            median: fracs[1][j],
+            pessimistic: fracs[2][j],
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sweep::FixedWorkflow;
+    use crate::workflow::scenario::{GenomicsScenario, VideoScenario};
+
+    fn video_model() -> Arc<dyn SweepModel> {
+        Arc::new(VideoScenario::default())
+    }
+
+    fn seq_opts() -> SenseOpts {
+        SenseOpts {
+            threads: 1,
+            ..SenseOpts::default()
+        }
+    }
+
+    /// The headline report: knobs ranked by gain, the expected markers on
+    /// the Fig 5 scenario, and a point-estimate band without residuals.
+    #[test]
+    fn video_report_ranks_and_markers() {
+        let model = video_model();
+        let r = analyze(&model, &[], &seq_opts()).unwrap();
+        assert_eq!(r.workflow, "video");
+        assert!((r.makespan - 263.0).abs() < 2.0, "{}", r.makespan);
+        assert!(r.band.is_point());
+        assert!(r.band_samples.is_empty());
+        // ranking is descending by gain
+        for w in r.knobs.windows(2) {
+            assert!(w[0].gain_per_unit >= w[1].gain_per_unit);
+        }
+        let knob = |k: &str| r.knobs.iter().find(|x| x.kind == k).unwrap().clone();
+        // the §6 axis dominates: makespan is ≈ linear in the input volume
+        assert_eq!(r.knobs[0].kind, "input_scale");
+        let input = knob("input_scale");
+        assert!(
+            (input.derivative.unwrap() - r.makespan).abs() < 0.05 * r.makespan,
+            "{:?}",
+            input.derivative
+        );
+        assert_eq!(input.direction, "decrease");
+        // a faster link shortens the downloads: negative derivative
+        let link = knob("link_rate_scale");
+        assert!(link.derivative.unwrap() < -100.0, "{:?}", link.derivative);
+        assert_eq!(link.direction, "increase");
+        assert!(!link.non_smooth, "link knob is smooth at 1.0");
+        // task 2 never binds at the 50:50 split — honest marker
+        let t2 = knob("task2_time_scale");
+        assert!(t2.insensitive, "{t2:?}");
+        assert_eq!(t2.direction, "none");
+        assert_eq!(t2.gain_per_unit, 0.0);
+        // the discrete variant has a delta, no derivative
+        let burst = knob("task2_burst");
+        assert!(burst.derivative.is_none());
+        assert!(burst.delta.is_some());
+        // uncalibrated model ⇒ zero uncertainty everywhere
+        assert!(r.knobs.iter().all(|k| k.uncertainty == 0.0));
+        // attribution shifts surface where the time moves: the cpu knob
+        // grows task1's cpu-bound segments
+        let cpu = knob("task1_cpu_scale");
+        assert!(
+            cpu.attribution
+                .iter()
+                .any(|a| a.process == "task1-reverse" && a.shift > 1.0),
+            "{:?}",
+            cpu.attribution
+        );
+    }
+
+    /// Smooth knobs: the closed-form (fitted active-segment) derivative
+    /// agrees with the central difference to ≤1e-6 relative.
+    #[test]
+    fn closed_form_agrees_on_smooth_knobs() {
+        let model = video_model();
+        let r = analyze(&model, &[], &seq_opts()).unwrap();
+        let mut checked = 0;
+        for k in &r.knobs {
+            let (Some(cf), Some(fd)) = (k.closed_form, k.derivative) else {
+                continue;
+            };
+            if k.insensitive || k.non_smooth {
+                continue;
+            }
+            assert!(
+                (cf - fd).abs() <= 1e-6 * fd.abs().max(1e-9 * r.makespan),
+                "{}: closed {cf} vs stencil {fd}",
+                k.kind
+            );
+            checked += 1;
+        }
+        assert!(checked >= 3, "expected ≥3 smooth knobs, got {checked}");
+    }
+
+    /// Residuals widen the band monotonically; zero residuals collapse it.
+    #[test]
+    fn band_widens_with_residuals_and_collapses_without() {
+        let (wf, _) = VideoScenario::default().build();
+        let solver = SolverOpts::default();
+        let zero = confidence_band(&wf, &[0.0; 5], None, &solver, 6, None, 0).unwrap();
+        assert!(zero.band.is_point());
+        assert_eq!(zero.band.lower, zero.band.median);
+        let res = vec![0.1; wf.nodes.len()];
+        let wide = confidence_band(&wf, &res, None, &solver, 6, None, 12).unwrap();
+        assert!(wide.band.lower < wide.band.median);
+        assert!(wide.band.median < wide.band.upper);
+        assert_eq!(wide.band.median, zero.band.median);
+        // fraction curves: 12 samples, each within [0, 1+eps], optimistic
+        // at least as complete as pessimistic at every t
+        assert_eq!(wide.samples.len(), 12);
+        for s in &wide.samples {
+            assert!(s.optimistic >= s.pessimistic - 1e-9, "{s:?}");
+            assert!((-1e-9..=1.0 + 1e-9).contains(&s.median), "{s:?}");
+        }
+        // the sampled fractions are cumulative in t
+        for w in wide.samples.windows(2) {
+            assert!(w[1].median >= w[0].median - 1e-9);
+        }
+    }
+
+    /// Uncertainty rides the band: with residuals attached, sensitive
+    /// knobs carry a strictly positive ± and the report stays ranked.
+    #[test]
+    fn residuals_put_uncertainty_on_gains() {
+        let model = video_model();
+        let r = analyze(&model, &[0.05; 5], &seq_opts()).unwrap();
+        assert!(!r.band.is_point());
+        assert!(r.band.lower < r.makespan && r.makespan < r.band.upper);
+        let sensitive: Vec<_> = r.knobs.iter().filter(|k| !k.insensitive).collect();
+        assert!(!sensitive.is_empty());
+        for k in sensitive {
+            if k.gain_per_unit > 0.0 {
+                assert!(k.uncertainty > 0.0, "{k:?}");
+            }
+        }
+    }
+
+    /// The genomics model exposes exactly the generic knobs; the report
+    /// covers them all with finite stencil derivatives.
+    #[test]
+    fn genomics_report_covers_generic_knobs() {
+        let model: Arc<dyn SweepModel> = Arc::new(GenomicsScenario::default());
+        let r = analyze(&model, &[], &seq_opts()).unwrap();
+        let mut kinds: Vec<&str> = r.knobs.iter().map(|k| k.kind).collect();
+        kinds.sort_unstable();
+        assert_eq!(
+            kinds,
+            vec!["cpu_scale", "fraction", "input_scale", "link_rate_scale"]
+        );
+        for k in &r.knobs {
+            assert!(k.derivative.unwrap().is_finite(), "{k:?}");
+        }
+    }
+
+    /// Determinism: two runs produce byte-identical canonical JSON, and
+    /// thread count does not change a single byte.
+    #[test]
+    fn report_json_is_byte_deterministic() {
+        let model = video_model();
+        let a = analyze(&model, &[0.02; 5], &seq_opts()).unwrap();
+        let b = analyze(&model, &[0.02; 5], &seq_opts()).unwrap();
+        let par = analyze(
+            &model,
+            &[0.02; 5],
+            &SenseOpts {
+                threads: 4,
+                ..SenseOpts::default()
+            },
+        )
+        .unwrap();
+        let text = a.to_json().to_string();
+        assert_eq!(text, b.to_json().to_string());
+        assert_eq!(text, par.to_json().to_string());
+        // canonical JSON carries the schema, not the bookkeeping
+        assert!(text.contains("\"point_estimate\":false"));
+        assert!(!text.contains("\"hits\""));
+    }
+
+    /// A fixed workflow (spec/trace) reports on its generic scale knobs.
+    #[test]
+    fn fixed_workflow_reports_scale_knobs() {
+        let (wf, _) = VideoScenario::default().build();
+        let model: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("spec", wf));
+        let r = analyze(&model, &[], &seq_opts()).unwrap();
+        let kinds: Vec<&str> = r.knobs.iter().map(|k| k.kind).collect();
+        assert!(kinds.contains(&"link_rate_scale"), "{kinds:?}");
+        assert!(kinds.contains(&"cpu_scale"), "{kinds:?}");
+        assert!(!kinds.contains(&"fraction"), "{kinds:?}");
+        let link = r.knobs.iter().find(|k| k.kind == "link_rate_scale").unwrap();
+        assert!(link.derivative.unwrap() < 0.0, "{link:?}");
+    }
+}

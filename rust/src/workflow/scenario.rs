@@ -19,6 +19,7 @@
 
 use crate::model::{Process, ProcessBuilder};
 use crate::pwfn::PwPoly;
+use crate::runtime::sweep::SweepModel;
 use crate::util::Json;
 use crate::workflow::graph::{DataSource, NodeSet, ResourceSource, StartRule, Workflow};
 
@@ -113,6 +114,63 @@ pub struct VideoNodes {
 }
 
 impl Perturbation {
+    /// Every wire kind, in declaration order — the full perturbation
+    /// vocabulary of the protocol (`docs/SERVICE.md`).
+    pub const ALL_KINDS: [&'static str; 9] = [
+        "identity",
+        "fraction",
+        "link_rate_scale",
+        "input_scale",
+        "cpu_scale",
+        "task1_cpu_scale",
+        "task2_time_scale",
+        "task3_time_scale",
+        "task2_burst",
+    ];
+
+    /// Construct the variant for a wire `kind` carrying `value` (the
+    /// valueless kinds ignore it). `None` for unknown kinds.
+    pub fn with_value(kind: &str, value: f64) -> Option<Perturbation> {
+        Some(match kind {
+            "identity" => Perturbation::Identity,
+            "fraction" => Perturbation::Fraction(value),
+            "link_rate_scale" => Perturbation::LinkRateScale(value),
+            "input_scale" => Perturbation::InputScale(value),
+            "cpu_scale" => Perturbation::CpuScale(value),
+            "task1_cpu_scale" => Perturbation::Task1CpuScale(value),
+            "task2_time_scale" => Perturbation::Task2TimeScale(value),
+            "task3_time_scale" => Perturbation::Task3TimeScale(value),
+            "task2_burst" => Perturbation::Task2Burst,
+            _ => return None,
+        })
+    }
+
+    /// The canonical near-no-op probe for a kind: scale knobs at `1.0`,
+    /// the link fraction at the scenarios' base `0.5` split. Used to test
+    /// whether a model exposes a knob without actually moving it, and as
+    /// the stencil midpoint of `crate::sense`.
+    pub fn probe(kind: &str) -> Option<Perturbation> {
+        let v = if kind == "fraction" { 0.5 } else { 1.0 };
+        Perturbation::with_value(kind, v)
+    }
+
+    /// The knob vocabulary `model` accepts, in declaration order —
+    /// probing [`SweepModel::build_perturbed`] with each kind's canonical
+    /// probe. Backs the `sweep` op's structured `bad_request` detail (a
+    /// rejected knob lists the valid vocabulary) and the sensitivity
+    /// report's knob enumeration.
+    pub fn applicable_kinds(model: &dyn SweepModel) -> Vec<&'static str> {
+        Perturbation::ALL_KINDS
+            .iter()
+            .copied()
+            .filter(|kind| {
+                Perturbation::probe(kind)
+                    .map(|p| model.build_perturbed(&p).is_ok())
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
     /// The wire tag of this variant — the `"kind"` field of the JSON
     /// encoding, and the vocabulary of `docs/SERVICE.md`'s sweep op.
     pub fn kind(&self) -> &'static str {
@@ -882,6 +940,42 @@ mod tests {
         assert!(
             burst > stream + 3.0,
             "burst {burst} should exceed stream {stream} by the t2 runtime"
+        );
+    }
+
+    /// `applicable_kinds` probes the models' real vocabularies: the video
+    /// scenario answers to every knob, genomics only to the generic ones.
+    #[test]
+    fn applicable_kinds_video_vs_genomics() {
+        let video = VideoScenario::default();
+        assert_eq!(
+            Perturbation::applicable_kinds(&video),
+            Perturbation::ALL_KINDS.to_vec()
+        );
+        let genomics = GenomicsScenario::default();
+        assert_eq!(
+            Perturbation::applicable_kinds(&genomics),
+            vec![
+                "identity",
+                "fraction",
+                "link_rate_scale",
+                "input_scale",
+                "cpu_scale"
+            ]
+        );
+        // with_value/probe cover the full vocabulary and reject unknowns
+        for kind in Perturbation::ALL_KINDS {
+            let p = Perturbation::probe(kind).unwrap();
+            assert_eq!(p.kind(), kind);
+        }
+        assert!(Perturbation::with_value("warp_speed", 1.0).is_none());
+        assert_eq!(
+            Perturbation::with_value("fraction", 0.8),
+            Some(Perturbation::Fraction(0.8))
+        );
+        assert_eq!(
+            Perturbation::with_value("task2_burst", 42.0),
+            Some(Perturbation::Task2Burst)
         );
     }
 

@@ -1,0 +1,212 @@
+//! Differential validation of the sensitivity subsystem (`sense`,
+//! docs/SENSITIVITY.md) against the generator's topology families:
+//!
+//! * on every smooth knob the analytic active-segment derivative and the
+//!   central finite difference must agree to 1e-6 relative — across all
+//!   five topology shapes and many seeds, not just the papers' scenarios;
+//! * confidence bands are ordered (lower ≤ median ≤ upper), nest
+//!   monotonically in the residual magnitude, and pin the median to the
+//!   caller's baseline bit-for-bit;
+//! * the canonical report JSON is byte-deterministic and independent of
+//!   the stencil batch's thread count;
+//! * zero residuals collapse the band to the point estimate without
+//!   spending a single extra solver event.
+
+use std::sync::Arc;
+
+use bottlemod::runtime::{FixedWorkflow, SweepModel};
+use bottlemod::sense::{analyze, confidence_band, SenseOpts};
+use bottlemod::solver::SolverOpts;
+use bottlemod::util::Rng;
+use bottlemod::workflow::generator::{generate, GeneratorOpts, Topology};
+use bottlemod::workflow::Workflow;
+
+/// A small generated workflow for one (shape, seed) cell of the sweep.
+fn generated(shape: Topology, seed: u64) -> Workflow {
+    let gopts = GeneratorOpts {
+        topology: shape,
+        width_jitter: 0.2,
+        pool_residual_prob: 0.3,
+        ..GeneratorOpts::default()
+    }
+    .target_nodes(12);
+    let wf = generate(&mut Rng::new(seed), &gopts);
+    wf.validate().expect("generated workflows validate");
+    wf
+}
+
+fn model_for(shape: Topology, seed: u64) -> Arc<dyn SweepModel> {
+    Arc::new(FixedWorkflow::new("gen", generated(shape, seed)))
+}
+
+/// The 1e-6 agreement contract: on every knob the stencil did not flag as
+/// insensitive or non-smooth, the closed-form derivative of the fitted
+/// active-segment model matches the central difference.
+#[test]
+fn closed_form_matches_central_difference_across_topologies() {
+    let opts = SenseOpts {
+        threads: 1,
+        ..SenseOpts::default()
+    };
+    let mut checked_models = 0usize;
+    let mut checked_knobs = 0usize;
+    for shape in Topology::ALL {
+        for seed in 0..5u64 {
+            let model = model_for(shape, seed);
+            let report = match analyze(&model, &[], &opts) {
+                Ok(r) => r,
+                // a cell whose baseline never finishes has no gradient to
+                // check; the coverage floor below keeps this path honest
+                Err(_) => continue,
+            };
+            assert!(report.makespan > 0.0, "{shape:?} seed {seed}");
+            checked_models += 1;
+            for k in &report.knobs {
+                let (Some(cd), Some(cf)) = (k.derivative, k.closed_form) else {
+                    continue;
+                };
+                if k.insensitive || k.non_smooth {
+                    continue;
+                }
+                let denom = cd.abs().max(cf.abs());
+                let rel = (cd - cf).abs() / denom;
+                assert!(
+                    rel <= 1e-6,
+                    "{shape:?} seed {seed} knob {}: cd {cd} vs cf {cf} (rel {rel:.3e})",
+                    k.kind
+                );
+                checked_knobs += 1;
+            }
+        }
+    }
+    assert!(
+        checked_models >= 20,
+        "only {checked_models} of 25 generated models produced a report"
+    );
+    assert!(
+        checked_knobs >= 10,
+        "only {checked_knobs} smooth knobs checked — the sweep lost its teeth"
+    );
+}
+
+/// Bands are ordered, nest in the residual magnitude, and keep the median
+/// pinned to the supplied baseline exactly.
+#[test]
+fn bands_are_ordered_and_monotone_in_residuals() {
+    let solver = SolverOpts::default();
+    let mut shapes_checked = 0usize;
+    let mut any_widened = false;
+    for shape in Topology::ALL {
+        let wf = generated(shape, 7);
+        let baseline = match bottlemod::workflow::engine::analyze_fixpoint(&wf, &solver, 6) {
+            Ok(wa) => match wa.makespan {
+                Some(m) => m,
+                None => continue,
+            },
+            Err(_) => continue,
+        };
+        shapes_checked += 1;
+        let mut widths = Vec::new();
+        for eps in [0.05, 0.15, 0.4] {
+            let residuals = vec![eps; wf.nodes.len()];
+            let r = confidence_band(&wf, &residuals, Some(baseline), &solver, 6, None, 0)
+                .expect("band solve");
+            let b = r.band;
+            assert!(
+                b.lower <= b.median && b.median <= b.upper,
+                "{shape:?} eps {eps}: [{}, {}, {}]",
+                b.lower,
+                b.median,
+                b.upper
+            );
+            assert_eq!(
+                b.median.to_bits(),
+                baseline.to_bits(),
+                "{shape:?}: median must be the caller's baseline, bit for bit"
+            );
+            any_widened |= !b.is_point();
+            widths.push(b.upper - b.lower);
+        }
+        // a purely data-limited workflow may legitimately ignore the
+        // resource-side shift, but the width can never shrink as the
+        // residuals grow
+        assert!(
+            widths.windows(2).all(|w| w[0] <= w[1] + 1e-12),
+            "{shape:?}: band width must grow with the residuals: {widths:?}"
+        );
+    }
+    assert!(shapes_checked >= 3, "only {shapes_checked} shapes solved");
+    assert!(any_widened, "no shape produced a non-point band at eps 0.4");
+}
+
+/// Same model, same residuals, any thread count: byte-identical canonical
+/// report JSON.
+#[test]
+fn report_json_is_byte_deterministic() {
+    let mut shapes_checked = 0usize;
+    for shape in [Topology::Layered, Topology::ScatterGather, Topology::Genomics] {
+        let residuals = vec![0.1; generated(shape, 3).nodes.len()];
+        let mut encodings = Vec::new();
+        for threads in [1usize, 4] {
+            let opts = SenseOpts {
+                threads,
+                ..SenseOpts::default()
+            };
+            let model = model_for(shape, 3);
+            match analyze(&model, &residuals, &opts) {
+                Ok(report) => encodings.push(report.to_json().to_string()),
+                Err(_) => break, // unfinishable cell: nothing to compare
+            }
+        }
+        if encodings.len() == 2 {
+            assert_eq!(
+                encodings[0], encodings[1],
+                "{shape:?}: report bytes must not depend on the thread count"
+            );
+            shapes_checked += 1;
+        }
+    }
+    assert!(shapes_checked >= 2, "only {shapes_checked} shapes compared");
+}
+
+/// All-zero residuals: no extra solves, a point band, zero uncertainty on
+/// every knob.
+#[test]
+fn zero_residuals_collapse_to_the_point_estimate() {
+    let solver = SolverOpts::default();
+    let (wf, baseline) = (0..20u64)
+        .find_map(|seed| {
+            let wf = generated(Topology::FanInJoin, seed);
+            bottlemod::workflow::engine::analyze_fixpoint(&wf, &solver, 6)
+                .ok()
+                .and_then(|wa| wa.makespan)
+                .map(|m| (wf, m))
+        })
+        .expect("some fan-in seed yields a finite makespan");
+    let residuals = vec![0.0; wf.nodes.len()];
+    let r = confidence_band(&wf, &residuals, Some(baseline), &solver, 6, None, 0)
+        .expect("band solve");
+    assert!(r.band.is_point(), "{:?}", r.band);
+    assert_eq!(r.events, 0, "zero residuals must not spend solver events");
+    assert!(r.samples.is_empty());
+    assert_eq!(r.band.median.to_bits(), baseline.to_bits());
+
+    let model: Arc<dyn SweepModel> = Arc::new(FixedWorkflow::new("gen", wf));
+    let report = analyze(
+        &model,
+        &residuals,
+        &SenseOpts {
+            threads: 1,
+            ..SenseOpts::default()
+        },
+    )
+    .expect("analyze");
+    assert!(report.band.is_point());
+    for k in &report.knobs {
+        assert_eq!(
+            k.uncertainty, 0.0,
+            "knob {}: a point band carries no uncertainty",
+            k.kind
+        );
+    }
+}

@@ -108,15 +108,31 @@ fn protocol_golden_table() {
             r#"{"v": 1, "id": 6, "op": "sweep", "workflow": "genomics", "perturbations": [{"kind": "warp"}]}"#,
             r#"{"error":{"code":"bad_request","detail":{"index":0},"message":"unknown perturbation kind 'warp'"},"id":6,"ok":false,"v":1}"#,
         ),
-        // a knob the selected workflow does not expose
+        // a knob the selected workflow does not expose names the
+        // applicable vocabulary in the detail
         (
             r#"{"v": 1, "id": 7, "op": "sweep", "workflow": "genomics", "perturbations": [{"kind": "task1_cpu_scale", "value": 2}]}"#,
-            r#"{"error":{"code":"bad_request","message":"perturbation 'task1_cpu_scale' applies to the video workflow only"},"id":7,"ok":false,"v":1}"#,
+            r#"{"error":{"code":"bad_request","detail":{"applicable":["identity","fraction","link_rate_scale","input_scale","cpu_scale"]},"message":"perturbation 'task1_cpu_scale' applies to the video workflow only"},"id":7,"ok":false,"v":1}"#,
         ),
         // legacy empty sweep keeps its historical error text
         (
             r#"{"id": 10, "op": "sweep", "fractions": []}"#,
             r#"{"deprecated":true,"error":"sweep needs at least one fraction","id":10}"#,
+        ),
+        // masked stats: every time-varying field zeroed, byte-reproducible
+        (
+            r#"{"v": 1, "id": 16, "op": "stats", "mask": true}"#,
+            r#"{"id":16,"ok":true,"result":{"inflight":0,"ops":{},"overloaded":0,"sessions_open":0,"sessions_total":0,"uptime_secs":0},"v":1}"#,
+        ),
+        // stats is service-scoped: rejected per item inside a batch
+        (
+            r#"{"v": 1, "id": 17, "op": "batch", "requests": [{"op": "stats"}]}"#,
+            r#"{"id":17,"ok":true,"result":{"results":[{"error":{"code":"bad_request","message":"stats is service-scoped and cannot run inside a batch"},"ok":false}]},"v":1}"#,
+        ),
+        // sensitivity decode guard: h must be a positive number
+        (
+            r#"{"v": 1, "id": 18, "op": "sensitivity", "h": 0}"#,
+            r#"{"error":{"code":"bad_request","message":"sensitivity 'h' must be a positive number"},"id":18,"ok":false,"v":1}"#,
         ),
     ];
     let lines: Vec<String> = cases.iter().map(|c| c.0.to_string()).collect();
@@ -219,6 +235,42 @@ fn v1_sweep_inline_spec() {
     let resp = serve_one(&req.to_string());
     assert_eq!(resp.get("ok").as_bool(), Some(false));
     assert_eq!(resp.get("error").get("code").as_str(), Some("bad_request"));
+}
+
+/// The sensitivity op on the wire: ranked knobs over an inline spec, a
+/// point-estimate band (no residuals), and cache stats on the side.
+#[test]
+fn v1_sensitivity_inline_spec() {
+    let req = Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("id", Json::Num(21.0)),
+        ("op", Json::Str("sensitivity".into())),
+        (
+            "workflow",
+            Json::obj(vec![("spec", Json::parse(TINY_SPEC).unwrap())]),
+        ),
+    ]);
+    let resp = serve_one(&req.to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let r = resp.get("result");
+    assert_eq!(r.get("workflow").as_str(), Some("spec"));
+    assert!((r.get("makespan").as_f64().unwrap() - 5.0).abs() < 1e-6);
+    let band = r.get("band");
+    assert_eq!(band.get("point_estimate").as_bool(), Some(true));
+    assert_eq!(band.get("lower").as_f64(), band.get("upper").as_f64());
+    let knobs = r.get("knobs").as_arr().unwrap();
+    assert!(!knobs.is_empty(), "fixed models expose the scale knobs");
+    for k in knobs {
+        assert!(k.get("kind").as_str().is_some());
+        assert!(k.get("gain_per_unit").as_f64().is_some());
+    }
+    // ranked: gain_per_unit non-increasing
+    let gains: Vec<f64> = knobs
+        .iter()
+        .map(|k| k.get("gain_per_unit").as_f64().unwrap())
+        .collect();
+    assert!(gains.windows(2).all(|w| w[0] >= w[1]), "{gains:?}");
+    assert!(r.get("cache").get("misses").as_f64().is_some());
 }
 
 /// v1 calibrate, including the new `tol` override; wrong-typed `tol` is a

@@ -36,7 +36,8 @@ fi
 
 # the corpus must keep exercising the session-scoped monitor lifecycle
 # (open -> feed -> close and the out-of-lifecycle errors; docs/LIVE.md)
-for op in monitor_open monitor_feed monitor_status; do
+# plus the service-scoped stats op and the sensitivity decode guards
+for op in monitor_open monitor_feed monitor_status stats sensitivity; do
     if ! grep -q "\"op\": \"$op\"" "$tmp/requests.jsonl"; then
         echo "error: conformance corpus in $doc lost its '$op' exchange" >&2
         exit 1
